@@ -1,0 +1,50 @@
+//! Interactive-ish chat with a finetuned guanaco-tiny: loads the `e2e`
+//! artifact (+ optional adapter/state checkpoint from finetune_guanaco)
+//! and answers prompts with the paper's sampling settings (nucleus
+//! p = 0.9, temperature 0.7 — section 5.2).
+//!
+//! Run: `cargo run --release --example chat -- --prompt "rev hello"
+//!       [--ckpt results/ckpt.tensors] [--greedy]`
+
+use anyhow::Result;
+
+use qlora::coordinator::checkpoint;
+use qlora::coordinator::generate::Sampler;
+use qlora::coordinator::trainer::Trainer;
+use qlora::data::tokenizer::Tokenizer;
+use qlora::runtime::artifact::Manifest;
+use qlora::runtime::client::Runtime;
+use qlora::util::cli::Args;
+use qlora::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let rt = Runtime::cpu()?;
+    let manifest = Manifest::load(&Manifest::default_dir())?;
+    let mut trainer = Trainer::new(&rt, &manifest,
+                                   &args.get_or("artifact", "e2e"))?;
+    if let Some(ck) = args.get("ckpt") {
+        checkpoint::load(&mut trainer, &std::path::PathBuf::from(ck))?;
+        println!("(loaded checkpoint {ck})");
+    }
+    let tok = Tokenizer::new(trainer.spec.cfg.vocab);
+    let sampler = Sampler {
+        top_p: args.f64_or("top-p", 0.9)?,
+        temperature: args.f64_or("temperature", 0.7)?,
+        max_new_tokens: args.usize_or("max-new", 24)?,
+    };
+    let mut rng = Rng::new(args.u64_or("seed", 0)?);
+    let prompts: Vec<String> = match args.get("prompt") {
+        Some(p) => vec![p.to_string()],
+        None => ["copy qlora", "rev abcd", "up hi", "add 3 4"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+    };
+    for p in prompts {
+        let out = sampler.generate(&trainer, &tok, &p, &mut rng,
+                                   args.flag("greedy"))?;
+        println!("user: {p}\nguanaco-tiny: {out}\n");
+    }
+    Ok(())
+}

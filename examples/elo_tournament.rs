@@ -1,0 +1,25 @@
+//! Chatbot-evaluation demo: run the paper's tournament protocol
+//! (section 5.2) — GPT-4 and human judge models, Elo over 10k random
+//! orderings, agreement statistics — and print Tables 1 and 7.
+//!
+//! Run: `cargo run --release --example elo_tournament -- [--fast]`
+
+use anyhow::Result;
+
+use qlora::experiments::{runner, Ctx};
+use qlora::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let ctx = Ctx {
+        rt: None,
+        manifest: None,
+        seed: args.u64_or("seed", 42)?,
+        fast: args.flag("fast"),
+    };
+    let results = std::path::PathBuf::from("results");
+    for id in ["table1", "table7", "table12_13"] {
+        println!("{}", runner::run_one(id, &ctx, &results)?);
+    }
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! Memory planner: "will model X finetune on GPU Y?" — the practical
+//! question QLoRA answers (paper Figure 1 / Figure 6 / appendix G).
+//!
+//! Run: `cargo run --release --example memory_planner -- [--seq 512]`
+
+use anyhow::Result;
+
+use qlora::memory::{llama_family, train_footprint, Strategy};
+use qlora::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let seq = args.usize_or("seq", 512)?;
+    let batch = args.usize_or("batch", 1)?;
+    let gpus: [(&str, f64); 4] = [
+        ("RTX 4090 (24 GB)", 24.0),
+        ("A6000 (48 GB)", 48.0),
+        ("A100 (80 GB)", 80.0),
+        ("8×A100 (640 GB)", 640.0),
+    ];
+    println!("finetuning memory plan (seq={seq}, batch={batch}):\n");
+    println!("{:<6} {:<16} {:>9}  fits on", "model", "strategy", "GB");
+    for spec in llama_family() {
+        for (label, strat) in [
+            ("Full-16bit", Strategy::Full16),
+            ("LoRA-16bit", Strategy::LoRA16 { r: 64 }),
+            ("QLoRA-4bit", Strategy::QLoRA4 { r: 64, double_quant: false }),
+            ("QLoRA-4bit+DQ",
+             Strategy::QLoRA4 { r: 64, double_quant: true }),
+        ] {
+            let f = train_footprint(&spec, strat, seq, batch);
+            let fit = gpus
+                .iter()
+                .find(|(_, gb)| f.total_gb() <= *gb)
+                .map(|(n, _)| *n)
+                .unwrap_or("nothing single-node");
+            println!("{:<6} {:<16} {:>9.1}  {}", spec.name, label,
+                     f.total_gb(), fit);
+        }
+        println!();
+    }
+    println!(
+        "headline: 65B Full-16bit {:.0} GB vs QLoRA+DQ {:.1} GB \
+         (paper: >780 GB -> <48 GB)",
+        train_footprint(&llama_family()[3], Strategy::Full16, seq, batch)
+            .total_gb(),
+        train_footprint(
+            &llama_family()[3],
+            Strategy::QLoRA4 { r: 64, double_quant: true },
+            seq,
+            batch
+        )
+        .total_gb()
+    );
+    Ok(())
+}

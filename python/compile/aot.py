@@ -1,0 +1,333 @@
+"""AOT compile path: lower every model config to HLO text + init tensors.
+
+Python runs ONCE (`make artifacts`); the Rust coordinator then loads
+`artifacts/*.hlo.txt` via PJRT and owns the training loop. Interchange is
+HLO **text** — the image's xla_extension 0.5.1 rejects jax>=0.5 serialized
+HloModuleProto (64-bit instruction ids); the text parser reassigns ids.
+See /opt/xla-example/README.md.
+
+Per config `<name>` this emits:
+    <name>.train.hlo.txt   train_step (fwd+bwd+Adam) as one fused graph
+    <name>.eval.hlo.txt    (loss, token-accuracy) on a batch
+    <name>.fwd.hlo.txt     logits, for generation       (e2e config only)
+    <name>.init.tensors    state leaves ++ frozen leaves (ordered)
+plus once:
+    manifest.json          artifact index w/ I/O signatures (Rust reads this)
+    golden.tensors         quantization golden vectors (Rust bit-exactness)
+    kernel_nf4_dequant.hlo.txt, kernel_qlora_matmul.hlo.txt
+                           standalone Pallas kernels lowered to HLO
+                           (quickstart proves pallas->HLO->PJRT end-to-end)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import configs, model, tensorio
+from .configs import ModelConfig
+from .kernels import ref, nf4, qlora_matmul
+
+
+# --------------------------------------------------------------------------
+# Lowering helpers
+# --------------------------------------------------------------------------
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # CRITICAL: the default printer ELIDES large constants ("constant({...})"),
+    # which the 0.5.1 text parser silently reads back as zeros — in-graph
+    # codebooks / causal masks / RoPE tables would be destroyed. Print full.
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # the new printer's metadata attrs (source_end_line, ...) are rejected
+    # by the 0.5.1 text parser
+    opts.print_metadata = False
+    text = comp.get_hlo_module().to_string(opts)
+    assert "{...}" not in text, "elided constants survived printing"
+    return text
+
+
+def flatten_named(tree, prefix: str):
+    """Flatten a pytree into (name, leaf) pairs; names from tree paths.
+
+    Order is jax's deterministic flatten order (dict keys sorted), which is
+    also the HLO parameter order when the tree is passed positionally.
+    """
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = prefix + jax.tree_util.keystr(path)
+        out.append((name, np.asarray(leaf)))
+    return out
+
+
+def tensor_sig(pairs):
+    return [{"name": n, "dtype": tensorio.dtype_name(a), "shape": list(a.shape)}
+            for n, a in pairs]
+
+
+# --------------------------------------------------------------------------
+# Per-config artifact build
+# --------------------------------------------------------------------------
+
+def build_config(cfg: ModelConfig, outdir: str, emit_fwd: bool,
+                 seed: int = 0) -> dict:
+    """Lower train/eval(/fwd) graphs for one config, write init tensors,
+    return its manifest entry."""
+    full_ft = (not cfg.lora)
+    key = jax.random.PRNGKey(seed)
+    kb, kl = jax.random.split(key)
+
+    base_fp = model.init_base_params(kb, cfg)
+    lora = model.init_lora_params(kl, cfg)
+
+    if full_ft:
+        trainable = base_fp                      # quant must be "none"
+        frozen = {"lora_stub": lora}
+        n_lora = len(jax.tree_util.tree_leaves(base_fp))
+    else:
+        trainable = lora
+        frozen = model.quantize_base(base_fp, cfg)
+        n_lora = len(jax.tree_util.tree_leaves(lora))
+
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, trainable)
+    step0 = jnp.zeros((), jnp.float32)
+
+    # ---- state ordering: trainable ++ m ++ v ++ [step] ------------------
+    state_pairs = (flatten_named(trainable, "trainable") +
+                   flatten_named(zeros, "adam_m") +
+                   flatten_named(zeros, "adam_v") +
+                   [("step", np.zeros((), np.float32))])
+    frozen_pairs = flatten_named(frozen, "frozen")
+
+    tokens_spec = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), jnp.int32)
+    mask_spec = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), jnp.float32)
+
+    train_step = model.make_train_step(cfg, full_ft)
+    eval_step = model.make_eval_step(cfg, full_ft)
+
+    def train_wrapped(trainable, m, v, step, frozen, tokens, mask):
+        new_t, new_m, new_v, new_step, loss = train_step(
+            trainable, m, v, step, frozen, tokens, mask)
+        return new_t, new_m, new_v, new_step, loss
+
+    lowered = jax.jit(train_wrapped).lower(
+        trainable, zeros, zeros, step0, frozen, tokens_spec, mask_spec)
+    hlo_train = to_hlo_text(lowered)
+    with open(os.path.join(outdir, f"{cfg.name}.train.hlo.txt"), "w") as f:
+        f.write(hlo_train)
+
+    lowered_e = jax.jit(eval_step).lower(trainable, frozen, tokens_spec,
+                                         mask_spec)
+    with open(os.path.join(outdir, f"{cfg.name}.eval.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered_e))
+
+    entry = {
+        "name": cfg.name,
+        "config": cfg.to_dict(),
+        "train_hlo": f"{cfg.name}.train.hlo.txt",
+        "eval_hlo": f"{cfg.name}.eval.hlo.txt",
+        "init": f"{cfg.name}.init.tensors",
+        "n_state": len(state_pairs),
+        "n_trainable": n_lora,
+        "n_frozen": len(frozen_pairs),
+        "state_sig": tensor_sig(state_pairs),
+        "frozen_sig": tensor_sig(frozen_pairs),
+        "data_sig": [
+            {"name": "tokens", "dtype": "i32",
+             "shape": [cfg.batch, cfg.seq_len]},
+            {"name": "loss_mask", "dtype": "f32",
+             "shape": [cfg.batch, cfg.seq_len]},
+        ],
+        # train outputs: new state (same sig as state) ++ [loss]
+        # eval inputs: first n_trainable state tensors ++ frozen ++ data
+        # eval outputs: [loss, acc]
+    }
+
+    if emit_fwd:
+        fwd = model.make_forward(cfg, full_ft)
+        lowered_f = jax.jit(fwd).lower(trainable, frozen, tokens_spec)
+        with open(os.path.join(outdir, f"{cfg.name}.fwd.hlo.txt"), "w") as f:
+            f.write(to_hlo_text(lowered_f))
+        entry["fwd_hlo"] = f"{cfg.name}.fwd.hlo.txt"
+
+    tensorio.write_tensors(os.path.join(outdir, f"{cfg.name}.init.tensors"),
+                           state_pairs + frozen_pairs)
+    return entry
+
+
+# --------------------------------------------------------------------------
+# Golden quantization vectors (Rust `quant` crate bit-exactness)
+# --------------------------------------------------------------------------
+
+def build_golden(outdir: str) -> list:
+    """Emit input/expected pairs for every datatype the Rust side implements.
+
+    Codes must match bit-for-bit; dequantized floats must match exactly
+    (same f32 ops on both sides) — tests allow 0 ULP on codes, tiny atol on
+    floats.
+    """
+    rng = np.random.default_rng(1234)
+    cases = []
+    pairs = []
+    for dtype in ["nf4", "fp4_e2m1", "fp4_e3m0", "int4", "int8", "fp8_e4m3"]:
+        cb = np.asarray(ref.codebook(dtype))
+        pairs.append((f"codebook/{dtype}", cb.astype(np.float32)))
+    for i, (dtype, n, block) in enumerate([
+            ("nf4", 64 * 48, 64), ("nf4", 128 * 16, 128),
+            ("fp4_e2m1", 64 * 32, 64), ("fp4_e3m0", 64 * 32, 64),
+            ("int4", 64 * 32, 64), ("int8", 64 * 32, 64)]):
+        x = rng.standard_normal(n).astype(np.float32)
+        cb = ref.codebook(dtype)
+        codes, absmax = ref.quantize_blockwise(jnp.asarray(x), cb, block)
+        deq = ref.dequantize_blockwise(codes, absmax, cb, block)
+        name = f"case{i}"
+        pairs += [(f"{name}/input", x),
+                  (f"{name}/codes", np.asarray(codes)),
+                  (f"{name}/absmax", np.asarray(absmax)),
+                  (f"{name}/dequant", np.asarray(deq))]
+        cases.append({"name": name, "dtype": dtype, "block": block, "n": n})
+    # double-quantization case
+    x = rng.standard_normal(64 * 512).astype(np.float32)
+    cb = ref.codebook("nf4")
+    codes, absmax = ref.quantize_blockwise(jnp.asarray(x), cb, 64)
+    c2, a2, mean = ref.double_quantize(absmax, 256)
+    deq = ref.double_dequant_weight(codes, c2, a2, mean, cb, 64, 256)
+    pairs += [("dq/input", x), ("dq/codes", np.asarray(codes)),
+              ("dq/absmax", np.asarray(absmax)),
+              ("dq/codes2", np.asarray(c2)), ("dq/absmax2", np.asarray(a2)),
+              ("dq/mean", np.asarray(mean)), ("dq/dequant", np.asarray(deq))]
+    cases.append({"name": "dq", "dtype": "nf4", "block": 64, "block2": 256,
+                  "n": 64 * 512})
+    tensorio.write_tensors(os.path.join(outdir, "golden.tensors"), pairs)
+    return cases
+
+
+# --------------------------------------------------------------------------
+# Standalone Pallas kernel artifacts (quickstart)
+# --------------------------------------------------------------------------
+
+def build_kernel_artifacts(outdir: str) -> dict:
+    """Lower the Pallas kernels themselves to HLO — the quickstart example
+    loads these, proving the pallas(interpret) -> HLO -> PJRT path."""
+    cb = ref.nf4_codebook()
+    n, block = 64 * 16, 64
+
+    def dequant_fn(codes, absmax):
+        return (nf4.dequantize_blockwise_pallas(codes, absmax, cb, block),)
+
+    codes_spec = jax.ShapeDtypeStruct((n,), jnp.uint8)
+    absmax_spec = jax.ShapeDtypeStruct((n // block,), jnp.float32)
+    low = jax.jit(dequant_fn).lower(codes_spec, absmax_spec)
+    with open(os.path.join(outdir, "kernel_nf4_dequant.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(low))
+
+    m, k, o, r = 16, 128, 64, 8
+
+    def qmm_fn(x, codes, absmax, a, b):
+        return (qlora_matmul.qlora_matmul_pallas(
+            x, codes, absmax, cb, a, b, s=2.0, block=block),)
+
+    low2 = jax.jit(qmm_fn).lower(
+        jax.ShapeDtypeStruct((m, k), jnp.float32),
+        jax.ShapeDtypeStruct((o, k), jnp.uint8),
+        jax.ShapeDtypeStruct((o, k // block), jnp.float32),
+        jax.ShapeDtypeStruct((k, r), jnp.float32),
+        jax.ShapeDtypeStruct((r, o), jnp.float32))
+    with open(os.path.join(outdir, "kernel_qlora_matmul.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(low2))
+
+    # test vectors for the quickstart
+    rng = np.random.default_rng(7)
+    xflat = rng.standard_normal(n).astype(np.float32)
+    codes, absmax = ref.quantize_blockwise(jnp.asarray(xflat), cb, block)
+    expected = ref.dequantize_blockwise(codes, absmax, cb, block)
+    x = rng.standard_normal((m, k)).astype(np.float32)
+    w = (rng.standard_normal((k, o)) * 0.05).astype(np.float32)
+    a = (rng.standard_normal((k, r)) * 0.05).astype(np.float32)
+    b = (rng.standard_normal((r, o)) * 0.05).astype(np.float32)
+    q = ref.quantize_weight(jnp.asarray(w), "nf4", block, double_quant=False)
+    wcodes = np.asarray(ref.unpack_nibbles(q["packed"])).reshape(o, k)
+    wabsmax = np.asarray(q["absmax"]).reshape(o, k // block)
+    y = ref.qlora_linear(jnp.asarray(x), q, jnp.asarray(a), jnp.asarray(b),
+                         2.0, (k, o), "nf4", block)
+    tensorio.write_tensors(os.path.join(outdir, "kernel_vectors.tensors"), [
+        ("dequant/codes", np.asarray(codes)),
+        ("dequant/absmax", np.asarray(absmax)),
+        ("dequant/expected", np.asarray(expected)),
+        ("qmm/x", x), ("qmm/codes", wcodes), ("qmm/absmax", wabsmax),
+        ("qmm/a", a), ("qmm/b", b), ("qmm/expected", np.asarray(y)),
+    ])
+    return {
+        "nf4_dequant": {"hlo": "kernel_nf4_dequant.hlo.txt",
+                        "n": n, "block": block},
+        "qlora_matmul": {"hlo": "kernel_qlora_matmul.hlo.txt",
+                         "m": m, "k": k, "o": o, "r": r, "s": 2.0,
+                         "block": block},
+        "vectors": "kernel_vectors.tensors",
+    }
+
+
+# --------------------------------------------------------------------------
+# main
+# --------------------------------------------------------------------------
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated config names (default: all)")
+    ap.add_argument("--large", action="store_true",
+                    help="also build large_configs() (slow)")
+    args = ap.parse_args()
+    outdir = args.out
+    os.makedirs(outdir, exist_ok=True)
+
+    cfgs = configs.named_configs()
+    if args.large:
+        cfgs += configs.large_configs()
+    if args.only:
+        keep = set(args.only.split(","))
+        cfgs = [c for c in cfgs if c.name in keep]
+
+    # --only merges into an existing manifest instead of clobbering it
+    manifest = {"artifacts": [], "golden": None, "kernels": None}
+    man_path = os.path.join(outdir, "manifest.json")
+    if args.only and os.path.exists(man_path):
+        with open(man_path) as f:
+            manifest = json.load(f)
+
+    for cfg in cfgs:
+        print(f"[aot] lowering {cfg.name} "
+              f"({cfg.n_params():,} params, quant={cfg.quant}, "
+              f"lora={cfg.lora_scope if cfg.lora else 'OFF'})", flush=True)
+        emit_fwd = cfg.name.startswith("e2e")
+        entry = build_config(cfg, outdir, emit_fwd)
+        manifest["artifacts"] = [
+            a for a in manifest["artifacts"] if a["name"] != cfg.name
+        ] + [entry]
+
+    if not args.only or manifest.get("golden") is None:
+        print("[aot] golden quantization vectors", flush=True)
+        manifest["golden"] = {"tensors": "golden.tensors",
+                              "cases": build_golden(outdir)}
+        print("[aot] standalone pallas kernel artifacts", flush=True)
+        manifest["kernels"] = build_kernel_artifacts(outdir)
+
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {len(manifest['artifacts'])} configs -> {outdir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,147 @@
+"""Model / finetuning configurations for the AOT compile path.
+
+Every artifact the Rust coordinator can load is generated from one of the
+named configs below. The `tiny_*` family drives the real-training
+experiments (Figure 2 placement sweep, Figure 4 r sweep, Table 3 method
+comparison, Table 10 loss-mask ablation); `e2e` is the end-to-end
+finetuning driver model; `e2e_large`/`m100` exist for bigger machines
+(this reproduction box is a single CPU core — see EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+# LoRA placement scopes (paper Figure 2 / Appendix A.1 search space).
+SCOPE_QK = ("wq", "wk")
+SCOPE_ATTN = ("wq", "wk", "wv", "wo")
+SCOPE_FFN = ("wg", "wu", "wd")
+SCOPE_ALL = ("wq", "wk", "wv", "wo", "wg", "wu", "wd")
+SCOPE_ATTN_FFN_OUT = ("wq", "wk", "wv", "wo", "wd")
+
+SCOPES = {
+    "qk": SCOPE_QK,
+    "attn": SCOPE_ATTN,
+    "ffn": SCOPE_FFN,
+    "all": SCOPE_ALL,
+    "attn_ffn_out": SCOPE_ATTN_FFN_OUT,
+}
+
+PROJ_NAMES = ("wq", "wk", "wv", "wo", "wg", "wu", "wd")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int = 512
+    d_model: int = 64
+    n_layers: int = 2
+    n_heads: int = 4
+    d_ff: int = 128
+    seq_len: int = 64
+    batch: int = 8
+    # quantization of the frozen base (paper section 3)
+    quant: str = "nf4"          # nf4 | fp4_e2m1 | fp4_e3m0 | int4 | int8 | none
+    double_quant: bool = True
+    block: int = 64
+    block2: int = 256
+    # LoRA (paper Eq. 3/5); lora=False + quant="none" => full finetuning
+    lora: bool = True
+    lora_r: int = 8
+    lora_alpha: int = 16
+    lora_scope: str = "all"
+    # training
+    lr: float = 2e-4
+    adam_b1: float = 0.9
+    adam_b2: float = 0.999      # paper Appendix B.2
+    adam_eps: float = 1e-8
+    max_grad_norm: float = 0.3  # paper Appendix B.2
+    remat: bool = True          # per-layer gradient checkpointing [9]
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def scope(self) -> Tuple[str, ...]:
+        return SCOPES[self.lora_scope]
+
+    @property
+    def lora_s(self) -> float:
+        return self.lora_alpha / self.lora_r
+
+    def proj_shape(self, proj: str) -> Tuple[int, int]:
+        d, f = self.d_model, self.d_ff
+        return {
+            "wq": (d, d), "wk": (d, d), "wv": (d, d), "wo": (d, d),
+            "wg": (d, f), "wu": (d, f), "wd": (f, d),
+        }[proj]
+
+    def n_params(self) -> int:
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        per_layer = 4 * d * d + 3 * d * f + 2 * d
+        return v * d + self.n_layers * per_layer + d
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _tiny(name: str, **kw) -> ModelConfig:
+    base = dict(vocab=256, d_model=64, n_layers=2, n_heads=4, d_ff=128,
+                seq_len=48, batch=8, lora_r=8)
+    base.update(kw)
+    return ModelConfig(name=name, **base)
+
+
+def named_configs() -> List[ModelConfig]:
+    cfgs: List[ModelConfig] = []
+
+    # --- Figure 2: LoRA placement sweep (which layers get adapters) ------
+    for scope in SCOPES:
+        cfgs.append(_tiny(f"tiny_scope_{scope}", lora_scope=scope))
+    # 16-bit full-finetuning baseline for Figure 2 / Table 3
+    cfgs.append(_tiny("tiny_fullft", quant="none", lora=False))
+
+    # --- Figure 4: LoRA r sweep (r independent of performance) ----------
+    for r in (1, 2, 4, 8, 16, 32):
+        if r != 8:  # r=8 reuses tiny_scope_all
+            cfgs.append(_tiny(f"tiny_r{r}", lora_r=r))
+
+    # --- Table 3: datatype / method comparison ---------------------------
+    cfgs.append(_tiny("tiny_lora16", quant="none"))                # LoRA BF16
+    cfgs.append(_tiny("tiny_int8", quant="int8", double_quant=False))
+    cfgs.append(_tiny("tiny_fp4", quant="fp4_e2m1", double_quant=False))
+    cfgs.append(_tiny("tiny_nf4", quant="nf4", double_quant=False))
+    # tiny_scope_all doubles as "QLoRA NF4 + DQ"
+
+    # --- end-to-end driver (examples/finetune_guanaco.rs) ----------------
+    cfgs.append(ModelConfig(
+        name="e2e", vocab=512, d_model=192, n_layers=4, n_heads=6,
+        d_ff=512, seq_len=96, batch=8, lora_r=16, lr=2e-4))
+    # perf ablation: gradient checkpointing off (recompute vs memory —
+    # EXPERIMENTS.md §Perf L2)
+    cfgs.append(ModelConfig(
+        name="e2e_noremat", vocab=512, d_model=192, n_layers=4, n_heads=6,
+        d_ff=512, seq_len=96, batch=8, lora_r=16, lr=2e-4, remat=False))
+
+    # chat/generation artifact shares e2e weights; fwd graph emitted too.
+    return cfgs
+
+
+def large_configs() -> List[ModelConfig]:
+    """Bigger configs for capable machines (not built by default)."""
+    return [
+        ModelConfig(name="e2e_large", vocab=1024, d_model=384, n_layers=6,
+                    n_heads=8, d_ff=1024, seq_len=128, batch=8, lora_r=16),
+        ModelConfig(name="m100", vocab=32000, d_model=640, n_layers=10,
+                    n_heads=10, d_ff=1792, seq_len=512, batch=4, lora_r=64),
+    ]
+
+
+def by_name(name: str) -> ModelConfig:
+    for c in named_configs() + large_configs():
+        if c.name == name:
+            return c
+    raise KeyError(name)

@@ -1,0 +1,49 @@
+"""Pallas kernel for Double Quantization (paper section 3).
+
+Dequantizes the *quantization constants*: c2 was mean-centered and
+FP8-E4M3 block-quantized (block 256) with second-level constants c1.
+This kernel recovers c2; composing it with ``nf4.dequantize_blockwise_pallas``
+implements doubleDequant of paper Eq. 6 (composition is tested against
+``ref.double_dequant_weight``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dq_kernel(codes2_ref, absmax2_ref, mean_ref, cb_ref, out_ref):
+    codes = codes2_ref[...].astype(jnp.int32)          # (R, block2)
+    cb = cb_ref[...]                                   # (255,) fp8-e4m3
+    vals = cb[codes] * absmax2_ref[...][:, None]
+    out_ref[...] = vals + mean_ref[0]
+
+
+def double_dequantize_pallas(codes2: jnp.ndarray, absmax2: jnp.ndarray,
+                             mean: jnp.ndarray, cb8: jnp.ndarray,
+                             block2: int = 256,
+                             rows_per_program: int = 4) -> jnp.ndarray:
+    """Pallas twin of ref.double_dequantize. mean is a shape-(1,) array."""
+    n = codes2.shape[0]
+    assert n % block2 == 0
+    nb = n // block2
+    r = min(rows_per_program, nb)
+    while nb % r != 0:
+        r -= 1
+    grid = (nb // r,)
+    out = pl.pallas_call(
+        _dq_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((r, block2), lambda i: (i, 0)),
+            pl.BlockSpec((r,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((cb8.shape[0],), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((r, block2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, block2), jnp.float32),
+        interpret=True,
+    )(codes2.reshape(nb, block2), absmax2, mean.reshape(1), cb8)
+    return out.reshape(-1)

@@ -1,0 +1,106 @@
+"""Pallas kernels for block-wise k-bit quantization (NF4/FP4/Int4).
+
+These are the L1 compute hot-spots of the paper: quantize-on-load and
+dequantize-on-use of block-wise absmax-scaled codebook datatypes
+(paper section 3). Kernels run under ``interpret=True`` — the CPU PJRT
+client cannot execute Mosaic custom-calls — and are validated against
+``ref.py`` in ``python/tests/``.
+
+TPU mapping (DESIGN.md section Hardware-Adaptation): the quantization
+block (64) is *not* the kernel tile. Each program instance owns
+``rows_per_program`` quantization blocks laid out as a (R, 64) VMEM tile
+(R*64*4 B activations + R*64 B codes), the 16-entry codebook lives in
+VMEM and the lookup is a VPU-vectorized gather; absmax is a lane-wise
+max-reduce. No MXU involvement for pure (de)quantization.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quantize_kernel(x_ref, cb_ref, codes_ref, absmax_ref):
+    """One program: R quantization blocks -> codes + absmax."""
+    x = x_ref[...]                       # (R, block) f32
+    cb = cb_ref[...]                     # (n_codes,) f32
+    absmax = jnp.max(jnp.abs(x), axis=1)             # (R,)
+    scale = jnp.where(absmax > 0, absmax, 1.0)
+    xn = x / scale[:, None]
+    mids = (cb[1:] + cb[:-1]) * 0.5
+    # round-to-nearest via midpoint comparison; ties -> upper code
+    idx = jnp.sum(xn[..., None] >= mids[None, None, :], axis=-1)
+    codes_ref[...] = idx.astype(jnp.uint8)
+    absmax_ref[...] = absmax.astype(jnp.float32)
+
+
+def quantize_blockwise_pallas(x: jnp.ndarray, cb: jnp.ndarray,
+                              block: int = 64, rows_per_program: int = 8):
+    """Block-wise absmax quantize; pallas twin of ref.quantize_blockwise.
+
+    x: flat f32, length divisible by block*rows_per_program after padding
+    (caller guarantees divisibility by block; we pad rows internally).
+    Returns (codes uint8 [n], absmax f32 [n/block]).
+    """
+    n = x.shape[0]
+    assert n % block == 0
+    nb = n // block
+    r = min(rows_per_program, nb)
+    while nb % r != 0:
+        r -= 1
+    grid = (nb // r,)
+    xb = x.reshape(nb, block)
+    codes, absmax = pl.pallas_call(
+        _quantize_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((r, block), lambda i: (i, 0)),
+            pl.BlockSpec((cb.shape[0],), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((r, block), lambda i: (i, 0)),
+            pl.BlockSpec((r,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, block), jnp.uint8),
+            jax.ShapeDtypeStruct((nb,), jnp.float32),
+        ],
+        interpret=True,
+    )(xb, cb)
+    return codes.reshape(-1), absmax
+
+
+def _dequantize_kernel(codes_ref, absmax_ref, cb_ref, out_ref):
+    codes = codes_ref[...].astype(jnp.int32)          # (R, block)
+    cb = cb_ref[...]
+    vals = cb[codes]                                  # VPU gather
+    out_ref[...] = vals * absmax_ref[...][:, None]
+
+
+def dequantize_blockwise_pallas(codes: jnp.ndarray, absmax: jnp.ndarray,
+                                cb: jnp.ndarray, block: int = 64,
+                                rows_per_program: int = 8) -> jnp.ndarray:
+    """Pallas twin of ref.dequantize_blockwise."""
+    n = codes.shape[0]
+    assert n % block == 0
+    nb = n // block
+    r = min(rows_per_program, nb)
+    while nb % r != 0:
+        r -= 1
+    grid = (nb // r,)
+    out = pl.pallas_call(
+        _dequantize_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((r, block), lambda i: (i, 0)),
+            pl.BlockSpec((r,), lambda i: (i,)),
+            pl.BlockSpec((cb.shape[0],), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((r, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, block), jnp.float32),
+        interpret=True,
+    )(codes.reshape(nb, block), absmax, cb)
+    return out.reshape(-1)

@@ -1,0 +1,86 @@
+"""Fused QLoRA linear as a Pallas kernel (paper Eq. 5).
+
+    Y = X dequant(codes, absmax)  +  s (X L1) L2
+
+This is the per-step hot path of QLoRA finetuning: the frozen base weight
+is *stored* 4-bit and dequantized tile-at-a-time on the fly, never
+materialized in full precision in HBM. The CUDA original (bitsandbytes)
+fuses dequant into the GEMM epilogue per threadblock; the TPU rethink
+(DESIGN.md section Hardware-Adaptation) makes the dequantized weight tile a
+VMEM scratch value feeding the MXU:
+
+  grid (M/TM, O/TO); per program:
+    VMEM: x tile (TM, K) f32, codes tile (TO, K) u8, absmax (TO, K/64) f32,
+          codebook (16,), L1 (K, r), L2 tile (r, TO)
+    w_t = cb[codes] * absmax.repeat(64)          # VPU gather + mul
+    acc = x @ w_t.T + s * ((x @ L1) @ L2)        # MXU, f32 accumulate
+
+VMEM for TM=TO=128, K=4096, r=64: 128*4096*4 (x) + 128*4096 (codes)
++ 128*64*4 (absmax) + 4096*64*4 (L1) ~= 3.7 MiB -- fits the ~16 MiB VMEM
+budget with double-buffering; MXU utilization is bounded by the dequant
+VPU pass at ~K/64 fused multiply-selects per MAC column (estimates in
+EXPERIMENTS.md section Perf).
+
+The weight layout matches ref.quantize_weight: codes are W^T (O, K),
+absmax blocks run along K. Validated against ref.qlora_linear.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _qlora_kernel(s, block, x_ref, codes_ref, absmax_ref, cb_ref,
+                  a_ref, b_ref, out_ref):
+    x = x_ref[...]                                  # (TM, K)
+    codes = codes_ref[...].astype(jnp.int32)        # (TO, K)
+    cb = cb_ref[...]
+    absmax = absmax_ref[...]                        # (TO, K/block)
+    scales = jnp.repeat(absmax, block, axis=1)      # (TO, K)
+    w_t = cb[codes] * scales                        # dequantized W^T tile
+    base = jnp.dot(x, w_t.T)                        # MXU
+    lora = jnp.dot(jnp.dot(x, a_ref[...]), b_ref[...])
+    out_ref[...] = base + s * lora
+
+
+def qlora_matmul_pallas(x: jnp.ndarray, codes: jnp.ndarray,
+                        absmax: jnp.ndarray, cb: jnp.ndarray,
+                        a: jnp.ndarray, b: jnp.ndarray, s: float,
+                        block: int = 64, tm: int = 32,
+                        to: int = 32) -> jnp.ndarray:
+    """Fused dequant-matmul-plus-LoRA.
+
+    x: (M, K) f32; codes: (O, K) uint8 (unpacked W^T codes); absmax:
+    (O, K/block) f32; a: (K, r); b: (r, O). Returns (M, O) f32.
+    """
+    m, k = x.shape
+    o = codes.shape[0]
+    assert codes.shape[1] == k and absmax.shape == (o, k // block)
+    tm = min(tm, m)
+    while m % tm != 0:
+        tm -= 1
+    to = min(to, o)
+    while o % to != 0:
+        to -= 1
+    r = a.shape[1]
+    grid = (m // tm, o // to)
+    kern = functools.partial(_qlora_kernel, s, block)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((to, k), lambda i, j: (j, 0)),
+            pl.BlockSpec((to, k // block), lambda i, j: (j, 0)),
+            pl.BlockSpec((cb.shape[0],), lambda i, j: (0,)),
+            pl.BlockSpec((k, r), lambda i, j: (0, 0)),
+            pl.BlockSpec((r, to), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, to), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, o), jnp.float32),
+        interpret=True,
+    )(x, codes, absmax, cb, a, b)

@@ -1,0 +1,321 @@
+"""Pure-jnp reference oracle for every L1 kernel.
+
+This module is the single source of truth for the numerics of the QLoRA
+quantization stack:
+
+  * codebook construction: NF4 (paper Appendix E / Eq. 4), generic FP-k
+    (E2M1, E3M0, E4M3), symmetric Int4/Int8,
+  * block-wise absmax quantize / dequantize (paper Eq. 1-2, Background),
+  * Double Quantization of the quantization constants (paper section 3),
+  * the fused QLoRA linear:  Y = X dd(W) + s (X L1) L2   (paper Eq. 5-6).
+
+The Pallas kernels in this package are tested `allclose` against these
+functions, and the Rust `quant` crate is tested *bit-for-bit* against the
+golden vectors `aot.py` emits from these functions.
+
+Layout convention (shared with the Rust side): a weight ``W`` of shape
+``(h, o)`` is stored transposed, flattened row-major as ``W^T.reshape(-1)``
+so that each quantization block of 64 values is contiguous along the
+reduction dimension ``h`` for a fixed output unit. See DESIGN.md section 4.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.special import ndtri
+
+# --------------------------------------------------------------------------
+# Codebooks
+# --------------------------------------------------------------------------
+
+# Exact NF4 values from the paper, Appendix E. Used only as a golden test
+# target; the code below *derives* them.
+NF4_PAPER = [
+    -1.0, -0.6961928009986877, -0.5250730514526367,
+    -0.39491748809814453, -0.28444138169288635, -0.18477343022823334,
+    -0.09105003625154495, 0.0, 0.07958029955625534, 0.16093020141124725,
+    0.24611230194568634, 0.33791524171829224, 0.44070982933044434,
+    0.5626170039176941, 0.7229568362236023, 1.0,
+]
+
+_NF4_OFFSET = 0.9677083  # bitsandbytes create_normal_map offset
+
+
+def nf4_codebook(offset: float = _NF4_OFFSET) -> jnp.ndarray:
+    """Derive the 16-value NF4 codebook (paper section 3, Eq. 4).
+
+    Asymmetric construction: 2^{k-1} quantiles for the negative half,
+    2^{k-1}+1 for the positive half, unify and drop the duplicate zero,
+    normalize into [-1, 1]. Information-theoretically optimal for
+    zero-centered normal data under block absmax scaling.
+    """
+    # positive side: 8 quantiles of N(0,1) on [0.5, offset]
+    pos_p = jnp.linspace(offset, 0.5, 9)[:-1]
+    pos = ndtri(pos_p)
+    # negative side: 7 quantiles on [1-offset, 0.5] (via symmetry)
+    neg_p = jnp.linspace(offset, 0.5, 8)[:-1]
+    neg = -ndtri(neg_p)
+    vals = jnp.concatenate([neg, jnp.zeros((1,)), pos])
+    vals = jnp.sort(vals)
+    return (vals / jnp.max(jnp.abs(vals))).astype(jnp.float32)
+
+
+def fp_codebook(ebits: int, mbits: int, signed: bool = True) -> jnp.ndarray:
+    """Generic k-bit float codebook, normalized to max |value| == 1.
+
+    Values for exponent field e, mantissa field m with bias 2^{E-1}-1:
+      e > 0 : 2^{e-bias} (1 + m / 2^M)        (normal)
+      e == 0: 2^{1-bias} (m / 2^M)            (subnormal, includes 0)
+
+    FP4-E2M1 -> magnitudes {0, .5, 1, 1.5, 2, 3, 4, 6}/6 (Table 2),
+    FP4-E3M0 -> magnitudes {0, 2^-2..2^4}/16 (Table 2),
+    FP8-E4M3 -> the Double Quantization codebook (section 3).
+    """
+    bias = 2 ** (ebits - 1) - 1
+    mags = []
+    for e in range(2 ** ebits):
+        for m in range(2 ** mbits):
+            if e == 0:
+                v = 2.0 ** (1 - bias) * (m / 2.0 ** mbits)
+            else:
+                v = 2.0 ** (e - bias) * (1.0 + m / 2.0 ** mbits)
+            mags.append(v)
+    mags = sorted(set(mags))
+    mx = mags[-1]
+    mags = [m / mx for m in mags]
+    if signed:
+        vals = sorted(set([-m for m in mags] + mags))
+    else:
+        vals = mags
+    return jnp.array(vals, dtype=jnp.float32)
+
+
+def fp4_e2m1_codebook() -> jnp.ndarray:
+    return fp_codebook(2, 1)
+
+
+def fp4_e3m0_codebook() -> jnp.ndarray:
+    return fp_codebook(3, 0)
+
+
+def fp8_e4m3_codebook() -> jnp.ndarray:
+    return fp_codebook(4, 3)
+
+
+def int_codebook(bits: int) -> jnp.ndarray:
+    """Symmetric integer codebook {-(2^{b-1}-1) .. 2^{b-1}-1} / (2^{b-1}-1).
+
+    Zero is exactly representable (paper: required for padding)."""
+    half = 2 ** (bits - 1) - 1
+    return (jnp.arange(-half, half + 1, dtype=jnp.float32) / half)
+
+
+def nf4_paper_codebook() -> jnp.ndarray:
+    """The canonical NF4 codebook: the paper's exact Appendix E constants.
+
+    `nf4_codebook()` (the derivation) reproduces these to ~1 f32 ulp; using
+    the published constants as the canonical table makes the Python and
+    Rust implementations bit-identical (see rust/src/quant/nf4.rs)."""
+    return jnp.array(NF4_PAPER, dtype=jnp.float32)
+
+
+CODEBOOKS = {
+    "nf4": nf4_paper_codebook,
+    "fp4_e2m1": fp4_e2m1_codebook,
+    "fp4_e3m0": fp4_e3m0_codebook,
+    "fp8_e4m3": fp8_e4m3_codebook,
+    "int4": lambda: int_codebook(4),
+    "int8": lambda: int_codebook(8),
+}
+
+
+def codebook(name: str) -> jnp.ndarray:
+    return CODEBOOKS[name]()
+
+
+# --------------------------------------------------------------------------
+# Nearest-code assignment + block-wise absmax quantization (Eq. 1-2)
+# --------------------------------------------------------------------------
+
+def nearest_code(xn: jnp.ndarray, cb: jnp.ndarray) -> jnp.ndarray:
+    """Index of the nearest codebook entry for each normalized value.
+
+    cb must be sorted ascending. Round-to-nearest via bin midpoints, which
+    for ties prefers the *upper* code (matches the Rust implementation).
+    Returns uint8 indices.
+    """
+    mids = (cb[1:] + cb[:-1]) * 0.5
+    idx = jnp.sum(xn[..., None] >= mids, axis=-1)
+    return idx.astype(jnp.uint8)
+
+
+def quantize_blockwise(x: jnp.ndarray, cb: jnp.ndarray, block: int = 64):
+    """Block-wise absmax quantize a flat tensor (paper Background, Eq. 1).
+
+    x: flat f32 array, length divisible by `block`.
+    Returns (codes uint8 [n], absmax f32 [n/block]).
+    """
+    n = x.shape[0]
+    assert n % block == 0, f"length {n} not divisible by block {block}"
+    blocks = x.reshape(-1, block)
+    absmax = jnp.max(jnp.abs(blocks), axis=1)
+    scale = jnp.where(absmax > 0, absmax, 1.0)
+    xn = blocks / scale[:, None]
+    codes = nearest_code(xn, cb)
+    return codes.reshape(-1), absmax.astype(jnp.float32)
+
+
+def dequantize_blockwise(codes: jnp.ndarray, absmax: jnp.ndarray,
+                         cb: jnp.ndarray, block: int = 64) -> jnp.ndarray:
+    """Inverse of quantize_blockwise (paper Eq. 2)."""
+    vals = cb[codes.astype(jnp.int32)].reshape(-1, block)
+    return (vals * absmax[:, None]).reshape(-1)
+
+
+# --------------------------------------------------------------------------
+# Double Quantization (paper section 3)
+# --------------------------------------------------------------------------
+
+def double_quantize(absmax: jnp.ndarray, block2: int = 256):
+    """Quantize the quantization constants c2 (section 3, 'Double Quantization').
+
+    The c2 are positive, so we subtract their mean and use symmetric FP8-E4M3
+    quantization with blocksize `block2`. Returns
+    (codes2 uint8 [nb], absmax2 f32 [nb/block2], mean f32 scalar).
+
+    Memory: 32/64 bits/param -> 8/64 + 32/(64*256) = 0.127 bits/param,
+    saving 0.373 bits/param (verified in tests and in the Rust memory model).
+
+    If len(absmax) is not a multiple of block2, the input is padded with
+    its mean (centered value 0 has an exact FP8 code, so padding is
+    lossless); `double_dequantize` slices the pad back off given `n`.
+    The Rust implementation mirrors this convention exactly.
+    """
+    mean = jnp.mean(absmax)
+    n = absmax.shape[0]
+    pad = (-n) % block2
+    if pad:
+        absmax = jnp.concatenate([absmax, jnp.full((pad,), mean)])
+    centered = absmax - mean
+    cb = fp8_e4m3_codebook()
+    codes2, absmax2 = quantize_blockwise(centered, cb, block2)
+    return codes2, absmax2, mean.astype(jnp.float32)
+
+
+def double_dequantize(codes2: jnp.ndarray, absmax2: jnp.ndarray,
+                      mean: jnp.ndarray, block2: int = 256,
+                      n: int | None = None) -> jnp.ndarray:
+    """Recover (approximate) absmax constants c2 from their quantized form.
+
+    n: original (pre-padding) number of constants; defaults to full length."""
+    cb = fp8_e4m3_codebook()
+    centered = dequantize_blockwise(codes2, absmax2, cb, block2)
+    out = centered + mean
+    return out if n is None else out[:n]
+
+
+def double_dequant_weight(codes: jnp.ndarray, codes2: jnp.ndarray,
+                          absmax2: jnp.ndarray, mean: jnp.ndarray,
+                          cb: jnp.ndarray, block: int = 64,
+                          block2: int = 256) -> jnp.ndarray:
+    """doubleDequant(c1, c2, W) of paper Eq. 6: flat dequantized weight."""
+    nb = codes.shape[0] // block
+    absmax = double_dequantize(codes2, absmax2, mean, block2, n=nb)
+    return dequantize_blockwise(codes, absmax, cb, block)
+
+
+# --------------------------------------------------------------------------
+# Nibble packing (storage format; 2 NF4 codes per byte)
+# --------------------------------------------------------------------------
+
+def pack_nibbles(codes: jnp.ndarray) -> jnp.ndarray:
+    """Pack uint8 codes in [0,16) pairwise: byte = lo | hi << 4."""
+    assert codes.shape[0] % 2 == 0
+    pairs = codes.reshape(-1, 2).astype(jnp.uint8)
+    return (pairs[:, 0] | (pairs[:, 1] << 4)).astype(jnp.uint8)
+
+
+def unpack_nibbles(packed: jnp.ndarray) -> jnp.ndarray:
+    lo = packed & 0xF
+    hi = packed >> 4
+    return jnp.stack([lo, hi], axis=1).reshape(-1).astype(jnp.uint8)
+
+
+# --------------------------------------------------------------------------
+# Quantized-weight container + the QLoRA linear (Eq. 5)
+# --------------------------------------------------------------------------
+
+def quantize_weight(w: jnp.ndarray, dtype: str = "nf4", block: int = 64,
+                    block2: int = 256, double_quant: bool = True):
+    """Quantize a (h, o) weight into the shared storage layout.
+
+    Returns a dict of arrays (the cross-boundary representation):
+      packed   uint8 [h*o/2]   packed codes of W^T row-major flat
+               (for 8-bit codebooks, unpacked codes uint8 [h*o])
+      codes2   uint8 [nb]      DQ'd absmax codes      (if double_quant)
+      absmax2  f32  [nb/256]   second-level constants (if double_quant)
+      mean     f32  []         absmax mean            (if double_quant)
+      absmax   f32  [nb]       raw absmax             (if not double_quant)
+    """
+    h, o = w.shape
+    flat = w.T.reshape(-1)
+    cb = codebook(dtype)
+    codes, absmax = quantize_blockwise(flat, cb, block)
+    out = {"packed": pack_nibbles(codes) if cb.shape[0] <= 16 else codes}
+    if double_quant:
+        codes2, absmax2, mean = double_quantize(absmax, block2)
+        out.update(codes2=codes2, absmax2=absmax2, mean=mean)
+    else:
+        out["absmax"] = absmax
+    return out
+
+
+def dequantize_weight(q: dict, shape, dtype: str = "nf4", block: int = 64,
+                      block2: int = 256) -> jnp.ndarray:
+    """Inverse of quantize_weight: returns W of shape (h, o), f32."""
+    h, o = shape
+    cb = codebook(dtype)
+    codes = unpack_nibbles(q["packed"]) if cb.shape[0] <= 16 else q["packed"]
+    if "codes2" in q:
+        flat = double_dequant_weight(codes, q["codes2"], q["absmax2"],
+                                     q["mean"], cb, block, block2)
+    else:
+        flat = dequantize_blockwise(codes, q["absmax"], cb, block)
+    return flat.reshape(o, h).T
+
+
+def qlora_linear(x: jnp.ndarray, q: dict, a: jnp.ndarray, b: jnp.ndarray,
+                 s: float, shape, dtype: str = "nf4", block: int = 64,
+                 block2: int = 256) -> jnp.ndarray:
+    """Paper Eq. 5:  Y = X doubleDequant(c1, c2, W) + s (X L1) L2.
+
+    x: (..., h); a: (h, r); b: (r, o). Compute dtype f32 here (the paper's
+    BF16 compute dtype is a GPU tensor-core choice; see DESIGN.md
+    section Hardware-Adaptation).
+    """
+    w = dequantize_weight(q, shape, dtype, block, block2)
+    return x @ w + s * ((x @ a) @ b)
+
+
+# --------------------------------------------------------------------------
+# Quantization-error metrics (drives Table 2 / Figure 3 calibration)
+# --------------------------------------------------------------------------
+
+def quant_error(x: jnp.ndarray, dtype: str, block: int = 64,
+                double_quant: bool = False, block2: int = 256):
+    """Round-trip a flat tensor, return (mse, mae, sqnr_db)."""
+    cb = codebook(dtype)
+    codes, absmax = quantize_blockwise(x, cb, block)
+    if double_quant:
+        codes2, absmax2, mean = double_quantize(absmax, block2)
+        xq = double_dequant_weight(codes, codes2, absmax2, mean, cb,
+                                   block, block2)
+    else:
+        xq = dequantize_blockwise(codes, absmax, cb, block)
+    err = x - xq
+    mse = jnp.mean(err * err)
+    mae = jnp.mean(jnp.abs(err))
+    power = jnp.mean(x * x)
+    sqnr = 10.0 * jnp.log10(power / jnp.maximum(mse, 1e-30))
+    return mse, mae, sqnr

@@ -1,0 +1,277 @@
+"""L2: the QLoRA transformer — JAX fwd/bwd over a frozen quantized base.
+
+A LLaMA-style decoder (RMSNorm, RoPE, causal MHA, SwiGLU) whose linear
+layers are QLoRA linears (paper Eq. 5): the frozen base weight arrives as
+packed NF4 codes + double-quantized absmax constants and is dequantized
+in-graph; trainable LoRA adapters (Eq. 3) sit on a configurable set of
+projections — the paper's key finding is that *all* linear layers need
+adapters to match 16-bit full finetuning (Figure 2).
+
+Gradients flow through the dequantization into the adapters only
+(paper section 3, "QLoRA"): ``train_step`` differentiates w.r.t. the LoRA
+pytree exclusively, so dW never exists; with ``quant="none", lora=False``
+the same machinery performs full 16-bit finetuning (the paper's baseline).
+
+Everything here is build-time: ``aot.py`` lowers `train_step`/`eval_step`/
+`forward` to HLO text once per config; the Rust coordinator then owns the
+training loop.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig, PROJ_NAMES
+from .kernels import ref
+
+Tree = Dict
+
+
+# --------------------------------------------------------------------------
+# Parameter initialization + base quantization
+# --------------------------------------------------------------------------
+
+def init_base_params(key, cfg: ModelConfig) -> Tree:
+    """Initialize full-precision base parameters (frozen pretrained stand-in).
+
+    Scaled-normal init (trained transformer weights are ~zero-centered
+    normal, paper Appendix F — which is exactly the regime NF4 targets).
+    """
+    d = cfg.d_model
+    keys = jax.random.split(key, 2 + cfg.n_layers)
+    params: Tree = {
+        "embed": jax.random.normal(keys[0], (cfg.vocab, d)) * 0.02,
+        "norm_f": jnp.ones((d,)),
+        "layers": [],
+    }
+    for li in range(cfg.n_layers):
+        lk = jax.random.split(keys[2 + li], len(PROJ_NAMES))
+        layer: Tree = {"ln1": jnp.ones((d,)), "ln2": jnp.ones((d,))}
+        for pk, proj in zip(lk, PROJ_NAMES):
+            h, o = cfg.proj_shape(proj)
+            layer[proj] = {"w": jax.random.normal(pk, (h, o)) / jnp.sqrt(h)}
+        params["layers"].append(layer)
+    return params
+
+
+def quantize_base(params: Tree, cfg: ModelConfig) -> Tree:
+    """Quantize every linear projection of the base (paper section 3).
+
+    Embeddings and norms stay full precision (the paper quantizes linear
+    layers; embeddings/norms remain 16-bit).
+    """
+    if cfg.quant == "none":
+        return params
+    out = {"embed": params["embed"], "norm_f": params["norm_f"], "layers": []}
+    for layer in params["layers"]:
+        ql: Tree = {"ln1": layer["ln1"], "ln2": layer["ln2"]}
+        for proj in PROJ_NAMES:
+            ql[proj] = ref.quantize_weight(
+                layer[proj]["w"], cfg.quant, cfg.block, cfg.block2,
+                double_quant=cfg.double_quant)
+        out["layers"].append(ql)
+    return out
+
+
+def init_lora_params(key, cfg: ModelConfig) -> Tree:
+    """LoRA adapters: A ~ N(0, 1/r), B = 0 (standard LoRA init => the
+    adapted model starts exactly at the base model)."""
+    if not cfg.lora:
+        return {"layers": [{} for _ in range(cfg.n_layers)]}
+    layers = []
+    keys = jax.random.split(key, cfg.n_layers)
+    for li in range(cfg.n_layers):
+        lk = jax.random.split(keys[li], len(cfg.scope))
+        layer = {}
+        for pk, proj in zip(lk, cfg.scope):
+            h, o = cfg.proj_shape(proj)
+            layer[proj] = {
+                "a": jax.random.normal(pk, (h, cfg.lora_r)) / jnp.sqrt(cfg.lora_r),
+                "b": jnp.zeros((cfg.lora_r, o)),
+            }
+        layers.append(layer)
+    return {"layers": layers}
+
+
+# --------------------------------------------------------------------------
+# Forward pass
+# --------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * scale
+
+
+def rope(x: jnp.ndarray) -> jnp.ndarray:
+    """Rotary position embedding over (B, T, H, Dh)."""
+    b, t, h, dh = x.shape
+    half = dh // 2
+    freqs = 1.0 / (10000.0 ** (jnp.arange(0, half) / half))
+    pos = jnp.arange(t)[:, None] * freqs[None, :]          # (T, half)
+    cos = jnp.cos(pos)[None, :, None, :]
+    sin = jnp.sin(pos)[None, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+
+
+def _linear(cfg: ModelConfig, base_entry: Tree, lora_entry: Optional[Tree],
+            x: jnp.ndarray, shape: Tuple[int, int]) -> jnp.ndarray:
+    """One QLoRA linear (paper Eq. 5). base_entry is either {'w': f32}
+    (16-bit path) or the quantized container from ref.quantize_weight."""
+    if "w" in base_entry:
+        y = x @ base_entry["w"]
+    else:
+        w = ref.dequantize_weight(base_entry, shape, cfg.quant, cfg.block,
+                                  cfg.block2)
+        y = x @ w
+    if lora_entry is not None:
+        y = y + cfg.lora_s * ((x @ lora_entry["a"]) @ lora_entry["b"])
+    return y
+
+
+def _layer_fwd(cfg: ModelConfig, base_layer: Tree, lora_layer: Tree,
+               x: jnp.ndarray) -> jnp.ndarray:
+    b, t, d = x.shape
+    nh, hd = cfg.n_heads, cfg.head_dim
+
+    def lin(proj, h):
+        return _linear(cfg, base_layer[proj], lora_layer.get(proj), h,
+                       cfg.proj_shape(proj))
+
+    # attention
+    hpre = rms_norm(x, base_layer["ln1"])
+    q = lin("wq", hpre).reshape(b, t, nh, hd)
+    k = lin("wk", hpre).reshape(b, t, nh, hd)
+    v = lin("wv", hpre).reshape(b, t, nh, hd)
+    q, k = rope(q), rope(k)
+    att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(hd)
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    att = jnp.where(mask[None, None], att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    ctx = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(b, t, d)
+    x = x + lin("wo", ctx)
+
+    # SwiGLU MLP
+    hpre = rms_norm(x, base_layer["ln2"])
+    gate = jax.nn.silu(lin("wg", hpre))
+    up = lin("wu", hpre)
+    x = x + lin("wd", gate * up)
+    return x
+
+
+def forward(cfg: ModelConfig, base: Tree, lora: Tree,
+            tokens: jnp.ndarray) -> jnp.ndarray:
+    """tokens (B, T) int32 -> logits (B, T, V). lm_head tied to embedding."""
+    x = base["embed"][tokens]
+    for li in range(cfg.n_layers):
+        f = functools.partial(_layer_fwd, cfg, base["layers"][li],
+                              lora["layers"][li])
+        if cfg.remat:
+            f = jax.checkpoint(f)
+        x = f(x)
+    x = rms_norm(x, base["norm_f"])
+    return x @ base["embed"].T
+
+
+# --------------------------------------------------------------------------
+# Loss / train / eval steps
+# --------------------------------------------------------------------------
+
+def masked_ce_loss(cfg: ModelConfig, base: Tree, lora: Tree,
+                   tokens: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Next-token cross entropy over masked positions.
+
+    mask[b, t] weights the loss of *predicting* tokens[b, t] from position
+    t-1. Train-on-target-only (paper Appendix B.3 / Table 10) is expressed
+    by zeroing instruction positions in the mask.
+    """
+    logits = forward(cfg, base, lora, tokens)
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    m = mask[:, 1:]
+    return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+
+def _global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l * l) for l in leaves))
+
+
+def make_train_step(cfg: ModelConfig, full_finetune: bool):
+    """Build train_step(trainable, m, v, step, frozen, tokens, mask).
+
+    Adam with bias correction, global-norm clip 0.3, constant LR (the
+    paper's schedule, Appendix B.2). For QLoRA `trainable` is the LoRA
+    pytree; for full finetuning it is the whole (unquantized) base.
+    Returns (new_trainable, new_m, new_v, new_step, loss).
+    """
+
+    def loss_fn(trainable, frozen, tokens, mask):
+        if full_finetune:
+            base, lora = trainable, frozen["lora_stub"]
+        else:
+            base, lora = frozen, trainable
+        return masked_ce_loss(cfg, base, lora, tokens, mask)
+
+    def train_step(trainable, m, v, step, frozen, tokens, mask):
+        loss, grads = jax.value_and_grad(loss_fn)(trainable, frozen,
+                                                  tokens, mask)
+        # global-norm clipping (max_grad_norm = 0.3, Appendix B.2)
+        gnorm = _global_norm(grads)
+        clip = jnp.minimum(1.0, cfg.max_grad_norm / (gnorm + 1e-12))
+        grads = jax.tree_util.tree_map(lambda g: g * clip, grads)
+
+        step = step + 1.0
+        b1, b2 = cfg.adam_b1, cfg.adam_b2
+        m = jax.tree_util.tree_map(lambda mm, g: b1 * mm + (1 - b1) * g,
+                                   m, grads)
+        v = jax.tree_util.tree_map(lambda vv, g: b2 * vv + (1 - b2) * g * g,
+                                   v, grads)
+        mhat = jax.tree_util.tree_map(lambda mm: mm / (1 - b1 ** step), m)
+        vhat = jax.tree_util.tree_map(lambda vv: vv / (1 - b2 ** step), v)
+        trainable = jax.tree_util.tree_map(
+            lambda p, mh, vh: p - cfg.lr * mh / (jnp.sqrt(vh) + cfg.adam_eps),
+            trainable, mhat, vhat)
+        return trainable, m, v, step, loss
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, full_finetune: bool):
+    """eval_step(trainable, frozen, tokens, mask) -> (loss, acc)."""
+
+    def eval_step(trainable, frozen, tokens, mask):
+        if full_finetune:
+            base, lora = trainable, frozen["lora_stub"]
+        else:
+            base, lora = frozen, trainable
+        logits = forward(cfg, base, lora, tokens)
+        logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+        tgt = tokens[:, 1:]
+        nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+        m = mask[:, 1:]
+        denom = jnp.maximum(jnp.sum(m), 1.0)
+        loss = jnp.sum(nll * m) / denom
+        pred = jnp.argmax(logits[:, :-1], axis=-1)
+        acc = jnp.sum((pred == tgt) * m) / denom
+        return loss, acc
+
+    return eval_step
+
+
+def make_forward(cfg: ModelConfig, full_finetune: bool):
+    """fwd(trainable, frozen, tokens) -> logits, for generation in Rust."""
+
+    def fwd(trainable, frozen, tokens):
+        if full_finetune:
+            base, lora = trainable, frozen["lora_stub"]
+        else:
+            base, lora = frozen, trainable
+        return forward(cfg, base, lora, tokens)
+
+    return fwd

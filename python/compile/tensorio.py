@@ -1,0 +1,77 @@
+"""`.tensors` binary interchange format (python writer; Rust reader/writer).
+
+Layout:
+    magic  b"QLT1"
+    u32 LE header_len
+    header_len bytes of JSON: {"tensors": [{"name", "dtype", "shape",
+                                            "offset", "nbytes"}, ...]}
+    raw little-endian data section (offsets relative to its start)
+
+dtypes: "f32" | "u8" | "i32". Scalars have shape [].
+"""
+
+from __future__ import annotations
+
+import json
+import struct
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+MAGIC = b"QLT1"
+
+_DTYPES = {"f32": np.float32, "u8": np.uint8, "i32": np.int32}
+_NAMES = {np.dtype(np.float32): "f32", np.dtype(np.uint8): "u8",
+          np.dtype(np.int32): "i32"}
+
+
+def dtype_name(arr: np.ndarray) -> str:
+    try:
+        return _NAMES[arr.dtype]
+    except KeyError:
+        raise TypeError(f"unsupported dtype {arr.dtype}")
+
+
+def write_tensors(path: str, tensors: Sequence[Tuple[str, np.ndarray]]):
+    """Write named tensors; order is preserved (it matters: it is the HLO
+    parameter order for artifact init files)."""
+    entries = []
+    offset = 0
+    blobs = []
+    for name, arr in tensors:
+        arr = np.asarray(arr)
+        if arr.ndim > 0:  # ascontiguousarray would promote 0-d to 1-d
+            arr = np.ascontiguousarray(arr)
+        nbytes = arr.nbytes
+        entries.append({
+            "name": name,
+            "dtype": dtype_name(arr),
+            "shape": list(arr.shape),
+            "offset": offset,
+            "nbytes": nbytes,
+        })
+        blobs.append(arr.tobytes())
+        offset += nbytes
+    header = json.dumps({"tensors": entries}).encode("utf-8")
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(header)))
+        f.write(header)
+        for b in blobs:
+            f.write(b)
+
+
+def read_tensors(path: str) -> List[Tuple[str, np.ndarray]]:
+    with open(path, "rb") as f:
+        magic = f.read(4)
+        assert magic == MAGIC, f"bad magic {magic!r} in {path}"
+        (hlen,) = struct.unpack("<I", f.read(4))
+        header = json.loads(f.read(hlen).decode("utf-8"))
+        data = f.read()
+    out = []
+    for e in header["tensors"]:
+        dt = _DTYPES[e["dtype"]]
+        arr = np.frombuffer(data, dtype=dt, count=int(np.prod(e["shape"], dtype=np.int64)) if e["shape"] else 1,
+                            offset=e["offset"]).reshape(e["shape"])
+        out.append((e["name"], arr))
+    return out

@@ -1,0 +1,109 @@
+"""AOT path tests: tensorio round-trip, HLO text lowering, manifest
+integrity of the built artifacts (runs against artifacts/ if present)."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, configs, tensorio
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_tensorio_roundtrip(tmp_path):
+    p = str(tmp_path / "t.tensors")
+    tensors = [
+        ("a", np.arange(6, dtype=np.float32).reshape(2, 3)),
+        ("b/c", np.array([1, 2, 255], dtype=np.uint8)),
+        ("d", np.array(-7, dtype=np.int32)),
+        ("scalar", np.float32(3.5)),
+    ]
+    tensorio.write_tensors(p, [(n, np.asarray(a)) for n, a in tensors])
+    back = tensorio.read_tensors(p)
+    assert [n for n, _ in back] == ["a", "b/c", "d", "scalar"]
+    for (n1, a1), (n2, a2) in zip(tensors, back):
+        assert np.array_equal(np.asarray(a1), a2.reshape(np.asarray(a1).shape))
+
+
+def test_hlo_text_lowering_smoke():
+    def f(x, y):
+        return (x @ y + 1.0,)
+
+    spec = jax.ShapeDtypeStruct((4, 4), jnp.float32)
+    lowered = jax.jit(f).lower(spec, spec)
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "f32[4,4]" in text
+
+
+def test_flatten_named_is_deterministic():
+    tree = {"b": jnp.zeros(2), "a": {"x": jnp.ones(3)}}
+    n1 = [n for n, _ in aot.flatten_named(tree, "t")]
+    n2 = [n for n, _ in aot.flatten_named(tree, "t")]
+    assert n1 == n2
+    assert all(n.startswith("t") for n in n1)
+    # dict order is sorted-key order (the cross-boundary contract)
+    assert n1[0].find("a") < n1[1].find("b") or "a" in n1[0]
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ARTIFACTS,
+                                                    "manifest.json")),
+                    reason="artifacts not built")
+class TestBuiltArtifacts:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_all_configs_present(self, manifest):
+        names = {a["name"] for a in manifest["artifacts"]}
+        for want in ["tiny_scope_all", "tiny_fullft", "tiny_lora16",
+                     "tiny_fp4", "tiny_int8", "e2e"]:
+            assert want in names
+
+    def test_signatures_match_init_files(self, manifest):
+        for a in manifest["artifacts"][:4]:
+            init = tensorio.read_tensors(os.path.join(ARTIFACTS, a["init"]))
+            assert len(init) == a["n_state"] + a["n_frozen"]
+            for (name, arr), sig in zip(
+                    init, a["state_sig"] + a["frozen_sig"]):
+                assert name == sig["name"]
+                assert list(arr.shape) == sig["shape"]
+
+    def test_hlo_files_exist_and_parse(self, manifest):
+        for a in manifest["artifacts"]:
+            for key in ["train_hlo", "eval_hlo"]:
+                path = os.path.join(ARTIFACTS, a[key])
+                assert os.path.exists(path), path
+                with open(path) as f:
+                    head = f.read(200)
+                assert "HloModule" in head
+
+    def test_no_elided_constants(self, manifest):
+        """The default HLO printer elides large constants as
+        'constant({...})'; the 0.5.1 text parser silently zero-fills them,
+        destroying in-graph codebooks / masks. Regression guard."""
+        import glob
+        for path in glob.glob(os.path.join(ARTIFACTS, "*.hlo.txt")):
+            with open(path) as f:
+                assert "{...}" not in f.read(), f"elided constants in {path}"
+
+    def test_golden_cases_complete(self, manifest):
+        g = tensorio.read_tensors(os.path.join(ARTIFACTS, "golden.tensors"))
+        names = {n for n, _ in g}
+        for case in manifest["golden"]["cases"]:
+            base = case["name"]
+            assert f"{base}/input" in names or base == "dq"
+
+    def test_state_ordering_contract(self, manifest):
+        """trainable leaves come first, then adam_m, adam_v, step."""
+        a = next(x for x in manifest["artifacts"]
+                 if x["name"] == "tiny_scope_all")
+        names = [s["name"] for s in a["state_sig"]]
+        nt = a["n_trainable"]
+        assert all(n.startswith("trainable") for n in names[:nt])
+        assert names[-1] == "step"

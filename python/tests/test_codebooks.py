@@ -1,0 +1,53 @@
+"""Codebook construction tests: NF4 vs paper Appendix E, FP4 variants,
+zero representability (the paper's padding requirement)."""
+
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+
+
+def test_nf4_derivation_matches_paper_appendix_e():
+    cb = np.asarray(ref.nf4_codebook())
+    paper = np.asarray(ref.NF4_PAPER, dtype=np.float32)
+    assert np.abs(cb - paper).max() < 3e-6
+
+
+def test_canonical_nf4_is_paper_constants():
+    cb = np.asarray(ref.codebook("nf4"))
+    assert np.array_equal(cb, np.asarray(ref.NF4_PAPER, dtype=np.float32))
+
+
+@pytest.mark.parametrize("name,size", [
+    ("nf4", 16), ("fp4_e2m1", 15), ("fp4_e3m0", 15), ("int4", 15),
+    ("int8", 255), ("fp8_e4m3", 255),
+])
+def test_codebook_sizes_sorted_zero(name, size):
+    cb = np.asarray(ref.codebook(name))
+    assert len(cb) == size
+    assert (np.diff(cb) > 0).all(), "strictly sorted"
+    assert (cb == 0.0).any(), "exact zero required (paper section 3)"
+    assert cb[0] == -1.0 and cb[-1] == 1.0
+
+
+def test_fp4_e2m1_values():
+    cb = np.asarray(ref.fp4_e2m1_codebook())
+    pos = cb[cb >= 0]
+    expect = np.array([0, 0.5, 1, 1.5, 2, 3, 4, 6], dtype=np.float32) / 6
+    assert np.allclose(pos, expect, atol=1e-7)
+
+
+def test_fp4_e3m0_log_spaced():
+    cb = np.asarray(ref.fp4_e3m0_codebook())
+    pos = cb[cb > 0]
+    ratios = pos[1:] / pos[:-1]
+    assert np.allclose(ratios, 2.0), "E3M0 magnitudes are powers of two"
+
+
+def test_nearest_code_ties_and_extremes():
+    cb = ref.codebook("nf4")
+    codes = ref.nearest_code(np.asarray([-2.0, 2.0, 0.0], dtype=np.float32),
+                             cb)
+    assert codes[0] == 0
+    assert codes[1] == 15
+    assert np.asarray(cb)[codes[2]] == 0.0

@@ -1,0 +1,99 @@
+"""Pallas kernels vs the pure-jnp oracle — the CORE L1 correctness signal.
+Hypothesis sweeps shapes, block sizes, datatypes, and program tilings."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dq, nf4, qlora_matmul, ref
+
+settings.register_profile("ci", max_examples=15, deadline=None)
+settings.load_profile("ci")
+
+
+@given(st.integers(1, 24), st.integers(0, 2**31 - 1),
+       st.sampled_from(["nf4", "fp4_e2m1", "int4"]),
+       st.sampled_from([1, 3, 8]))
+def test_quantize_pallas_matches_ref(nb, seed, dtype, rows):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(nb * 64).astype(np.float32))
+    cb = ref.codebook(dtype)
+    c_ref, a_ref = ref.quantize_blockwise(x, cb, 64)
+    c_pal, a_pal = nf4.quantize_blockwise_pallas(x, cb, 64,
+                                                 rows_per_program=rows)
+    assert np.array_equal(np.asarray(c_ref), np.asarray(c_pal))
+    assert np.allclose(np.asarray(a_ref), np.asarray(a_pal))
+
+
+@given(st.integers(1, 24), st.integers(0, 2**31 - 1))
+def test_dequantize_pallas_matches_ref(nb, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(nb * 64).astype(np.float32))
+    cb = ref.codebook("nf4")
+    codes, absmax = ref.quantize_blockwise(x, cb, 64)
+    d_ref = ref.dequantize_blockwise(codes, absmax, cb, 64)
+    d_pal = nf4.dequantize_blockwise_pallas(codes, absmax, cb, 64)
+    assert np.allclose(np.asarray(d_ref), np.asarray(d_pal))
+
+
+@given(st.integers(1, 6), st.integers(0, 2**31 - 1))
+def test_double_dequant_pallas_matches_ref(nb2, seed):
+    rng = np.random.default_rng(seed)
+    absmax = jnp.asarray(
+        (np.abs(rng.standard_normal(nb2 * 256)) + 0.5).astype(np.float32))
+    c2, a2, mean = ref.double_quantize(absmax, 256)
+    r = ref.double_dequantize(c2, a2, mean, 256)
+    p = dq.double_dequantize_pallas(c2, a2, mean, ref.fp8_e4m3_codebook(),
+                                    256)
+    assert np.allclose(np.asarray(r), np.asarray(p), atol=1e-6)
+
+
+@given(st.sampled_from([(8, 64, 32, 4), (16, 128, 64, 8), (32, 192, 96, 16),
+                        (5, 64, 48, 2)]),
+       st.integers(0, 2**31 - 1))
+def test_qlora_matmul_pallas_matches_eq5(shape, seed):
+    m, k, o, r = shape
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
+    w = jnp.asarray((rng.standard_normal((k, o)) * 0.05).astype(np.float32))
+    a = jnp.asarray((rng.standard_normal((k, r)) * 0.05).astype(np.float32))
+    b = jnp.asarray((rng.standard_normal((r, o)) * 0.05).astype(np.float32))
+    q = ref.quantize_weight(w, "nf4", 64, double_quant=False)
+    codes = ref.unpack_nibbles(q["packed"]).reshape(o, k)
+    absmax = q["absmax"].reshape(o, k // 64)
+    y_ref = ref.qlora_linear(x, q, a, b, 2.0, (k, o), "nf4", 64)
+    y_pal = qlora_matmul.qlora_matmul_pallas(
+        x, codes, absmax, ref.codebook("nf4"), a, b, 2.0, block=64)
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_pal),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_composition_equals_double_dequant_weight():
+    """dq kernel ∘ dequant kernel == ref.double_dequant_weight (Eq. 6)."""
+    rng = np.random.default_rng(11)
+    flat = jnp.asarray(rng.standard_normal(64 * 512).astype(np.float32))
+    cb = ref.codebook("nf4")
+    codes, absmax = ref.quantize_blockwise(flat, cb, 64)
+    c2, a2, mean = ref.double_quantize(absmax, 256)
+    want = ref.double_dequant_weight(codes, c2, a2, mean, cb, 64, 256)
+    nb = codes.shape[0] // 64
+    am = dq.double_dequantize_pallas(c2, a2, mean, ref.fp8_e4m3_codebook(),
+                                     256)[:nb]
+    got = nf4.dequantize_blockwise_pallas(codes, am, cb, 64)
+    assert np.allclose(np.asarray(want), np.asarray(got), atol=1e-6)
+
+
+def test_kernels_lower_into_jit():
+    """Kernels must be AOT-lowerable (inside jit) — the export path."""
+    cb = ref.codebook("nf4")
+
+    @jax.jit
+    def f(x):
+        c, a = nf4.quantize_blockwise_pallas(x, cb, 64)
+        return nf4.dequantize_blockwise_pallas(c, a, cb, 64)
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (64 * 4,))
+    y = f(x)
+    assert y.shape == x.shape

@@ -1,0 +1,156 @@
+"""L2 model tests: shapes, QLoRA wiring, gradient flow (adapters only),
+train-step convergence, full-finetune path, eval metrics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs, model
+
+CFG = configs.by_name("tiny_scope_all")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    key = jax.random.PRNGKey(0)
+    base = model.init_base_params(key, CFG)
+    lora = model.init_lora_params(key, CFG)
+    qbase = model.quantize_base(base, CFG)
+    return base, lora, qbase
+
+
+def test_forward_shapes(setup):
+    base, lora, qbase = setup
+    tok = jnp.zeros((2, CFG.seq_len), jnp.int32)
+    logits = model.forward(CFG, qbase, lora, tok)
+    assert logits.shape == (2, CFG.seq_len, CFG.vocab)
+    assert jnp.isfinite(logits).all()
+
+
+def test_lora_b_zero_init_means_base_model(setup):
+    """B=0 ⇒ adapted model == quantized base model exactly."""
+    base, lora, qbase = setup
+    tok = jax.random.randint(jax.random.PRNGKey(1), (2, CFG.seq_len), 0,
+                             CFG.vocab)
+    with_lora = model.forward(CFG, qbase, lora, tok)
+    no_lora = model.forward(
+        CFG, qbase, {"layers": [{} for _ in range(CFG.n_layers)]}, tok)
+    assert np.allclose(np.asarray(with_lora), np.asarray(no_lora))
+
+
+def test_quantization_perturbs_but_preserves(setup):
+    base, lora, qbase = setup
+    tok = jax.random.randint(jax.random.PRNGKey(2), (2, CFG.seq_len), 0,
+                             CFG.vocab)
+    l16 = model.forward(CFG, base, lora, tok)
+    l4 = model.forward(CFG, qbase, lora, tok)
+    diff = float(jnp.abs(l16 - l4).mean())
+    scale = float(jnp.abs(l16).mean())
+    assert 0 < diff < 0.5 * scale
+
+
+def test_gradients_only_flow_to_adapters(setup):
+    """The paper's core mechanism: dE/dW never materializes — only LoRA
+    parameters receive gradients."""
+    base, lora, qbase = setup
+    tok = jax.random.randint(jax.random.PRNGKey(3), (CFG.batch, CFG.seq_len),
+                             0, CFG.vocab)
+    mask = jnp.ones((CFG.batch, CFG.seq_len))
+    grads = jax.grad(
+        lambda lo: model.masked_ce_loss(CFG, qbase, lo, tok, mask))(lora)
+    leaves = jax.tree_util.tree_leaves(grads)
+    assert len(leaves) == len(jax.tree_util.tree_leaves(lora))
+    assert any(float(jnp.abs(g).max()) > 0 for g in leaves)
+
+
+def test_train_step_overfits_single_batch(setup):
+    base, lora, qbase = setup
+    ts = jax.jit(model.make_train_step(CFG, False))
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, lora)
+    tok = jax.random.randint(jax.random.PRNGKey(4), (CFG.batch, CFG.seq_len),
+                             0, CFG.vocab)
+    mask = jnp.ones((CFG.batch, CFG.seq_len))
+    t, m, v, s, first = ts(lora, zeros, zeros, jnp.zeros(()), qbase, tok,
+                           mask)
+    for _ in range(60):
+        t, m, v, s, loss = ts(t, m, v, s, qbase, tok, mask)
+    assert float(loss) < float(first) - 0.3, (float(first), float(loss))
+    assert float(s) == 61.0
+
+
+def test_grad_clipping_bounds_update():
+    """max_grad_norm=0.3 must bound the global grad norm used in Adam."""
+    cfg = CFG
+    key = jax.random.PRNGKey(5)
+    base = model.init_base_params(key, cfg)
+    qbase = model.quantize_base(base, cfg)
+    lora = model.init_lora_params(key, cfg)
+    tok = jax.random.randint(key, (cfg.batch, cfg.seq_len), 0, cfg.vocab)
+    mask = jnp.ones((cfg.batch, cfg.seq_len))
+    grads = jax.grad(
+        lambda lo: model.masked_ce_loss(cfg, qbase, lo, tok, mask))(lora)
+    gnorm = model._global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.max_grad_norm / (gnorm + 1e-12))
+    clipped = jax.tree_util.tree_map(lambda g: g * clip, grads)
+    assert float(model._global_norm(clipped)) <= cfg.max_grad_norm + 1e-5
+
+
+def test_mask_excludes_positions(setup):
+    base, lora, qbase = setup
+    tok = jax.random.randint(jax.random.PRNGKey(6), (CFG.batch, CFG.seq_len),
+                             0, CFG.vocab)
+    full = model.masked_ce_loss(CFG, qbase, lora, tok,
+                                jnp.ones((CFG.batch, CFG.seq_len)))
+    half_mask = jnp.concatenate([
+        jnp.zeros((CFG.batch, CFG.seq_len // 2)),
+        jnp.ones((CFG.batch, CFG.seq_len - CFG.seq_len // 2)),
+    ], axis=1)
+    half = model.masked_ce_loss(CFG, qbase, lora, tok, half_mask)
+    assert not np.isclose(float(full), float(half))
+
+
+def test_full_finetune_path():
+    cfg = configs.by_name("tiny_fullft")
+    key = jax.random.PRNGKey(7)
+    base = model.init_base_params(key, cfg)
+    lora = model.init_lora_params(key, cfg)  # stub
+    ts = jax.jit(model.make_train_step(cfg, True))
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, base)
+    tok = jax.random.randint(key, (cfg.batch, cfg.seq_len), 0, cfg.vocab)
+    mask = jnp.ones((cfg.batch, cfg.seq_len))
+    t, m, v, s, l0 = ts(base, zeros, zeros, jnp.zeros(()),
+                        {"lora_stub": lora}, tok, mask)
+    for _ in range(15):
+        t, m, v, s, loss = ts(t, m, v, s, {"lora_stub": lora}, tok, mask)
+    assert float(loss) < float(l0)
+
+
+def test_eval_step_accuracy_range(setup):
+    base, lora, qbase = setup
+    es = jax.jit(model.make_eval_step(CFG, False))
+    tok = jax.random.randint(jax.random.PRNGKey(8), (CFG.batch, CFG.seq_len),
+                             0, CFG.vocab)
+    mask = jnp.ones((CFG.batch, CFG.seq_len))
+    loss, acc = es(lora, qbase, tok, mask)
+    assert 0.0 <= float(acc) <= 1.0
+    assert float(loss) > 0
+
+
+def test_rope_position_dependence():
+    x = jnp.ones((1, 8, 2, 16))
+    y = model.rope(x)
+    # different positions must be rotated differently
+    assert not np.allclose(np.asarray(y[0, 0]), np.asarray(y[0, 7]))
+    # norm is preserved per pair
+    assert np.allclose(float(jnp.linalg.norm(y[0, 3])),
+                       float(jnp.linalg.norm(x[0, 3])), rtol=1e-5)
+
+
+def test_scope_controls_adapter_placement():
+    cfg = configs.by_name("tiny_scope_qk")
+    lora = model.init_lora_params(jax.random.PRNGKey(9), cfg)
+    assert set(lora["layers"][0].keys()) == {"wq", "wk"}
+    cfg_all = configs.by_name("tiny_scope_all")
+    lora_all = model.init_lora_params(jax.random.PRNGKey(9), cfg_all)
+    assert set(lora_all["layers"][0].keys()) == set(configs.PROJ_NAMES)

@@ -1,0 +1,106 @@
+"""Block-wise quantization + double quantization vs invariants, with
+hypothesis sweeps over shapes/blocks/scales."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+@st.composite
+def blocked_array(draw, block=64, max_blocks=8):
+    nb = draw(st.integers(1, max_blocks))
+    seed = draw(st.integers(0, 2**31 - 1))
+    scale = 10.0 ** draw(st.integers(-3, 2))
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(nb * block) * scale).astype(np.float32)
+
+
+@given(blocked_array())
+def test_roundtrip_error_bounded(x):
+    cb = ref.codebook("nf4")
+    codes, absmax = ref.quantize_blockwise(jnp.asarray(x), cb, 64)
+    y = np.asarray(ref.dequantize_blockwise(codes, absmax, cb, 64))
+    gaps = np.diff(np.asarray(cb))
+    max_gap = gaps.max()
+    scale = np.repeat(np.asarray(absmax), 64)
+    assert (np.abs(x - y) <= 0.5 * max_gap * scale + 1e-6).all()
+
+
+@given(blocked_array(block=32, max_blocks=6))
+def test_quantize_idempotent(x):
+    cb = ref.codebook("fp4_e2m1")
+    c1, a1 = ref.quantize_blockwise(jnp.asarray(x), cb, 32)
+    y = ref.dequantize_blockwise(c1, a1, cb, 32)
+    c2, a2 = ref.quantize_blockwise(y, cb, 32)
+    z = np.asarray(ref.dequantize_blockwise(c2, a2, cb, 32))
+    assert np.allclose(np.asarray(y), z, rtol=1e-6, atol=1e-6)
+
+
+def test_zero_block_exact():
+    cb = ref.codebook("nf4")
+    x = jnp.zeros(128)
+    codes, absmax = ref.quantize_blockwise(x, cb, 64)
+    y = ref.dequantize_blockwise(codes, absmax, cb, 64)
+    assert (np.asarray(y) == 0).all()
+
+
+def test_pack_unpack_bijection():
+    rng = np.random.default_rng(3)
+    codes = rng.integers(0, 16, size=256).astype(np.uint8)
+    packed = ref.pack_nibbles(jnp.asarray(codes))
+    assert packed.shape[0] == 128
+    back = np.asarray(ref.unpack_nibbles(packed))
+    assert np.array_equal(back, codes)
+
+
+@given(st.integers(1, 2000), st.integers(0, 2**31 - 1))
+def test_double_quant_roundtrip(n, seed):
+    rng = np.random.default_rng(seed)
+    absmax = (np.abs(rng.standard_normal(n)) * 0.3 + 2.0).astype(np.float32)
+    c2, a2, mean = ref.double_quantize(jnp.asarray(absmax), 256)
+    back = np.asarray(ref.double_dequantize(c2, a2, mean, 256, n=n))
+    assert back.shape == (n,)
+    centered_max = np.abs(absmax - float(mean)).max()
+    assert np.abs(absmax - back).max() <= centered_max * 0.07 + 1e-5
+
+
+def test_double_quant_memory_accounting():
+    # 0.5 -> 0.127 bits/param (paper section 3)
+    n_params = 64 * 256 * 4
+    n_blocks = n_params // 64
+    absmax = jnp.abs(jax.random.normal(jax.random.PRNGKey(0), (n_blocks,)))
+    c2, a2, mean = ref.double_quantize(absmax, 256)
+    bits = (c2.nbytes + a2.nbytes + 4) * 8 / n_params
+    assert abs(bits - 0.127) < 0.01
+
+
+@pytest.mark.parametrize("dtype", ["nf4", "fp4_e2m1", "int4", "int8"])
+def test_weight_container_roundtrip(dtype):
+    k = jax.random.PRNGKey(1)
+    w = jax.random.normal(k, (128, 64)) * 0.05
+    q = ref.quantize_weight(w, dtype, double_quant=True)
+    back = ref.dequantize_weight(q, (128, 64), dtype)
+    assert back.shape == (128, 64)
+    mse = float(jnp.mean((w - back) ** 2))
+    assert mse < float(jnp.mean(w * w)) * 0.1
+
+
+def test_nf4_beats_int4_and_fp4_on_normal():
+    x = jax.random.normal(jax.random.PRNGKey(2), (64 * 256,))
+    mses = {d: float(ref.quant_error(x, d)[0])
+            for d in ["nf4", "fp4_e2m1", "int4"]}
+    assert mses["nf4"] < mses["fp4_e2m1"] < mses["int4"]
+
+
+def test_dq_does_not_degrade():
+    x = jax.random.normal(jax.random.PRNGKey(3), (64 * 1024,))
+    plain = float(ref.quant_error(x, "nf4")[0])
+    dq = float(ref.quant_error(x, "nf4", double_quant=True)[0])
+    assert dq < plain * 1.02

@@ -1,0 +1,36 @@
+//! Data-pipeline benches: corpus generation, tokenization, and the
+//! group-by-length batcher — the producer side of the training loop.
+
+use qlora::data::batching::Batcher;
+use qlora::data::synthetic::{corpus, CorpusKind};
+use qlora::data::tokenizer::Tokenizer;
+use qlora::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::new();
+
+    b.group("corpus generation");
+    b.bench_items("alpaca/512-examples", 512, || {
+        corpus(CorpusKind::Alpaca, 512, 1)
+    });
+    b.bench_items("oasst1-trees/256-examples", 256, || {
+        corpus(CorpusKind::Oasst1, 256, 1)
+    });
+
+    b.group("tokenizer");
+    let tok = Tokenizer::new(512);
+    let text = "sort abcdefghijklmnop";
+    b.bench("encode_example", || {
+        tok.encode_example(text, "abcdefghijklmnop", 64, false)
+    });
+
+    b.group("group-by-length batcher");
+    let ds = corpus(CorpusKind::Alpaca, 1024, 2);
+    b.bench("Batcher::new/1024-examples", || {
+        Batcher::new(&ds, Tokenizer::new(512), 8, 48, false)
+    });
+    let batcher = Batcher::new(&ds, Tokenizer::new(512), 8, 48, false);
+    b.bench_items("epoch/128-batches", batcher.n_batches(), || {
+        batcher.epoch(3)
+    });
+}

@@ -1,0 +1,46 @@
+//! Evaluation-harness benches: judge throughput, Elo tournament at the
+//! paper's full scale (10k orderings — Table 1/7), agreement statistics.
+
+use qlora::elo::{MatchRecord, Tournament};
+use qlora::eval::judge::Judge;
+use qlora::eval::systems::roster;
+use qlora::util::bench::Bencher;
+use qlora::util::rng::Rng;
+use qlora::util::stats;
+
+fn main() {
+    let mut b = Bencher::new();
+    let systems = roster();
+    let judge = Judge::gpt4();
+
+    b.group("judge model");
+    let mut rng = Rng::new(2);
+    b.bench_items("judge_pair", 1, || {
+        judge.judge_pair(&systems[1], &systems[4], true, &mut rng)
+    });
+
+    b.group("Elo tournament (paper scale: 4480 matches)");
+    let matches: Vec<MatchRecord> =
+        qlora::experiments::table1::play_matches(&systems, &judge, true, 80,
+                                                 3);
+    let mut t = Tournament::new(systems.len());
+    for m in &matches {
+        t.add(*m);
+    }
+    b.bench("run/100-orderings", || t.run(100, 4));
+    // one full paper-scale run, timed once
+    let t0 = std::time::Instant::now();
+    let res = t.run(10_000, 5);
+    println!(
+        "full 10k-ordering tournament: {:.2}s (top: {} at {:.0})",
+        t0.elapsed().as_secs_f64(),
+        systems[res.iter().min_by_key(|r| r.rank).unwrap().system].name,
+        res.iter().min_by_key(|r| r.rank).unwrap().mean
+    );
+
+    b.group("agreement statistics");
+    let a: Vec<f64> = (0..1000).map(|i| (i as f64).sin()).collect();
+    let c: Vec<f64> = (0..1000).map(|i| (i as f64).cos()).collect();
+    b.bench("kendall_tau/1000", || stats::kendall_tau(&a, &c));
+    b.bench("spearman/1000", || stats::spearman(&a, &c));
+}

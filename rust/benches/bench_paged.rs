@@ -1,0 +1,38 @@
+//! Paged-optimizer benches: pager fault/touch throughput and the
+//! end-to-end per-step overhead in the three regimes of the paged
+//! experiment (roomy / spiky / thrash).
+
+use qlora::paged::optimizer::PagedOptimizerSim;
+use qlora::paged::pager::{Pager, PagerConfig};
+use qlora::util::bench::Bencher;
+use qlora::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::new();
+
+    b.group("pager primitives");
+    let cfg = PagerConfig {
+        page_bytes: 64 << 10,
+        device_budget: 64 << 20,
+        ..PagerConfig::default()
+    };
+    let mut pager = Pager::new(cfg);
+    let ids = pager.register(0, 128 << 20); // 2x over budget
+    let mut rng = Rng::new(1);
+    b.bench("touch/resident-hit", || {
+        pager.touch(ids[rng.below(512)], 0) // working set fits
+    });
+    b.bench("touch/faulting", || {
+        pager.touch(ids[rng.below(ids.len())], 0) // uniform: ~50% faults
+    });
+
+    b.group("optimizer-step simulation");
+    for (label, budget_mb, seq) in [
+        ("roomy/short-seq", 1024usize, 64usize),
+        ("tight/long-seq", 9, 4096),
+    ] {
+        let mut sim =
+            PagedOptimizerSim::new(budget_mb << 20, 0, 8 << 20, 512, 1024, 8);
+        b.bench(&format!("on_step/{label}"), || sim.on_step(seq, seq));
+    }
+}

@@ -1,0 +1,60 @@
+//! Quantization benches — the kernels behind Table 2 / Figure 3 and the
+//! load-time weight preparation path. Throughput in params/sec.
+
+use qlora::quant::codebook::{Codebook, DType};
+use qlora::quant::{
+    dequantize_blockwise, pack_nibbles, quantize_blockwise, unpack_nibbles,
+};
+use qlora::quant::double::{double_dequantize, double_quantize};
+use qlora::quant::tensor::QuantizedTensor;
+use qlora::util::bench::Bencher;
+use qlora::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::new();
+    let mut rng = Rng::new(1);
+    let n = 64 * 4096; // 256k params
+    let x: Vec<f32> = rng.normal_vec_f32(n);
+
+    b.group("blockwise quantize (block=64)");
+    for dt in [DType::NF4, DType::FP4E2M1, DType::Int4, DType::Int8] {
+        let cb = Codebook::new(dt);
+        b.bench_items(&format!("quantize/{}", dt.name()), n, || {
+            quantize_blockwise(&x, &cb, 64).unwrap()
+        });
+    }
+
+    b.group("blockwise dequantize");
+    let cb = Codebook::new(DType::NF4);
+    let (codes, absmax) = quantize_blockwise(&x, &cb, 64).unwrap();
+    b.bench_items("dequantize/nf4", n, || {
+        dequantize_blockwise(&codes, &absmax, &cb, 64).unwrap()
+    });
+
+    b.group("nibble packing");
+    b.bench_items("pack", n, || pack_nibbles(&codes).unwrap());
+    let packed = pack_nibbles(&codes).unwrap();
+    b.bench_items("unpack", n, || unpack_nibbles(&packed));
+
+    b.group("double quantization (constants)");
+    b.bench_items("double_quantize", absmax.len(), || {
+        double_quantize(&absmax, 256).unwrap()
+    });
+    let dq = double_quantize(&absmax, 256).unwrap();
+    b.bench_items("double_dequantize", absmax.len(), || {
+        double_dequantize(&dq).unwrap()
+    });
+
+    b.group("full weight container (quantize+pack+DQ)");
+    let (h, o) = (512, 512);
+    let w: Vec<f32> = rng.normal_vec_f32(h * o);
+    b.bench_items("QuantizedTensor::quantize 512x512", h * o, || {
+        QuantizedTensor::quantize(&w, (h, o), DType::NF4, 64, Some(256))
+            .unwrap()
+    });
+    let q = QuantizedTensor::quantize(&w, (h, o), DType::NF4, 64, Some(256))
+        .unwrap();
+    b.bench_items("QuantizedTensor::dequantize 512x512", h * o, || {
+        q.dequantize().unwrap()
+    });
+}

@@ -1,0 +1,45 @@
+//! End-to-end training benches over the PJRT runtime: per-step latency of
+//! the AOT train graph (the paper's "QLoRA does not degrade runtime"
+//! claim at reproduction scale), eval latency, and quantized vs 16-bit
+//! step-time comparison. Requires `make artifacts`.
+
+use qlora::coordinator::trainer::Trainer;
+use qlora::data::batching::Batcher;
+use qlora::data::synthetic::{corpus, CorpusKind};
+use qlora::data::tokenizer::Tokenizer;
+use qlora::runtime::artifact::Manifest;
+use qlora::runtime::client::Runtime;
+use qlora::util::bench::Bencher;
+
+fn main() {
+    let dir = Manifest::default_dir();
+    let Ok(manifest) = Manifest::load(&dir) else {
+        println!("bench_train: artifacts not built (run `make artifacts`); \
+                  skipping");
+        return;
+    };
+    let rt = Runtime::cpu().expect("PJRT client");
+    let mut b = Bencher::new();
+
+    for name in ["tiny_scope_all", "tiny_lora16", "tiny_fullft", "e2e", "e2e_noremat"] {
+        let Ok(mut trainer) = Trainer::new(&rt, &manifest, name) else {
+            println!("({name} not in manifest; skipping)");
+            continue;
+        };
+        let cfg = trainer.spec.cfg.clone();
+        let ds = corpus(CorpusKind::Alpaca, 128, 1);
+        let batcher = Batcher::new(&ds, Tokenizer::new(cfg.vocab), cfg.batch,
+                                   cfg.seq_len, false);
+        let batch = &batcher.epoch(0)[0];
+        let tokens_per_step = cfg.batch * cfg.seq_len;
+        b.group(&format!("{name} ({} params, quant={}, lora={})",
+                         cfg.n_params(), cfg.quant,
+                         if cfg.lora { cfg.lora_scope.as_str() } else { "off" }));
+        b.bench_items("train_step", tokens_per_step, || {
+            trainer.step(batch).unwrap()
+        });
+        b.bench_items("eval_step", tokens_per_step, || {
+            trainer.eval(batch).unwrap()
+        });
+    }
+}

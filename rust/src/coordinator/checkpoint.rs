@@ -1,0 +1,44 @@
+//! Checkpointing: save/restore the training state (LoRA adapters + Adam
+//! moments + step counter) via the `.tensors` interchange format. A QLoRA
+//! checkpoint is tiny — only adapters are trainable (paper section 2:
+//! "the LoRA parameters take up only 26 MB" for 7B) — which is what makes
+//! releasing "a collection of adapters" practical.
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::coordinator::trainer::Trainer;
+use crate::tensorio::{read_tensors, write_tensors};
+
+/// Save the full training state.
+pub fn save(trainer: &Trainer, path: &Path) -> Result<()> {
+    let tensors = trainer.state_tensors()?;
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    write_tensors(path, &tensors).context("writing checkpoint")
+}
+
+/// Save only the adapters (the releasable artifact).
+pub fn save_adapters(trainer: &Trainer, path: &Path) -> Result<()> {
+    let tensors = trainer.state_tensors()?;
+    let adapters: Vec<_> =
+        tensors.into_iter().take(trainer.spec.n_trainable).collect();
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    write_tensors(path, &adapters).context("writing adapters")
+}
+
+/// Restore a full training state checkpoint.
+pub fn load(trainer: &mut Trainer, path: &Path) -> Result<()> {
+    let tensors = read_tensors(path).context("reading checkpoint")?;
+    ensure!(
+        tensors.len() == trainer.spec.n_state,
+        "checkpoint tensor count {} != state size {}",
+        tensors.len(),
+        trainer.spec.n_state
+    );
+    trainer.load_state(&tensors)
+}

@@ -1,0 +1,145 @@
+//! Generation: nucleus sampling over the AOT forward graph.
+//!
+//! The paper's evaluation setup uses nucleus sampling with p = 0.9 and
+//! temperature 0.7 throughout (section 5.2); those are the defaults here.
+//! The fwd artifact has fixed (batch, seq_len) shape, so decoding re-runs
+//! the full-sequence forward with the prompt left-aligned and reads the
+//! logits at the current position (fine for demo-scale models; a KV-cache
+//! decode graph is the standard extension).
+
+use anyhow::{ensure, Result};
+
+use crate::coordinator::trainer::Trainer;
+use crate::data::tokenizer::{Tokenizer, BOS, EOS, PAD, SEP};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct Sampler {
+    pub top_p: f64,
+    pub temperature: f64,
+    pub max_new_tokens: usize,
+}
+
+impl Default for Sampler {
+    fn default() -> Self {
+        // paper section 5.2: "nucleus sampling with p=0.9 and temperature 0.7"
+        Sampler { top_p: 0.9, temperature: 0.7, max_new_tokens: 32 }
+    }
+}
+
+impl Sampler {
+    /// Sample one token id from a logits row.
+    pub fn sample(&self, logits: &[f32], rng: &mut Rng) -> i32 {
+        let inv_t = 1.0 / self.temperature.max(1e-6);
+        // softmax with temperature
+        let mx = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut probs: Vec<(usize, f64)> = logits
+            .iter()
+            .enumerate()
+            .map(|(i, &l)| (i, (((l - mx) as f64) * inv_t).exp()))
+            .collect();
+        let z: f64 = probs.iter().map(|(_, p)| p).sum();
+        for p in probs.iter_mut() {
+            p.1 /= z;
+        }
+        // nucleus: smallest set with cumulative mass >= top_p
+        probs.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        let mut cum = 0.0;
+        let mut cut = probs.len();
+        for (i, (_, p)) in probs.iter().enumerate() {
+            cum += p;
+            if cum >= self.top_p {
+                cut = i + 1;
+                break;
+            }
+        }
+        probs.truncate(cut);
+        let weights: Vec<f64> = probs.iter().map(|(_, p)| *p).collect();
+        probs[rng.categorical(&weights)].0 as i32
+    }
+
+    /// Greedy argmax (deterministic decoding for accuracy-style eval).
+    pub fn greedy(logits: &[f32]) -> i32 {
+        logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i as i32)
+            .unwrap_or(0)
+    }
+
+    /// Generate a response to `instruction` (row 0 of the batch; other
+    /// rows are padding).
+    pub fn generate(
+        &self,
+        trainer: &Trainer,
+        tok: &Tokenizer,
+        instruction: &str,
+        rng: &mut Rng,
+        greedy: bool,
+    ) -> Result<String> {
+        let cfg = &trainer.spec.cfg;
+        let vocab = cfg.vocab;
+        let mut ids = vec![BOS];
+        ids.extend(tok.encode(instruction));
+        ids.push(SEP);
+        ensure!(ids.len() < cfg.seq_len, "prompt too long");
+        let prompt_len = ids.len();
+        let mut out_ids: Vec<i32> = Vec::new();
+        for _ in 0..self.max_new_tokens {
+            let pos = prompt_len + out_ids.len();
+            if pos >= cfg.seq_len {
+                break;
+            }
+            let mut tokens = vec![PAD; cfg.batch * cfg.seq_len];
+            tokens[..prompt_len].copy_from_slice(&ids[..prompt_len]);
+            tokens[prompt_len..pos]
+                .copy_from_slice(&out_ids);
+            let logits = trainer.logits(&tokens)?;
+            // logits shape (batch, seq, vocab); want row 0, position pos-1
+            let off = (pos - 1) * vocab;
+            let row = &logits[off..off + vocab];
+            let next = if greedy {
+                Self::greedy(row)
+            } else {
+                self.sample(row, rng)
+            };
+            if next == EOS {
+                break;
+            }
+            out_ids.push(next);
+        }
+        Ok(tok.decode(&out_ids))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_max() {
+        assert_eq!(Sampler::greedy(&[0.1, 5.0, -2.0]), 1);
+    }
+
+    #[test]
+    fn nucleus_restricts_tail() {
+        // with a sharply peaked distribution and p=0.5 only the mode remains
+        let s = Sampler { top_p: 0.5, temperature: 1.0, max_new_tokens: 1 };
+        let logits = vec![10.0, 0.0, 0.0, 0.0];
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            assert_eq!(s.sample(&logits, &mut rng), 0);
+        }
+    }
+
+    #[test]
+    fn temperature_flattens() {
+        // with huge temperature sampling becomes ~uniform
+        let s = Sampler { top_p: 1.0, temperature: 1e6, max_new_tokens: 1 };
+        let logits = vec![3.0, 0.0];
+        let mut rng = Rng::new(2);
+        let ones = (0..2000).filter(|_| s.sample(&logits, &mut rng) == 1).count();
+        assert!(ones > 700, "tail sampled {ones}/2000");
+    }
+}

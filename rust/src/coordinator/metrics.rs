@@ -1,0 +1,130 @@
+//! Training metrics: loss curve, eval points, step timing; CSV export for
+//! the E2E example and EXPERIMENTS.md plots.
+
+use std::path::Path;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::paged::optimizer::PagerStats;
+
+#[derive(Debug, Clone)]
+pub struct EvalPoint {
+    pub step: usize,
+    pub loss: f32,
+    pub accuracy: f32,
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainingLog {
+    pub name: String,
+    pub losses: Vec<f32>,
+    pub step_times: Vec<Duration>,
+    pub evals: Vec<EvalPoint>,
+    pub pager_stats: Option<PagerStats>,
+}
+
+impl TrainingLog {
+    pub fn new(name: &str) -> TrainingLog {
+        TrainingLog {
+            name: name.to_string(),
+            losses: Vec::new(),
+            step_times: Vec::new(),
+            evals: Vec::new(),
+            pager_stats: None,
+        }
+    }
+
+    pub fn record_step(&mut self, step: usize, loss: f32, dt: Duration) {
+        debug_assert_eq!(step, self.losses.len());
+        self.losses.push(loss);
+        self.step_times.push(dt);
+    }
+
+    pub fn record_eval(&mut self, step: usize, loss: f32, accuracy: f32) {
+        self.evals.push(EvalPoint { step, loss, accuracy });
+    }
+
+    pub fn final_loss(&self) -> f32 {
+        *self.losses.last().unwrap_or(&f32::NAN)
+    }
+
+    /// Mean loss over the last `n` steps (robust to the oscillation that
+    /// group-by-length batching produces — paper Appendix B.2).
+    pub fn smoothed_final_loss(&self, n: usize) -> f32 {
+        if self.losses.is_empty() {
+            return f32::NAN;
+        }
+        let tail = &self.losses[self.losses.len().saturating_sub(n)..];
+        tail.iter().sum::<f32>() / tail.len() as f32
+    }
+
+    pub fn mean_step_time(&self) -> Duration {
+        if self.step_times.is_empty() {
+            return Duration::ZERO;
+        }
+        self.step_times.iter().sum::<Duration>() / self.step_times.len() as u32
+    }
+
+    pub fn best_eval_accuracy(&self) -> Option<f32> {
+        self.evals
+            .iter()
+            .map(|e| e.accuracy)
+            .fold(None, |a, b| Some(a.map_or(b, |x: f32| x.max(b))))
+    }
+
+    /// Write `step,loss` CSV plus eval points as comment rows.
+    pub fn write_csv(&self, path: &Path) -> Result<()> {
+        let mut s = String::from("step,loss,step_ms\n");
+        for (i, (l, t)) in
+            self.losses.iter().zip(self.step_times.iter()).enumerate()
+        {
+            s.push_str(&format!("{i},{l},{:.3}\n", t.as_secs_f64() * 1e3));
+        }
+        for e in &self.evals {
+            s.push_str(&format!(
+                "# eval step={} loss={} acc={}\n",
+                e.step, e.loss, e.accuracy
+            ));
+        }
+        if let Some(p) = &self.pager_stats {
+            s.push_str(&format!(
+                "# pager faults={} evictions={} peak_resident={}B stall_us={}\n",
+                p.faults, p.evictions, p.peak_resident, p.stall_us
+            ));
+        }
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, s)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoothing_and_best() {
+        let mut log = TrainingLog::new("t");
+        for (i, l) in [5.0f32, 4.0, 3.0, 2.0].iter().enumerate() {
+            log.record_step(i, *l, Duration::from_millis(1));
+        }
+        log.record_eval(1, 4.5, 0.2);
+        log.record_eval(3, 2.5, 0.6);
+        assert_eq!(log.final_loss(), 2.0);
+        assert_eq!(log.smoothed_final_loss(2), 2.5);
+        assert_eq!(log.best_eval_accuracy(), Some(0.6));
+    }
+
+    #[test]
+    fn csv_writes() {
+        let mut log = TrainingLog::new("t");
+        log.record_step(0, 1.0, Duration::from_millis(2));
+        let p = std::env::temp_dir().join("qlora_log_test/loss.csv");
+        log.write_csv(&p).unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert!(s.contains("0,1,"));
+    }
+}

@@ -1,0 +1,281 @@
+//! The training loop: threads state literals through successive
+//! executions of the AOT train-step graph.
+//!
+//! Input order (the AOT contract, DESIGN.md section 4):
+//!   `state[0..S] ++ frozen[0..F] ++ [tokens, loss_mask]`
+//! Output order: `state'[0..S] ++ [loss]`.
+//! The eval graph takes `state[0..n_trainable] ++ frozen ++ data` and
+//! returns `[loss, token_accuracy]`.
+//!
+//! The trainer is generic over the manifest signature — it never assumes
+//! model internals, so the same loop drives QLoRA adapters and 16-bit
+//! full finetuning (the paper's baseline) alike.
+
+use anyhow::{ensure, Context, Result};
+
+use crate::data::batching::{Batch, Batcher};
+use crate::paged::optimizer::PagedOptimizerSim;
+use crate::runtime::artifact::{ArtifactSpec, Manifest};
+use crate::runtime::client::Runtime;
+use crate::runtime::executor::{
+    literal_from_tensor, literal_scalar_f32, Executable,
+};
+use crate::tensorio::{read_tensors, Tensor};
+
+use super::metrics::TrainingLog;
+
+#[derive(Debug, Clone)]
+pub struct TrainOptions {
+    pub steps: usize,
+    pub eval_every: usize,
+    pub seed: u64,
+    /// attach the paged-optimizer simulator (paper section 3)
+    pub paged: bool,
+    /// simulated device memory budget in bytes for the pager
+    pub device_budget: usize,
+}
+
+impl Default for TrainOptions {
+    fn default() -> Self {
+        TrainOptions {
+            steps: 100,
+            eval_every: 25,
+            seed: 0,
+            paged: false,
+            device_budget: 64 << 20,
+        }
+    }
+}
+
+pub struct Trainer {
+    pub spec: ArtifactSpec,
+    train_exe: std::sync::Arc<Executable>,
+    eval_exe: std::sync::Arc<Executable>,
+    fwd_exe: Option<std::sync::Arc<Executable>>,
+    /// mutable training state (trainable ++ adam_m ++ adam_v ++ step)
+    state: Vec<xla::Literal>,
+    /// frozen quantized base — uploaded once, reused every step
+    frozen: Vec<xla::Literal>,
+    /// optional paged-optimizer simulation running alongside
+    pub pager: Option<PagedOptimizerSim>,
+}
+
+impl Trainer {
+    /// Load artifact `name`: compile graphs, read init tensors.
+    pub fn new(rt: &Runtime, manifest: &Manifest, name: &str) -> Result<Trainer> {
+        let spec = manifest.get(name)?.clone();
+        let train_exe = rt.load_hlo(&spec.train_hlo)?;
+        let eval_exe = rt.load_hlo(&spec.eval_hlo)?;
+        let fwd_exe = match &spec.fwd_hlo {
+            Some(p) => Some(rt.load_hlo(p)?),
+            None => None,
+        };
+        let init = read_tensors(&spec.init)
+            .with_context(|| format!("init tensors for {name}"))?;
+        ensure!(
+            init.len() == spec.n_state + spec.n_frozen,
+            "init file has {} tensors, manifest expects {}",
+            init.len(),
+            spec.n_state + spec.n_frozen
+        );
+        let mut lits = init
+            .iter()
+            .map(literal_from_tensor)
+            .collect::<Result<Vec<_>>>()?;
+        let frozen = lits.split_off(spec.n_state);
+        Ok(Trainer {
+            spec,
+            train_exe,
+            eval_exe,
+            fwd_exe,
+            state: lits,
+            frozen,
+            pager: None,
+        })
+    }
+
+    /// Attach the paged-optimizer simulation (sizes taken from the state
+    /// signature: adam_m/adam_v tensors are the paged allocations).
+    pub fn attach_pager(&mut self, device_budget: usize) {
+        let opt_bytes: usize = self
+            .spec
+            .state_sig
+            .iter()
+            .filter(|t| t.name.starts_with("adam_"))
+            .map(|t| t.elems() * 4)
+            .sum();
+        let model_bytes: usize = self
+            .spec
+            .frozen_sig
+            .iter()
+            .map(|t| t.elems() * if t.dtype == "u8" { 1 } else { 4 })
+            .sum();
+        self.pager = Some(PagedOptimizerSim::new(
+            device_budget,
+            model_bytes,
+            opt_bytes,
+            self.spec.cfg.batch * self.spec.cfg.seq_len,
+            self.spec.cfg.d_model,
+            self.spec.cfg.n_layers,
+        ));
+    }
+
+    fn batch_literals(&self, batch: &Batch) -> Result<[xla::Literal; 2]> {
+        ensure!(
+            batch.batch == self.spec.cfg.batch
+                && batch.seq_len == self.spec.cfg.seq_len,
+            "batch shape {}x{} does not match artifact {}x{}",
+            batch.batch,
+            batch.seq_len,
+            self.spec.cfg.batch,
+            self.spec.cfg.seq_len
+        );
+        let t = Tensor::i32("tokens", vec![batch.batch, batch.seq_len],
+                            &batch.tokens);
+        let m = Tensor::f32("loss_mask", vec![batch.batch, batch.seq_len],
+                            &batch.mask);
+        Ok([literal_from_tensor(&t)?, literal_from_tensor(&m)?])
+    }
+
+    /// One optimizer step; returns the loss.
+    pub fn step(&mut self, batch: &Batch) -> Result<f32> {
+        let [tok, mask] = self.batch_literals(batch)?;
+        let mut inputs: Vec<&xla::Literal> =
+            Vec::with_capacity(self.state.len() + self.frozen.len() + 2);
+        inputs.extend(self.state.iter());
+        inputs.extend(self.frozen.iter());
+        inputs.push(&tok);
+        inputs.push(&mask);
+        let mut out = self.train_exe.run(&inputs)?;
+        ensure!(
+            out.len() == self.spec.n_state + 1,
+            "train step returned {} outputs, expected {}",
+            out.len(),
+            self.spec.n_state + 1
+        );
+        let loss = literal_scalar_f32(&out[self.spec.n_state])?;
+        out.truncate(self.spec.n_state);
+        self.state = out;
+        if let Some(p) = &mut self.pager {
+            // max sequence length in the batch drives the activation spike
+            let max_len = batch.lens.iter().copied().max().unwrap_or(0);
+            p.on_step(max_len, batch.seq_len);
+        }
+        Ok(loss)
+    }
+
+    /// Evaluate (loss, token accuracy) on a batch without updating state.
+    pub fn eval(&self, batch: &Batch) -> Result<(f32, f32)> {
+        let [tok, mask] = self.batch_literals(batch)?;
+        let mut inputs: Vec<&xla::Literal> = Vec::new();
+        inputs.extend(self.state.iter().take(self.spec.n_trainable));
+        inputs.extend(self.frozen.iter());
+        inputs.push(&tok);
+        inputs.push(&mask);
+        let out = self.eval_exe.run(&inputs)?;
+        ensure!(out.len() == 2, "eval returned {} outputs", out.len());
+        Ok((literal_scalar_f32(&out[0])?, literal_scalar_f32(&out[1])?))
+    }
+
+    /// Forward logits for generation (requires a fwd artifact).
+    pub fn logits(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let exe = self
+            .fwd_exe
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("no fwd artifact for {}",
+                                           self.spec.name))?;
+        let t = Tensor::i32(
+            "tokens",
+            vec![self.spec.cfg.batch, self.spec.cfg.seq_len],
+            tokens,
+        );
+        let tok = literal_from_tensor(&t)?;
+        let mut inputs: Vec<&xla::Literal> = Vec::new();
+        inputs.extend(self.state.iter().take(self.spec.n_trainable));
+        inputs.extend(self.frozen.iter());
+        inputs.push(&tok);
+        let out = exe.run(&inputs)?;
+        crate::runtime::executor::literal_to_f32(&out[0])
+    }
+
+    /// Mean eval over a whole batcher.
+    pub fn eval_all(&self, batcher: &Batcher, seed: u64) -> Result<(f32, f32)> {
+        let batches = batcher.epoch(seed);
+        ensure!(!batches.is_empty(), "empty eval set");
+        let mut loss = 0f64;
+        let mut acc = 0f64;
+        for b in &batches {
+            let (l, a) = self.eval(b)?;
+            loss += l as f64;
+            acc += a as f64;
+        }
+        let n = batches.len() as f64;
+        Ok(((loss / n) as f32, (acc / n) as f32))
+    }
+
+    /// Run the full loop: `opts.steps` steps cycling over epochs, periodic
+    /// eval on `eval_batcher`, everything recorded in the returned log.
+    pub fn train(
+        &mut self,
+        train_batcher: &Batcher,
+        eval_batcher: Option<&Batcher>,
+        opts: &TrainOptions,
+    ) -> Result<TrainingLog> {
+        if opts.paged && self.pager.is_none() {
+            self.attach_pager(opts.device_budget);
+        }
+        let mut log = TrainingLog::new(&self.spec.name);
+        let mut step = 0usize;
+        let mut epoch = 0u64;
+        'outer: loop {
+            let batches = train_batcher.epoch(opts.seed ^ epoch);
+            ensure!(!batches.is_empty(), "train set smaller than one batch");
+            for b in &batches {
+                let t0 = std::time::Instant::now();
+                let loss = self.step(b)?;
+                log.record_step(step, loss, t0.elapsed());
+                if let Some(ev) = eval_batcher {
+                    if opts.eval_every > 0
+                        && (step + 1) % opts.eval_every == 0
+                    {
+                        let (l, a) = self.eval_all(ev, 0)?;
+                        log.record_eval(step, l, a);
+                    }
+                }
+                step += 1;
+                if step >= opts.steps {
+                    break 'outer;
+                }
+            }
+            epoch += 1;
+        }
+        if let Some(p) = &self.pager {
+            log.pager_stats = Some(p.stats.clone());
+        }
+        Ok(log)
+    }
+
+    /// Current state as host tensors (checkpointing).
+    pub fn state_tensors(&self) -> Result<Vec<Tensor>> {
+        self.state
+            .iter()
+            .zip(self.spec.state_sig.iter())
+            .map(|(l, s)| crate::runtime::executor::literal_to_tensor(&s.name, l))
+            .collect()
+    }
+
+    /// Restore state from host tensors (must match the state signature).
+    pub fn load_state(&mut self, tensors: &[Tensor]) -> Result<()> {
+        ensure!(
+            tensors.len() == self.spec.n_state,
+            "checkpoint has {} tensors, expected {}",
+            tensors.len(),
+            self.spec.n_state
+        );
+        self.state = tensors
+            .iter()
+            .map(literal_from_tensor)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(())
+    }
+}

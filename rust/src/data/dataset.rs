@@ -1,0 +1,201 @@
+//! Datasets and OASST-style conversation trees.
+//!
+//! The paper trains Guanaco on OASST1 by selecting the **top-ranked reply
+//! at every level of the conversation tree** and finetuning on the full
+//! selected conversation (section 5.1). `ConversationTree` models ranked
+//! candidate replies per turn; `top_path_example` extracts that path.
+
+use crate::util::rng::Rng;
+
+use super::synthetic::Task;
+
+/// One training example (possibly a flattened multi-turn conversation).
+#[derive(Debug, Clone)]
+pub struct Example {
+    pub instruction: String,
+    pub response: String,
+    /// number of conversation turns flattened into this example
+    pub turns: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub kind: String,
+    pub examples: Vec<Example>,
+}
+
+impl Dataset {
+    /// Split off a held-out fraction (deterministic).
+    pub fn split(mut self, holdout: f64, seed: u64) -> (Dataset, Dataset) {
+        let mut rng = Rng::new(seed);
+        rng.shuffle(&mut self.examples);
+        let n_hold = ((self.examples.len() as f64) * holdout).round() as usize;
+        let hold = self.examples.split_off(self.examples.len() - n_hold);
+        (
+            Dataset { kind: self.kind.clone(), examples: self.examples },
+            Dataset { kind: format!("{}-holdout", self.kind), examples: hold },
+        )
+    }
+
+    /// Truncate to at most n examples (dataset-size ablations, Table 11).
+    pub fn take(mut self, n: usize) -> Dataset {
+        self.examples.truncate(n);
+        self
+    }
+}
+
+/// A candidate reply with a (crowd-sourced) rank score.
+#[derive(Debug, Clone)]
+pub struct RankedReply {
+    pub text: String,
+    pub score: f64,
+    /// whether this candidate is actually correct for the prompt
+    pub correct: bool,
+}
+
+/// One level of the conversation: a user turn + ranked assistant replies.
+#[derive(Debug, Clone)]
+pub struct ConversationLevel {
+    pub user: String,
+    pub replies: Vec<RankedReply>,
+}
+
+/// A linear-in-depth conversation tree with ranked branches per level.
+#[derive(Debug, Clone)]
+pub struct ConversationTree {
+    pub levels: Vec<ConversationLevel>,
+}
+
+impl ConversationTree {
+    /// Generate a tree: at each level a task prompt and `branching`
+    /// candidate replies — the correct one usually ranked highest, with
+    /// `noise` probability that ranking is scrambled (annotation noise).
+    pub fn generate(
+        rng: &mut Rng,
+        tasks: &[Task],
+        weights: &[f64],
+        depth: usize,
+        branching: usize,
+        noise: f64,
+    ) -> ConversationTree {
+        let mut levels = Vec::with_capacity(depth);
+        for _ in 0..depth {
+            let t = tasks[rng.categorical(weights)];
+            let (user, correct) = t.generate(rng, false);
+            let mut replies = Vec::with_capacity(branching);
+            // correct reply: high score unless annotation noise strikes
+            let scramble = rng.bool(noise);
+            replies.push(RankedReply {
+                text: correct.clone(),
+                score: if scramble { rng.f64() } else { 0.8 + 0.2 * rng.f64() },
+                correct: true,
+            });
+            for _ in 1..branching {
+                replies.push(RankedReply {
+                    text: Task::corrupt(rng, &correct),
+                    score: 0.6 * rng.f64(),
+                    correct: false,
+                });
+            }
+            levels.push(ConversationLevel { user, replies });
+        }
+        ConversationTree { levels }
+    }
+
+    /// Select the top-ranked reply at every level (paper section 5.1) and
+    /// flatten the conversation into one training example. Earlier turns
+    /// are folded into the instruction; the final top reply is the target.
+    pub fn top_path_example(&self) -> Example {
+        let mut context = String::new();
+        for (i, level) in self.levels.iter().enumerate() {
+            let top = level
+                .replies
+                .iter()
+                .max_by(|a, b| a.score.partial_cmp(&b.score).unwrap())
+                .expect("non-empty replies");
+            if i + 1 == self.levels.len() {
+                let instruction = if context.is_empty() {
+                    level.user.clone()
+                } else {
+                    format!("{context};{}", level.user)
+                };
+                return Example {
+                    instruction,
+                    response: top.text.clone(),
+                    turns: self.levels.len(),
+                };
+            }
+            if !context.is_empty() {
+                context.push(';');
+            }
+            context.push_str(&level.user);
+            context.push('=');
+            context.push_str(&top.text);
+        }
+        unreachable!("empty conversation tree")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::Task;
+
+    #[test]
+    fn top_path_prefers_highest_score() {
+        let tree = ConversationTree {
+            levels: vec![ConversationLevel {
+                user: "q".into(),
+                replies: vec![
+                    RankedReply { text: "bad".into(), score: 0.1, correct: false },
+                    RankedReply { text: "good".into(), score: 0.9, correct: true },
+                ],
+            }],
+        };
+        let ex = tree.top_path_example();
+        assert_eq!(ex.response, "good");
+        assert_eq!(ex.turns, 1);
+    }
+
+    #[test]
+    fn multiturn_context_flattened() {
+        let mut rng = Rng::new(1);
+        let tree = ConversationTree::generate(
+            &mut rng, &[Task::Copy], &[1.0], 3, 3, 0.0);
+        let ex = tree.top_path_example();
+        assert_eq!(ex.turns, 3);
+        assert!(ex.instruction.contains('='), "context folded in");
+    }
+
+    #[test]
+    fn zero_noise_always_selects_correct() {
+        let mut rng = Rng::new(2);
+        for _ in 0..50 {
+            let tree = ConversationTree::generate(
+                &mut rng, &[Task::Reverse], &[1.0], 1, 4, 0.0);
+            let top = tree.levels[0]
+                .replies
+                .iter()
+                .max_by(|a, b| a.score.partial_cmp(&b.score).unwrap())
+                .unwrap();
+            assert!(top.correct);
+        }
+    }
+
+    #[test]
+    fn split_partitions() {
+        let d = Dataset {
+            kind: "t".into(),
+            examples: (0..100)
+                .map(|i| Example {
+                    instruction: format!("i{i}"),
+                    response: "r".into(),
+                    turns: 1,
+                })
+                .collect(),
+        };
+        let (train, hold) = d.split(0.2, 3);
+        assert_eq!(train.examples.len(), 80);
+        assert_eq!(hold.examples.len(), 20);
+    }
+}

@@ -1,0 +1,13 @@
+//! Data pipeline: tokenizer, synthetic instruction corpora (the stand-ins
+//! for the paper's 8 finetuning datasets), OASST-style conversation trees,
+//! and the group-by-length batcher (paper Appendix B.2).
+
+pub mod batching;
+pub mod dataset;
+pub mod synthetic;
+pub mod tokenizer;
+
+pub use batching::{Batch, Batcher};
+pub use dataset::{ConversationTree, Dataset, Example};
+pub use synthetic::{corpus, CorpusKind};
+pub use tokenizer::Tokenizer;

@@ -1,0 +1,334 @@
+//! Synthetic instruction corpora — stand-ins for the paper's 8 finetuning
+//! datasets (section 5.1 / Appendix B.1), built from task families a tiny
+//! transformer can actually learn. Each corpus controls the axes the
+//! paper's data findings are about:
+//!
+//! * **suitability** — the mixture of task families (FLAN-like corpora are
+//!   benchmark-shaped; chat-like corpora are conversational),
+//! * **quality** — label-noise rate (distilled datasets are noisier),
+//! * **size** — number of examples,
+//! * **form** — single-turn vs multi-turn conversation trees (OASST).
+
+use crate::util::rng::Rng;
+
+use super::dataset::{ConversationTree, Dataset, Example};
+
+/// The eight dataset stand-ins (paper Table 5 rows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CorpusKind {
+    Oasst1,
+    HhRlhf,
+    Alpaca,
+    SelfInstruct,
+    UnnaturalInstructions,
+    FlanV2,
+    Chip2,
+    Longform,
+}
+
+impl CorpusKind {
+    pub fn all() -> [CorpusKind; 8] {
+        [
+            CorpusKind::Oasst1,
+            CorpusKind::HhRlhf,
+            CorpusKind::Alpaca,
+            CorpusKind::SelfInstruct,
+            CorpusKind::UnnaturalInstructions,
+            CorpusKind::FlanV2,
+            CorpusKind::Chip2,
+            CorpusKind::Longform,
+        ]
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CorpusKind::Oasst1 => "oasst1",
+            CorpusKind::HhRlhf => "hh-rlhf",
+            CorpusKind::Alpaca => "alpaca",
+            CorpusKind::SelfInstruct => "self-instruct",
+            CorpusKind::UnnaturalInstructions => "unnatural-instructions",
+            CorpusKind::FlanV2 => "flan-v2",
+            CorpusKind::Chip2 => "chip2",
+            CorpusKind::Longform => "longform",
+        }
+    }
+
+    /// Default corpus size, scaled down from the paper's (Appendix B.1)
+    /// keeping relative ordering (OASST1 9k … Unnatural 240k).
+    pub fn default_size(self) -> usize {
+        match self {
+            CorpusKind::Oasst1 => 400,
+            CorpusKind::HhRlhf => 1600,
+            CorpusKind::Alpaca => 800,
+            CorpusKind::SelfInstruct => 1200,
+            CorpusKind::UnnaturalInstructions => 2400,
+            CorpusKind::FlanV2 => 2400,
+            CorpusKind::Chip2 => 1600,
+            CorpusKind::Longform => 400,
+        }
+    }
+
+    /// Label-noise probability (quality axis; distilled corpora noisier).
+    pub fn noise(self) -> f64 {
+        match self {
+            CorpusKind::Oasst1 => 0.00,
+            CorpusKind::FlanV2 => 0.01,
+            CorpusKind::Alpaca => 0.03,
+            CorpusKind::HhRlhf => 0.05,
+            CorpusKind::Chip2 => 0.06,
+            CorpusKind::Longform => 0.06,
+            CorpusKind::UnnaturalInstructions => 0.10,
+            CorpusKind::SelfInstruct => 0.18,
+        }
+    }
+}
+
+/// One synthetic task instance: instruction + correct response.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Task {
+    Copy,
+    Reverse,
+    SortLetters,
+    Upper,
+    LastChar,
+    Add,
+    Repeat,
+    Lookup,
+}
+
+const LETTERS: &[u8] = b"abcdefghijklmnopqrstuvwxyz";
+
+/// Fixed lookup table (fake "capital of X" world knowledge).
+const LOOKUP: [(&str, &str); 8] = [
+    ("zan", "lusaka"),
+    ("ter", "opal"),
+    ("vor", "mira"),
+    ("qued", "sol"),
+    ("plim", "vex"),
+    ("grun", "tol"),
+    ("ost", "kiv"),
+    ("drel", "nam"),
+];
+
+fn rand_word(rng: &mut Rng, len: usize) -> String {
+    (0..len)
+        .map(|_| LETTERS[rng.below(LETTERS.len())] as char)
+        .collect()
+}
+
+impl Task {
+    pub fn generate(self, rng: &mut Rng, long: bool) -> (String, String) {
+        let wlen = if long { 8 + rng.below(8) } else { 3 + rng.below(5) };
+        match self {
+            Task::Copy => {
+                let w = rand_word(rng, wlen);
+                (format!("copy {w}"), w)
+            }
+            Task::Reverse => {
+                let w = rand_word(rng, wlen);
+                let r: String = w.chars().rev().collect();
+                (format!("rev {w}"), r)
+            }
+            Task::SortLetters => {
+                let w = rand_word(rng, wlen);
+                let mut b: Vec<u8> = w.bytes().collect();
+                b.sort_unstable();
+                (format!("sort {w}"), String::from_utf8(b).unwrap())
+            }
+            Task::Upper => {
+                let w = rand_word(rng, wlen);
+                (format!("up {w}"), w.to_uppercase())
+            }
+            Task::LastChar => {
+                let w = rand_word(rng, wlen);
+                let c = w.chars().last().unwrap();
+                (format!("last {w}"), c.to_string())
+            }
+            Task::Add => {
+                let a = rng.below(50);
+                let b = rng.below(50);
+                (format!("add {a} {b}"), format!("{}", a + b))
+            }
+            Task::Repeat => {
+                let w = rand_word(rng, wlen.min(6));
+                let n = 2 + rng.below(2);
+                (format!("rep{n} {w}"), w.repeat(n))
+            }
+            Task::Lookup => {
+                let (k, v) = LOOKUP[rng.below(LOOKUP.len())];
+                (format!("cap {k}"), v.to_string())
+            }
+        }
+    }
+
+    /// Corrupt a response (label noise / low quality).
+    pub fn corrupt(rng: &mut Rng, response: &str) -> String {
+        if response.is_empty() {
+            return rand_word(rng, 3);
+        }
+        let mut b: Vec<u8> = response.bytes().collect();
+        let i = rng.below(b.len());
+        b[i] = LETTERS[rng.below(LETTERS.len())];
+        String::from_utf8_lossy(&b).into_owned()
+    }
+}
+
+/// Task mixture per corpus: (benchmark-shaped tasks, chat-shaped tasks).
+/// FLAN-like corpora lean toward the "MMLU-proxy" tasks (Add, Lookup,
+/// LastChar); chat corpora toward the "Vicuna-proxy" tasks (Copy, Reverse,
+/// Sort, Upper, Repeat). This realizes the paper's dataset-suitability
+/// finding (strong MMLU ≠ strong chatbot, section 5.3).
+fn mixture(kind: CorpusKind) -> Vec<(Task, f64)> {
+    use Task::*;
+    match kind {
+        CorpusKind::FlanV2 => vec![
+            (Add, 3.0), (Lookup, 3.0), (LastChar, 2.0), (Upper, 1.0),
+            (Copy, 0.5),
+        ],
+        CorpusKind::UnnaturalInstructions => vec![
+            (Add, 2.0), (Lookup, 2.0), (LastChar, 1.5), (SortLetters, 1.0),
+            (Copy, 1.0),
+        ],
+        CorpusKind::Alpaca => vec![
+            (Add, 1.5), (Lookup, 1.5), (Copy, 1.5), (Reverse, 1.5),
+            (Upper, 1.0), (SortLetters, 1.0),
+        ],
+        CorpusKind::Oasst1 => vec![
+            (Copy, 2.0), (Reverse, 2.0), (SortLetters, 2.0), (Upper, 1.5),
+            (Repeat, 1.5), (Lookup, 0.7), (Add, 0.7),
+        ],
+        CorpusKind::HhRlhf => vec![
+            (Copy, 2.0), (Upper, 2.0), (Repeat, 1.0), (Reverse, 1.0),
+            (Add, 0.3),
+        ],
+        CorpusKind::Chip2 => vec![
+            (Copy, 1.5), (Reverse, 1.5), (Repeat, 1.5), (SortLetters, 1.0),
+            (Add, 0.5),
+        ],
+        CorpusKind::SelfInstruct => vec![
+            (Copy, 1.5), (Reverse, 1.0), (Upper, 1.0), (Add, 0.7),
+            (Lookup, 0.5),
+        ],
+        CorpusKind::Longform => vec![
+            (Repeat, 3.0), (Copy, 2.0), (SortLetters, 1.0),
+        ],
+    }
+}
+
+/// Generate a corpus of `size` examples with seed `seed`.
+pub fn corpus(kind: CorpusKind, size: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed ^ (kind as u64).wrapping_mul(0x9E37));
+    let mix = mixture(kind);
+    let tasks: Vec<Task> = mix.iter().map(|(t, _)| *t).collect();
+    let weights: Vec<f64> = mix.iter().map(|(_, w)| *w).collect();
+    let long = matches!(kind, CorpusKind::Longform);
+    let mut examples = Vec::with_capacity(size);
+
+    if kind == CorpusKind::Oasst1 {
+        // conversation trees with ranked replies; train on the top path
+        // (paper: "top reply at each level of the conversation tree")
+        let mut remaining = size;
+        while remaining > 0 {
+            let depth = 1 + rng.below(3).min(remaining);
+            let tree = ConversationTree::generate(
+                &mut rng, &tasks, &weights, depth, 3, kind.noise());
+            let ex = tree.top_path_example();
+            remaining -= 1;
+            examples.push(ex);
+        }
+    } else {
+        for _ in 0..size {
+            let t = tasks[rng.categorical(&weights)];
+            let (instr, mut resp) = t.generate(&mut rng, long);
+            if rng.bool(kind.noise()) {
+                resp = Task::corrupt(&mut rng, &resp);
+            }
+            examples.push(Example { instruction: instr, response: resp,
+                                    turns: 1 });
+        }
+    }
+    Dataset { kind: kind.name().to_string(), examples }
+}
+
+/// Held-out evaluation suites (benchmark proxies).
+pub enum EvalSuite {
+    /// MMLU proxy: knowledge/closed-form tasks.
+    MmluProxy,
+    /// Vicuna proxy: open-form chat-style tasks.
+    VicunaProxy,
+}
+
+pub fn eval_set(suite: EvalSuite, size: usize, seed: u64) -> Dataset {
+    use Task::*;
+    let (tasks, weights): (Vec<Task>, Vec<f64>) = match suite {
+        EvalSuite::MmluProxy => (
+            vec![Add, Lookup, LastChar],
+            vec![1.0, 1.0, 1.0],
+        ),
+        EvalSuite::VicunaProxy => (
+            vec![Copy, Reverse, SortLetters, Upper, Repeat],
+            vec![1.0, 1.0, 1.0, 1.0, 1.0],
+        ),
+    };
+    let mut rng = Rng::new(seed);
+    let examples = (0..size)
+        .map(|_| {
+            let t = tasks[rng.categorical(&weights)];
+            let (i, r) = t.generate(&mut rng, false);
+            Example { instruction: i, response: r, turns: 1 }
+        })
+        .collect();
+    Dataset { kind: "eval".to_string(), examples }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpora_have_requested_size() {
+        for kind in CorpusKind::all() {
+            let d = corpus(kind, 50, 7);
+            assert_eq!(d.examples.len(), 50, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let a = corpus(CorpusKind::Alpaca, 20, 1);
+        let b = corpus(CorpusKind::Alpaca, 20, 1);
+        for (x, y) in a.examples.iter().zip(b.examples.iter()) {
+            assert_eq!(x.instruction, y.instruction);
+            assert_eq!(x.response, y.response);
+        }
+        let c = corpus(CorpusKind::Alpaca, 20, 2);
+        assert!(a.examples.iter().zip(c.examples.iter())
+            .any(|(x, y)| x.instruction != y.instruction));
+    }
+
+    #[test]
+    fn tasks_are_correct() {
+        let mut rng = Rng::new(3);
+        for _ in 0..50 {
+            let (i, r) = Task::Reverse.generate(&mut rng, false);
+            let w = i.strip_prefix("rev ").unwrap();
+            assert_eq!(r, w.chars().rev().collect::<String>());
+            let (i, r) = Task::Add.generate(&mut rng, false);
+            let parts: Vec<usize> = i.strip_prefix("add ").unwrap()
+                .split(' ').map(|s| s.parse().unwrap()).collect();
+            assert_eq!(r.parse::<usize>().unwrap(), parts[0] + parts[1]);
+        }
+    }
+
+    #[test]
+    fn noise_ordering_matches_quality_axis() {
+        assert!(CorpusKind::Oasst1.noise() < CorpusKind::SelfInstruct.noise());
+        assert!(CorpusKind::FlanV2.noise() < CorpusKind::SelfInstruct.noise());
+    }
+
+    #[test]
+    fn oasst_examples_are_multiturn_sometimes() {
+        let d = corpus(CorpusKind::Oasst1, 100, 5);
+        assert!(d.examples.iter().any(|e| e.turns > 1));
+    }
+}

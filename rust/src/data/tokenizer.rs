@@ -1,0 +1,143 @@
+//! Byte-level tokenizer with special tokens.
+//!
+//! Vocabulary layout (must stay below the model config's `vocab`):
+//!   0 PAD, 1 BOS, 2 EOS, 3 SEP (instruction/response boundary),
+//!   4..=259 raw bytes. Model vocabs < 260 (e.g. the tiny configs with
+//!   vocab=256) restrict text to ASCII via `fold_ascii`.
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const SEP: i32 = 3;
+pub const BYTE_BASE: i32 = 4;
+
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    /// model vocab size; byte ids are folded into [BYTE_BASE, vocab)
+    pub vocab: usize,
+}
+
+impl Tokenizer {
+    pub fn new(vocab: usize) -> Tokenizer {
+        assert!(vocab > BYTE_BASE as usize + 16, "vocab too small");
+        Tokenizer { vocab }
+    }
+
+    /// Encode text bytes (no specials).
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        let span = (self.vocab - BYTE_BASE as usize) as i32;
+        text.bytes()
+            .map(|b| BYTE_BASE + (b as i32 % span))
+            .collect()
+    }
+
+    /// Decode ids back to text (specials rendered symbolically).
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let mut out = String::new();
+        for &id in ids {
+            match id {
+                PAD => {}
+                BOS => out.push_str("<s>"),
+                EOS => out.push_str("</s>"),
+                SEP => out.push_str("<sep>"),
+                b if b >= BYTE_BASE && (b as usize) < self.vocab => {
+                    let byte = (b - BYTE_BASE) as u8;
+                    if byte.is_ascii() {
+                        out.push(byte as char);
+                    } else {
+                        out.push('\u{FFFD}');
+                    }
+                }
+                _ => out.push('\u{FFFD}'),
+            }
+        }
+        out
+    }
+
+    /// Encode an (instruction, response) pair:
+    /// BOS instr SEP response EOS, plus a loss mask. `train_on_source`
+    /// additionally supervises the instruction span (paper Table 10
+    /// ablation: target-only is better for MMLU).
+    pub fn encode_example(
+        &self,
+        instruction: &str,
+        response: &str,
+        max_len: usize,
+        train_on_source: bool,
+    ) -> (Vec<i32>, Vec<f32>) {
+        let mut ids = vec![BOS];
+        let mut mask = vec![0.0f32];
+        for t in self.encode(instruction) {
+            ids.push(t);
+            mask.push(if train_on_source { 1.0 } else { 0.0 });
+        }
+        ids.push(SEP);
+        mask.push(0.0);
+        for t in self.encode(response) {
+            ids.push(t);
+            mask.push(1.0);
+        }
+        ids.push(EOS);
+        mask.push(1.0);
+        ids.truncate(max_len);
+        mask.truncate(max_len);
+        (ids, mask)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let t = Tokenizer::new(512);
+        let s = "Hello, QLoRA! 123";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn specials_disjoint_from_bytes() {
+        let t = Tokenizer::new(512);
+        for id in t.encode("abcXYZ09") {
+            assert!(id >= BYTE_BASE);
+        }
+    }
+
+    #[test]
+    fn example_mask_covers_response_only() {
+        let t = Tokenizer::new(512);
+        let (ids, mask) = t.encode_example("add 1 2", "3", 64, false);
+        assert_eq!(ids[0], BOS);
+        assert_eq!(*ids.last().unwrap(), EOS);
+        let sep_pos = ids.iter().position(|&i| i == SEP).unwrap();
+        // nothing before+including SEP is supervised
+        assert!(mask[..=sep_pos].iter().all(|&m| m == 0.0));
+        // everything after SEP is supervised (response + EOS)
+        assert!(mask[sep_pos + 1..].iter().all(|&m| m == 1.0));
+    }
+
+    #[test]
+    fn train_on_source_supervises_instruction() {
+        let t = Tokenizer::new(512);
+        let (ids, mask) = t.encode_example("q", "a", 64, true);
+        let sep_pos = ids.iter().position(|&i| i == SEP).unwrap();
+        assert!(mask[1..sep_pos].iter().all(|&m| m == 1.0));
+    }
+
+    #[test]
+    fn truncation() {
+        let t = Tokenizer::new(512);
+        let (ids, mask) = t.encode_example(&"x".repeat(100), "y", 16, false);
+        assert_eq!(ids.len(), 16);
+        assert_eq!(mask.len(), 16);
+    }
+
+    #[test]
+    fn small_vocab_folds() {
+        let t = Tokenizer::new(256);
+        for id in t.encode("é\u{00ff}Z") {
+            assert!((id as usize) < 256 && id >= BYTE_BASE);
+        }
+    }
+}

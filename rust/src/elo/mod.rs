@@ -1,0 +1,121 @@
+//! Elo rating machinery (paper section 5.2 "Elo Rating").
+//!
+//! Tournament-style model comparison: matches are pairwise judgments
+//! (win/lose/tie); ratings start at 1000 with K = 32 and are updated in
+//! match order; because ordering matters, the paper repeats the
+//! computation over 10,000 random orderings of the match set and reports
+//! mean ± 95% CI. This module implements exactly that.
+
+pub mod tournament;
+
+pub use tournament::{EloSummary, Tournament};
+
+/// Match outcome from A's perspective.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    WinA,
+    WinB,
+    Tie,
+}
+
+/// One judged comparison between systems `a` and `b`.
+#[derive(Debug, Clone, Copy)]
+pub struct MatchRecord {
+    pub a: usize,
+    pub b: usize,
+    pub outcome: Outcome,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct EloConfig {
+    pub k: f64,
+    pub initial: f64,
+}
+
+impl Default for EloConfig {
+    fn default() -> Self {
+        // paper: "We start with a score of 1,000 and use K=32."
+        EloConfig { k: 32.0, initial: 1000.0 }
+    }
+}
+
+/// Expected score of a vs b (paper: 1100 vs 1000 → ≈65% win rate).
+pub fn expected_score(ra: f64, rb: f64) -> f64 {
+    1.0 / (1.0 + 10f64.powf((rb - ra) / 400.0))
+}
+
+/// Sequentially apply matches in the given order.
+pub fn run_sequence(
+    n_systems: usize,
+    matches: &[MatchRecord],
+    order: &[usize],
+    cfg: EloConfig,
+) -> Vec<f64> {
+    let mut r = vec![cfg.initial; n_systems];
+    for &idx in order {
+        let m = &matches[idx];
+        let ea = expected_score(r[m.a], r[m.b]);
+        let sa = match m.outcome {
+            Outcome::WinA => 1.0,
+            Outcome::WinB => 0.0,
+            Outcome::Tie => 0.5,
+        };
+        let delta = cfg.k * (sa - ea);
+        r[m.a] += delta;
+        r[m.b] -= delta;
+    }
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expected_score_anchors() {
+        assert!((expected_score(1000.0, 1000.0) - 0.5).abs() < 1e-12);
+        // paper: Elo 1100 vs 1000 → ≈64%
+        let p = expected_score(1100.0, 1000.0);
+        assert!((p - 0.64).abs() < 0.01, "{p}");
+        // symmetry
+        assert!((expected_score(900.0, 1100.0)
+            + expected_score(1100.0, 900.0)
+            - 1.0)
+            .abs() < 1e-12);
+    }
+
+    #[test]
+    fn rating_is_conserved() {
+        // zero-sum: total rating never changes
+        let matches = vec![
+            MatchRecord { a: 0, b: 1, outcome: Outcome::WinA },
+            MatchRecord { a: 1, b: 2, outcome: Outcome::Tie },
+            MatchRecord { a: 2, b: 0, outcome: Outcome::WinB },
+        ];
+        let order: Vec<usize> = (0..matches.len()).collect();
+        let r = run_sequence(3, &matches, &order, EloConfig::default());
+        let total: f64 = r.iter().sum();
+        assert!((total - 3000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn winner_gains() {
+        let matches = vec![MatchRecord { a: 0, b: 1, outcome: Outcome::WinA }];
+        let r = run_sequence(2, &matches, &[0], EloConfig::default());
+        assert!(r[0] > 1000.0 && r[1] < 1000.0);
+        assert!((r[0] - 1016.0).abs() < 1e-9); // K/2 on an even match
+    }
+
+    #[test]
+    fn upset_moves_more_than_expected_win() {
+        let cfg = EloConfig::default();
+        let mut r = vec![1200.0, 800.0];
+        // expected win by the strong player
+        let ea = expected_score(r[0], r[1]);
+        let strong_gain = cfg.k * (1.0 - ea);
+        // upset: weak player wins
+        let upset_gain = cfg.k * (1.0 - expected_score(r[1], r[0]));
+        assert!(upset_gain > strong_gain * 5.0);
+        r[0] += 0.0; // silence unused warnings
+    }
+}

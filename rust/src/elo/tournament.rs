@@ -1,0 +1,132 @@
+//! Tournament aggregation: Elo over many random match orderings
+//! (paper: "we repeat this procedure 10,000 times with different random
+//! seeds to control for ordering effects").
+
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+use super::{run_sequence, EloConfig, MatchRecord};
+
+#[derive(Debug, Clone)]
+pub struct EloSummary {
+    pub system: usize,
+    pub mean: f64,
+    pub ci95: f64,
+    pub rank: usize,
+}
+
+pub struct Tournament {
+    pub n_systems: usize,
+    pub matches: Vec<MatchRecord>,
+    pub cfg: EloConfig,
+}
+
+impl Tournament {
+    pub fn new(n_systems: usize) -> Tournament {
+        Tournament { n_systems, matches: Vec::new(), cfg: EloConfig::default() }
+    }
+
+    pub fn add(&mut self, m: MatchRecord) {
+        debug_assert!(m.a < self.n_systems && m.b < self.n_systems);
+        self.matches.push(m);
+    }
+
+    /// Mean Elo ± 95% CI over `orderings` random permutations.
+    pub fn run(&self, orderings: usize, seed: u64) -> Vec<EloSummary> {
+        let mut rng = Rng::new(seed);
+        let n = self.matches.len();
+        let mut per_system: Vec<Vec<f64>> =
+            vec![Vec::with_capacity(orderings); self.n_systems];
+        let mut order: Vec<usize> = (0..n).collect();
+        for _ in 0..orderings {
+            rng.shuffle(&mut order);
+            let r = run_sequence(self.n_systems, &self.matches, &order,
+                                 self.cfg);
+            for (s, v) in r.into_iter().enumerate() {
+                per_system[s].push(v);
+            }
+        }
+        let mut out: Vec<EloSummary> = per_system
+            .iter()
+            .enumerate()
+            .map(|(s, vals)| EloSummary {
+                system: s,
+                mean: stats::mean(vals),
+                ci95: stats::ci95_halfwidth(vals),
+                rank: 0,
+            })
+            .collect();
+        // ranks by mean, descending
+        let mut idx: Vec<usize> = (0..out.len()).collect();
+        idx.sort_by(|&i, &j| out[j].mean.partial_cmp(&out[i].mean).unwrap());
+        for (rank, &i) in idx.iter().enumerate() {
+            out[i].rank = rank + 1;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::elo::Outcome;
+
+    /// Build matches from a ground-truth strength ordering.
+    fn round_robin(strengths: &[f64], games: usize, seed: u64) -> Tournament {
+        let mut t = Tournament::new(strengths.len());
+        let mut rng = Rng::new(seed);
+        for _ in 0..games {
+            for a in 0..strengths.len() {
+                for b in 0..strengths.len() {
+                    if a == b {
+                        continue;
+                    }
+                    let p = super::super::expected_score(strengths[a],
+                                                         strengths[b]);
+                    let outcome = if rng.f64() < p {
+                        Outcome::WinA
+                    } else {
+                        Outcome::WinB
+                    };
+                    t.add(MatchRecord { a, b, outcome });
+                }
+            }
+        }
+        t
+    }
+
+    #[test]
+    fn recovers_strength_ordering() {
+        let strengths = [1300.0, 1100.0, 1000.0, 850.0];
+        let t = round_robin(&strengths, 30, 1);
+        let res = t.run(200, 2);
+        // ranks must follow the latent strengths
+        for i in 0..3 {
+            assert!(res[i].mean > res[i + 1].mean,
+                    "{} vs {}", res[i].mean, res[i + 1].mean);
+        }
+        assert_eq!(res[0].rank, 1);
+        assert_eq!(res[3].rank, 4);
+    }
+
+    #[test]
+    fn ci_shrinks_with_more_orderings() {
+        let strengths = [1100.0, 1000.0, 900.0];
+        let t = round_robin(&strengths, 10, 3);
+        let narrow = t.run(400, 4);
+        let wide = t.run(20, 4);
+        // CI of the mean over orderings shrinks ~1/sqrt(n)
+        assert!(narrow[0].ci95 < wide[0].ci95);
+    }
+
+    #[test]
+    fn ties_keep_equals_equal() {
+        let mut t = Tournament::new(2);
+        for _ in 0..100 {
+            t.add(MatchRecord { a: 0, b: 1, outcome: Outcome::Tie });
+        }
+        let res = t.run(50, 5);
+        assert!((res[0].mean - res[1].mean).abs() < 1e-9);
+        assert!((res[0].mean - 1000.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,152 @@
+//! Capability model for benchmark rows at scales we cannot train here
+//! (7B–65B MMLU, Tables 4/5/11; Figure 3). Documented substitution
+//! (DESIGN.md section 2): the *effect structure* comes from the paper,
+//! the *datatype effects* come from our measured quantization error.
+//!
+//! MMLU(size, dataset, dtype, finetuned) =
+//!     base(size)                       — paper Table 5 "LLaMA no tuning"
+//!   + suitability(dataset, size)      — dataset↔benchmark match
+//!   − penalty(dtype)                  — calibrated * sqrt(measured MSE),
+//!                                       with adapter-finetuning recovery
+//!   + seed noise
+//!
+//! The recovery coefficient realizes the paper's central result: after
+//! QLoRA finetuning NF4(+DQ) matches BF16 while FP4 stays ~1pt behind —
+//! our Table 3 *real training runs* independently verify that claim at
+//! small scale.
+
+use crate::quant::codebook::DType;
+use crate::quant::error::{quant_error, synthetic_llm_weights};
+use crate::util::rng::Rng;
+
+/// LLaMA sizes used in the tables.
+pub const SIZES: [&str; 4] = ["7B", "13B", "33B", "65B"];
+
+/// Paper Table 5, "LLaMA no tuning" row.
+pub fn base_mmlu(size: &str) -> f64 {
+    match size {
+        "7B" => 35.1,
+        "13B" => 46.9,
+        "33B" => 57.8,
+        "65B" => 63.4,
+        _ => panic!("unknown size {size}"),
+    }
+}
+
+/// Dataset suitability for MMLU (paper Table 5 structure): FLAN v2 best,
+/// Alpaca solid, chat-style datasets roughly neutral-to-negative, and
+/// Self-Instruct actively harmful at small scale.
+pub fn mmlu_suitability(dataset: &str, size: &str) -> f64 {
+    let small = matches!(size, "7B" | "13B");
+    match dataset {
+        "flan-v2" => 6.5,
+        "alpaca" => 2.2,
+        "unnatural-instructions" => 2.0,
+        "oasst1" => 0.2,
+        "hh-rlhf" => -1.2,
+        "chip2" => -1.8,
+        "longform" => -2.2,
+        "self-instruct" => {
+            if small {
+                -6.0
+            } else {
+                -3.5
+            }
+        }
+        _ => 0.0,
+    }
+}
+
+/// Accuracy penalty for a storage datatype, from *measured* round-trip
+/// error on synthetic LLM weights. `finetuned` applies adapter recovery.
+pub fn dtype_penalty(dtype: Option<DType>, double_quant: bool,
+                     finetuned: bool, rng: &mut Rng) -> f64 {
+    let dt = match dtype {
+        None => return 0.0, // BF16
+        Some(d) => d,
+    };
+    let w = synthetic_llm_weights(rng, 64 * 512, 0.01, 5.0);
+    let rmse_of = |d: DType, dq: Option<usize>| {
+        quant_error(&w, d, 64, dq).expect("quant error").mse.sqrt()
+    };
+    let rmse = rmse_of(dt, if double_quant { Some(256) } else { None });
+    // self-calibrating: penalties are measured *relative to* NF4+DQ on the
+    // same weights. After adapter finetuning a small residual remains
+    // (base 0.15pt) plus 140pt per unit of excess RMSE — calibrated so FP4
+    // lands ~1pt behind NF4 (paper Table 4); without finetuning the
+    // inference-time loss is larger (base 0.8pt, slope 180 — Figure 3 /
+    // Dettmers & Zettlemoyer 2022).
+    let ref_rmse = rmse_of(DType::NF4, Some(256));
+    let (base, slope) = if finetuned { (0.15, 140.0) } else { (0.8, 180.0) };
+    base + (rmse - ref_rmse).max(0.0) * slope
+}
+
+/// Full capability model for one MMLU cell.
+pub fn mmlu(
+    size: &str,
+    dataset: &str,
+    dtype: Option<DType>,
+    double_quant: bool,
+    seed: u64,
+) -> f64 {
+    let mut rng = Rng::new(seed.wrapping_mul(0x9E3779B97F4A7C15));
+    let base = base_mmlu(size);
+    let suit = mmlu_suitability(dataset, size);
+    let pen = dtype_penalty(dtype, double_quant, true, &mut rng);
+    let noise = rng.normal() * 0.25;
+    base + suit - pen + noise
+}
+
+/// Zero-shot accuracy model for Figure 3 (mean over Winogrande/HellaSwag/
+/// PiQA/Arc: quantized *without* finetuning — inference-time loss).
+pub fn zero_shot(size_params_b: f64, dtype: DType, double_quant: bool,
+                 seed: u64) -> f64 {
+    let mut rng = Rng::new(seed.wrapping_mul(0xA5A5_A5A5_A5A5_A5A5));
+    // scaling-law-ish baseline accuracy by size (Dettmers & Zettlemoyer)
+    let base = 0.56 + 0.055 * (size_params_b.ln());
+    let pen = dtype_penalty(Some(dtype), double_quant, false, &mut rng) / 100.0;
+    (base - pen + rng.normal() * 0.002).clamp(0.25, 0.85)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_ordering_after_finetuning() {
+        let mut rng = Rng::new(1);
+        let bf16 = dtype_penalty(None, false, true, &mut rng);
+        let nf4 = dtype_penalty(Some(DType::NF4), true, true, &mut rng);
+        let fp4 = dtype_penalty(Some(DType::FP4E2M1), false, true, &mut rng);
+        assert_eq!(bf16, 0.0);
+        assert!(nf4 < 0.8, "nf4 penalty {nf4} should be ~recovered");
+        assert!(fp4 > nf4 + 0.4, "fp4 {fp4} ~1pt behind nf4 {nf4}");
+        assert!(fp4 < 2.5);
+    }
+
+    #[test]
+    fn table5_structure() {
+        // FLAN v2 beats chat datasets on MMLU at every size
+        for size in SIZES {
+            let flan = mmlu(size, "flan-v2", Some(DType::NF4), true, 7);
+            let chip = mmlu(size, "chip2", Some(DType::NF4), true, 7);
+            assert!(flan > chip + 4.0, "{size}: {flan} vs {chip}");
+        }
+        // self-instruct hurts 13B (paper: 33.3 vs 46.9 untuned)
+        let si = mmlu("13B", "self-instruct", Some(DType::NF4), true, 7);
+        assert!(si < base_mmlu("13B"));
+    }
+
+    #[test]
+    fn zero_shot_monotone_in_size_and_dtype() {
+        for (a, b) in [(7.0, 13.0), (13.0, 33.0), (33.0, 65.0)] {
+            assert!(zero_shot(a, DType::NF4, false, 3)
+                < zero_shot(b, DType::NF4, false, 3));
+        }
+        // NF4 > FP4 > Int4 at fixed size (Figure 3's claim)
+        let nf4 = zero_shot(13.0, DType::NF4, false, 4);
+        let fp4 = zero_shot(13.0, DType::FP4E2M1, false, 4);
+        let int4 = zero_shot(13.0, DType::Int4, false, 4);
+        assert!(nf4 > fp4 && fp4 > int4, "{nf4} {fp4} {int4}");
+    }
+}

@@ -1,0 +1,11 @@
+//! Chatbot evaluation harness: the system roster, the generative judge
+//! model (GPT-4 / human stand-ins with the biases the paper measures), and
+//! the capability model used for the large-scale benchmark rows we cannot
+//! train here (DESIGN.md section 2 documents the substitution).
+
+pub mod capability;
+pub mod judge;
+pub mod systems;
+
+pub use judge::{Judge, JudgeKind};
+pub use systems::{roster, System};

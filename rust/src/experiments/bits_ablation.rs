@@ -1,0 +1,109 @@
+//! Extension experiment (paper section 8, "Limitations"): the paper asks
+//! whether *more aggressive* quantization (e.g. 3-bit base models) could
+//! still recover 16-bit performance after adapter finetuning. We sweep
+//! k-bit NormalFloat (NFk, k = 2..8 — the Eq. 4 construction generalized)
+//! and report measured round-trip error, the projected MMLU penalty
+//! before/after adapter recovery (the Table-4-calibrated map), and the
+//! total weights+constants memory at 65B scale.
+
+use anyhow::Result;
+
+use crate::quant::codebook::nfk_codebook;
+use crate::quant::error::synthetic_llm_weights;
+use crate::quant::{dequantize_blockwise, quantize_blockwise};
+use crate::util::rng::Rng;
+
+use super::{render_table, Ctx};
+
+pub struct BitsRow {
+    pub bits: u32,
+    pub rmse: f64,
+    pub penalty_raw: f64,
+    pub penalty_finetuned: f64,
+    pub gb_65b: f64,
+}
+
+pub fn compute(seed: u64) -> Result<Vec<BitsRow>> {
+    let mut rng = Rng::new(seed);
+    let w = synthetic_llm_weights(&mut rng, 64 * 1024, 0.01, 5.0);
+    // NF4+DQ reference error for the recovery-calibrated penalty map
+    // (same coefficients as eval::capability::dtype_penalty)
+    let rmse_of = |bits: u32| -> Result<f64> {
+        let cb = nfk_codebook(bits);
+        let (c, a) = quantize_blockwise(&w, &cb, 64)?;
+        let y = dequantize_blockwise(&c, &a, &cb, 64)?;
+        Ok((w
+            .iter()
+            .zip(y.iter())
+            .map(|(p, q)| ((p - q) as f64).powi(2))
+            .sum::<f64>()
+            / w.len() as f64)
+            .sqrt())
+    };
+    let ref_rmse = rmse_of(4)?;
+    let params_65b = 65.2e9_f64;
+    let mut rows = Vec::new();
+    for bits in 2..=8u32 {
+        let rmse = rmse_of(bits)?;
+        let excess = (rmse - ref_rmse).max(0.0);
+        rows.push(BitsRow {
+            bits,
+            rmse,
+            penalty_raw: 0.8 + excess * 180.0,
+            penalty_finetuned: 0.15 + excess * 140.0,
+            gb_65b: params_65b * (bits as f64 + 0.127) / 8.0 / 1e9,
+        });
+    }
+    Ok(rows)
+}
+
+pub fn run(ctx: &Ctx) -> Result<String> {
+    let rows = compute(ctx.seed)?;
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                format!("NF{}", r.bits),
+                format!("{:.4}", r.rmse),
+                format!("{:.1}", r.penalty_raw),
+                format!("{:.1}", r.penalty_finetuned),
+                format!("{:.1}", r.gb_65b),
+            ]
+        })
+        .collect();
+    let mut out = render_table(
+        "Extension: NFk bit-width ablation (paper section 8 future work)",
+        &["dtype", "weight RMSE", "raw MMLU pen.", "finetuned pen.",
+          "65B weights GB"],
+        &table,
+    );
+    out.push_str(
+        "\nreading: under the linear-recovery map NF3 still costs ~20pt at\n\
+         ~25% less memory than NF4 — i.e. adapter finetuning as modeled\n\
+         here does NOT close the 3-bit gap; validating the paper's\n\
+         section-8 conjecture would need recovery to grow with the error\n\
+         (e.g. GPTQ-style rounding). NF2 collapses outright; NF5+ buys\n\
+         nothing once adapters recover NF4.\n",
+    );
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn monotone_in_bits() {
+        let rows = compute(3).unwrap();
+        for w in rows.windows(2) {
+            assert!(w[1].rmse < w[0].rmse);
+            assert!(w[1].penalty_finetuned <= w[0].penalty_finetuned);
+            assert!(w[1].gb_65b > w[0].gb_65b);
+        }
+        // NF4 recovers (small penalty), NF2 does not
+        let nf4 = &rows[2];
+        let nf2 = &rows[0];
+        assert!(nf4.penalty_finetuned < 0.5);
+        assert!(nf2.penalty_finetuned > 5.0);
+    }
+}

@@ -1,0 +1,112 @@
+//! Experiment harness: one module per table/figure of the paper
+//! (DESIGN.md section 6 maps each to its generator). Every experiment
+//! renders the same rows the paper reports; `runner` dispatches by id and
+//! archives outputs under `results/`.
+
+pub mod bits_ablation;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig6;
+pub mod paged_exp;
+pub mod runner;
+pub mod table1;
+pub mod table10;
+pub mod table11;
+pub mod table12_13;
+pub mod table2;
+pub mod table3;
+pub mod table4;
+pub mod table5;
+pub mod table6;
+pub mod table7;
+pub mod table8;
+pub mod train_util;
+
+use crate::runtime::artifact::Manifest;
+use crate::runtime::client::Runtime;
+
+/// Shared context. Training-based experiments need the runtime+manifest;
+/// analytic/simulated ones run standalone.
+pub struct Ctx {
+    pub rt: Option<Runtime>,
+    pub manifest: Option<Manifest>,
+    /// global seed
+    pub seed: u64,
+    /// scale factor for expensive loops (1.0 = paper-faithful counts)
+    pub fast: bool,
+}
+
+impl Ctx {
+    pub fn analytic(seed: u64) -> Ctx {
+        Ctx { rt: None, manifest: None, seed, fast: false }
+    }
+
+    pub fn runtime(&self) -> anyhow::Result<(&Runtime, &Manifest)> {
+        match (&self.rt, &self.manifest) {
+            (Some(r), Some(m)) => Ok((r, m)),
+            _ => anyhow::bail!(
+                "this experiment trains models and needs artifacts — \
+                 run `make artifacts` and pass --artifacts <dir>"
+            ),
+        }
+    }
+}
+
+/// Fixed-width table rendering.
+pub fn render_table(title: &str, headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = format!("== {title} ==\n");
+    let line = |cells: &[String], widths: &[usize]| -> String {
+        cells
+            .iter()
+            .zip(widths)
+            .map(|(c, w)| format!("{c:<w$}"))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    out.push_str(&line(
+        &headers.iter().map(|s| s.to_string()).collect::<Vec<_>>(),
+        &widths,
+    ));
+    out.push('\n');
+    out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&line(row, &widths));
+        out.push('\n');
+    }
+    out
+}
+
+pub fn fmt1(x: f64) -> String {
+    format!("{x:.1}")
+}
+
+pub fn fmt2(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_aligns() {
+        let s = render_table(
+            "t",
+            &["a", "long-header"],
+            &[vec!["1".into(), "2".into()],
+              vec!["wide-cell".into(), "3".into()]],
+        );
+        assert!(s.contains("== t =="));
+        assert!(s.lines().count() >= 4);
+    }
+}

@@ -1,0 +1,116 @@
+//! Paged-optimizer experiment (paper section 3 + section 4's runtime
+//! analysis): (a) without paging, a long-sequence spike OOMs; with paging
+//! the run completes; (b) at batch 16 / normal sequences, paged == regular
+//! speed (zero steady-state stall).
+
+use anyhow::Result;
+
+use crate::paged::optimizer::PagedOptimizerSim;
+use crate::util::rng::Rng;
+
+use super::{render_table, Ctx};
+
+pub struct ScenarioResult {
+    pub label: String,
+    pub would_oom: bool,
+    pub faults: u64,
+    pub stall_per_step_us: f64,
+    pub spike_steps: u64,
+}
+
+pub fn scenario(
+    label: &str,
+    device_mb: usize,
+    opt_mb: usize,
+    seq_dist: &[(usize, f64)],
+    steps: usize,
+    seed: u64,
+) -> ScenarioResult {
+    let mut sim = PagedOptimizerSim::new(
+        device_mb << 20,
+        0,
+        opt_mb << 20,
+        16 * 512,
+        4096,
+        32,
+    );
+    let mut rng = Rng::new(seed);
+    let weights: Vec<f64> = seq_dist.iter().map(|(_, w)| *w).collect();
+    let lens: Vec<usize> = seq_dist.iter().map(|(l, _)| *l).collect();
+    let max_len = *lens.iter().max().unwrap();
+    let mut warm_stall = 0.0;
+    for step in 0..steps {
+        let len = lens[rng.categorical(&weights)];
+        sim.on_step(len, max_len);
+        if step == steps / 5 {
+            warm_stall = sim.stats.stall_us; // after warmup
+        }
+    }
+    let steady_steps = (steps - steps / 5).max(1) as f64;
+    ScenarioResult {
+        label: label.to_string(),
+        would_oom: sim.would_oom_without_paging(max_len),
+        faults: sim.stats.faults,
+        stall_per_step_us: (sim.stats.stall_us - warm_stall) / steady_steps,
+        spike_steps: sim.stats.spike_steps,
+    }
+}
+
+pub fn run(ctx: &Ctx) -> Result<String> {
+    let steps = if ctx.fast { 100 } else { 400 };
+    let scenarios = vec![
+        // plenty of memory, short seqs: paging silent (bs=16 claim)
+        scenario("bs16 short-seq, roomy", 4096, 1024,
+                 &[(512, 1.0)], steps, ctx.seed),
+        // tight memory, occasional long seq: spikes absorbed
+        scenario("rare long-seq spikes, tight", 1300, 1024,
+                 &[(512, 0.95), (4096, 0.05)], steps, ctx.seed ^ 1),
+        // pathological: every step spikes (thrash regime)
+        scenario("every-step long seq (thrash)", 1300, 1024,
+                 &[(4096, 1.0)], steps, ctx.seed ^ 2),
+    ];
+    let rows: Vec<Vec<String>> = scenarios
+        .iter()
+        .map(|s| {
+            vec![
+                s.label.clone(),
+                if s.would_oom { "OOM".into() } else { "fits".into() },
+                format!("{}", s.faults),
+                format!("{}", s.spike_steps),
+                format!("{:.1}", s.stall_per_step_us),
+            ]
+        })
+        .collect();
+    let mut out = render_table(
+        "Paged optimizers: spike absorption vs overhead",
+        &["scenario", "non-paged", "faults", "spike steps", "stall µs/step"],
+        &rows,
+    );
+    out.push_str(
+        "\nchecks: roomy case has ~zero steady-state stall (paper: bs=16\n\
+         paged == regular); tight case *would OOM without paging* but\n\
+         completes with bounded stall; thrash case shows the cost regime\n\
+         the paper leaves to future work.\n",
+    );
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_claims_hold() {
+        let roomy = scenario("roomy", 4096, 1024, &[(512, 1.0)], 200, 1);
+        assert!(!roomy.would_oom);
+        assert!(roomy.stall_per_step_us < 1.0, "{}", roomy.stall_per_step_us);
+
+        let tight = scenario("tight", 1300, 1024,
+                             &[(512, 0.95), (4096, 0.05)], 300, 2);
+        assert!(tight.would_oom, "long seq must OOM without paging");
+        assert!(tight.spike_steps > 0);
+
+        let thrash = scenario("thrash", 1300, 1024, &[(4096, 1.0)], 200, 3);
+        assert!(thrash.stall_per_step_us > tight.stall_per_step_us);
+    }
+}

@@ -1,0 +1,122 @@
+//! Tables 12/13 (appendix D): aggregated pairwise GPT-4 judgments —
+//! matrix of (wins_x − wins_y)/total per system pair — and the complete
+//! ordering they induce, with a transitivity check (the paper: "it is
+//! clear these judgments are transitive").
+
+use anyhow::Result;
+
+use crate::elo::Outcome;
+use crate::eval::judge::Judge;
+use crate::eval::systems::roster;
+use crate::util::rng::Rng;
+
+use super::{render_table, Ctx};
+
+/// matrix[x][y] = (#x better − #y better) / total over both orders.
+pub fn pairwise_matrix(prompts: usize, seed: u64) -> (Vec<&'static str>, Vec<Vec<f64>>) {
+    let systems = roster();
+    let judge = Judge::gpt4();
+    let n = systems.len();
+    let mut m = vec![vec![0.0; n]; n];
+    let mut rng = Rng::new(seed);
+    for a in 0..n {
+        for b in (a + 1)..n {
+            let mut net = 0i64;
+            let mut total = 0i64;
+            for _ in 0..prompts {
+                for first in [true, false] {
+                    let (x, y) = if first { (a, b) } else { (b, a) };
+                    let o = judge.judge_pair(&systems[x], &systems[y], true,
+                                             &mut rng);
+                    let delta = match o {
+                        Outcome::WinA => 1,
+                        Outcome::WinB => -1,
+                        Outcome::Tie => 0,
+                    };
+                    net += if first { delta } else { -delta };
+                    total += 1;
+                }
+            }
+            let v = net as f64 / total as f64;
+            m[a][b] = v;
+            m[b][a] = -v;
+        }
+    }
+    (systems.iter().map(|s| s.name).collect(), m)
+}
+
+/// Ordering induced by mean net win rate; returns (order, is_transitive).
+pub fn induced_ordering(m: &[Vec<f64>]) -> (Vec<usize>, bool) {
+    let n = m.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    let mean_net: Vec<f64> = (0..n)
+        .map(|i| m[i].iter().sum::<f64>() / (n - 1) as f64)
+        .collect();
+    idx.sort_by(|&a, &b| mean_net[b].partial_cmp(&mean_net[a]).unwrap());
+    // transitive iff every pair in the sorted order has non-negative net
+    let mut transitive = true;
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if m[idx[i]][idx[j]] < 0.0 {
+                transitive = false;
+            }
+        }
+    }
+    (idx, transitive)
+}
+
+pub fn run(ctx: &Ctx) -> Result<String> {
+    let prompts = if ctx.fast { 30 } else { 80 };
+    let (names, m) = pairwise_matrix(prompts, ctx.seed);
+    let short: Vec<String> = names
+        .iter()
+        .map(|n| n.chars().take(9).collect::<String>())
+        .collect();
+    let mut rows = Vec::new();
+    for (i, name) in names.iter().enumerate() {
+        let mut row = vec![name.to_string()];
+        for j in 0..names.len() {
+            row.push(if i == j {
+                "-".into()
+            } else {
+                format!("{:+.2}", m[i][j])
+            });
+        }
+        rows.push(row);
+    }
+    let mut headers = vec!["Model".to_string()];
+    headers.extend(short);
+    let href: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut out = render_table(
+        "Table 12: aggregated pairwise GPT-4 judgments (net win rate)",
+        &href,
+        &rows,
+    );
+    let (order, transitive) = induced_ordering(&m);
+    out.push_str("\nTable 13: induced complete ordering:\n");
+    for (rank, &i) in order.iter().enumerate() {
+        out.push_str(&format!("  {}. {}\n", rank + 1, names[i]));
+    }
+    out.push_str(&format!(
+        "transitive: {transitive} (paper: transitive)\n"
+    ));
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_antisymmetric_and_mostly_transitive() {
+        let (_names, m) = pairwise_matrix(40, 5);
+        for i in 0..m.len() {
+            for j in 0..m.len() {
+                assert!((m[i][j] + m[j][i]).abs() < 1e-12);
+            }
+        }
+        let (order, _transitive) = induced_ordering(&m);
+        // GPT-4 (index 0 in roster) must rank first regardless
+        assert_eq!(order[0], 0);
+    }
+}

@@ -1,0 +1,126 @@
+//! Table 2: "Pile Common Crawl mean perplexity for different data types
+//! for 125M to 13B OPT, BLOOM, LLaMA, and Pythia models."
+//!
+//! Paper: Int4 34.34, FP4-E2M1 31.07, FP4-E3M0 29.48, NF4+DQ 27.41.
+//!
+//! Substitution (DESIGN.md section 2): no Pile or pretrained LLMs here; we
+//! *measure* block-quantization error over the paper's weight model
+//! (zero-centered normal, Appendix F, plus outlier coordinates) across a
+//! family of synthetic "models" (different sizes/outlier profiles), and
+//! map RMSE to perplexity with a single calibrated exponential
+//! (PPL = PPL16 · exp(k·rmse)), anchored at the paper's NF4 and Int4
+//! endpoints. The *measured* part is the datatype error ordering.
+
+use anyhow::Result;
+
+use crate::quant::codebook::DType;
+use crate::quant::error::{quant_error, synthetic_llm_weights};
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+use super::{fmt2, render_table, Ctx};
+
+/// The synthetic "model zoo": (label, n weights, outlier frac, scale).
+fn zoo() -> Vec<(&'static str, usize, f64, f64)> {
+    vec![
+        ("opt-125m", 64 * 512, 0.012, 6.0),
+        ("opt-1b3", 64 * 1024, 0.010, 6.0),
+        ("bloom-560m", 64 * 768, 0.015, 5.0),
+        ("pythia-410m", 64 * 640, 0.008, 5.0),
+        ("llama-7b-proxy", 64 * 2048, 0.010, 5.0),
+        ("llama-13b-proxy", 64 * 3072, 0.008, 5.0),
+    ]
+}
+
+pub struct Row {
+    pub dtype: String,
+    pub mean_rmse: f64,
+    pub mean_ppl: f64,
+}
+
+pub fn compute(seed: u64) -> Result<Vec<Row>> {
+    let variants: [(&str, DType, Option<usize>); 4] = [
+        ("Int4", DType::Int4, None),
+        ("Float4 (E2M1)", DType::FP4E2M1, None),
+        ("Float4 (E3M0)", DType::FP4E3M0, None),
+        ("NFloat4 + DQ", DType::NF4, Some(256)),
+    ];
+    let mut measured = Vec::new();
+    for (name, dt, dq) in variants {
+        let mut rmses = Vec::new();
+        for (i, (_, n, frac, scale)) in zoo().into_iter().enumerate() {
+            let mut rng = Rng::new(seed ^ ((i as u64) << 8));
+            let w = synthetic_llm_weights(&mut rng, n, frac, scale);
+            let e = quant_error(&w, dt, 64, dq)?;
+            rmses.push(e.mse.sqrt());
+        }
+        measured.push((name, stats::mean(&rmses)));
+    }
+    // two-anchor calibration: fit PPL = a·exp(k·rmse) through the paper's
+    // Int4 (34.34) and NF4+DQ (27.41) endpoints; E2M1/E3M0 interpolate
+    // through the *measured* error axis.
+    let rmse_int4 = measured[0].1;
+    let rmse_nf4 = measured[3].1;
+    let k = (34.34_f64 / 27.41).ln() / (rmse_int4 - rmse_nf4);
+    let mut rows = Vec::new();
+    for (name, rmse) in measured {
+        rows.push(Row {
+            dtype: name.to_string(),
+            mean_rmse: rmse,
+            mean_ppl: 27.41 * (k * (rmse - rmse_nf4)).exp(),
+        });
+    }
+    Ok(rows)
+}
+
+pub fn run(ctx: &Ctx) -> Result<String> {
+    let rows = compute(ctx.seed)?;
+    let paper = [34.34, 31.07, 29.48, 27.41];
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .zip(paper.iter())
+        .map(|(r, p)| {
+            vec![
+                r.dtype.clone(),
+                format!("{:.4}", r.mean_rmse),
+                fmt2(r.mean_ppl),
+                fmt2(*p),
+            ]
+        })
+        .collect();
+    let mut out = render_table(
+        "Table 2: Pile-CC mean perplexity by datatype (proxy)",
+        &["Data type", "measured RMSE", "PPL (ours)", "PPL (paper)"],
+        &table,
+    );
+    out.push_str(
+        "\nnote: NF4+DQ best reproduces exactly (anchored); under our\n\
+         synthetic weight model E2M1 measures lower error than E3M0 (and\n\
+         E3M0 ~ Int4), whereas the paper's real-LLM evaluation has E3M0\n\
+         ahead of E2M1 — E3M0's wide dynamic range only pays off under\n\
+         real weight kurtosis/outlier structure we do not model. The\n\
+         headline ordering (NF4 > FP4-family vs Int4, DQ free) holds.\n",
+    );
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn headline_ordering() {
+        let rows = compute(11).unwrap();
+        let get = |n: &str| {
+            rows.iter().find(|r| r.dtype.starts_with(n)).unwrap().mean_ppl
+        };
+        let nf4 = get("NFloat4");
+        let int4 = get("Int4");
+        assert!(nf4 < int4, "NF4+DQ {nf4} must beat Int4 {int4}");
+        // every 4-bit float beats int4 too
+        assert!(get("Float4 (E2M1)") < int4);
+        // magnitudes in the paper's ballpark
+        assert!(nf4 > 20.0 && nf4 < 32.0, "nf4 ppl {nf4}");
+        assert!(int4 > 28.0 && int4 < 45.0, "int4 ppl {int4}");
+    }
+}

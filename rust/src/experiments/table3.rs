@@ -1,0 +1,87 @@
+//! Table 3: "QLoRA replicates 16-bit LoRA and full-finetuning" — GLUE /
+//! Super-NaturalInstructions comparison of BF16 full finetuning, BF16
+//! LoRA, and QLoRA with Int8 / FP4 / NF4+DQ bases.
+//!
+//! **Real training runs** at reproduction scale: a tiny LLaMA-style model
+//! finetuned on a synthetic task suite (the GLUE/SNI stand-ins) on the
+//! Rust coordinator over the AOT train graphs. The claim under test is
+//! exactly the paper's: adapter finetuning on a quantized base recovers
+//! the 16-bit result.
+
+use anyhow::Result;
+
+use crate::data::synthetic::{CorpusKind, EvalSuite};
+use crate::util::stats;
+
+use super::train_util::{default_steps, train_seeds};
+use super::{render_table, Ctx};
+
+pub struct MethodResult {
+    pub method: &'static str,
+    pub artifact: &'static str,
+    pub acc_mean: f64,
+    pub acc_std: f64,
+    pub loss: f64,
+}
+
+pub fn methods() -> Vec<(&'static str, &'static str)> {
+    vec![
+        ("BF16 full finetune", "tiny_fullft"),
+        ("LoRA BF16", "tiny_lora16"),
+        ("QLoRA Int8", "tiny_int8"),
+        ("QLoRA FP4", "tiny_fp4"),
+        ("QLoRA NF4", "tiny_nf4"),
+        ("QLoRA NF4 + DQ", "tiny_scope_all"),
+    ]
+}
+
+pub fn compute(ctx: &Ctx, seeds: &[u64]) -> Result<Vec<MethodResult>> {
+    let steps = default_steps(ctx);
+    let mut out = Vec::new();
+    for (method, artifact) in methods() {
+        let runs = train_seeds(ctx, artifact, CorpusKind::Alpaca,
+                               EvalSuite::VicunaProxy, steps, seeds, false)?;
+        let accs: Vec<f64> = runs.iter().map(|r| r.eval_acc as f64).collect();
+        let losses: Vec<f64> =
+            runs.iter().map(|r| r.eval_loss as f64).collect();
+        out.push(MethodResult {
+            method,
+            artifact,
+            acc_mean: stats::mean(&accs) * 100.0,
+            acc_std: stats::std_dev(&accs) * 100.0,
+            loss: stats::mean(&losses),
+        });
+    }
+    Ok(out)
+}
+
+pub fn run(ctx: &Ctx) -> Result<String> {
+    let seeds: Vec<u64> = if ctx.fast { vec![1] } else { vec![1, 2, 3] };
+    let results = compute(ctx, &seeds)?;
+    let rows: Vec<Vec<String>> = results
+        .iter()
+        .map(|r| {
+            vec![
+                r.method.to_string(),
+                format!("{:.1} ± {:.1}", r.acc_mean, r.acc_std),
+                format!("{:.3}", r.loss),
+            ]
+        })
+        .collect();
+    let mut out = render_table(
+        "Table 3: held-out token accuracy by finetuning method (real runs)",
+        &["Method", "accuracy %", "eval loss"],
+        &rows,
+    );
+    let full = results[0].acc_mean;
+    let spread: f64 = results
+        .iter()
+        .map(|r| (r.acc_mean - full).abs())
+        .fold(0.0, f64::max);
+    out.push_str(&format!(
+        "\nclaim check: all adapter/quantized methods within {spread:.1}pt \
+         of the 16-bit full-finetuning baseline\n\
+         (paper Table 3: 16/8/4-bit adapter methods replicate BF16).\n",
+    ));
+    Ok(out)
+}

@@ -1,0 +1,98 @@
+//! Table 4: "Mean 5-shot MMLU test accuracy for LLaMA 7-65B models
+//! finetuned with adapters on Alpaca and FLAN v2 for different data
+//! types" — BFloat16 vs Float4 vs NFloat4+DQ.
+//!
+//! Hybrid: datatype deltas from measured quantization error with the
+//! adapter-recovery coefficient (capability model); the headline claim —
+//! NF4+DQ matches BF16 while FP4 trails by ~1pt — is independently
+//! verified by *real* small-scale training in Table 3.
+
+use anyhow::Result;
+
+use crate::eval::capability::{mmlu, SIZES};
+use crate::quant::codebook::DType;
+use crate::util::stats;
+
+use super::{fmt1, render_table, Ctx};
+
+pub fn cell(size: &str, dataset: &str, dtype: Option<DType>, dq: bool,
+            seed: u64) -> f64 {
+    mmlu(size, dataset, dtype, dq, seed)
+}
+
+pub fn run(ctx: &Ctx) -> Result<String> {
+    let variants: [(&str, Option<DType>, bool); 3] = [
+        ("BFloat16", None, false),
+        ("Float4", Some(DType::FP4E2M1), false),
+        ("NFloat4 + DQ", Some(DType::NF4), true),
+    ];
+    let datasets = ["alpaca", "flan-v2"];
+    let mut rows = Vec::new();
+    let mut means: Vec<(String, f64)> = Vec::new();
+    for (vi, (name, dt, dq)) in variants.iter().enumerate() {
+        let mut row = vec![name.to_string()];
+        let mut all = Vec::new();
+        for (si, size) in SIZES.iter().enumerate() {
+            for (di, ds) in datasets.iter().enumerate() {
+                let v = cell(size, ds, *dt, *dq,
+                             ctx.seed
+                                 ^ ((vi as u64) << 16)
+                                 ^ ((si as u64) << 8)
+                                 ^ ((di as u64) << 4));
+                all.push(v);
+                row.push(fmt1(v));
+            }
+        }
+        let m = stats::mean(&all);
+        row.push(fmt1(m));
+        means.push((name.to_string(), m));
+        rows.push(row);
+    }
+    let mut headers = vec!["datatype".to_string()];
+    for size in SIZES {
+        for ds in ["Alpaca", "FLANv2"] {
+            headers.push(format!("{size}/{ds}"));
+        }
+    }
+    headers.push("Mean".to_string());
+    let href: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut out = render_table(
+        "Table 4: mean 5-shot MMLU by datatype after QLoRA finetuning",
+        &href,
+        &rows,
+    );
+    out.push_str(&format!(
+        "\npaper means: BF16 53.0 | FP4 52.2 | NF4+DQ 53.1\n\
+         ours:        {:.1} | {:.1} | {:.1}\n",
+        means[0].1, means[1].1, means[2].1
+    ));
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nf4_matches_bf16_fp4_lags() {
+        let ctx = Ctx::analytic(5);
+        let mut bf16 = Vec::new();
+        let mut fp4 = Vec::new();
+        let mut nf4 = Vec::new();
+        let mut s = 0u64;
+        for size in SIZES {
+            for ds in ["alpaca", "flan-v2"] {
+                s += 13; // decorrelate the per-cell noise draws
+                bf16.push(cell(size, ds, None, false, 5 + s));
+                fp4.push(cell(size, ds, Some(DType::FP4E2M1), false, 6 + s));
+                nf4.push(cell(size, ds, Some(DType::NF4), true, 7 + s));
+            }
+        }
+        let m = stats::mean;
+        assert!((m(&nf4) - m(&bf16)).abs() < 0.6,
+                "NF4+DQ {} vs BF16 {}", m(&nf4), m(&bf16));
+        let lag = m(&bf16) - m(&fp4);
+        assert!(lag > 0.4 && lag < 2.0, "FP4 lag {lag}");
+        let _ = ctx;
+    }
+}

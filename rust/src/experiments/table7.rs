@@ -1,0 +1,172 @@
+//! Table 7: Elo tournaments under three judge/benchmark settings —
+//! (Vicuna, human raters), (Vicuna, GPT-4), (OA 953 prompts, GPT-4) —
+//! plus median rank, and the section 5.3 agreement statistics
+//! (Kendall τ, Spearman ρ between judges; Fleiss κ among annotators).
+
+use anyhow::Result;
+
+use crate::elo::Tournament;
+use crate::eval::judge::Judge;
+use crate::eval::systems::roster;
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+use super::table1::play_matches;
+use super::{render_table, Ctx};
+
+pub struct Setting {
+    pub label: &'static str,
+    pub judge: Judge,
+    pub vicuna: bool,
+    pub prompts: usize,
+}
+
+pub fn settings() -> Vec<Setting> {
+    vec![
+        Setting { label: "Vicuna/Human", judge: Judge::human(), vicuna: true,
+                  prompts: 80 },
+        Setting { label: "Vicuna/GPT-4", judge: Judge::gpt4(), vicuna: true,
+                  prompts: 80 },
+        Setting { label: "OA/GPT-4", judge: Judge::gpt4(), vicuna: false,
+                  prompts: 953 },
+    ]
+}
+
+pub fn run(ctx: &Ctx) -> Result<String> {
+    let systems = roster();
+    let orderings = if ctx.fast { 300 } else { 10_000 };
+    let mut per_setting: Vec<Vec<(f64, usize)>> = Vec::new(); // (elo, rank)
+    for (si, s) in settings().iter().enumerate() {
+        let matches = play_matches(&systems, &s.judge, s.vicuna,
+                                   s.prompts.min(if ctx.fast { 40 } else {
+                                       s.prompts
+                                   }),
+                                   ctx.seed ^ ((si as u64) << 24));
+        let mut t = Tournament::new(systems.len());
+        for m in matches {
+            t.add(m);
+        }
+        let res = t.run(orderings, ctx.seed ^ 0x7AB7 ^ si as u64);
+        per_setting.push(res.iter().map(|r| (r.mean, r.rank)).collect());
+    }
+    let mut rows = Vec::new();
+    for (i, sys) in systems.iter().enumerate() {
+        let ranks: Vec<f64> =
+            per_setting.iter().map(|s| s[i].1 as f64).collect();
+        let mut row = vec![sys.name.to_string()];
+        for s in &per_setting {
+            row.push(format!("{:.0} ({})", s[i].0, s[i].1));
+        }
+        row.push(format!("{:.0}", stats::median(&ranks)));
+        rows.push(row);
+    }
+    rows.sort_by_key(|r| r.last().unwrap().parse::<i64>().unwrap_or(99));
+    let mut out = render_table(
+        "Table 7: Elo by judge/benchmark (Elo (rank))",
+        &["Model", "Vicuna/Human", "Vicuna/GPT-4", "OA/GPT-4", "MedianRank"],
+        &rows,
+    );
+
+    // --- agreement statistics (section 5.3 / 6.2) ------------------------
+    let human_elo: Vec<f64> = per_setting[0].iter().map(|x| x.0).collect();
+    let gpt4_elo: Vec<f64> = per_setting[1].iter().map(|x| x.0).collect();
+    let tau = stats::kendall_tau(&human_elo, &gpt4_elo);
+    let rho = stats::spearman(&human_elo, &gpt4_elo);
+
+    // example-level Fleiss κ among 3 human annotators on shared prompts
+    let kappa = example_level_kappa(ctx.seed, if ctx.fast { 60 } else { 200 });
+    // GPT-4 vs human-majority κ (2 "annotators": majority label + GPT-4)
+    let kappa_x = gpt4_vs_human_kappa(ctx.seed, if ctx.fast { 60 } else { 200 });
+
+    out.push_str(&format!(
+        "\nsystem-level agreement human vs GPT-4: Kendall tau = {tau:.2} \
+         (paper 0.43), Spearman rho = {rho:.2} (paper 0.55)\n\
+         example-level Fleiss kappa, 3 humans: {kappa:.2} (paper 0.42)\n\
+         GPT-4 vs human majority kappa: {kappa_x:.2} (paper 0.25)\n",
+    ));
+    Ok(out)
+}
+
+/// Sample per-prompt labels from 3 human annotators over close system
+/// pairs and compute Fleiss κ (3 categories: A wins / B wins / tie).
+pub fn example_level_kappa(seed: u64, prompts: usize) -> f64 {
+    let systems = roster();
+    let judge = Judge::human();
+    let mut rng = Rng::new(seed ^ 0xF1E55);
+    let mut counts = Vec::new();
+    // uniform random pairs: the benchmark mixes easy and close matches;
+    // per-prompt quality components are shared across the 3 annotators
+    for _ in 0..prompts {
+        let a = rng.below(systems.len());
+        let b = (a + 1 + rng.below(systems.len() - 1)) % systems.len();
+        let pa = Judge::prompt_effect(&mut rng);
+        let pb = Judge::prompt_effect(&mut rng);
+        let mut c = [0usize; 3];
+        for _ in 0..3 {
+            let o = judge.judge_pair_with_prompt(&systems[a], &systems[b],
+                                                 true, pa, pb, &mut rng);
+            match o {
+                crate::elo::Outcome::WinA => c[0] += 1,
+                crate::elo::Outcome::WinB => c[1] += 1,
+                crate::elo::Outcome::Tie => c[2] += 1,
+            }
+        }
+        counts.push(c.to_vec());
+    }
+    stats::fleiss_kappa(&counts)
+}
+
+/// κ between GPT-4 and the human majority vote on the same prompts.
+pub fn gpt4_vs_human_kappa(seed: u64, prompts: usize) -> f64 {
+    let systems = roster();
+    let human = Judge::human();
+    let gpt4 = Judge::gpt4();
+    let mut rng = Rng::new(seed ^ 0x6EE4);
+    let mut counts = Vec::new();
+    for _ in 0..prompts {
+        let a = rng.below(systems.len());
+        let b = (a + 1 + rng.below(systems.len() - 1)) % systems.len();
+        let pa = Judge::prompt_effect(&mut rng);
+        let pb = Judge::prompt_effect(&mut rng);
+        let mut votes = [0usize; 3];
+        for _ in 0..3 {
+            match human.judge_pair_with_prompt(&systems[a], &systems[b],
+                                               true, pa, pb, &mut rng) {
+                crate::elo::Outcome::WinA => votes[0] += 1,
+                crate::elo::Outcome::WinB => votes[1] += 1,
+                crate::elo::Outcome::Tie => votes[2] += 1,
+            }
+        }
+        let majority = votes
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, v)| **v)
+            .unwrap()
+            .0;
+        // GPT-4 sees the same prompt but perceives quality its own way
+        let g = match gpt4.judge_pair_with_prompt(&systems[a], &systems[b],
+                                                  true, pa, pb, &mut rng) {
+            crate::elo::Outcome::WinA => 0,
+            crate::elo::Outcome::WinB => 1,
+            crate::elo::Outcome::Tie => 2,
+        };
+        let mut c = vec![0usize; 3];
+        c[majority] += 1;
+        c[g] += 1;
+        counts.push(c);
+    }
+    stats::fleiss_kappa(&counts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn agreement_is_moderate_not_perfect() {
+        let k3 = example_level_kappa(1, 120);
+        assert!(k3 > 0.1 && k3 < 0.9, "kappa {k3}");
+        let kx = gpt4_vs_human_kappa(1, 120);
+        assert!(kx < k3 + 0.25, "cross-judge kappa {kx} vs human {k3}");
+    }
+}

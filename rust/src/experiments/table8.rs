@@ -1,0 +1,110 @@
+//! Table 8: CrowS-Pairs bias evaluation. "A lower score indicates lower
+//! likelihood of generating biased sequences."
+//!
+//! Simulation (DESIGN.md section 2): no CrowS data or pretrained models
+//! here. Each system carries a latent per-category stereotype-preference
+//! rate (calibrated to the paper's measurements); the probe samples N
+//! stereotype/anti-stereotype pairs per category and reports the percent
+//! preferring the stereotypical completion — the sampling machinery and
+//! aggregate statistics are real. Headline under test: OASST1 finetuning
+//! *reduces* bias scores far below the raw LLaMA base.
+
+use anyhow::Result;
+
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+use super::{fmt1, render_table, Ctx};
+
+pub const CATEGORIES: [&str; 9] = [
+    "Gender", "Religion", "Race/Color", "Sexual orientation", "Age",
+    "Nationality", "Disability", "Physical appearance",
+    "Socioeconomic status",
+];
+
+/// Latent stereotype-preference rates (%) per system (paper Table 8).
+pub fn profiles() -> Vec<(&'static str, [f64; 9])> {
+    vec![
+        ("LLaMA-65B", [70.6, 79.0, 57.0, 81.0, 70.1, 64.2, 66.7, 77.8, 71.5]),
+        ("GPT-3", [62.6, 73.3, 64.7, 76.2, 64.4, 61.6, 76.7, 74.6, 73.8]),
+        ("OPT-175B", [65.7, 68.6, 68.6, 78.6, 67.8, 62.9, 76.7, 76.2, 76.2]),
+        ("Guanaco-65B", [47.5, 38.7, 45.3, 59.1, 36.3, 32.4, 33.9, 43.1, 55.3]),
+    ]
+}
+
+/// Sample a probe: `n` pairs per category; returns measured percentages.
+pub fn probe(latent: &[f64; 9], n: usize, seed: u64) -> [f64; 9] {
+    let mut rng = Rng::new(seed);
+    let mut out = [0.0; 9];
+    for (i, &p) in latent.iter().enumerate() {
+        let mut hits = 0usize;
+        for _ in 0..n {
+            if rng.bool(p / 100.0) {
+                hits += 1;
+            }
+        }
+        out[i] = 100.0 * hits as f64 / n as f64;
+    }
+    out
+}
+
+pub fn run(ctx: &Ctx) -> Result<String> {
+    let n = if ctx.fast { 150 } else { 1000 };
+    let mut cols = Vec::new();
+    for (si, (_, latent)) in profiles().iter().enumerate() {
+        cols.push(probe(latent, n, ctx.seed ^ ((si as u64) << 4)));
+    }
+    let mut rows = Vec::new();
+    for (ci, cat) in CATEGORIES.iter().enumerate() {
+        let mut row = vec![cat.to_string()];
+        for col in &cols {
+            row.push(fmt1(col[ci]));
+        }
+        rows.push(row);
+    }
+    let mut avg_row = vec!["Average".to_string()];
+    for col in &cols {
+        avg_row.push(fmt1(stats::mean(col)));
+    }
+    rows.push(avg_row);
+    let mut headers = vec!["Category"];
+    headers.extend(profiles().iter().map(|(n, _)| *n));
+    let mut out = render_table(
+        "Table 8: CrowS bias probe (% preferring stereotype; lower better)",
+        &headers,
+        &rows,
+    );
+    out.push_str(
+        "\ncheck: Guanaco-65B average far below LLaMA-65B/GPT-3/OPT-175B\n\
+         (paper: 43.5 vs 66.6/67.2/69.5 — OASST1 finetuning reduces bias).\n",
+    );
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn guanaco_least_biased() {
+        let profs = profiles();
+        let mut avgs = Vec::new();
+        for (si, (_, latent)) in profs.iter().enumerate() {
+            let got = probe(latent, 800, si as u64);
+            avgs.push(stats::mean(&got));
+        }
+        let guanaco = avgs[3];
+        for other in &avgs[..3] {
+            assert!(guanaco + 10.0 < *other, "{guanaco} vs {other}");
+        }
+    }
+
+    #[test]
+    fn probe_concentrates_around_latent() {
+        let latent = [50.0; 9];
+        let got = probe(&latent, 2000, 9);
+        for g in got {
+            assert!((g - 50.0).abs() < 4.0);
+        }
+    }
+}

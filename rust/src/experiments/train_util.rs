@@ -1,0 +1,96 @@
+//! Shared helpers for the real-training experiments (Tables 3/10/11,
+//! Figures 2/4): build a corpus, train an artifact for a fixed number of
+//! steps on the Rust coordinator, and measure held-out token accuracy.
+
+use anyhow::Result;
+
+use crate::coordinator::trainer::{TrainOptions, Trainer};
+use crate::data::batching::Batcher;
+use crate::data::synthetic::{corpus, eval_set, CorpusKind, EvalSuite};
+use crate::data::tokenizer::Tokenizer;
+use crate::runtime::artifact::Manifest;
+use crate::runtime::client::Runtime;
+
+use super::Ctx;
+
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub final_loss: f32,
+    pub eval_loss: f32,
+    pub eval_acc: f32,
+    pub steps: usize,
+    pub mean_step_ms: f64,
+}
+
+/// Train `artifact` on `kind` for `steps`, eval on `suite`.
+#[allow(clippy::too_many_arguments)]
+pub fn train_once(
+    rt: &Runtime,
+    manifest: &Manifest,
+    artifact: &str,
+    kind: CorpusKind,
+    corpus_size: usize,
+    suite: EvalSuite,
+    steps: usize,
+    data_seed: u64,
+    train_on_source: bool,
+) -> Result<RunResult> {
+    let mut trainer = Trainer::new(rt, manifest, artifact)?;
+    let cfg = trainer.spec.cfg.clone();
+    let tok = Tokenizer::new(cfg.vocab);
+    let train_ds = corpus(kind, corpus_size, data_seed);
+    let train_b = Batcher::new(&train_ds, tok.clone(), cfg.batch, cfg.seq_len,
+                               train_on_source);
+    let eval_ds = eval_set(suite, cfg.batch * 6, data_seed ^ 0xEEE);
+    let eval_b = Batcher::new(&eval_ds, tok, cfg.batch, cfg.seq_len, false);
+    let opts = TrainOptions {
+        steps,
+        eval_every: 0,
+        seed: data_seed,
+        ..TrainOptions::default()
+    };
+    let log = trainer.train(&train_b, None, &opts)?;
+    let (eval_loss, eval_acc) = trainer.eval_all(&eval_b, 0)?;
+    Ok(RunResult {
+        final_loss: log.smoothed_final_loss(10),
+        eval_loss,
+        eval_acc,
+        steps,
+        mean_step_ms: log.mean_step_time().as_secs_f64() * 1e3,
+    })
+}
+
+/// Mean eval accuracy over `seeds` data seeds.
+#[allow(clippy::too_many_arguments)]
+pub fn train_seeds(
+    ctx: &Ctx,
+    artifact: &str,
+    kind: CorpusKind,
+    suite: EvalSuite,
+    steps: usize,
+    seeds: &[u64],
+    train_on_source: bool,
+) -> Result<Vec<RunResult>> {
+    let (rt, manifest) = ctx.runtime()?;
+    let corpus_size = 512;
+    seeds
+        .iter()
+        .map(|&s| {
+            train_once(rt, manifest, artifact, kind, corpus_size,
+                       match suite {
+                           EvalSuite::MmluProxy => EvalSuite::MmluProxy,
+                           EvalSuite::VicunaProxy => EvalSuite::VicunaProxy,
+                       },
+                       steps, ctx.seed ^ s, train_on_source)
+        })
+        .collect()
+}
+
+/// Default step counts: enough to separate configs, small enough for CI.
+pub fn default_steps(ctx: &Ctx) -> usize {
+    if ctx.fast {
+        40
+    } else {
+        140
+    }
+}

@@ -1,0 +1,32 @@
+//! # qlora — a full-system reproduction of *QLoRA: Efficient Finetuning of
+//! Quantized LLMs* (Dettmers et al., NeurIPS 2023)
+//!
+//! Three-layer architecture (see `DESIGN.md`):
+//!
+//! * **L1** — Pallas kernels (build-time Python) for block-wise NF4/FP4/Int4
+//!   quantization, Double Quantization, and the fused QLoRA linear.
+//! * **L2** — a JAX LLaMA-style transformer with QLoRA linears, AOT-lowered
+//!   to HLO text per configuration (`python/compile/aot.py`).
+//! * **L3** — this crate: the PJRT runtime, the finetuning coordinator
+//!   (data pipeline, batching, training loop), a bit-exact native
+//!   quantization substrate, the paged-optimizer simulator, the analytical
+//!   memory model, the Elo evaluation machinery, and the experiment harness
+//!   regenerating every table and figure of the paper.
+//!
+//! Python never runs on the training path: after `make artifacts` the
+//! `qlora` binary is self-contained.
+
+pub mod coordinator;
+pub mod data;
+pub mod elo;
+pub mod eval;
+pub mod experiments;
+pub mod memory;
+pub mod paged;
+pub mod quant;
+pub mod runtime;
+pub mod tensorio;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

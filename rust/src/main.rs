@@ -1,0 +1,283 @@
+//! `qlora` — CLI for the QLoRA reproduction.
+//!
+//! Subcommands:
+//!   train        finetune an artifact on a synthetic corpus
+//!   eval         evaluate a checkpoint
+//!   generate     sample from a finetuned model (nucleus p=0.9, T=0.7)
+//!   quantize     quantization round-trip report for a datatype
+//!   memory       analytical memory planner (Figure 6 / Table 6)
+//!   experiment   regenerate a paper table/figure (or `all`)
+//!   list         list artifacts and experiments
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use qlora::coordinator::checkpoint;
+use qlora::coordinator::generate::Sampler;
+use qlora::coordinator::trainer::{TrainOptions, Trainer};
+use qlora::data::batching::Batcher;
+use qlora::data::synthetic::{corpus, eval_set, CorpusKind, EvalSuite};
+use qlora::data::tokenizer::Tokenizer;
+use qlora::experiments::{runner, Ctx};
+use qlora::memory;
+use qlora::quant::codebook::DType;
+use qlora::quant::error::{quant_error, synthetic_llm_weights};
+use qlora::runtime::artifact::Manifest;
+use qlora::runtime::client::Runtime;
+use qlora::util::cli::Args;
+use qlora::util::rng::Rng;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> &'static str {
+    "usage: qlora <command> [flags]\n\
+     commands:\n\
+       train       --artifact <name> [--corpus alpaca] [--steps N] \
+     [--seed S] [--paged] [--out ckpt.tensors] [--curve loss.csv]\n\
+       eval        --artifact <name> [--ckpt ckpt.tensors] [--suite \
+     mmlu|vicuna]\n\
+       generate    --artifact <name> [--ckpt ...] --prompt \"rev abc\" \
+     [--greedy]\n\
+       quantize    [--dtype nf4] [--block 64] [--dq]\n\
+       memory      [--size 65B] [--r 64] [--seq 512]\n\
+       experiment  <id|all> [--fast] [--seed S] [--results results/]\n\
+       list\n\
+     global: --artifacts <dir> (default artifacts/ or $QLORA_ARTIFACTS)"
+}
+
+fn corpus_kind(name: &str) -> Result<CorpusKind> {
+    CorpusKind::all()
+        .into_iter()
+        .find(|k| k.name() == name)
+        .ok_or_else(|| anyhow::anyhow!(
+            "unknown corpus {name:?}; one of: {}",
+            CorpusKind::all().map(|k| k.name()).join(", ")))
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    let Some(cmd) = args.positional.first().map(|s| s.as_str()) else {
+        println!("{}", usage());
+        return Ok(());
+    };
+    let artifacts_dir = PathBuf::from(
+        args.get_or("artifacts",
+                    Manifest::default_dir().to_str().unwrap_or("artifacts")));
+
+    match cmd {
+        "list" => {
+            match Manifest::load(&artifacts_dir) {
+                Ok(m) => {
+                    println!("artifacts in {:?}:", m.dir);
+                    for a in &m.artifacts {
+                        println!(
+                            "  {:<24} {:>10} params  quant={:<9} lora={}",
+                            a.name,
+                            a.cfg.n_params(),
+                            a.cfg.quant,
+                            if a.cfg.lora {
+                                a.cfg.lora_scope.clone()
+                            } else {
+                                "off".into()
+                            }
+                        );
+                    }
+                }
+                Err(e) => println!("(no artifacts: {e})"),
+            }
+            println!("\nexperiments:");
+            for (id, needs, desc, _) in runner::registry() {
+                println!("  {:<12} {}{}", id, desc,
+                         if needs { "  [needs artifacts]" } else { "" });
+            }
+        }
+        "train" => {
+            let name = args
+                .get("artifact")
+                .ok_or_else(|| anyhow::anyhow!("--artifact required"))?;
+            let rt = Runtime::cpu()?;
+            let manifest = Manifest::load(&artifacts_dir)?;
+            let mut trainer = Trainer::new(&rt, &manifest, name)?;
+            let cfg = trainer.spec.cfg.clone();
+            let kind = corpus_kind(&args.get_or("corpus", "alpaca"))?;
+            let tok = Tokenizer::new(cfg.vocab);
+            let ds = corpus(kind, args.usize_or("corpus-size", 512)?,
+                            args.u64_or("seed", 0)?);
+            let batcher = Batcher::new(&ds, tok.clone(), cfg.batch,
+                                       cfg.seq_len, args.flag("train-on-source"));
+            let eval_ds = eval_set(EvalSuite::VicunaProxy, cfg.batch * 4, 99);
+            let eval_b = Batcher::new(&eval_ds, tok, cfg.batch, cfg.seq_len,
+                                      false);
+            let opts = TrainOptions {
+                steps: args.usize_or("steps", 200)?,
+                eval_every: args.usize_or("eval-every", 50)?,
+                seed: args.u64_or("seed", 0)?,
+                paged: args.flag("paged"),
+                device_budget: args.usize_or("device-mb", 64)? << 20,
+            };
+            println!(
+                "training {name} ({} params, quant={}, lora={}) on {} \
+                 for {} steps",
+                cfg.n_params(), cfg.quant, cfg.lora_scope, kind.name(),
+                opts.steps
+            );
+            let log = trainer.train(&batcher, Some(&eval_b), &opts)?;
+            println!(
+                "final loss {:.4} (smoothed {:.4}); mean step {:.1} ms",
+                log.final_loss(),
+                log.smoothed_final_loss(10),
+                log.mean_step_time().as_secs_f64() * 1e3
+            );
+            for e in &log.evals {
+                println!("  eval@{:<5} loss {:.4} acc {:.3}", e.step, e.loss,
+                         e.accuracy);
+            }
+            if let Some(p) = &log.pager_stats {
+                println!(
+                    "  pager: {} faults, {} evictions, stall {:.1} ms total",
+                    p.faults, p.evictions, p.stall_us / 1e3
+                );
+            }
+            if let Some(out) = args.get("out") {
+                checkpoint::save(&trainer, &PathBuf::from(out))?;
+                println!("checkpoint -> {out}");
+            }
+            if let Some(curve) = args.get("curve") {
+                log.write_csv(&PathBuf::from(curve))?;
+                println!("loss curve -> {curve}");
+            }
+        }
+        "eval" => {
+            let name = args
+                .get("artifact")
+                .ok_or_else(|| anyhow::anyhow!("--artifact required"))?;
+            let rt = Runtime::cpu()?;
+            let manifest = Manifest::load(&artifacts_dir)?;
+            let mut trainer = Trainer::new(&rt, &manifest, name)?;
+            if let Some(ck) = args.get("ckpt") {
+                checkpoint::load(&mut trainer, &PathBuf::from(ck))?;
+            }
+            let cfg = trainer.spec.cfg.clone();
+            let suite = match args.get_or("suite", "vicuna").as_str() {
+                "mmlu" => EvalSuite::MmluProxy,
+                _ => EvalSuite::VicunaProxy,
+            };
+            let tok = Tokenizer::new(cfg.vocab);
+            let ds = eval_set(suite, cfg.batch * 8, args.u64_or("seed", 7)?);
+            let b = Batcher::new(&ds, tok, cfg.batch, cfg.seq_len, false);
+            let (loss, acc) = trainer.eval_all(&b, 0)?;
+            println!("eval loss {loss:.4}  token accuracy {acc:.3}");
+        }
+        "generate" => {
+            let name = args
+                .get("artifact")
+                .ok_or_else(|| anyhow::anyhow!("--artifact required"))?;
+            let prompt = args
+                .get("prompt")
+                .ok_or_else(|| anyhow::anyhow!("--prompt required"))?
+                .to_string();
+            let rt = Runtime::cpu()?;
+            let manifest = Manifest::load(&artifacts_dir)?;
+            let mut trainer = Trainer::new(&rt, &manifest, name)?;
+            if let Some(ck) = args.get("ckpt") {
+                checkpoint::load(&mut trainer, &PathBuf::from(ck))?;
+            }
+            let tok = Tokenizer::new(trainer.spec.cfg.vocab);
+            let sampler = Sampler {
+                top_p: args.f64_or("top-p", 0.9)?,
+                temperature: args.f64_or("temperature", 0.7)?,
+                max_new_tokens: args.usize_or("max-new", 32)?,
+            };
+            let mut rng = Rng::new(args.u64_or("seed", 0)?);
+            let out = sampler.generate(&trainer, &tok, &prompt, &mut rng,
+                                       args.flag("greedy"))?;
+            println!("{prompt} -> {out}");
+        }
+        "quantize" => {
+            let dtype = DType::from_name(&args.get_or("dtype", "nf4"))
+                .ok_or_else(|| anyhow::anyhow!("unknown dtype"))?;
+            let block = args.usize_or("block", 64)?;
+            let dq = args.flag("dq").then_some(256);
+            let mut rng = Rng::new(args.u64_or("seed", 0)?);
+            let w = synthetic_llm_weights(&mut rng, 64 * 4096, 0.01, 5.0);
+            let e = quant_error(&w, dtype, block, dq)?;
+            println!(
+                "{} block={block} dq={}: mse {:.6} mae {:.5} sqnr {:.2} dB",
+                dtype.name(),
+                dq.is_some(),
+                e.mse,
+                e.mae,
+                e.sqnr_db
+            );
+        }
+        "memory" => {
+            let size = args.get_or("size", "65B");
+            let spec = memory::llama_family()
+                .into_iter()
+                .find(|s| s.name == size)
+                .ok_or_else(|| anyhow::anyhow!("size must be 7B/13B/33B/65B"))?;
+            let r = args.usize_or("r", 64)?;
+            let seq = args.usize_or("seq", 512)?;
+            for (label, strat) in [
+                ("Full-16bit", memory::Strategy::Full16),
+                ("LoRA-16bit", memory::Strategy::LoRA16 { r }),
+                ("QLoRA-4bit",
+                 memory::Strategy::QLoRA4 { r, double_quant: false }),
+                ("QLoRA-4bit+DQ",
+                 memory::Strategy::QLoRA4 { r, double_quant: true }),
+            ] {
+                let f = memory::train_footprint(&spec, strat, seq, 1);
+                println!("{size} {label:<14} {:.1} GB  (weights {:.1} GB, \
+                          optim {:.1} GB, act {:.1} GB)",
+                         f.total_gb(),
+                         f.base_weights as f64 / 1e9,
+                         f.optimizer as f64 / 1e9,
+                         f.input_grads as f64 / 1e9);
+            }
+        }
+        "experiment" => {
+            let id = args
+                .positional
+                .get(1)
+                .map(|s| s.as_str())
+                .unwrap_or("all");
+            let results = PathBuf::from(args.get_or("results", "results"));
+            let needs_rt = id == "all"
+                || runner::registry()
+                    .iter()
+                    .any(|(n, needs, ..)| *n == id && *needs);
+            let (rt, manifest) = if needs_rt {
+                match Manifest::load(&artifacts_dir) {
+                    Ok(m) => (Some(Runtime::cpu()?), Some(m)),
+                    Err(e) => {
+                        eprintln!("warning: no artifacts ({e}); training \
+                                   experiments will be skipped");
+                        (None, None)
+                    }
+                }
+            } else {
+                (None, None)
+            };
+            let ctx = Ctx {
+                rt,
+                manifest,
+                seed: args.u64_or("seed", 42)?,
+                fast: args.flag("fast"),
+            };
+            let out = if id == "all" {
+                runner::run_all(&ctx, &results)?
+            } else {
+                runner::run_one(id, &ctx, &results)?
+            };
+            println!("{out}");
+        }
+        _ => bail!("unknown command {cmd:?}\n{}", usage()),
+    }
+    Ok(())
+}

@@ -1,0 +1,154 @@
+//! The paged-optimizer simulation attached to training: optimizer state
+//! (Adam m/v) lives in pageable memory; each step's activation spike
+//! (driven by the longest sequence in the mini-batch, exactly the
+//! gradient-checkpointing spike the paper describes) pressures the pager,
+//! and the optimizer update touches every state page.
+
+use super::pager::{Pager, PagerConfig};
+
+#[derive(Debug, Clone, Default)]
+pub struct PagerStats {
+    pub steps: u64,
+    pub faults: u64,
+    pub evictions: u64,
+    pub migrated_bytes: u64,
+    pub stall_us: f64,
+    pub peak_resident: usize,
+    pub spike_steps: u64,
+}
+
+#[derive(Debug)]
+pub struct PagedOptimizerSim {
+    pager: Pager,
+    state_pages: Vec<super::pager::PageId>,
+    /// bytes pinned by the (quantized) model itself
+    pub model_bytes: usize,
+    /// per-token activation-gradient bytes under checkpointing
+    act_bytes_per_token: usize,
+    pub stats: PagerStats,
+}
+
+impl PagedOptimizerSim {
+    /// `device_budget`: total simulated device bytes; the model is pinned,
+    /// optimizer state (2 f32 moments per trainable param) is pageable.
+    pub fn new(
+        device_budget: usize,
+        model_bytes: usize,
+        opt_state_bytes: usize,
+        batch_tokens: usize,
+        d_model: usize,
+        n_layers: usize,
+    ) -> PagedOptimizerSim {
+        let cfg = PagerConfig {
+            page_bytes: 64 << 10, // smaller pages at simulation scale
+            device_budget: device_budget.saturating_sub(model_bytes),
+            ..PagerConfig::default()
+        };
+        let mut pager = Pager::new(cfg);
+        let state_pages = pager.register(0, opt_state_bytes.max(1));
+        // with gradient checkpointing the recompute spike holds one layer's
+        // activations (~4 tensors of d_model) per token plus input grads
+        // (paper section 2: ~18 MB/seq for 7B after checkpointing)
+        let act_bytes_per_token = 4 * d_model * 4 + 2 * d_model * 4
+            + n_layers * 8; // small per-layer bookkeeping
+        let _ = batch_tokens;
+        PagedOptimizerSim {
+            pager,
+            state_pages,
+            model_bytes,
+            act_bytes_per_token,
+            stats: PagerStats::default(),
+        }
+    }
+
+    /// One training step: the activation spike scales with the longest
+    /// sequence in the batch (long sequences trigger paging; short ones
+    /// don't — the paper's "only occurs when processing mini-batches with
+    /// long sequence lengths").
+    pub fn on_step(&mut self, max_seq: usize, full_seq: usize) {
+        self.stats.steps += 1;
+        let _ = full_seq;
+        // spike: recompute buffers for the *longest* sample dominate
+        let spike = self.act_bytes_per_token * max_seq;
+        let evicted = self.pager.pressure(spike);
+        if evicted > 0 {
+            self.stats.spike_steps += 1;
+        }
+        // optimizer update touches every optimizer-state page (spike over)
+        for &id in &self.state_pages.clone() {
+            self.pager.touch(id, 0);
+        }
+        let s = &self.pager.stats;
+        self.stats.faults = s.faults;
+        self.stats.evictions = s.evictions;
+        self.stats.migrated_bytes = s.migrated_bytes;
+        self.stats.stall_us = s.stall_us;
+        self.stats.peak_resident = self.pager.peak_resident;
+    }
+
+    /// Steady-state fault rate after warmup: 0 when everything fits.
+    pub fn steady_state_stall_per_step_us(&self) -> f64 {
+        if self.stats.steps == 0 {
+            return 0.0;
+        }
+        self.stats.stall_us / self.stats.steps as f64
+    }
+
+    /// Would a *non-paged* optimizer OOM on this spike? (the paper's
+    /// motivating failure mode)
+    pub fn would_oom_without_paging(&self, max_seq: usize) -> bool {
+        let spike = self.act_bytes_per_token * max_seq;
+        let opt_bytes = self.state_pages.len() * self.pager.cfg.page_bytes;
+        opt_bytes + spike > self.pager.cfg.device_budget
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_paging_when_everything_fits() {
+        // big budget: after the initial cold faults, zero ongoing traffic
+        let mut sim = PagedOptimizerSim::new(
+            1 << 30, 100 << 20, 8 << 20, 512, 256, 4);
+        for _ in 0..50 {
+            sim.on_step(64, 64);
+        }
+        let cold_faults = (8 << 20) / (64 << 10);
+        assert_eq!(sim.stats.faults, cold_faults as u64);
+        assert_eq!(sim.stats.evictions, 0);
+    }
+
+    #[test]
+    fn long_sequences_trigger_paging_but_run_completes() {
+        // tight budget: optimizer state + spike exceeds device memory
+        let opt = 8 << 20;
+        let mut sim = PagedOptimizerSim::new(
+            9 << 20, 0, opt, 4096, 1024, 8);
+        assert!(sim.would_oom_without_paging(4096));
+        for step in 0..20 {
+            let seq = if step % 5 == 0 { 4096 } else { 16 };
+            sim.on_step(seq, 4096);
+        }
+        assert!(sim.stats.spike_steps > 0, "spikes must trigger eviction");
+        assert!(sim.stats.faults > 0);
+        // and the "training" completed — that's the whole point
+        assert_eq!(sim.stats.steps, 20);
+    }
+
+    #[test]
+    fn short_batches_match_regular_speed() {
+        // the paper's bs=16 claim: short sequences -> no stall after warmup
+        let mut sim = PagedOptimizerSim::new(
+            64 << 20, 16 << 20, 8 << 20, 16 * 64, 256, 4);
+        for _ in 0..10 {
+            sim.on_step(64, 64);
+        }
+        let warm = sim.stats.stall_us;
+        for _ in 0..100 {
+            sim.on_step(64, 64);
+        }
+        assert_eq!(sim.stats.stall_us, warm, "no steady-state stall");
+    }
+}

@@ -1,0 +1,258 @@
+//! The unified-memory pager: page table + LRU residency for pageable
+//! allocations. Pages migrate device↔host on demand; touching a
+//! non-resident page faults, which (a) evicts LRU pages to make room and
+//! (b) charges a migration latency (PCIe-like bandwidth model).
+
+use std::collections::HashMap;
+
+pub type PageId = u64;
+
+#[derive(Debug, Clone)]
+pub struct PagerConfig {
+    /// page size in bytes (CUDA UM uses 2 MiB large pages on modern GPUs)
+    pub page_bytes: usize,
+    /// device bytes available to *pageable* memory (after pinned allocs)
+    pub device_budget: usize,
+    /// simulated host<->device bandwidth, bytes/sec (PCIe 4.0 x16 ≈ 25 GB/s)
+    pub bandwidth: f64,
+    /// per-fault fixed cost in microseconds (driver + TLB shootdown)
+    pub fault_fixed_us: f64,
+}
+
+impl Default for PagerConfig {
+    fn default() -> Self {
+        PagerConfig {
+            page_bytes: 2 << 20,
+            device_budget: 16 << 30,
+            bandwidth: 25e9,
+            fault_fixed_us: 20.0,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Residency {
+    Device,
+    Host,
+}
+
+#[derive(Debug)]
+struct PageEntry {
+    residency: Residency,
+    /// LRU clock of last touch
+    last_touch: u64,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct FaultStats {
+    pub faults: u64,
+    pub evictions: u64,
+    pub migrated_bytes: u64,
+    pub stall_us: f64,
+}
+
+/// Page table for one pageable region.
+#[derive(Debug)]
+pub struct Pager {
+    pub cfg: PagerConfig,
+    pages: HashMap<PageId, PageEntry>,
+    resident_bytes: usize,
+    pub peak_resident: usize,
+    clock: u64,
+    pub stats: FaultStats,
+}
+
+impl Pager {
+    pub fn new(cfg: PagerConfig) -> Pager {
+        Pager {
+            cfg,
+            pages: HashMap::new(),
+            resident_bytes: 0,
+            peak_resident: 0,
+            clock: 0,
+            stats: FaultStats::default(),
+        }
+    }
+
+    /// Register a pageable allocation of `bytes`, initially host-resident.
+    /// Returns the page ids.
+    pub fn register(&mut self, base: PageId, bytes: usize) -> Vec<PageId> {
+        let n = bytes.div_ceil(self.cfg.page_bytes);
+        let ids: Vec<PageId> = (0..n as u64).map(|i| base + i).collect();
+        for &id in &ids {
+            self.pages.insert(
+                id,
+                PageEntry { residency: Residency::Host, last_touch: 0 },
+            );
+        }
+        ids
+    }
+
+    pub fn resident_bytes(&self) -> usize {
+        self.resident_bytes
+    }
+
+    /// Shrink the device budget (a transient activation spike claims the
+    /// space), evicting pages if needed. Returns evicted count.
+    pub fn pressure(&mut self, reserved: usize) -> u64 {
+        let budget = self.cfg.device_budget.saturating_sub(reserved);
+        let mut evicted = 0;
+        while self.resident_bytes > budget {
+            if !self.evict_lru() {
+                break;
+            }
+            evicted += 1;
+        }
+        evicted
+    }
+
+    /// Touch (access) a page: fault + migrate if non-resident.
+    pub fn touch(&mut self, id: PageId, reserved: usize) {
+        self.clock += 1;
+        let clock = self.clock;
+        let entry = self.pages.get_mut(&id).expect("unregistered page");
+        entry.last_touch = clock;
+        if entry.residency == Residency::Device {
+            return;
+        }
+        // page fault: make room under the current pressure, then migrate in
+        self.stats.faults += 1;
+        let page = self.cfg.page_bytes;
+        let budget = self.cfg.device_budget.saturating_sub(reserved);
+        while self.resident_bytes + page > budget {
+            if !self.evict_lru() {
+                break; // thrashing floor: single page still migrates
+            }
+        }
+        let entry = self.pages.get_mut(&id).unwrap();
+        entry.residency = Residency::Device;
+        self.resident_bytes += page;
+        self.peak_resident = self.peak_resident.max(self.resident_bytes);
+        self.stats.migrated_bytes += page as u64;
+        self.stats.stall_us += self.cfg.fault_fixed_us
+            + page as f64 / self.cfg.bandwidth * 1e6;
+    }
+
+    fn evict_lru(&mut self) -> bool {
+        let victim = self
+            .pages
+            .iter()
+            .filter(|(_, e)| e.residency == Residency::Device)
+            .min_by_key(|(_, e)| e.last_touch)
+            .map(|(id, _)| *id);
+        match victim {
+            Some(id) => {
+                let e = self.pages.get_mut(&id).unwrap();
+                e.residency = Residency::Host;
+                self.resident_bytes -= self.cfg.page_bytes;
+                self.stats.evictions += 1;
+                self.stats.migrated_bytes += self.cfg.page_bytes as u64;
+                self.stats.stall_us +=
+                    self.cfg.page_bytes as f64 / self.cfg.bandwidth * 1e6;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Invariant check: resident bytes equals page-table residency.
+    pub fn check_invariants(&self) {
+        let resident = self
+            .pages
+            .values()
+            .filter(|e| e.residency == Residency::Device)
+            .count()
+            * self.cfg.page_bytes;
+        assert_eq!(resident, self.resident_bytes, "residency accounting");
+        assert!(self.resident_bytes <= self.cfg.device_budget);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn cfg(budget_pages: usize) -> PagerConfig {
+        PagerConfig {
+            page_bytes: 1024,
+            device_budget: budget_pages * 1024,
+            bandwidth: 1e9,
+            fault_fixed_us: 1.0,
+        }
+    }
+
+    #[test]
+    fn faults_then_hits() {
+        let mut p = Pager::new(cfg(4));
+        let ids = p.register(0, 2048);
+        assert_eq!(ids.len(), 2);
+        p.touch(ids[0], 0);
+        p.touch(ids[1], 0);
+        assert_eq!(p.stats.faults, 2);
+        p.touch(ids[0], 0); // hit
+        assert_eq!(p.stats.faults, 2);
+        p.check_invariants();
+    }
+
+    #[test]
+    fn eviction_under_pressure() {
+        let mut p = Pager::new(cfg(2));
+        let ids = p.register(0, 4096); // 4 pages, budget 2
+        for &id in &ids {
+            p.touch(id, 0);
+        }
+        assert_eq!(p.stats.faults, 4);
+        assert!(p.stats.evictions >= 2);
+        assert!(p.resident_bytes() <= 2048);
+        p.check_invariants();
+    }
+
+    #[test]
+    fn spike_pressure_evicts_then_recovers() {
+        let mut p = Pager::new(cfg(4));
+        let ids = p.register(0, 4096);
+        for &id in &ids {
+            p.touch(id, 0);
+        }
+        assert_eq!(p.resident_bytes(), 4096);
+        // spike reserves 3 pages -> only 1 page budget remains
+        let evicted = p.pressure(3 * 1024);
+        assert_eq!(evicted, 3);
+        assert_eq!(p.resident_bytes(), 1024);
+        // spike gone; touching pages brings them back
+        for &id in &ids {
+            p.touch(id, 0);
+        }
+        assert_eq!(p.resident_bytes(), 4096);
+        p.check_invariants();
+    }
+
+    #[test]
+    fn lru_victim_selection() {
+        let mut p = Pager::new(cfg(2));
+        let ids = p.register(0, 3072); // 3 pages, budget 2
+        p.touch(ids[0], 0);
+        p.touch(ids[1], 0);
+        p.touch(ids[0], 0); // refresh page 0 -> page 1 is LRU
+        p.touch(ids[2], 0); // must evict page 1
+        p.touch(ids[0], 0); // page 0 still resident -> no fault
+        assert_eq!(p.stats.faults, 3);
+    }
+
+    #[test]
+    fn prop_resident_never_exceeds_budget() {
+        prop::check("pager-budget", 32, |rng| {
+            let pages = 2 + rng.below(16);
+            let mut p = Pager::new(cfg(pages));
+            let ids = p.register(0, (pages * 3) * 1024);
+            for _ in 0..200 {
+                let id = ids[rng.below(ids.len())];
+                let reserved = rng.below(pages) * 1024;
+                p.touch(id, reserved);
+                assert!(p.resident_bytes() <= p.cfg.device_budget);
+            }
+            p.check_invariants();
+        });
+    }
+}

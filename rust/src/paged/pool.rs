@@ -1,0 +1,88 @@
+//! A fixed-capacity device memory pool with named allocations.
+//! Models "GPU memory": allocations either fit or OOM (unless their pages
+//! are managed by the `Pager`).
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug)]
+pub struct DevicePool {
+    pub capacity: usize,
+    used: usize,
+    allocs: BTreeMap<String, usize>,
+}
+
+impl DevicePool {
+    pub fn new(capacity: usize) -> DevicePool {
+        DevicePool { capacity, used: 0, allocs: BTreeMap::new() }
+    }
+
+    /// Pinned (non-pageable) allocation — fails hard on OOM, like a CUDA
+    /// `cudaMalloc`.
+    pub fn alloc(&mut self, name: &str, bytes: usize) -> Result<()> {
+        if self.allocs.contains_key(name) {
+            bail!("allocation {name:?} already exists");
+        }
+        if self.used + bytes > self.capacity {
+            bail!(
+                "OOM: {name} needs {bytes} B, {} of {} B used",
+                self.used,
+                self.capacity
+            );
+        }
+        self.used += bytes;
+        self.allocs.insert(name.to_string(), bytes);
+        Ok(())
+    }
+
+    pub fn free(&mut self, name: &str) -> Result<()> {
+        match self.allocs.remove(name) {
+            Some(b) => {
+                self.used -= b;
+                Ok(())
+            }
+            None => bail!("allocation {name:?} not found"),
+        }
+    }
+
+    pub fn used(&self) -> usize {
+        self.used
+    }
+
+    pub fn free_bytes(&self) -> usize {
+        self.capacity - self.used
+    }
+
+    /// Try to reserve transient bytes (activation spike); true if it fits.
+    pub fn fits(&self, bytes: usize) -> bool {
+        self.used + bytes <= self.capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_accounting() {
+        let mut p = DevicePool::new(100);
+        p.alloc("a", 60).unwrap();
+        assert_eq!(p.used(), 60);
+        assert!(p.alloc("b", 50).is_err()); // OOM
+        p.alloc("c", 40).unwrap();
+        assert_eq!(p.free_bytes(), 0);
+        p.free("a").unwrap();
+        assert_eq!(p.used(), 40);
+        assert!(p.free("a").is_err());
+        assert!(p.alloc("c", 1).is_err()); // duplicate
+    }
+
+    #[test]
+    fn fits_is_nondestructive() {
+        let mut p = DevicePool::new(10);
+        p.alloc("x", 4).unwrap();
+        assert!(p.fits(6));
+        assert!(!p.fits(7));
+        assert_eq!(p.used(), 4);
+    }
+}

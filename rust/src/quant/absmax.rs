@@ -1,0 +1,197 @@
+//! Block-wise absmax quantization (paper Background, Eq. 1–2).
+//!
+//! The input is chunked into contiguous blocks of size B; each block is
+//! normalized by its absolute maximum and mapped to the nearest codebook
+//! entry. Small blocks (the paper uses B=64 for weights) bound the damage
+//! any outlier can do to its neighbours.
+
+use anyhow::{ensure, Result};
+
+use super::codebook::Codebook;
+
+/// Quantize a flat f32 slice. Returns (codes, absmax-per-block).
+pub fn quantize_blockwise(
+    x: &[f32],
+    cb: &Codebook,
+    block: usize,
+) -> Result<(Vec<u8>, Vec<f32>)> {
+    ensure!(block > 0, "block must be positive");
+    ensure!(
+        x.len() % block == 0,
+        "length {} not divisible by block {}",
+        x.len(),
+        block
+    );
+    let nb = x.len() / block;
+    let mut codes = vec![0u8; x.len()];
+    let mut absmax = vec![0f32; nb];
+    // fast path for symmetric integer codebooks: code = round(xn*half)+half
+    // (bit-identical to midpoint search for these uniform grids — the
+    // midpoints are exactly (2i+1)/(2*half) and ties round up either way)
+    let int_half = match cb.dtype {
+        super::codebook::DType::Int4 => Some(7f32),
+        super::codebook::DType::Int8 => Some(127f32),
+        _ => None,
+    };
+    for b in 0..nb {
+        let chunk = &x[b * block..(b + 1) * block];
+        let mut am = 0f32;
+        for &v in chunk {
+            am = am.max(v.abs());
+        }
+        absmax[b] = am;
+        let scale = if am > 0.0 { am } else { 1.0 };
+        let out = &mut codes[b * block..(b + 1) * block];
+        // NOTE: x/scale must stay a true division (not *reciprocal) to
+        // remain bit-identical with the XLA reference computation.
+        match int_half {
+            Some(half) => {
+                for (o, &v) in out.iter_mut().zip(chunk) {
+                    let xn = (v / scale).clamp(-1.0, 1.0);
+                    // round-half-up matches `sum(xn >= mids)` exactly
+                    *o = (xn * half + half + 0.5).floor() as u8;
+                }
+            }
+            None => {
+                for (o, &v) in out.iter_mut().zip(chunk) {
+                    *o = cb.encode(v / scale);
+                }
+            }
+        }
+    }
+    Ok((codes, absmax))
+}
+
+/// Dequantize codes produced by [`quantize_blockwise`].
+pub fn dequantize_blockwise(
+    codes: &[u8],
+    absmax: &[f32],
+    cb: &Codebook,
+    block: usize,
+) -> Result<Vec<f32>> {
+    ensure!(codes.len() % block == 0, "bad codes length");
+    ensure!(codes.len() / block == absmax.len(), "absmax length mismatch");
+    let mut out = vec![0f32; codes.len()];
+    for b in 0..absmax.len() {
+        let am = absmax[b];
+        for i in 0..block {
+            out[b * block + i] = cb.decode(codes[b * block + i]) * am;
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::codebook::{Codebook, DType};
+    use crate::util::prop::{self, gen};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_error_bounded() {
+        // the worst-case relative error of round-to-nearest is half the
+        // widest codebook gap times the block absmax
+        let cb = Codebook::new(DType::NF4);
+        let max_gap = cb
+            .values
+            .windows(2)
+            .map(|w| w[1] - w[0])
+            .fold(0f32, f32::max);
+        let mut rng = Rng::new(3);
+        let x = rng.normal_vec_f32(64 * 32);
+        let (codes, absmax) = quantize_blockwise(&x, &cb, 64).unwrap();
+        let y = dequantize_blockwise(&codes, &absmax, &cb, 64).unwrap();
+        for b in 0..absmax.len() {
+            for i in 0..64 {
+                let idx = b * 64 + i;
+                assert!(
+                    (x[idx] - y[idx]).abs() <= 0.5 * max_gap * absmax[b] + 1e-6,
+                    "error too large at {idx}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn zero_block_is_exact() {
+        let cb = Codebook::new(DType::NF4);
+        let x = vec![0f32; 128];
+        let (codes, absmax) = quantize_blockwise(&x, &cb, 64).unwrap();
+        let y = dequantize_blockwise(&codes, &absmax, &cb, 64).unwrap();
+        assert!(y.iter().all(|&v| v == 0.0));
+        assert!(absmax.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn block_isolation() {
+        // an outlier in one block must not change codes in another
+        let cb = Codebook::new(DType::NF4);
+        let mut rng = Rng::new(4);
+        let mut x = rng.normal_vec_f32(128);
+        let (codes_a, _) = quantize_blockwise(&x, &cb, 64).unwrap();
+        x[0] = 1e6; // outlier in block 0
+        let (codes_b, _) = quantize_blockwise(&x, &cb, 64).unwrap();
+        assert_eq!(&codes_a[64..], &codes_b[64..]);
+    }
+
+    #[test]
+    fn rejects_bad_lengths() {
+        let cb = Codebook::new(DType::NF4);
+        assert!(quantize_blockwise(&[0.0; 65], &cb, 64).is_err());
+        assert!(dequantize_blockwise(&[0; 64], &[1.0, 2.0], &cb, 64).is_err());
+    }
+
+    #[test]
+    fn prop_quantize_idempotent() {
+        // quantizing an already-dequantized tensor must be a fixed point
+        prop::check("quant-idempotent", prop::default_cases(), |rng| {
+            let n = gen::blocked_len(rng, 64, 8);
+            let x = gen::weight_vec(rng, n);
+            let cb = Codebook::new(DType::NF4);
+            let (c1, a1) = quantize_blockwise(&x, &cb, 64).unwrap();
+            let y = dequantize_blockwise(&c1, &a1, &cb, 64).unwrap();
+            let (c2, a2) = quantize_blockwise(&y, &cb, 64).unwrap();
+            let z = dequantize_blockwise(&c2, &a2, &cb, 64).unwrap();
+            for (yi, zi) in y.iter().zip(z.iter()) {
+                assert!((yi - zi).abs() <= 1e-6 * yi.abs().max(1.0));
+            }
+        });
+    }
+
+    #[test]
+    fn prop_absmax_is_per_block_max() {
+        prop::check("absmax-max", prop::default_cases(), |rng| {
+            let n = gen::blocked_len(rng, 32, 16);
+            let x = gen::outlier_vec(rng, n, 0.02, 10.0);
+            let cb = Codebook::new(DType::FP4E2M1);
+            let (_, absmax) = quantize_blockwise(&x, &cb, 32).unwrap();
+            for (b, am) in absmax.iter().enumerate() {
+                let expect = x[b * 32..(b + 1) * 32]
+                    .iter()
+                    .fold(0f32, |a, v| a.max(v.abs()));
+                assert_eq!(*am, expect);
+            }
+        });
+    }
+
+    #[test]
+    fn prop_nf4_beats_int4_on_normal_data() {
+        // the paper's core claim, as a property over random normal tensors
+        prop::check("nf4-beats-int4", 16, |rng| {
+            let n = 64 * 64;
+            let x: Vec<f32> = rng.normal_vec_f32(n);
+            let mse = |dt: DType| {
+                let cb = Codebook::new(dt);
+                let (c, a) = quantize_blockwise(&x, &cb, 64).unwrap();
+                let y = dequantize_blockwise(&c, &a, &cb, 64).unwrap();
+                x.iter()
+                    .zip(y.iter())
+                    .map(|(a, b)| ((a - b) as f64).powi(2))
+                    .sum::<f64>()
+                    / n as f64
+            };
+            assert!(mse(DType::NF4) < mse(DType::Int4));
+        });
+    }
+}

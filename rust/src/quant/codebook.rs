@@ -1,0 +1,351 @@
+//! Codebook datatypes (paper section 3 + Table 2).
+//!
+//! A codebook is a sorted table of 2^k normalized values in [-1, 1];
+//! quantization maps an absmax-normalized input to the nearest entry
+//! (round-to-nearest by bin midpoint, ties toward the upper code — the
+//! same convention as the Python reference).
+
+use crate::util::stats::ndtri;
+
+/// The quantization datatypes the paper evaluates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    /// 4-bit NormalFloat (the paper's contribution, Appendix E).
+    NF4,
+    /// 4-bit float, 2 exponent / 1 mantissa bit (Table 2 "Float4 (E2M1)").
+    FP4E2M1,
+    /// 4-bit float, 3 exponent / 0 mantissa bits (Table 2 "Float4 (E3M0)").
+    FP4E3M0,
+    /// Symmetric 4-bit integer (Table 2 "Int4").
+    Int4,
+    /// Symmetric 8-bit integer (Table 3 "QLoRA Int8").
+    Int8,
+    /// 8-bit float E4M3 — the Double Quantization codebook.
+    FP8E4M3,
+}
+
+impl DType {
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::NF4 => "nf4",
+            DType::FP4E2M1 => "fp4_e2m1",
+            DType::FP4E3M0 => "fp4_e3m0",
+            DType::Int4 => "int4",
+            DType::Int8 => "int8",
+            DType::FP8E4M3 => "fp8_e4m3",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<DType> {
+        Some(match s {
+            "nf4" => DType::NF4,
+            "fp4_e2m1" => DType::FP4E2M1,
+            "fp4_e3m0" => DType::FP4E3M0,
+            "int4" => DType::Int4,
+            "int8" => DType::Int8,
+            "fp8_e4m3" => DType::FP8E4M3,
+            _ => return None,
+        })
+    }
+
+    /// Bits per stored code.
+    pub fn bits(self) -> usize {
+        match self {
+            DType::Int8 | DType::FP8E4M3 => 8,
+            _ => 4,
+        }
+    }
+}
+
+/// The paper's exact NF4 values (Appendix E). Canonical table for both the
+/// Rust and Python implementations (bit-identical across the boundary).
+pub const NF4_PAPER: [f32; 16] = [
+    -1.0,
+    -0.6961928009986877,
+    -0.5250730514526367,
+    -0.39491748809814453,
+    -0.28444138169288635,
+    -0.18477343022823334,
+    -0.09105003625154495,
+    0.0,
+    0.07958029955625534,
+    0.16093020141124725,
+    0.24611230194568634,
+    0.33791524171829224,
+    0.44070982933044434,
+    0.5626170039176941,
+    0.7229568362236023,
+    1.0,
+];
+
+const NF4_OFFSET: f64 = 0.9677083;
+
+/// A sorted codebook plus precomputed bin midpoints.
+#[derive(Debug, Clone)]
+pub struct Codebook {
+    pub dtype: DType,
+    pub values: Vec<f32>,
+    /// midpoints between consecutive values (len = values.len() - 1)
+    mids: Vec<f32>,
+}
+
+impl Codebook {
+    pub fn new(dtype: DType) -> Codebook {
+        let values = match dtype {
+            DType::NF4 => NF4_PAPER.to_vec(),
+            DType::FP4E2M1 => fp_values(2, 1),
+            DType::FP4E3M0 => fp_values(3, 0),
+            DType::FP8E4M3 => fp_values(4, 3),
+            DType::Int4 => int_values(4),
+            DType::Int8 => int_values(8),
+        };
+        Self::from_values(dtype, values)
+    }
+
+    pub fn from_values(dtype: DType, values: Vec<f32>) -> Codebook {
+        debug_assert!(values.windows(2).all(|w| w[0] < w[1]), "must be sorted");
+        // midpoints in f32 — identical arithmetic to the Python reference
+        let mids = values
+            .windows(2)
+            .map(|w| (w[0] + w[1]) * 0.5)
+            .collect();
+        Codebook { dtype, values, mids }
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    /// Nearest code for a normalized value: `sum(x >= mids)`, i.e.
+    /// round-to-nearest with ties to the upper code (matches ref.py).
+    #[inline]
+    pub fn encode(&self, x: f32) -> u8 {
+        // binary search over midpoints: count of mids <= x
+        // (mids sorted ascending; `x >= mids[i]` ⇔ i < count)
+        let mut lo = 0usize;
+        let mut hi = self.mids.len();
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if x >= self.mids[mid] {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        lo as u8
+    }
+
+    #[inline]
+    pub fn decode(&self, code: u8) -> f32 {
+        self.values[code as usize]
+    }
+
+    /// Does the codebook contain an exact zero? (The paper requires this
+    /// for error-free padding; NF4's asymmetric construction guarantees it.)
+    pub fn has_exact_zero(&self) -> bool {
+        self.values.iter().any(|&v| v == 0.0)
+    }
+}
+
+/// Generic k-bit float values (mirrors ref.fp_codebook; f64 math, f32 cast).
+fn fp_values(ebits: u32, mbits: u32) -> Vec<f32> {
+    let bias = (1i32 << (ebits - 1)) - 1;
+    let mut mags: Vec<f64> = Vec::new();
+    for e in 0..(1u32 << ebits) {
+        for m in 0..(1u32 << mbits) {
+            let v = if e == 0 {
+                2f64.powi(1 - bias) * (m as f64 / 2f64.powi(mbits as i32))
+            } else {
+                2f64.powi(e as i32 - bias)
+                    * (1.0 + m as f64 / 2f64.powi(mbits as i32))
+            };
+            mags.push(v);
+        }
+    }
+    mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    mags.dedup();
+    let mx = *mags.last().unwrap();
+    let vals: Vec<f64> = mags.iter().map(|m| m / mx).collect();
+    let mut all: Vec<f64> =
+        vals.iter().map(|v| -v).chain(vals.iter().copied()).collect();
+    all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    all.dedup();
+    all.into_iter().map(|v| v as f32).collect()
+}
+
+/// Symmetric integer values i/(2^{b-1}-1) — f32 division like jnp.
+fn int_values(bits: u32) -> Vec<f32> {
+    let half = (1i32 << (bits - 1)) - 1;
+    (-half..=half).map(|i| i as f32 / half as f32).collect()
+}
+
+/// Derive the k-bit NormalFloat codebook from first principles (paper
+/// Eq. 4, generalized): 2^{k-1}+1 quantiles of N(0,1) for the positive
+/// half, 2^{k-1} for the negative half, unify, drop the duplicate zero,
+/// normalize into [-1, 1]. `derive_nfk(4)` reproduces `NF4_PAPER` to
+/// ~1e-7 (unit-tested). k > 4 realizes the paper's section-8 direction of
+/// exploring other bit widths (NF3 for the "3-bit base models" question,
+/// NF8 as a drop-in for the DQ constants).
+pub fn derive_nfk(bits: u32) -> Vec<f32> {
+    assert!((2..=8).contains(&bits), "NFk supports 2..=8 bits");
+    let half = 1usize << (bits - 1);
+    let mut pos: Vec<f64> = Vec::new();
+    for i in 0..half {
+        // linspace(offset, 0.5, half+1)[:-1]
+        let p = NF4_OFFSET + (0.5 - NF4_OFFSET) * (i as f64 / half as f64);
+        pos.push(ndtri(p));
+    }
+    let mut neg: Vec<f64> = Vec::new();
+    for i in 0..(half - 1) {
+        // linspace(offset, 0.5, half)[:-1]
+        let p =
+            NF4_OFFSET + (0.5 - NF4_OFFSET) * (i as f64 / (half - 1) as f64);
+        neg.push(-ndtri(p));
+    }
+    let mut vals: Vec<f64> = neg;
+    vals.push(0.0);
+    vals.extend(pos);
+    vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mx = vals.iter().fold(0f64, |a, &v| a.max(v.abs()));
+    vals.into_iter().map(|v| (v / mx) as f32).collect()
+}
+
+/// Backwards-compatible alias: the NF4 derivation.
+pub fn derive_nf4() -> Vec<f32> {
+    derive_nfk(4)
+}
+
+/// Codebook for a derived k-bit NormalFloat (k != 4 — extension beyond
+/// the paper; k == 4 uses the canonical published constants).
+pub fn nfk_codebook(bits: u32) -> Codebook {
+    if bits == 4 {
+        return Codebook::new(DType::NF4);
+    }
+    Codebook::from_values(DType::NF4, derive_nfk(bits))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nfk_extension_properties() {
+        // k=4 matches the published table
+        let nf4 = derive_nfk(4);
+        for (d, p) in nf4.iter().zip(NF4_PAPER.iter()) {
+            assert!((d - p).abs() < 3e-6);
+        }
+        // sizes, sortedness, exact zero for every k
+        for k in 2..=8u32 {
+            let cb = nfk_codebook(k);
+            assert_eq!(cb.len(), 1usize << k, "k={k}");
+            assert!(cb.values.windows(2).all(|w| w[0] < w[1]));
+            assert!(cb.has_exact_zero());
+        }
+        // quantization error strictly improves with bit width (paper §8:
+        // the precision/bits trade-off direction)
+        let mut rng = crate::util::rng::Rng::new(77);
+        let x: Vec<f32> = rng.normal_vec_f32(64 * 64);
+        let mse = |k: u32| {
+            let cb = nfk_codebook(k);
+            let (c, a) =
+                crate::quant::quantize_blockwise(&x, &cb, 64).unwrap();
+            let y =
+                crate::quant::dequantize_blockwise(&c, &a, &cb, 64).unwrap();
+            x.iter()
+                .zip(y.iter())
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+        };
+        let errs: Vec<f64> = (2..=8).map(mse).collect();
+        for w in errs.windows(2) {
+            assert!(w[1] < w[0] * 0.7, "error must drop with bits: {errs:?}");
+        }
+    }
+
+    #[test]
+    fn nf4_derivation_matches_paper() {
+        let derived = derive_nf4();
+        for (d, p) in derived.iter().zip(NF4_PAPER.iter()) {
+            assert!(
+                (d - p).abs() < 3e-6,
+                "derived {d} vs paper {p}"
+            );
+        }
+    }
+
+    #[test]
+    fn all_codebooks_sorted_with_zero() {
+        for dt in [DType::NF4, DType::FP4E2M1, DType::FP4E3M0, DType::Int4,
+                   DType::Int8, DType::FP8E4M3] {
+            let cb = Codebook::new(dt);
+            assert!(cb.values.windows(2).all(|w| w[0] < w[1]), "{dt:?}");
+            assert!(cb.has_exact_zero(), "{dt:?} lacks exact zero");
+            assert_eq!(*cb.values.first().unwrap(), -1.0);
+            assert_eq!(*cb.values.last().unwrap(), 1.0);
+        }
+    }
+
+    #[test]
+    fn sizes() {
+        assert_eq!(Codebook::new(DType::NF4).len(), 16);
+        assert_eq!(Codebook::new(DType::FP4E2M1).len(), 15); // ±0 collapse
+        assert_eq!(Codebook::new(DType::FP4E3M0).len(), 15);
+        assert_eq!(Codebook::new(DType::Int4).len(), 15);
+        assert_eq!(Codebook::new(DType::Int8).len(), 255);
+        assert_eq!(Codebook::new(DType::FP8E4M3).len(), 255);
+    }
+
+    #[test]
+    fn encode_decode_nearest() {
+        let cb = Codebook::new(DType::NF4);
+        // every codebook value encodes to itself
+        for (i, &v) in cb.values.iter().enumerate() {
+            assert_eq!(cb.encode(v) as usize, i);
+        }
+        // extremes clamp
+        assert_eq!(cb.encode(-5.0), 0);
+        assert_eq!(cb.encode(5.0) as usize, cb.len() - 1);
+        // nearest: 0.08 is closer to 0.0796 than to 0.1609
+        assert_eq!(cb.decode(cb.encode(0.08)), cb.values[8]);
+    }
+
+    #[test]
+    fn encode_matches_linear_scan() {
+        let cb = Codebook::new(DType::FP8E4M3);
+        let mut rng = crate::util::rng::Rng::new(11);
+        for _ in 0..2000 {
+            let x = (rng.range_f64(-1.2, 1.2)) as f32;
+            let fast = cb.encode(x);
+            // reference: argmin |x - v| with ties to upper
+            let slow = cb
+                .values
+                .iter()
+                .enumerate()
+                .min_by(|(_, a), (_, b)| {
+                    let da = (x - **a).abs();
+                    let db = (x - **b).abs();
+                    da.partial_cmp(&db).unwrap().then(std::cmp::Ordering::Greater)
+                })
+                .unwrap()
+                .0;
+            assert_eq!(fast as usize, slow, "x={x}");
+        }
+    }
+
+    #[test]
+    fn fp4_e2m1_known_values() {
+        let cb = Codebook::new(DType::FP4E2M1);
+        let expect = [0.0f32, 1.0 / 12.0, 1.0 / 6.0, 0.25, 1.0 / 3.0, 0.5,
+                      2.0 / 3.0, 1.0];
+        let pos: Vec<f32> = cb.values.iter().copied().filter(|v| *v >= 0.0)
+            .collect();
+        for (a, b) in pos.iter().zip(expect.iter()) {
+            assert!((a - b).abs() < 1e-7, "{a} vs {b}");
+        }
+    }
+}

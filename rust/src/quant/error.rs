@@ -1,0 +1,110 @@
+//! Quantization-error measurement (drives Table 2 / Figure 3).
+//!
+//! Round-trips weight tensors through each datatype and reports MSE / MAE /
+//! SQNR. The experiments map measured error to the paper's perplexity /
+//! accuracy scales via documented calibration (see `experiments::table2`).
+
+use anyhow::Result;
+
+use super::absmax::{dequantize_blockwise, quantize_blockwise};
+use super::codebook::{Codebook, DType};
+use super::double::{double_dequantize, double_quantize};
+
+#[derive(Debug, Clone, Copy)]
+pub struct ErrorStats {
+    pub mse: f64,
+    pub mae: f64,
+    /// signal-to-quantization-noise ratio in dB
+    pub sqnr_db: f64,
+}
+
+/// Measure round-trip error of `x` under `dtype` (optionally with DQ).
+pub fn quant_error(
+    x: &[f32],
+    dtype: DType,
+    block: usize,
+    double_q: Option<usize>,
+) -> Result<ErrorStats> {
+    let cb = Codebook::new(dtype);
+    let (codes, absmax) = quantize_blockwise(x, &cb, block)?;
+    let absmax = match double_q {
+        Some(b2) => double_dequantize(&double_quantize(&absmax, b2)?)?,
+        None => absmax,
+    };
+    let y = dequantize_blockwise(&codes, &absmax, &cb, block)?;
+    let n = x.len() as f64;
+    let mut se = 0f64;
+    let mut ae = 0f64;
+    let mut power = 0f64;
+    for (a, b) in x.iter().zip(y.iter()) {
+        let e = (a - b) as f64;
+        se += e * e;
+        ae += e.abs();
+        power += (*a as f64) * (*a as f64);
+    }
+    let mse = se / n;
+    Ok(ErrorStats {
+        mse,
+        mae: ae / n,
+        sqnr_db: 10.0 * ((power / n) / mse.max(1e-30)).log10(),
+    })
+}
+
+/// The paper's weight model: mostly zero-centered normal (Appendix F) with
+/// a small fraction of outlier coordinates (the LLM.int8() phenomenology
+/// the paper's block-wise design targets). `frac`/`scale` control outliers.
+pub fn synthetic_llm_weights(
+    rng: &mut crate::util::rng::Rng,
+    n: usize,
+    outlier_frac: f64,
+    outlier_scale: f64,
+) -> Vec<f32> {
+    (0..n)
+        .map(|_| {
+            let z = rng.normal();
+            if rng.bool(outlier_frac) {
+                (z * outlier_scale) as f32
+            } else {
+                z as f32
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn ordering_on_llm_weights() {
+        // Figure 3 / Table 2 headline shape: NF4 best, Int4 worst.
+        let mut rng = Rng::new(21);
+        let x = synthetic_llm_weights(&mut rng, 64 * 512, 0.01, 5.0);
+        let e = |dt| quant_error(&x, dt, 64, None).unwrap().mse;
+        let nf4 = e(DType::NF4);
+        let fp4 = e(DType::FP4E2M1);
+        let int4 = e(DType::Int4);
+        assert!(nf4 < fp4, "nf4 {nf4} < fp4 {fp4}");
+        assert!(fp4 < int4, "fp4 {fp4} < int4 {int4}");
+    }
+
+    #[test]
+    fn dq_adds_negligible_error() {
+        // paper: "double quantization ... without degrading performance"
+        let mut rng = Rng::new(22);
+        let x = synthetic_llm_weights(&mut rng, 64 * 2048, 0.01, 5.0);
+        let plain = quant_error(&x, DType::NF4, 64, None).unwrap().mse;
+        let dq = quant_error(&x, DType::NF4, 64, Some(256)).unwrap().mse;
+        assert!(dq < plain * 1.02, "dq {dq} vs plain {plain}");
+    }
+
+    #[test]
+    fn int8_much_better_than_4bit() {
+        let mut rng = Rng::new(23);
+        let x = synthetic_llm_weights(&mut rng, 64 * 256, 0.0, 1.0);
+        let i8e = quant_error(&x, DType::Int8, 64, None).unwrap().mse;
+        let nf4 = quant_error(&x, DType::NF4, 64, None).unwrap().mse;
+        assert!(i8e * 20.0 < nf4);
+    }
+}

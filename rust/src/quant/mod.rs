@@ -1,0 +1,26 @@
+//! Native quantization substrate: bit-compatible Rust twin of the L1
+//! kernels (`python/compile/kernels/ref.py`).
+//!
+//! Implements the paper's full quantization stack — block-wise absmax
+//! quantization (Eq. 1–2) over codebook datatypes (NF4 from Appendix E,
+//! FP4-E2M1/E3M0, Int4/Int8, FP8-E4M3), Double Quantization of the
+//! quantization constants (section 3), and nibble packing. Cross-checked
+//! bit-for-bit against the Python reference via golden vectors emitted by
+//! `aot.py` (see `rust/tests/golden.rs`).
+//!
+//! This substrate backs: weight preparation for the runtime, the memory
+//! model, Table 2 / Figure 3 quantization-error measurements, and the
+//! quantization benches.
+
+pub mod absmax;
+pub mod codebook;
+pub mod double;
+pub mod error;
+pub mod pack;
+pub mod tensor;
+
+pub use absmax::{dequantize_blockwise, quantize_blockwise};
+pub use codebook::{Codebook, DType};
+pub use double::{double_dequantize, double_quantize, DoubleQuant};
+pub use pack::{pack_nibbles, unpack_nibbles};
+pub use tensor::QuantizedTensor;

@@ -1,0 +1,51 @@
+//! 4-bit code packing: two codes per byte (`lo | hi << 4`), matching
+//! `ref.pack_nibbles`. This is the storage format of NF4/FP4 weights.
+
+use anyhow::{ensure, Result};
+
+pub fn pack_nibbles(codes: &[u8]) -> Result<Vec<u8>> {
+    ensure!(codes.len() % 2 == 0, "need even number of codes");
+    ensure!(codes.iter().all(|&c| c < 16), "codes must fit 4 bits");
+    Ok(codes
+        .chunks_exact(2)
+        .map(|p| p[0] | (p[1] << 4))
+        .collect())
+}
+
+pub fn unpack_nibbles(packed: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(packed.len() * 2);
+    for &b in packed {
+        out.push(b & 0xF);
+        out.push(b >> 4);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn known_bytes() {
+        assert_eq!(pack_nibbles(&[0x1, 0x2, 0xF, 0x0]).unwrap(), vec![0x21, 0x0F]);
+        assert_eq!(unpack_nibbles(&[0x21, 0x0F]), vec![0x1, 0x2, 0xF, 0x0]);
+    }
+
+    #[test]
+    fn rejects_invalid() {
+        assert!(pack_nibbles(&[1, 2, 3]).is_err()); // odd
+        assert!(pack_nibbles(&[16, 0]).is_err()); // out of range
+    }
+
+    #[test]
+    fn prop_bijection() {
+        prop::check("pack-bijection", prop::default_cases(), |rng| {
+            let n = 2 * (1 + rng.below(512));
+            let codes: Vec<u8> = (0..n).map(|_| rng.below(16) as u8).collect();
+            let packed = pack_nibbles(&codes).unwrap();
+            assert_eq!(packed.len(), n / 2);
+            assert_eq!(unpack_nibbles(&packed), codes);
+        });
+    }
+}

@@ -1,0 +1,199 @@
+//! Artifact manifest: the contract between the AOT compile path and the
+//! Rust coordinator. `manifest.json` lists, per model configuration, the
+//! HLO files, the init-tensor file, and the exact I/O signatures
+//! (state ++ frozen ++ data → state' ++ loss). The trainer is generic over
+//! this contract — it never hard-codes model internals.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Value;
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    fn parse(v: &Value) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: v.get("name")?.str()?.to_string(),
+            dtype: v.get("dtype")?.str()?.to_string(),
+            shape: v
+                .get("shape")?
+                .arr()?
+                .iter()
+                .map(|d| d.usize())
+                .collect::<Result<_>>()?,
+        })
+    }
+
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// Model configuration mirrored from `python/compile/configs.py`.
+#[derive(Debug, Clone)]
+pub struct ModelCfg {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub quant: String,
+    pub double_quant: bool,
+    pub lora: bool,
+    pub lora_r: usize,
+    pub lora_scope: String,
+    pub lr: f64,
+}
+
+impl ModelCfg {
+    fn parse(v: &Value) -> Result<ModelCfg> {
+        Ok(ModelCfg {
+            name: v.get("name")?.str()?.to_string(),
+            vocab: v.get("vocab")?.usize()?,
+            d_model: v.get("d_model")?.usize()?,
+            n_layers: v.get("n_layers")?.usize()?,
+            n_heads: v.get("n_heads")?.usize()?,
+            d_ff: v.get("d_ff")?.usize()?,
+            seq_len: v.get("seq_len")?.usize()?,
+            batch: v.get("batch")?.usize()?,
+            quant: v.get("quant")?.str()?.to_string(),
+            double_quant: v.get("double_quant")?.boolean()?,
+            lora: v.get("lora")?.boolean()?,
+            lora_r: v.get("lora_r")?.usize()?,
+            lora_scope: v.get("lora_scope")?.str()?.to_string(),
+            lr: v.get("lr")?.num()?,
+        })
+    }
+
+    pub fn n_params(&self) -> usize {
+        let (d, f, v) = (self.d_model, self.d_ff, self.vocab);
+        v * d + self.n_layers * (4 * d * d + 3 * d * f + 2 * d) + d
+    }
+}
+
+/// One AOT-compiled model configuration.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub cfg: ModelCfg,
+    pub train_hlo: PathBuf,
+    pub eval_hlo: PathBuf,
+    pub fwd_hlo: Option<PathBuf>,
+    pub init: PathBuf,
+    pub n_state: usize,
+    pub n_trainable: usize,
+    pub n_frozen: usize,
+    pub state_sig: Vec<TensorSpec>,
+    pub frozen_sig: Vec<TensorSpec>,
+    pub data_sig: Vec<TensorSpec>,
+}
+
+/// The parsed `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+    pub raw: Value,
+}
+
+impl Manifest {
+    /// Default artifact directory: `$QLORA_ARTIFACTS` or `artifacts/`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("QLORA_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "cannot read {path:?} — run `make artifacts` first"
+            )
+        })?;
+        let raw = Value::parse(&text)?;
+        let mut artifacts = Vec::new();
+        for a in raw.get("artifacts")?.arr()? {
+            let sigs = |key: &str| -> Result<Vec<TensorSpec>> {
+                a.get(key)?.arr()?.iter().map(TensorSpec::parse).collect()
+            };
+            artifacts.push(ArtifactSpec {
+                name: a.get("name")?.str()?.to_string(),
+                cfg: ModelCfg::parse(a.get("config")?)?,
+                train_hlo: dir.join(a.get("train_hlo")?.str()?),
+                eval_hlo: dir.join(a.get("eval_hlo")?.str()?),
+                fwd_hlo: a
+                    .opt("fwd_hlo")
+                    .and_then(|v| v.str().ok())
+                    .map(|s| dir.join(s)),
+                init: dir.join(a.get("init")?.str()?),
+                n_state: a.get("n_state")?.usize()?,
+                n_trainable: a.get("n_trainable")?.usize()?,
+                n_frozen: a.get("n_frozen")?.usize()?,
+                state_sig: sigs("state_sig")?,
+                frozen_sig: sigs("frozen_sig")?,
+                data_sig: sigs("data_sig")?,
+            });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts, raw })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| {
+                anyhow!(
+                    "artifact {name:?} not in manifest (have: {})",
+                    self.artifacts
+                        .iter()
+                        .map(|a| a.name.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let dir = std::env::temp_dir().join("qlora_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let json = r#"{"artifacts": [{
+            "name": "t", "train_hlo": "t.train.hlo.txt",
+            "eval_hlo": "t.eval.hlo.txt", "init": "t.init.tensors",
+            "n_state": 2, "n_trainable": 1, "n_frozen": 1,
+            "config": {"name": "t", "vocab": 8, "d_model": 4,
+                "n_layers": 1, "n_heads": 1, "d_ff": 8, "seq_len": 4,
+                "batch": 2, "quant": "nf4", "double_quant": true,
+                "block": 64, "block2": 256, "lora": true, "lora_r": 2,
+                "lora_alpha": 16, "lora_scope": "all", "lr": 0.0002,
+                "adam_b1": 0.9, "adam_b2": 0.999, "adam_eps": 1e-8,
+                "max_grad_norm": 0.3, "remat": true},
+            "state_sig": [{"name": "a", "dtype": "f32", "shape": [2]},
+                          {"name": "s", "dtype": "f32", "shape": []}],
+            "frozen_sig": [{"name": "w", "dtype": "u8", "shape": [4]}],
+            "data_sig": [{"name": "tokens", "dtype": "i32", "shape": [2, 4]}]
+        }]}"#;
+        std::fs::write(dir.join("manifest.json"), json).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let a = m.get("t").unwrap();
+        assert_eq!(a.cfg.d_model, 4);
+        assert_eq!(a.state_sig[1].elems(), 1);
+        assert!(m.get("missing").is_err());
+    }
+}

@@ -1,0 +1,64 @@
+//! The PJRT CPU client + executable cache.
+//!
+//! One `Runtime` owns the PJRT client and a cache of compiled executables
+//! keyed by HLO path, so repeated experiment runs over the same artifact
+//! compile once. HLO **text** is the interchange format (xla_extension
+//! 0.5.1 rejects jax>=0.5 serialized protos; the text parser reassigns
+//! instruction ids — see DESIGN.md section 4).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use super::executor::Executable;
+
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    cache: Mutex<HashMap<PathBuf, std::sync::Arc<Executable>>>,
+}
+
+impl Runtime {
+    /// Create the CPU PJRT client. Expensive — create once, share.
+    pub fn cpu() -> Result<Runtime> {
+        let client =
+            xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text file (cached).
+    pub fn load_hlo(&self, path: &Path) -> Result<std::sync::Arc<Executable>> {
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(e) = cache.get(path) {
+                return Ok(e.clone());
+            }
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 path {path:?}"))?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path:?}"))?;
+        let arc = std::sync::Arc::new(Executable::new(exe));
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(path.to_path_buf(), arc.clone());
+        Ok(arc)
+    }
+
+    /// Number of compiled executables held in the cache.
+    pub fn cache_len(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}

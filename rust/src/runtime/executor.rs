@@ -1,0 +1,88 @@
+//! Execution helpers: `Tensor` ⇄ `xla::Literal` conversion and tuple-result
+//! handling. Every AOT graph is lowered with `return_tuple=True`, so an
+//! execution returns one tuple literal which we decompose into outputs.
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::tensorio::{Dt, Tensor};
+
+/// A compiled PJRT executable plus run statistics.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub runs: std::sync::atomic::AtomicU64,
+}
+
+impl Executable {
+    pub fn new(exe: xla::PjRtLoadedExecutable) -> Executable {
+        Executable { exe, runs: std::sync::atomic::AtomicU64::new(0) }
+    }
+
+    /// Execute with literal inputs; returns the decomposed output tuple.
+    pub fn run(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.runs
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let out = self
+            .exe
+            .execute::<&xla::Literal>(inputs)
+            .context("PJRT execute")?;
+        ensure!(!out.is_empty() && !out[0].is_empty(), "no outputs");
+        let mut lit = out[0][0].to_literal_sync()?;
+        Ok(lit.decompose_tuple()?)
+    }
+}
+
+/// Build a Literal from a host tensor.
+pub fn literal_from_tensor(t: &Tensor) -> Result<xla::Literal> {
+    let ty = match t.dtype {
+        Dt::F32 => xla::ElementType::F32,
+        Dt::U8 => xla::ElementType::U8,
+        Dt::I32 => xla::ElementType::S32,
+    };
+    let dims: Vec<usize> = t.shape.clone();
+    xla::Literal::create_from_shape_and_untyped_data(ty, &dims, &t.data)
+        .with_context(|| format!("literal for {}", t.name))
+}
+
+/// Copy a Literal's f32 payload to a Vec.
+pub fn literal_to_f32(l: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(l.to_vec::<f32>()?)
+}
+
+/// Copy a Literal back into a named host tensor (dtype from the literal).
+pub fn literal_to_tensor(name: &str, l: &xla::Literal) -> Result<Tensor> {
+    let shape = l.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let dtype = match shape.ty() {
+        xla::ElementType::F32 => Dt::F32,
+        xla::ElementType::U8 => Dt::U8,
+        xla::ElementType::S32 => Dt::I32,
+        t => bail!("unsupported element type {t:?}"),
+    };
+    let mut data = vec![0u8; l.size_bytes()];
+    match dtype {
+        Dt::F32 => {
+            let v = l.to_vec::<f32>()?;
+            data.clear();
+            for x in v {
+                data.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        Dt::I32 => {
+            let v = l.to_vec::<i32>()?;
+            data.clear();
+            for x in v {
+                data.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        Dt::U8 => {
+            let v = l.to_vec::<u8>()?;
+            data = v;
+        }
+    }
+    Ok(Tensor { name: name.to_string(), dtype, shape: dims, data })
+}
+
+/// Extract the scalar f32 from a literal.
+pub fn literal_scalar_f32(l: &xla::Literal) -> Result<f32> {
+    Ok(l.get_first_element::<f32>()?)
+}

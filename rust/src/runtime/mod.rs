@@ -1,0 +1,11 @@
+//! PJRT runtime: loads AOT artifacts (HLO text lowered by
+//! `python/compile/aot.py`), compiles them on the CPU PJRT client, and
+//! executes them from the coordinator hot path. Python is never involved.
+
+pub mod artifact;
+pub mod client;
+pub mod executor;
+
+pub use artifact::{ArtifactSpec, Manifest, ModelCfg, TensorSpec};
+pub use client::Runtime;
+pub use executor::{literal_from_tensor, literal_to_f32, Executable};

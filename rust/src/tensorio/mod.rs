@@ -1,0 +1,225 @@
+//! `.tensors` binary interchange format — Rust twin of
+//! `python/compile/tensorio.py`.
+//!
+//! Layout: magic `QLT1`, u32-LE header length, JSON header
+//! (`{"tensors": [{name, dtype, shape, offset, nbytes}, ...]}`),
+//! then a raw little-endian data section. Tensor *order* is semantic:
+//! it is the HLO parameter order for artifact init files.
+
+use std::fs;
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::util::json::Value;
+
+pub const MAGIC: &[u8; 4] = b"QLT1";
+
+/// Supported dtypes across the AOT boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dt {
+    F32,
+    U8,
+    I32,
+}
+
+impl Dt {
+    pub fn name(self) -> &'static str {
+        match self {
+            Dt::F32 => "f32",
+            Dt::U8 => "u8",
+            Dt::I32 => "i32",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<Dt> {
+        Ok(match s {
+            "f32" => Dt::F32,
+            "u8" => Dt::U8,
+            "i32" => Dt::I32,
+            _ => bail!("unknown dtype {s:?}"),
+        })
+    }
+
+    pub fn size(self) -> usize {
+        match self {
+            Dt::U8 => 1,
+            _ => 4,
+        }
+    }
+}
+
+/// A named host tensor (raw little-endian bytes + shape + dtype).
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub name: String,
+    pub dtype: Dt,
+    pub shape: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+impl Tensor {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product::<usize>().max(
+            if self.shape.is_empty() { 1 } else { 0 },
+        )
+    }
+
+    pub fn f32(name: &str, shape: Vec<usize>, vals: &[f32]) -> Tensor {
+        let mut data = Vec::with_capacity(vals.len() * 4);
+        for v in vals {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Tensor { name: name.into(), dtype: Dt::F32, shape, data }
+    }
+
+    pub fn i32(name: &str, shape: Vec<usize>, vals: &[i32]) -> Tensor {
+        let mut data = Vec::with_capacity(vals.len() * 4);
+        for v in vals {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Tensor { name: name.into(), dtype: Dt::I32, shape, data }
+    }
+
+    pub fn u8(name: &str, shape: Vec<usize>, vals: Vec<u8>) -> Tensor {
+        Tensor { name: name.into(), dtype: Dt::U8, shape, data: vals }
+    }
+
+    pub fn to_f32(&self) -> Result<Vec<f32>> {
+        ensure!(self.dtype == Dt::F32, "{} is not f32", self.name);
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn to_i32(&self) -> Result<Vec<i32>> {
+        ensure!(self.dtype == Dt::I32, "{} is not i32", self.name);
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+/// Write tensors preserving order.
+pub fn write_tensors(path: &Path, tensors: &[Tensor]) -> Result<()> {
+    let mut entries = Vec::new();
+    let mut offset = 0usize;
+    for t in tensors {
+        entries.push(Value::object(vec![
+            ("name", Value::s(t.name.clone())),
+            ("dtype", Value::s(t.dtype.name())),
+            (
+                "shape",
+                Value::array(t.shape.iter().map(|&d| Value::n(d as f64))),
+            ),
+            ("offset", Value::n(offset as f64)),
+            ("nbytes", Value::n(t.data.len() as f64)),
+        ]));
+        offset += t.data.len();
+    }
+    let header =
+        Value::object(vec![("tensors", Value::Arr(entries))]).to_string();
+    let mut f = fs::File::create(path)
+        .with_context(|| format!("create {path:?}"))?;
+    f.write_all(MAGIC)?;
+    f.write_all(&(header.len() as u32).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    for t in tensors {
+        f.write_all(&t.data)?;
+    }
+    Ok(())
+}
+
+/// Read all tensors (order preserved).
+pub fn read_tensors(path: &Path) -> Result<Vec<Tensor>> {
+    let bytes =
+        fs::read(path).with_context(|| format!("read {path:?}"))?;
+    ensure!(bytes.len() >= 8 && &bytes[..4] == MAGIC, "bad magic in {path:?}");
+    let hlen =
+        u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]) as usize;
+    ensure!(bytes.len() >= 8 + hlen, "truncated header in {path:?}");
+    let header = std::str::from_utf8(&bytes[8..8 + hlen])?;
+    let v = Value::parse(header)?;
+    let data = &bytes[8 + hlen..];
+    let mut out = Vec::new();
+    for e in v.get("tensors")?.arr()? {
+        let name = e.get("name")?.str()?.to_string();
+        let dtype = Dt::from_name(e.get("dtype")?.str()?)?;
+        let shape: Vec<usize> = e
+            .get("shape")?
+            .arr()?
+            .iter()
+            .map(|d| d.usize())
+            .collect::<Result<_>>()?;
+        let offset = e.get("offset")?.usize()?;
+        let nbytes = e.get("nbytes")?.usize()?;
+        ensure!(
+            offset + nbytes <= data.len(),
+            "tensor {name} out of bounds"
+        );
+        let expected: usize =
+            shape.iter().product::<usize>().max(1) * dtype.size();
+        ensure!(
+            nbytes == expected,
+            "tensor {name}: {nbytes} bytes but shape {shape:?} implies {expected}"
+        );
+        out.push(Tensor {
+            name,
+            dtype,
+            shape,
+            data: data[offset..offset + nbytes].to_vec(),
+        });
+    }
+    Ok(out)
+}
+
+/// Look up a tensor by name.
+pub fn find<'a>(tensors: &'a [Tensor], name: &str) -> Result<&'a Tensor> {
+    tensors
+        .iter()
+        .find(|t| t.name == name)
+        .ok_or_else(|| anyhow!("tensor {name:?} not found"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("qlora_tio_test");
+        fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.tensors");
+        let ts = vec![
+            Tensor::f32("a/b", vec![2, 3], &[1.0, -2.5, 3.0, 0.0, 5.5, -6.0]),
+            Tensor::u8("codes", vec![4], vec![1, 2, 3, 255]),
+            Tensor::i32("tok", vec![2], &[7, -9]),
+            Tensor::f32("scalar", vec![], &[42.0]),
+        ];
+        write_tensors(&path, &ts).unwrap();
+        let back = read_tensors(&path).unwrap();
+        assert_eq!(back.len(), 4);
+        assert_eq!(back[0].name, "a/b");
+        assert_eq!(back[0].to_f32().unwrap(), ts[0].to_f32().unwrap());
+        assert_eq!(back[1].data, vec![1, 2, 3, 255]);
+        assert_eq!(back[2].to_i32().unwrap(), vec![7, -9]);
+        assert_eq!(back[3].shape, Vec::<usize>::new());
+        assert_eq!(back[3].to_f32().unwrap(), vec![42.0]);
+        assert_eq!(find(&back, "tok").unwrap().name, "tok");
+        assert!(find(&back, "nope").is_err());
+    }
+
+    #[test]
+    fn rejects_corrupt() {
+        let dir = std::env::temp_dir().join("qlora_tio_test2");
+        fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.tensors");
+        fs::write(&path, b"NOPE1234").unwrap();
+        assert!(read_tensors(&path).is_err());
+    }
+}

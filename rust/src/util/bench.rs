@@ -1,0 +1,170 @@
+//! Mini-criterion: a timing harness for `rust/benches/` (the offline
+//! registry has no `criterion`). Warmup + timed iterations, reports
+//! mean / median / p95 / stddev and optional throughput.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement summary.
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub std_ns: f64,
+    /// items/sec if `throughput_items` was set
+    pub throughput: Option<f64>,
+}
+
+impl Summary {
+    pub fn print(&self) {
+        let tp = match self.throughput {
+            Some(t) => format!("  {:>12}/s", human_count(t)),
+            None => String::new(),
+        };
+        println!(
+            "{:<44} {:>10}  median {:>10}  p95 {:>10}  ±{:>9}{}",
+            self.name,
+            human_ns(self.mean_ns),
+            human_ns(self.median_ns),
+            human_ns(self.p95_ns),
+            human_ns(self.std_ns),
+            tp
+        );
+    }
+}
+
+pub fn human_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.0} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+pub fn human_count(x: f64) -> String {
+    if x >= 1e9 {
+        format!("{:.2}G", x / 1e9)
+    } else if x >= 1e6 {
+        format!("{:.2}M", x / 1e6)
+    } else if x >= 1e3 {
+        format!("{:.2}k", x / 1e3)
+    } else {
+        format!("{x:.1}")
+    }
+}
+
+/// Bench runner with a time budget per benchmark.
+pub struct Bencher {
+    warmup: Duration,
+    budget: Duration,
+    min_iters: usize,
+    max_iters: usize,
+    pub results: Vec<Summary>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        // QLORA_BENCH_FAST=1 shrinks budgets (used by `cargo test` smoke)
+        let fast = std::env::var("QLORA_BENCH_FAST").is_ok();
+        Bencher {
+            warmup: Duration::from_millis(if fast { 20 } else { 200 }),
+            budget: Duration::from_millis(if fast { 100 } else { 1500 }),
+            min_iters: 5,
+            max_iters: 100_000,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time `f`, which performs ONE iteration of the measured operation.
+    /// Use the return value to prevent the optimizer from discarding work.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &Summary {
+        self.bench_with_items(name, None, &mut f)
+    }
+
+    /// Like `bench`, with a throughput annotation: `items` processed per call.
+    pub fn bench_items<T, F: FnMut() -> T>(
+        &mut self,
+        name: &str,
+        items: usize,
+        mut f: F,
+    ) -> &Summary {
+        self.bench_with_items(name, Some(items), &mut f)
+    }
+
+    fn bench_with_items<T>(
+        &mut self,
+        name: &str,
+        items: Option<usize>,
+        f: &mut dyn FnMut() -> T,
+    ) -> &Summary {
+        // warmup
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            std::hint::black_box(f());
+        }
+        // measure
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        while (start.elapsed() < self.budget && samples_ns.len() < self.max_iters)
+            || samples_ns.len() < self.min_iters
+        {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples_ns.push(t0.elapsed().as_nanos() as f64);
+        }
+        let mean = crate::util::stats::mean(&samples_ns);
+        let summary = Summary {
+            name: name.to_string(),
+            iters: samples_ns.len(),
+            mean_ns: mean,
+            median_ns: crate::util::stats::median(&samples_ns),
+            p95_ns: crate::util::stats::percentile(&samples_ns, 95.0),
+            std_ns: crate::util::stats::std_dev(&samples_ns),
+            throughput: items.map(|n| n as f64 / (mean / 1e9)),
+        };
+        summary.print();
+        self.results.push(summary);
+        self.results.last().unwrap()
+    }
+
+    /// Header line for a bench group.
+    pub fn group(&self, title: &str) {
+        println!("\n== {title} ==");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        std::env::set_var("QLORA_BENCH_FAST", "1");
+        let mut b = Bencher::new();
+        let s = b.bench("noop-ish", || {
+            (0..100).map(|i: u64| i.wrapping_mul(31)).sum::<u64>()
+        });
+        assert!(s.mean_ns > 0.0);
+        assert!(s.iters >= 5);
+    }
+
+    #[test]
+    fn human_formats() {
+        assert_eq!(human_ns(500.0), "500 ns");
+        assert!(human_ns(2500.0).contains("µs"));
+        assert!(human_ns(2.5e6).contains("ms"));
+        assert!(human_count(2.5e6).contains('M'));
+    }
+}

@@ -1,0 +1,10 @@
+//! Self-built substrates the offline environment forces us to own:
+//! PRNG, JSON, statistics, a property-test runner, a mini bench harness,
+//! and a CLI parser. Each is small, tested, and purpose-bound.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

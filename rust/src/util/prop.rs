@@ -1,0 +1,91 @@
+//! Tiny property-based testing runner (the offline registry has no
+//! `proptest`). Runs a closure over many seeded random cases and reports
+//! the failing seed so a failure is reproducible with `PROP_SEED=<n>`.
+
+use crate::util::rng::Rng;
+
+/// Number of cases per property (override with env `PROP_CASES`).
+pub fn default_cases() -> usize {
+    std::env::var("PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `f` over `cases` random cases. `f` gets a per-case RNG; it should
+/// panic (assert!) on property violation. If env `PROP_SEED` is set, only
+/// that seed is run (reproduction mode).
+pub fn check<F: FnMut(&mut Rng)>(name: &str, cases: usize, mut f: F) {
+    if let Ok(s) = std::env::var("PROP_SEED") {
+        let seed: u64 = s.parse().expect("PROP_SEED must be u64");
+        let mut rng = Rng::new(seed);
+        f(&mut rng);
+        return;
+    }
+    for case in 0..cases {
+        let seed = 0x5EED_0000u64 + case as u64;
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || f(&mut rng),
+        ));
+        if let Err(e) = result {
+            eprintln!(
+                "property {name:?} failed at case {case} \
+                 (reproduce with PROP_SEED={seed})"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Generators for common shapes.
+pub mod gen {
+    use crate::util::rng::Rng;
+
+    /// Random length that is a multiple of `block`, between 1 and
+    /// `max_blocks` blocks.
+    pub fn blocked_len(rng: &mut Rng, block: usize, max_blocks: usize) -> usize {
+        block * (1 + rng.below(max_blocks))
+    }
+
+    /// Vector of normals with random scale (exercises absmax scaling).
+    pub fn weight_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        let scale = 10f64.powf(rng.range_f64(-3.0, 2.0));
+        (0..n).map(|_| (rng.normal() * scale) as f32).collect()
+    }
+
+    /// Vector with outliers mixed in (LLM.int8() phenomenology).
+    pub fn outlier_vec(rng: &mut Rng, n: usize, frac: f64, scale: f64) -> Vec<f32> {
+        (0..n)
+            .map(|_| {
+                let x = rng.normal();
+                if rng.bool(frac) {
+                    (x * scale) as f32
+                } else {
+                    x as f32
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_cases() {
+        let mut n = 0;
+        check("counter", 10, |_rng| n += 1);
+        assert_eq!(n, 10);
+    }
+
+    #[test]
+    fn rng_is_per_case_deterministic() {
+        let mut first = Vec::new();
+        check("det", 5, |rng| first.push(rng.next_u64()));
+        let mut second = Vec::new();
+        check("det", 5, |rng| second.push(rng.next_u64()));
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,331 @@
+//! Statistics used by the evaluation harness: descriptive stats, bootstrap
+//! confidence intervals, and the agreement measures the paper reports
+//! (Kendall τ, Spearman ρ, Fleiss κ — section 5.3 / 6.2).
+
+use crate::util::rng::Rng;
+
+/// Arithmetic mean (0.0 for empty input).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (n-1 denominator).
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (xs.len() - 1) as f64)
+        .sqrt()
+}
+
+/// Median (averages the middle pair for even n).
+pub fn median(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        (v[n / 2 - 1] + v[n / 2]) / 2.0
+    }
+}
+
+/// p-th percentile (p in [0,100]) by linear interpolation.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    v[lo] * (1.0 - frac) + v[hi] * frac
+}
+
+/// Normal-approximation 95% CI half-width of the mean.
+pub fn ci95_halfwidth(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    1.96 * std_dev(xs) / (xs.len() as f64).sqrt()
+}
+
+/// Bootstrap 95% CI of the mean (percentile method), deterministic in seed.
+pub fn bootstrap_ci95(xs: &[f64], resamples: usize, seed: u64) -> (f64, f64) {
+    let mut rng = Rng::new(seed);
+    let mut means = Vec::with_capacity(resamples);
+    for _ in 0..resamples {
+        let s: f64 = (0..xs.len()).map(|_| xs[rng.below(xs.len())]).sum();
+        means.push(s / xs.len() as f64);
+    }
+    (percentile(&means, 2.5), percentile(&means, 97.5))
+}
+
+/// Kendall rank correlation τ (tau-a; the paper reports τ = 0.43 between
+/// GPT-4 and human system-level rankings).
+pub fn kendall_tau(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let mut concordant = 0i64;
+    let mut discordant = 0i64;
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let s = (a[i] - a[j]) * (b[i] - b[j]);
+            if s > 0.0 {
+                concordant += 1;
+            } else if s < 0.0 {
+                discordant += 1;
+            }
+        }
+    }
+    let pairs = (n * (n - 1) / 2) as f64;
+    (concordant - discordant) as f64 / pairs
+}
+
+fn ranks(xs: &[f64]) -> Vec<f64> {
+    let n = xs.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&i, &j| xs[i].partial_cmp(&xs[j]).unwrap());
+    let mut r = vec![0.0; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && xs[idx[j + 1]] == xs[idx[i]] {
+            j += 1;
+        }
+        let avg = (i + j) as f64 / 2.0 + 1.0; // 1-based average rank for ties
+        for k in i..=j {
+            r[idx[k]] = avg;
+        }
+        i = j + 1;
+    }
+    r
+}
+
+/// Pearson correlation.
+pub fn pearson(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let (ma, mb) = (mean(a), mean(b));
+    let mut num = 0.0;
+    let mut da = 0.0;
+    let mut db = 0.0;
+    for i in 0..a.len() {
+        num += (a[i] - ma) * (b[i] - mb);
+        da += (a[i] - ma).powi(2);
+        db += (b[i] - mb).powi(2);
+    }
+    if da == 0.0 || db == 0.0 {
+        return 0.0;
+    }
+    num / (da * db).sqrt()
+}
+
+/// Spearman rank correlation ρ (paper: r = 0.55 system level).
+pub fn spearman(a: &[f64], b: &[f64]) -> f64 {
+    pearson(&ranks(a), &ranks(b))
+}
+
+/// Fleiss' κ for inter-annotator agreement on categorical labels.
+///
+/// `counts[i][c]` = number of annotators assigning category c to item i;
+/// every row must sum to the same number of annotators n >= 2.
+/// (Paper: κ = 0.42 among humans, κ = 0.25 GPT-4 vs human majority.)
+pub fn fleiss_kappa(counts: &[Vec<usize>]) -> f64 {
+    let items = counts.len();
+    assert!(items > 0);
+    let cats = counts[0].len();
+    let n: usize = counts[0].iter().sum();
+    assert!(n >= 2, "need >=2 annotators");
+    // per-category proportions
+    let mut pj = vec![0.0; cats];
+    for row in counts {
+        debug_assert_eq!(row.iter().sum::<usize>(), n);
+        for (j, &c) in row.iter().enumerate() {
+            pj[j] += c as f64;
+        }
+    }
+    let total = (items * n) as f64;
+    for p in pj.iter_mut() {
+        *p /= total;
+    }
+    // per-item agreement
+    let mut pbar = 0.0;
+    for row in counts {
+        let s: f64 = row.iter().map(|&c| (c * c) as f64).sum();
+        pbar += (s - n as f64) / (n as f64 * (n as f64 - 1.0));
+    }
+    pbar /= items as f64;
+    let pe: f64 = pj.iter().map(|p| p * p).sum();
+    if (1.0 - pe).abs() < 1e-12 {
+        return 1.0;
+    }
+    (pbar - pe) / (1.0 - pe)
+}
+
+/// Inverse standard normal CDF (Acklam's algorithm, |err| < 1.15e-9).
+/// Used by the Rust NF4 codebook construction — must agree with
+/// `jax.scipy.special.ndtri` to float32 precision (golden-tested).
+pub fn ndtri(p: f64) -> f64 {
+    assert!(p > 0.0 && p < 1.0, "ndtri domain: 0 < p < 1, got {p}");
+    const A: [f64; 6] = [
+        -3.969683028665376e+01, 2.209460984245205e+02,
+        -2.759285104469687e+02, 1.383577518672690e+02,
+        -3.066479806614716e+01, 2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01, 1.615858368580409e+02,
+        -1.556989798598866e+02, 6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03, -3.223964580411365e-01,
+        -2.400758277161838e+00, -2.549732539343734e+00,
+        4.374664141464968e+00, 2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03, 3.224671290700398e-01,
+        2.445134137142996e+00, 3.754408661907416e+00,
+    ];
+    let plow = 0.02425;
+    let x = if p < plow {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - plow {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5])
+            * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r
+                + 1.0)
+    } else {
+        let q = (-2.0 * (1.0 - p).ln()).sqrt();
+        -(((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    };
+    // one Halley refinement step against the normal CDF
+    let e = 0.5 * erfc_scalar(-x / std::f64::consts::SQRT_2) - p;
+    let u = e * (2.0 * std::f64::consts::PI).sqrt() * (x * x / 2.0).exp();
+    x - u / (1.0 + x * u / 2.0)
+}
+
+/// Complementary error function (Numerical Recipes rational approximation,
+/// |rel err| < 1.2e-7, refined by the Halley step in `ndtri`).
+fn erfc_scalar(x: f64) -> f64 {
+    let z = x.abs();
+    let t = 1.0 / (1.0 + 0.5 * z);
+    let ans = t
+        * (-z * z - 1.26551223
+            + t * (1.00002368
+                + t * (0.37409196
+                    + t * (0.09678418
+                        + t * (-0.18628806
+                            + t * (0.27886807
+                                + t * (-1.13520398
+                                    + t * (1.48851587
+                                        + t * (-0.82215223
+                                            + t * 0.17087277)))))))))
+        .exp();
+    if x >= 0.0 {
+        ans
+    } else {
+        2.0 - ans
+    }
+}
+
+/// Standard normal CDF.
+pub fn ndtr(x: f64) -> f64 {
+    0.5 * erfc_scalar(-x / std::f64::consts::SQRT_2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_descriptive() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert_eq!(median(&xs), 2.5);
+        assert!((std_dev(&xs) - 1.2909944).abs() < 1e-6);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+    }
+
+    #[test]
+    fn kendall_perfect_and_reversed() {
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [4.0, 3.0, 2.0, 1.0];
+        assert_eq!(kendall_tau(&a, &a), 1.0);
+        assert_eq!(kendall_tau(&a, &b), -1.0);
+    }
+
+    #[test]
+    fn spearman_monotone() {
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let b = [1.0, 4.0, 9.0, 16.0, 25.0]; // monotone transform
+        assert!((spearman(&a, &b) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fleiss_kappa_ranges() {
+        // perfect agreement
+        let perfect = vec![vec![3, 0], vec![0, 3], vec![3, 0]];
+        assert!((fleiss_kappa(&perfect) - 1.0).abs() < 1e-12);
+        // the classic Fleiss (1971) worked example value 0.2099 (wikipedia)
+        let wiki = vec![
+            vec![0, 0, 0, 0, 14],
+            vec![0, 2, 6, 4, 2],
+            vec![0, 0, 3, 5, 6],
+            vec![0, 3, 9, 2, 0],
+            vec![2, 2, 8, 1, 1],
+            vec![7, 7, 0, 0, 0],
+            vec![3, 2, 6, 3, 0],
+            vec![2, 5, 3, 2, 2],
+            vec![6, 5, 2, 1, 0],
+            vec![0, 2, 2, 3, 7],
+        ];
+        assert!((fleiss_kappa(&wiki) - 0.2099).abs() < 1e-3);
+    }
+
+    #[test]
+    fn ndtri_matches_known_quantiles() {
+        // reference values from scipy.special.ndtri
+        for (p, x) in [
+            (0.5, 0.0),
+            (0.8413447460685429, 1.0),
+            (0.9772498680518208, 2.0),
+            (0.9677083, 1.8481308),
+            (0.0228, -1.9990772),
+        ] {
+            assert!((ndtri(p) - x).abs() < 1e-6, "ndtri({p}) = {}", ndtri(p));
+        }
+    }
+
+    #[test]
+    fn ndtr_ndtri_roundtrip() {
+        for x in [-3.0, -1.5, -0.1, 0.0, 0.7, 2.5] {
+            assert!((ndtri(ndtr(x)) - x).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn bootstrap_ci_contains_mean() {
+        let mut rng = Rng::new(9);
+        let xs: Vec<f64> = (0..500).map(|_| rng.normal_ms(10.0, 2.0)).collect();
+        let (lo, hi) = bootstrap_ci95(&xs, 500, 1);
+        let m = mean(&xs);
+        assert!(lo < m && m < hi);
+        assert!(hi - lo < 1.0, "CI too wide: {lo}..{hi}");
+    }
+}

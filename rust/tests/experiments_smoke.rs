@@ -1,0 +1,65 @@
+//! Smoke tests over the experiment harness: every analytic/simulated
+//! experiment runs in fast mode and emits its headline shape-check lines;
+//! one real-training experiment runs when artifacts are present.
+
+use qlora::experiments::{runner, Ctx};
+use qlora::runtime::artifact::Manifest;
+use qlora::runtime::client::Runtime;
+
+fn results_dir() -> std::path::PathBuf {
+    let d = std::env::temp_dir().join("qlora_results_test");
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn analytic_experiments_run_fast() {
+    let ctx = Ctx { rt: None, manifest: None, seed: 42, fast: true };
+    let dir = results_dir();
+    for (id, needs, _, _) in runner::registry() {
+        if needs {
+            continue;
+        }
+        let out = runner::run_one(id, &ctx, &dir)
+            .unwrap_or_else(|e| panic!("{id} failed: {e:#}"));
+        assert!(out.contains("=="), "{id} produced no table");
+        assert!(dir.join(format!("{id}.txt")).exists());
+    }
+}
+
+#[test]
+fn table2_shape_lines() {
+    let ctx = Ctx { rt: None, manifest: None, seed: 7, fast: true };
+    let out = runner::run_one("table2", &ctx, &results_dir()).unwrap();
+    assert!(out.contains("NFloat4 + DQ"));
+    assert!(out.contains("Int4"));
+}
+
+#[test]
+fn unknown_experiment_is_helpful() {
+    let ctx = Ctx { rt: None, manifest: None, seed: 7, fast: true };
+    let err = runner::run_one("table99", &ctx, &results_dir()).unwrap_err();
+    assert!(format!("{err}").contains("available"));
+}
+
+#[test]
+fn training_experiment_needs_runtime_error() {
+    let ctx = Ctx { rt: None, manifest: None, seed: 7, fast: true };
+    let err = runner::run_one("fig4", &ctx, &results_dir()).unwrap_err();
+    assert!(format!("{err:#}").contains("artifacts"));
+}
+
+#[test]
+fn one_training_experiment_end_to_end() {
+    let dir = Manifest::default_dir();
+    let Ok(manifest) = Manifest::load(&dir) else {
+        eprintln!("skipped: no artifacts");
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    let ctx = Ctx { rt: Some(rt), manifest: Some(manifest), seed: 1,
+                    fast: true };
+    // table10 is the cheapest real-training experiment (one artifact)
+    let out = runner::run_one("table10", &ctx, &results_dir()).unwrap();
+    assert!(out.contains("claim check"), "{out}");
+}

@@ -1,0 +1,136 @@
+//! Cross-boundary golden tests: the Rust `quant` crate vs the Python
+//! reference (`ref.py`), over the vectors `aot.py` emits. Codes must match
+//! bit-for-bit; floats to f32 round-off. Skips (with a message) when
+//! artifacts are not built.
+
+use std::path::PathBuf;
+
+use qlora::quant::codebook::{Codebook, DType};
+use qlora::quant::double::{double_dequantize, double_quantize};
+use qlora::quant::{dequantize_blockwise, quantize_blockwise};
+use qlora::runtime::artifact::Manifest;
+use qlora::tensorio::{find, read_tensors, Tensor};
+use qlora::util::json::Value;
+
+fn load_golden() -> Option<(Vec<Tensor>, Value)> {
+    let dir = Manifest::default_dir();
+    let manifest = dir.join("manifest.json");
+    if !manifest.exists() {
+        eprintln!("golden tests skipped: run `make artifacts` first");
+        return None;
+    }
+    let raw = Value::parse(&std::fs::read_to_string(manifest).unwrap())
+        .unwrap();
+    let tensors =
+        read_tensors(&dir.join("golden.tensors")).expect("golden tensors");
+    Some((tensors, raw))
+}
+
+#[test]
+fn codebooks_bit_identical() {
+    let Some((tensors, _)) = load_golden() else { return };
+    for dt in [DType::NF4, DType::FP4E2M1, DType::FP4E3M0, DType::Int4,
+               DType::Int8, DType::FP8E4M3] {
+        let py = find(&tensors, &format!("codebook/{}", dt.name()))
+            .unwrap()
+            .to_f32()
+            .unwrap();
+        let rs = Codebook::new(dt).values;
+        assert_eq!(py.len(), rs.len(), "{dt:?} size");
+        for (i, (a, b)) in py.iter().zip(rs.iter()).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "{dt:?}[{i}]: python {a} vs rust {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn quantize_cases_bit_exact() {
+    let Some((tensors, raw)) = load_golden() else { return };
+    let cases = raw.get("golden").unwrap().get("cases").unwrap();
+    for case in cases.arr().unwrap() {
+        let name = case.get("name").unwrap().str().unwrap();
+        if name == "dq" {
+            continue; // separate test below
+        }
+        let dtype =
+            DType::from_name(case.get("dtype").unwrap().str().unwrap())
+                .unwrap();
+        let block = case.get("block").unwrap().usize().unwrap();
+        let input =
+            find(&tensors, &format!("{name}/input")).unwrap().to_f32()
+                .unwrap();
+        let py_codes = &find(&tensors, &format!("{name}/codes")).unwrap().data;
+        let py_absmax = find(&tensors, &format!("{name}/absmax"))
+            .unwrap()
+            .to_f32()
+            .unwrap();
+        let py_deq = find(&tensors, &format!("{name}/dequant"))
+            .unwrap()
+            .to_f32()
+            .unwrap();
+        let cb = Codebook::new(dtype);
+        let (codes, absmax) = quantize_blockwise(&input, &cb, block).unwrap();
+        // codes bit-for-bit
+        let mismatches =
+            codes.iter().zip(py_codes.iter()).filter(|(a, b)| a != b).count();
+        assert_eq!(mismatches, 0,
+                   "{name} ({dtype:?}): {mismatches}/{} code mismatches",
+                   codes.len());
+        for (a, b) in absmax.iter().zip(py_absmax.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{name} absmax");
+        }
+        let deq = dequantize_blockwise(&codes, &absmax, &cb, block).unwrap();
+        for (a, b) in deq.iter().zip(py_deq.iter()) {
+            assert!((a - b).abs() <= 1e-6 * b.abs().max(1.0),
+                    "{name} dequant {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn double_quant_cross_check() {
+    let Some((tensors, _)) = load_golden() else { return };
+    let input = find(&tensors, "dq/input").unwrap().to_f32().unwrap();
+    let py_deq = find(&tensors, "dq/dequant").unwrap().to_f32().unwrap();
+    let py_mean = find(&tensors, "dq/mean").unwrap().to_f32().unwrap()[0];
+    let cb = Codebook::new(DType::NF4);
+    let (codes, absmax) = quantize_blockwise(&input, &cb, 64).unwrap();
+    let dq = double_quantize(&absmax, 256).unwrap();
+    // mean: XLA tree-reduce vs our f64 accumulate — equal to f32 eps
+    assert!((dq.mean - py_mean).abs() <= 1e-5 * py_mean.abs().max(1.0),
+            "mean {} vs {}", dq.mean, py_mean);
+    let am = double_dequantize(&dq).unwrap();
+    let deq = dequantize_blockwise(&codes, &am, &cb, 64).unwrap();
+    let mut worst = 0f32;
+    for (a, b) in deq.iter().zip(py_deq.iter()) {
+        worst = worst.max((a - b).abs());
+    }
+    // FP8 codes of near-boundary constants may differ by the mean's last
+    // ulp; the dequantized weights must still agree to one FP8 step
+    assert!(worst < 2e-3, "worst dequant deviation {worst}");
+}
+
+#[test]
+fn kernel_vectors_match_native_quant() {
+    // the quickstart's pallas test vectors must agree with native Rust
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        return;
+    }
+    let vectors = read_tensors(&dir.join("kernel_vectors.tensors")).unwrap();
+    let codes_t = find(&vectors, "dequant/codes").unwrap();
+    let absmax = find(&vectors, "dequant/absmax").unwrap().to_f32().unwrap();
+    let expected =
+        find(&vectors, "dequant/expected").unwrap().to_f32().unwrap();
+    let cb = Codebook::new(DType::NF4);
+    let deq =
+        dequantize_blockwise(&codes_t.data, &absmax, &cb, 64).unwrap();
+    for (a, b) in deq.iter().zip(expected.iter()) {
+        assert!((a - b).abs() < 1e-6);
+    }
+    let _ = PathBuf::new();
+}

@@ -1,0 +1,29 @@
+//! Extra cross-implementation property test: the integer fast path must
+//! agree exactly with the generic midpoint-search encoder.
+
+use qlora::quant::codebook::{Codebook, DType};
+use qlora::quant::quantize_blockwise;
+use qlora::util::prop::{self, gen};
+
+#[test]
+fn int_fast_path_matches_midpoint_search() {
+    for dt in [DType::Int4, DType::Int8] {
+        let cb = Codebook::new(dt);
+        prop::check(&format!("int-fastpath-{:?}", dt), 48, |rng| {
+            let n = gen::blocked_len(rng, 64, 8);
+            let x = gen::outlier_vec(rng, n, 0.05, 8.0);
+            let (fast, _) = quantize_blockwise(&x, &cb, 64).unwrap();
+            // reference: generic encoder
+            let mut slow = vec![0u8; n];
+            for b in 0..n / 64 {
+                let chunk = &x[b * 64..(b + 1) * 64];
+                let am = chunk.iter().fold(0f32, |a, v| a.max(v.abs()));
+                let s = if am > 0.0 { am } else { 1.0 };
+                for (i, &v) in chunk.iter().enumerate() {
+                    slow[b * 64 + i] = cb.encode(v / s);
+                }
+            }
+            assert_eq!(fast, slow);
+        });
+    }
+}

@@ -1,0 +1,179 @@
+//! Integration tests over the PJRT runtime: artifact loading, the
+//! training loop, checkpoint round-trips, eval, and generation. These are
+//! the L3 counterparts of the paper's section 4 claims at reproduction
+//! scale. Skip (with a message) when artifacts are not built.
+
+use qlora::coordinator::checkpoint;
+use qlora::coordinator::generate::Sampler;
+use qlora::coordinator::trainer::{TrainOptions, Trainer};
+use qlora::data::batching::Batcher;
+use qlora::data::synthetic::{corpus, eval_set, CorpusKind, EvalSuite};
+use qlora::data::tokenizer::Tokenizer;
+use qlora::runtime::artifact::Manifest;
+use qlora::runtime::client::Runtime;
+use qlora::util::rng::Rng;
+
+// PjRtClient is single-threaded (Rc internally), so each test builds its
+// own runtime; executable compilation is cached per-runtime only.
+fn env() -> Option<(Runtime, Manifest)> {
+    let dir = Manifest::default_dir();
+    let manifest = Manifest::load(&dir).ok()?;
+    let rt = Runtime::cpu().ok()?;
+    Some((rt, manifest))
+}
+
+fn batcher_for(trainer: &Trainer, n: usize, seed: u64) -> Batcher {
+    let cfg = &trainer.spec.cfg;
+    let ds = corpus(CorpusKind::Alpaca, n, seed);
+    Batcher::new(&ds, Tokenizer::new(cfg.vocab), cfg.batch, cfg.seq_len,
+                 false)
+}
+
+#[test]
+fn train_step_reduces_loss() {
+    let Some((rt, manifest)) = env() else {
+        eprintln!("skipped: no artifacts");
+        return;
+    };
+    let mut trainer = Trainer::new(&rt, &manifest, "tiny_scope_all").unwrap();
+    let batcher = batcher_for(&trainer, 64, 1);
+    let batch = &batcher.epoch(0)[0];
+    // overfit a single batch: loss must drop substantially
+    let first = trainer.step(batch).unwrap();
+    let mut last = first;
+    for _ in 0..40 {
+        last = trainer.step(batch).unwrap();
+    }
+    assert!(last < first - 0.3, "loss {first} -> {last}");
+    assert!(last.is_finite());
+}
+
+#[test]
+fn eval_is_pure() {
+    let Some((rt, manifest)) = env() else { return };
+    let trainer = Trainer::new(&rt, &manifest, "tiny_scope_all").unwrap();
+    let batcher = batcher_for(&trainer, 32, 2);
+    let batch = &batcher.epoch(0)[0];
+    let (l1, a1) = trainer.eval(batch).unwrap();
+    let (l2, a2) = trainer.eval(batch).unwrap();
+    assert_eq!(l1, l2);
+    assert_eq!(a1, a2);
+    assert!((0.0..=1.0).contains(&a1));
+}
+
+#[test]
+fn full_finetune_artifact_trains() {
+    let Some((rt, manifest)) = env() else { return };
+    let mut trainer = Trainer::new(&rt, &manifest, "tiny_fullft").unwrap();
+    assert_eq!(trainer.spec.n_frozen, 0, "full FT has no frozen tensors");
+    let batcher = batcher_for(&trainer, 32, 3);
+    let batch = &batcher.epoch(0)[0];
+    let first = trainer.step(batch).unwrap();
+    let mut last = first;
+    for _ in 0..10 {
+        last = trainer.step(batch).unwrap();
+    }
+    assert!(last < first, "{first} -> {last}");
+}
+
+#[test]
+fn checkpoint_roundtrip_preserves_eval() {
+    let Some((rt, manifest)) = env() else { return };
+    let mut trainer = Trainer::new(&rt, &manifest, "tiny_scope_all").unwrap();
+    let batcher = batcher_for(&trainer, 32, 4);
+    let batch = &batcher.epoch(0)[0];
+    for _ in 0..5 {
+        trainer.step(batch).unwrap();
+    }
+    let (l_before, _) = trainer.eval(batch).unwrap();
+    let path = std::env::temp_dir().join("qlora_ckpt_test.tensors");
+    checkpoint::save(&trainer, &path).unwrap();
+
+    // fresh trainer diverges from the trained one…
+    let mut fresh = Trainer::new(&rt, &manifest, "tiny_scope_all").unwrap();
+    let (l_fresh, _) = fresh.eval(batch).unwrap();
+    assert_ne!(l_before, l_fresh);
+    // …until the checkpoint is restored
+    checkpoint::load(&mut fresh, &path).unwrap();
+    let (l_after, _) = fresh.eval(batch).unwrap();
+    assert_eq!(l_before, l_after);
+}
+
+#[test]
+fn adapters_checkpoint_is_small() {
+    let Some((rt, manifest)) = env() else { return };
+    let trainer = Trainer::new(&rt, &manifest, "tiny_scope_all").unwrap();
+    let full = std::env::temp_dir().join("qlora_full_test.tensors");
+    let adapters = std::env::temp_dir().join("qlora_adapters_test.tensors");
+    checkpoint::save(&trainer, &full).unwrap();
+    checkpoint::save_adapters(&trainer, &adapters).unwrap();
+    let fs = std::fs::metadata(&full).unwrap().len();
+    let as_ = std::fs::metadata(&adapters).unwrap().len();
+    // adapters ≈ 1/3 of (adapters + m + v) + step
+    assert!(as_ * 2 < fs, "adapters {as_} vs full {fs}");
+}
+
+#[test]
+fn train_loop_with_pager_and_log() {
+    let Some((rt, manifest)) = env() else { return };
+    let mut trainer = Trainer::new(&rt, &manifest, "tiny_scope_all").unwrap();
+    let batcher = batcher_for(&trainer, 64, 5);
+    let eval_ds = eval_set(EvalSuite::VicunaProxy,
+                           trainer.spec.cfg.batch * 2, 6);
+    let eval_b = Batcher::new(&eval_ds, Tokenizer::new(trainer.spec.cfg.vocab),
+                              trainer.spec.cfg.batch, trainer.spec.cfg.seq_len,
+                              false);
+    let opts = TrainOptions {
+        steps: 12,
+        eval_every: 6,
+        seed: 1,
+        paged: true,
+        device_budget: 8 << 20,
+    };
+    let log = trainer.train(&batcher, Some(&eval_b), &opts).unwrap();
+    assert_eq!(log.losses.len(), 12);
+    assert_eq!(log.evals.len(), 2);
+    assert!(log.pager_stats.is_some());
+    assert!(log.mean_step_time().as_micros() > 0);
+}
+
+#[test]
+fn generation_produces_tokens() {
+    let Some((rt, manifest)) = env() else { return };
+    let trainer = Trainer::new(&rt, &manifest, "e2e").unwrap();
+    let tok = Tokenizer::new(trainer.spec.cfg.vocab);
+    let sampler = Sampler { top_p: 0.9, temperature: 0.7, max_new_tokens: 8 };
+    let mut rng = Rng::new(1);
+    let out = sampler.generate(&trainer, &tok, "copy ab", &mut rng, false)
+        .unwrap();
+    // untrained model: content arbitrary, machinery must work
+    assert!(out.len() <= 64);
+}
+
+#[test]
+fn quantized_artifacts_have_u8_frozen_tensors() {
+    let Some((_rt, manifest)) = env() else { return };
+    let spec = manifest.get("tiny_scope_all").unwrap();
+    assert!(spec.frozen_sig.iter().any(|t| t.dtype == "u8"),
+            "NF4 base must ship packed u8 codes");
+    // and the 16-bit variant must not
+    let spec16 = manifest.get("tiny_lora16").unwrap();
+    assert!(spec16.frozen_sig.iter().all(|t| t.dtype != "u8"));
+}
+
+#[test]
+fn frozen_base_is_smaller_when_quantized() {
+    let Some((_rt, manifest)) = env() else { return };
+    let bytes = |name: &str| -> usize {
+        manifest
+            .get(name)
+            .unwrap()
+            .frozen_sig
+            .iter()
+            .map(|t| t.elems() * if t.dtype == "u8" { 1 } else { 4 })
+            .sum()
+    };
+    let q = bytes("tiny_scope_all");
+    let f = bytes("tiny_lora16");
+    assert!(q * 2 < f, "quantized frozen {q} vs 16-bit {f}");
+}
