@@ -1,39 +1,39 @@
-//! Interactive-ish chat with a finetuned guanaco-tiny: loads the `e2e`
-//! artifact (+ optional adapter/state checkpoint from finetune_guanaco)
-//! and answers prompts with the paper's sampling settings (nucleus
-//! p = 0.9, temperature 0.7 — section 5.2).
+//! Interactive-ish chat served by `qlora::engine`: one frozen quantized
+//! base loaded once, any number of adapters multiplexed over it. Loads
+//! the `e2e` artifact (+ optional adapter/state checkpoints) and answers
+//! prompts with the paper's sampling settings (nucleus p = 0.9,
+//! temperature 0.7 — section 5.2).
 //!
 //! Run: `cargo run --release --example chat -- --prompt "rev hello"
-//!       [--ckpt results/ckpt.tensors] [--greedy]`
+//!       [--ckpt results/ckpt.tensors] [--greedy] [--stream] [--compare]`
+//!
+//! With no `--prompt`, a 4-prompt demo runs through *batched* decoding
+//! (one forward per step for all prompts). `--compare` answers each
+//! prompt under every registered adapter — base and checkpoint — without
+//! re-uploading the base, the paper's many-adapters serving economy.
 
 use anyhow::Result;
 
-use qlora::coordinator::checkpoint;
-use qlora::coordinator::generate::Sampler;
-use qlora::coordinator::trainer::Trainer;
-use qlora::data::tokenizer::Tokenizer;
+use qlora::engine::{Engine, Sampler, BASE_ADAPTER};
 use qlora::runtime::artifact::Manifest;
-use qlora::runtime::client::Runtime;
 use qlora::util::cli::Args;
-use qlora::util::rng::Rng;
 
 fn main() -> Result<()> {
     let args = Args::from_env()?;
-    let rt = Runtime::cpu()?;
     let manifest = Manifest::load(&Manifest::default_dir())?;
-    let mut trainer = Trainer::new(&rt, &manifest,
-                                   &args.get_or("artifact", "e2e"))?;
+    let engine = Engine::cpu(&manifest, &args.get_or("artifact", "e2e"))?;
     if let Some(ck) = args.get("ckpt") {
-        checkpoint::load(&mut trainer, &std::path::PathBuf::from(ck))?;
-        println!("(loaded checkpoint {ck})");
+        engine.load_adapter("ckpt", &std::path::PathBuf::from(ck))?;
+        println!("(loaded adapter checkpoint {ck})");
     }
-    let tok = Tokenizer::new(trainer.spec.cfg.vocab);
-    let sampler = Sampler {
-        top_p: args.f64_or("top-p", 0.9)?,
-        temperature: args.f64_or("temperature", 0.7)?,
-        max_new_tokens: args.usize_or("max-new", 24)?,
+    let sampler = Sampler::from_args(&args, 24)?;
+    let adapters = if args.flag("compare") {
+        engine.adapter_names()
+    } else if args.get("ckpt").is_some() {
+        vec!["ckpt".to_string()]
+    } else {
+        vec![BASE_ADAPTER.to_string()]
     };
-    let mut rng = Rng::new(args.u64_or("seed", 0)?);
     let prompts: Vec<String> = match args.get("prompt") {
         Some(p) => vec![p.to_string()],
         None => ["copy qlora", "rev abcd", "up hi", "add 3 4"]
@@ -41,10 +41,38 @@ fn main() -> Result<()> {
             .map(|s| s.to_string())
             .collect(),
     };
-    for p in prompts {
-        let out = sampler.generate(&trainer, &tok, &p, &mut rng,
-                                   args.flag("greedy"))?;
-        println!("user: {p}\nguanaco-tiny: {out}\n");
+
+    for adapter in &adapters {
+        let mut session = engine
+            .session()
+            .adapter(adapter)
+            .sampler(sampler.clone())
+            .greedy(args.flag("greedy"))
+            .seed(args.u64_or("seed", 0)?)
+            .build()?;
+        if prompts.len() > 1 {
+            // batched decoding: all prompts advance per forward
+            let refs: Vec<&str> = prompts.iter().map(String::as_str).collect();
+            for (p, out) in refs.iter().zip(session.generate_batch(&refs)?) {
+                println!("user: {p}\nguanaco-tiny[{adapter}]: {out}\n");
+            }
+        } else if args.flag("stream") {
+            use std::io::Write;
+            print!("user: {}\nguanaco-tiny[{adapter}]: ", prompts[0]);
+            std::io::stdout().flush()?;
+            session.generate_with(&prompts[0], |piece| {
+                print!("{piece}");
+                let _ = std::io::stdout().flush();
+            })?;
+            println!("\n");
+        } else {
+            let out = session.generate(&prompts[0])?;
+            println!("user: {}\nguanaco-tiny[{adapter}]: {out}\n", prompts[0]);
+        }
+        println!(
+            "({} tokens sampled under adapter {adapter:?})",
+            session.tokens_generated()
+        );
     }
     Ok(())
 }

@@ -1,12 +1,14 @@
-//! End-to-end driver: "train Guanaco-tiny".
+//! End-to-end driver: "train Guanaco-tiny" — and serve it.
 //!
 //! The full system composed: synthetic OASST1-style conversation-tree
 //! corpus (top-reply selection, paper section 5.1) → group-by-length
-//! batching (Appendix B.2) → the AOT train graph of the `e2e` model
-//! (NF4+DQ frozen base, LoRA on all linears, Adam on adapters only,
-//! gradient checkpointing) executed step-by-step by the Rust coordinator
-//! via PJRT, with the paged-optimizer simulation attached → held-out
-//! evaluation before/after → loss curve CSV + adapter checkpoint.
+//! batching (Appendix B.2) → one `engine::Engine` owning the frozen
+//! NF4+DQ base of the `e2e` model, with the `Trainer` as its client
+//! (LoRA on all linears, Adam on adapters only, gradient checkpointing,
+//! paged-optimizer simulation attached) → held-out evaluation
+//! before/after → the trained adapters *published back into the engine*
+//! and sampled next to the untouched base adapter — the paper's
+//! one-base/many-adapters economy in one run.
 //!
 //! Run: `cargo run --release --example finetune_guanaco -- [--steps 300]`
 //! Results recorded in EXPERIMENTS.md section E2E.
@@ -16,24 +18,22 @@ use std::path::PathBuf;
 use anyhow::Result;
 
 use qlora::coordinator::checkpoint;
-use qlora::coordinator::generate::Sampler;
 use qlora::coordinator::trainer::{TrainOptions, Trainer};
 use qlora::data::batching::Batcher;
 use qlora::data::synthetic::{corpus, eval_set, CorpusKind, EvalSuite};
 use qlora::data::tokenizer::Tokenizer;
+use qlora::engine::{Engine, BASE_ADAPTER};
 use qlora::runtime::artifact::Manifest;
-use qlora::runtime::client::Runtime;
 use qlora::util::cli::Args;
-use qlora::util::rng::Rng;
 
 fn main() -> Result<()> {
     let args = Args::from_env()?;
     let steps = args.usize_or("steps", 300)?;
     let artifact = args.get_or("artifact", "e2e");
-    let rt = Runtime::cpu()?;
     let manifest = Manifest::load(&Manifest::default_dir())?;
-    let mut trainer = Trainer::new(&rt, &manifest, &artifact)?;
-    let cfg = trainer.spec.cfg.clone();
+    let engine = Engine::cpu(&manifest, &artifact)?;
+    let mut trainer = Trainer::new(&engine)?;
+    let cfg = trainer.spec().cfg.clone();
     println!(
         "guanaco-tiny: {} params, quant={} (+DQ), LoRA r={} on {} layers, \
          batch {}x{}",
@@ -93,12 +93,17 @@ fn main() -> Result<()> {
     println!("loss curve -> results/e2e_loss.csv; adapters -> \
               results/guanaco_tiny_adapters.tensors");
 
-    // sample a few generations (nucleus p=0.9, T=0.7 — paper section 5.2)
-    let sampler = Sampler::default();
-    let mut rng = Rng::new(3);
-    for prompt in ["copy abc", "rev abcd", "up ok"] {
-        let out = sampler.generate(&trainer, &tok, prompt, &mut rng, true)?;
-        println!("  {prompt:?} -> {out:?}");
+    // publish the trained adapters into the engine's registry and serve
+    // them next to the untouched base adapter — two models, one frozen
+    // base, zero re-uploads
+    trainer.publish_adapter("guanaco-tiny")?;
+    for adapter in [BASE_ADAPTER, "guanaco-tiny"] {
+        let mut session =
+            engine.session().adapter(adapter).greedy(true).seed(3).build()?;
+        for prompt in ["copy abc", "rev abcd", "up ok"] {
+            let out = session.generate(prompt)?;
+            println!("  [{adapter}] {prompt:?} -> {out:?}");
+        }
     }
 
     assert!(loss1 < loss0, "training must reduce held-out loss");

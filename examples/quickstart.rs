@@ -6,11 +6,16 @@
 //!    `make artifacts`), run them on the PJRT CPU client, and check the
 //!    numerics against the Python-emitted test vectors — proving the
 //!    pallas → HLO → PJRT path end to end.
+//! 3. Stand up the serving engine over the `e2e` model: frozen base
+//!    uploaded once, a `Session` decoding over the base adapter.
 //!
 //! Run: `cargo run --release --example quickstart`
 
+use std::rc::Rc;
+
 use anyhow::{Context, Result};
 
+use qlora::engine::Engine;
 use qlora::quant::codebook::DType;
 use qlora::quant::QuantizedTensor;
 use qlora::runtime::artifact::Manifest;
@@ -48,7 +53,7 @@ fn main() -> Result<()> {
                   the PJRT path)");
         return Ok(());
     }
-    let rt = Runtime::cpu()?;
+    let rt = Rc::new(Runtime::cpu()?);
     let vectors = read_tensors(&dir.join("kernel_vectors.tensors"))
         .context("kernel vectors")?;
 
@@ -87,6 +92,23 @@ fn main() -> Result<()> {
     println!("pallas fused qlora-matmul kernel via PJRT: Y = X·dd(W) + \
               s(X·L1)L2, max |err| = {max_err:.2e}");
     assert!(max_err < 1e-3);
+
+    // ---- 3. the serving engine -------------------------------------------
+    match Manifest::load(&dir) {
+        Ok(manifest) if manifest.get("e2e").is_ok() => {
+            // frozen base uploaded once; sessions/adapters multiplex over it
+            let engine = Engine::new(rt.clone(), &manifest, "e2e")?;
+            let mut session = engine.session().greedy(true).build()?;
+            let out = session.generate("copy qlora")?;
+            println!(
+                "engine serving \"e2e\" (adapters: {}): \"copy qlora\" -> \
+                 {out:?} ({} tokens)",
+                engine.adapter_names().join(", "),
+                session.tokens_generated()
+            );
+        }
+        _ => println!("(e2e artifact not built — skipping the engine demo)"),
+    }
 
     println!("quickstart OK");
     Ok(())

@@ -1,0 +1,71 @@
+//! Serving benches through `engine::Session`: tokens/sec of the decode
+//! loop for single-prompt vs batched multi-prompt generation, and the
+//! adapter hot-swap overhead (must be tiny next to a forward). Uses the
+//! repo's mini-criterion harness (`util::bench`); requires
+//! `make artifacts`.
+
+use qlora::engine::{Engine, Sampler, BASE_ADAPTER};
+use qlora::runtime::artifact::Manifest;
+use qlora::util::bench::Bencher;
+
+fn main() {
+    let dir = Manifest::default_dir();
+    let Ok(manifest) = Manifest::load(&dir) else {
+        println!("bench_generate: artifacts not built (run `make \
+                  artifacts`); skipping");
+        return;
+    };
+    let Ok(engine) = Engine::cpu(&manifest, "e2e") else {
+        println!("(e2e not in manifest; skipping)");
+        return;
+    };
+    let cfg = engine.spec.cfg.clone();
+    let sampler = Sampler { max_new_tokens: 16, ..Sampler::default() };
+    let mut b = Bencher::new();
+    b.group(&format!(
+        "Session::generate over \"e2e\" ({} params, batch {}x{})",
+        cfg.n_params(), cfg.batch, cfg.seq_len
+    ));
+
+    // greedy decoding is deterministic, so count tokens once and use the
+    // count as the per-iteration throughput denominator
+    let mut session = engine
+        .session()
+        .sampler(sampler.clone())
+        .greedy(true)
+        .build()
+        .expect("session");
+    let prompt = "copy qlora engine";
+    let before = session.tokens_generated();
+    session.generate(prompt).expect("warm generate");
+    let tokens_single = (session.tokens_generated() - before).max(1) as usize;
+    b.bench_items(&format!("single prompt ({tokens_single} tok)"),
+                  tokens_single, || {
+        session.generate(prompt).unwrap()
+    });
+
+    // batched: fill the compiled batch with distinct prompts
+    let prompts: Vec<String> = (0..cfg.batch)
+        .map(|i| format!("rev prompt{i}"))
+        .collect();
+    let refs: Vec<&str> = prompts.iter().map(String::as_str).collect();
+    let before = session.tokens_generated();
+    session.generate_batch(&refs).expect("warm batch");
+    let tokens_batch = (session.tokens_generated() - before).max(1) as usize;
+    b.bench_items(
+        &format!("batched x{} ({tokens_batch} tok)", refs.len()),
+        tokens_batch,
+        || session.generate_batch(&refs).unwrap(),
+    );
+
+    // hot-swap: re-register the base adapters under a new name (bumping
+    // the registry version so the device-literal cache is invalidated)
+    // and switch to them — this measures the real swap path, registry
+    // insert + literal re-upload, not a cache hit
+    let tensors = engine.adapter_tensors(BASE_ADAPTER).expect("base tensors");
+    b.bench("adapter hot-swap (register + upload + switch)", || {
+        engine.register_adapter("swap", tensors.clone()).unwrap();
+        session.set_adapter("swap").unwrap();
+        session.set_adapter(BASE_ADAPTER).unwrap();
+    });
+}

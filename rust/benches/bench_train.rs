@@ -3,10 +3,13 @@
 //! claim at reproduction scale), eval latency, and quantized vs 16-bit
 //! step-time comparison. Requires `make artifacts`.
 
+use std::rc::Rc;
+
 use qlora::coordinator::trainer::Trainer;
 use qlora::data::batching::Batcher;
 use qlora::data::synthetic::{corpus, CorpusKind};
 use qlora::data::tokenizer::Tokenizer;
+use qlora::engine::Engine;
 use qlora::runtime::artifact::Manifest;
 use qlora::runtime::client::Runtime;
 use qlora::util::bench::Bencher;
@@ -18,15 +21,16 @@ fn main() {
                   skipping");
         return;
     };
-    let rt = Runtime::cpu().expect("PJRT client");
+    let rt = Rc::new(Runtime::cpu().expect("PJRT client"));
     let mut b = Bencher::new();
 
     for name in ["tiny_scope_all", "tiny_lora16", "tiny_fullft", "e2e", "e2e_noremat"] {
-        let Ok(mut trainer) = Trainer::new(&rt, &manifest, name) else {
+        let Ok(engine) = Engine::new(rt.clone(), &manifest, name) else {
             println!("({name} not in manifest; skipping)");
             continue;
         };
-        let cfg = trainer.spec.cfg.clone();
+        let mut trainer = Trainer::new(&engine).expect("trainer");
+        let cfg = trainer.spec().cfg.clone();
         let ds = corpus(CorpusKind::Alpaca, 128, 1);
         let batcher = Batcher::new(&ds, Tokenizer::new(cfg.vocab), cfg.batch,
                                    cfg.seq_len, false);

@@ -2,7 +2,8 @@
 //! moments + step counter) via the `.tensors` interchange format. A QLoRA
 //! checkpoint is tiny — only adapters are trainable (paper section 2:
 //! "the LoRA parameters take up only 26 MB" for 7B) — which is what makes
-//! releasing "a collection of adapters" practical.
+//! releasing "a collection of adapters" practical. Either file shape can
+//! be loaded straight into a serving engine with `Engine::load_adapter`.
 
 use std::path::Path;
 
@@ -12,7 +13,7 @@ use crate::coordinator::trainer::Trainer;
 use crate::tensorio::{read_tensors, write_tensors};
 
 /// Save the full training state.
-pub fn save(trainer: &Trainer, path: &Path) -> Result<()> {
+pub fn save(trainer: &Trainer<'_>, path: &Path) -> Result<()> {
     let tensors = trainer.state_tensors()?;
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
@@ -21,10 +22,8 @@ pub fn save(trainer: &Trainer, path: &Path) -> Result<()> {
 }
 
 /// Save only the adapters (the releasable artifact).
-pub fn save_adapters(trainer: &Trainer, path: &Path) -> Result<()> {
-    let tensors = trainer.state_tensors()?;
-    let adapters: Vec<_> =
-        tensors.into_iter().take(trainer.spec.n_trainable).collect();
+pub fn save_adapters(trainer: &Trainer<'_>, path: &Path) -> Result<()> {
+    let adapters = trainer.adapter_tensors()?;
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
     }
@@ -32,13 +31,13 @@ pub fn save_adapters(trainer: &Trainer, path: &Path) -> Result<()> {
 }
 
 /// Restore a full training state checkpoint.
-pub fn load(trainer: &mut Trainer, path: &Path) -> Result<()> {
+pub fn load(trainer: &mut Trainer<'_>, path: &Path) -> Result<()> {
     let tensors = read_tensors(path).context("reading checkpoint")?;
     ensure!(
-        tensors.len() == trainer.spec.n_state,
+        tensors.len() == trainer.spec().n_state,
         "checkpoint tensor count {} != state size {}",
         tensors.len(),
-        trainer.spec.n_state
+        trainer.spec().n_state
     );
     trainer.load_state(&tensors)
 }

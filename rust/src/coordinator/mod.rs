@@ -1,13 +1,13 @@
-//! The finetuning coordinator: owns the training loop over AOT-compiled
-//! train/eval graphs, the data pipeline, checkpoints, metrics, and
-//! generation. This is the L3 run-time half of the paper's recipe — the
-//! Python side lowered the *math* once; everything operational lives here.
+//! The finetuning coordinator: the training loop over AOT-compiled
+//! train/eval graphs, checkpoints, and metrics. The coordinator is a
+//! *client* of `crate::engine` — it borrows the runtime and the frozen
+//! quantized base from an `Engine` and owns only the mutable training
+//! state. Inference (sampling, decoding, serving) lives in
+//! `crate::engine`, not here.
 
 pub mod checkpoint;
-pub mod generate;
 pub mod metrics;
 pub mod trainer;
 
-pub use generate::Sampler;
 pub use metrics::TrainingLog;
 pub use trainer::{TrainOptions, Trainer};

@@ -7,20 +7,26 @@
 //! The eval graph takes `state[0..n_trainable] ++ frozen ++ data` and
 //! returns `[loss, token_accuracy]`.
 //!
-//! The trainer is generic over the manifest signature — it never assumes
-//! model internals, so the same loop drives QLoRA adapters and 16-bit
-//! full finetuning (the paper's baseline) alike.
+//! The trainer is a *client* of [`Engine`]: it borrows the runtime,
+//! compiled executables, and frozen quantized base from the engine and
+//! owns only the mutable training state (adapters ++ Adam moments ++
+//! step). Finished adapters are published back into the engine's registry
+//! ([`Trainer::publish_adapter`]) where serving sessions pick them up —
+//! the paper's one-base/many-adapters economy in one loop. The trainer is
+//! generic over the manifest signature and never assumes model internals,
+//! so the same loop drives QLoRA adapters and 16-bit full finetuning
+//! (the paper's baseline) alike.
 
 use anyhow::{ensure, Context, Result};
 
 use crate::data::batching::{Batch, Batcher};
+use crate::engine::Engine;
 use crate::paged::optimizer::PagedOptimizerSim;
-use crate::runtime::artifact::{ArtifactSpec, Manifest};
-use crate::runtime::client::Runtime;
+use crate::runtime::artifact::ArtifactSpec;
 use crate::runtime::executor::{
     literal_from_tensor, literal_scalar_f32, Executable,
 };
-use crate::tensorio::{read_tensors, Tensor};
+use crate::tensorio::Tensor;
 
 use super::metrics::TrainingLog;
 
@@ -47,114 +53,91 @@ impl Default for TrainOptions {
     }
 }
 
-pub struct Trainer {
-    pub spec: ArtifactSpec,
+pub struct Trainer<'e> {
+    engine: &'e Engine,
     train_exe: std::sync::Arc<Executable>,
     eval_exe: std::sync::Arc<Executable>,
-    fwd_exe: Option<std::sync::Arc<Executable>>,
     /// mutable training state (trainable ++ adam_m ++ adam_v ++ step)
     state: Vec<xla::Literal>,
-    /// frozen quantized base — uploaded once, reused every step
-    frozen: Vec<xla::Literal>,
     /// optional paged-optimizer simulation running alongside
     pub pager: Option<PagedOptimizerSim>,
 }
 
-impl Trainer {
-    /// Load artifact `name`: compile graphs, read init tensors.
-    pub fn new(rt: &Runtime, manifest: &Manifest, name: &str) -> Result<Trainer> {
-        let spec = manifest.get(name)?.clone();
-        let train_exe = rt.load_hlo(&spec.train_hlo)?;
-        let eval_exe = rt.load_hlo(&spec.eval_hlo)?;
-        let fwd_exe = match &spec.fwd_hlo {
-            Some(p) => Some(rt.load_hlo(p)?),
-            None => None,
-        };
-        let init = read_tensors(&spec.init)
-            .with_context(|| format!("init tensors for {name}"))?;
-        ensure!(
-            init.len() == spec.n_state + spec.n_frozen,
-            "init file has {} tensors, manifest expects {}",
-            init.len(),
-            spec.n_state + spec.n_frozen
-        );
-        let mut lits = init
+impl<'e> Trainer<'e> {
+    /// Start a training run over `engine`'s artifact from its init state.
+    /// Re-reads the artifact's init file: the engine keeps only the
+    /// serving-relevant tensors (frozen base + adapters) resident, not
+    /// the Adam moments.
+    pub fn new(engine: &'e Engine) -> Result<Trainer<'e>> {
+        let train_exe = engine.train_exe()?;
+        let eval_exe = engine.eval_exe()?;
+        let state = engine
+            .read_init_state()?
             .iter()
             .map(literal_from_tensor)
-            .collect::<Result<Vec<_>>>()?;
-        let frozen = lits.split_off(spec.n_state);
-        Ok(Trainer {
-            spec,
-            train_exe,
-            eval_exe,
-            fwd_exe,
-            state: lits,
-            frozen,
-            pager: None,
-        })
+            .collect::<Result<Vec<_>>>()
+            .context("uploading init training state")?;
+        Ok(Trainer { engine, train_exe, eval_exe, state, pager: None })
+    }
+
+    pub fn engine(&self) -> &'e Engine {
+        self.engine
+    }
+
+    pub fn spec(&self) -> &ArtifactSpec {
+        &self.engine.spec
     }
 
     /// Attach the paged-optimizer simulation (sizes taken from the state
     /// signature: adam_m/adam_v tensors are the paged allocations).
     pub fn attach_pager(&mut self, device_budget: usize) {
-        let opt_bytes: usize = self
-            .spec
+        let spec = &self.engine.spec;
+        let opt_bytes: usize = spec
             .state_sig
             .iter()
             .filter(|t| t.name.starts_with("adam_"))
             .map(|t| t.elems() * 4)
             .sum();
-        let model_bytes: usize = self
-            .spec
+        let model_bytes: usize = spec
             .frozen_sig
             .iter()
             .map(|t| t.elems() * if t.dtype == "u8" { 1 } else { 4 })
             .sum();
+        let (tokens, d_model, n_layers) = (
+            spec.cfg.batch * spec.cfg.seq_len,
+            spec.cfg.d_model,
+            spec.cfg.n_layers,
+        );
         self.pager = Some(PagedOptimizerSim::new(
             device_budget,
             model_bytes,
             opt_bytes,
-            self.spec.cfg.batch * self.spec.cfg.seq_len,
-            self.spec.cfg.d_model,
-            self.spec.cfg.n_layers,
+            tokens,
+            d_model,
+            n_layers,
         ));
-    }
-
-    fn batch_literals(&self, batch: &Batch) -> Result<[xla::Literal; 2]> {
-        ensure!(
-            batch.batch == self.spec.cfg.batch
-                && batch.seq_len == self.spec.cfg.seq_len,
-            "batch shape {}x{} does not match artifact {}x{}",
-            batch.batch,
-            batch.seq_len,
-            self.spec.cfg.batch,
-            self.spec.cfg.seq_len
-        );
-        let t = Tensor::i32("tokens", vec![batch.batch, batch.seq_len],
-                            &batch.tokens);
-        let m = Tensor::f32("loss_mask", vec![batch.batch, batch.seq_len],
-                            &batch.mask);
-        Ok([literal_from_tensor(&t)?, literal_from_tensor(&m)?])
     }
 
     /// One optimizer step; returns the loss.
     pub fn step(&mut self, batch: &Batch) -> Result<f32> {
-        let [tok, mask] = self.batch_literals(batch)?;
+        let [tok, mask] = self.engine.batch_literals(batch)?;
+        let frozen = self.engine.frozen();
         let mut inputs: Vec<&xla::Literal> =
-            Vec::with_capacity(self.state.len() + self.frozen.len() + 2);
+            Vec::with_capacity(self.state.len() + frozen.len() + 2);
         inputs.extend(self.state.iter());
-        inputs.extend(self.frozen.iter());
+        inputs.extend(frozen.iter());
         inputs.push(&tok);
         inputs.push(&mask);
         let mut out = self.train_exe.run(&inputs)?;
+        let n_state = self.spec().n_state;
         ensure!(
-            out.len() == self.spec.n_state + 1,
+            out.len() == n_state + 1,
             "train step returned {} outputs, expected {}",
             out.len(),
-            self.spec.n_state + 1
+            n_state + 1
         );
-        let loss = literal_scalar_f32(&out[self.spec.n_state])?;
-        out.truncate(self.spec.n_state);
+        let loss = literal_scalar_f32(&out[n_state])?;
+        out.truncate(n_state);
         self.state = out;
         if let Some(p) = &mut self.pager {
             // max sequence length in the batch drives the activation spike
@@ -166,36 +149,16 @@ impl Trainer {
 
     /// Evaluate (loss, token accuracy) on a batch without updating state.
     pub fn eval(&self, batch: &Batch) -> Result<(f32, f32)> {
-        let [tok, mask] = self.batch_literals(batch)?;
+        let [tok, mask] = self.engine.batch_literals(batch)?;
+        let frozen = self.engine.frozen();
         let mut inputs: Vec<&xla::Literal> = Vec::new();
-        inputs.extend(self.state.iter().take(self.spec.n_trainable));
-        inputs.extend(self.frozen.iter());
+        inputs.extend(self.state.iter().take(self.spec().n_trainable));
+        inputs.extend(frozen.iter());
         inputs.push(&tok);
         inputs.push(&mask);
         let out = self.eval_exe.run(&inputs)?;
         ensure!(out.len() == 2, "eval returned {} outputs", out.len());
         Ok((literal_scalar_f32(&out[0])?, literal_scalar_f32(&out[1])?))
-    }
-
-    /// Forward logits for generation (requires a fwd artifact).
-    pub fn logits(&self, tokens: &[i32]) -> Result<Vec<f32>> {
-        let exe = self
-            .fwd_exe
-            .as_ref()
-            .ok_or_else(|| anyhow::anyhow!("no fwd artifact for {}",
-                                           self.spec.name))?;
-        let t = Tensor::i32(
-            "tokens",
-            vec![self.spec.cfg.batch, self.spec.cfg.seq_len],
-            tokens,
-        );
-        let tok = literal_from_tensor(&t)?;
-        let mut inputs: Vec<&xla::Literal> = Vec::new();
-        inputs.extend(self.state.iter().take(self.spec.n_trainable));
-        inputs.extend(self.frozen.iter());
-        inputs.push(&tok);
-        let out = exe.run(&inputs)?;
-        crate::runtime::executor::literal_to_f32(&out[0])
     }
 
     /// Mean eval over a whole batcher.
@@ -224,7 +187,7 @@ impl Trainer {
         if opts.paged && self.pager.is_none() {
             self.attach_pager(opts.device_budget);
         }
-        let mut log = TrainingLog::new(&self.spec.name);
+        let mut log = TrainingLog::new(&self.spec().name);
         let mut step = 0usize;
         let mut epoch = 0u64;
         'outer: loop {
@@ -259,18 +222,33 @@ impl Trainer {
     pub fn state_tensors(&self) -> Result<Vec<Tensor>> {
         self.state
             .iter()
-            .zip(self.spec.state_sig.iter())
+            .zip(self.spec().state_sig.iter())
             .map(|(l, s)| crate::runtime::executor::literal_to_tensor(&s.name, l))
             .collect()
+    }
+
+    /// Just the adapter tensors (the releasable artifact).
+    pub fn adapter_tensors(&self) -> Result<Vec<Tensor>> {
+        let mut tensors = self.state_tensors()?;
+        tensors.truncate(self.spec().n_trainable);
+        Ok(tensors)
+    }
+
+    /// Publish the current adapters into the engine's registry under
+    /// `name`, hot-swapping any previous version. Live sessions serving
+    /// `name` observe the swap on their next forward; the frozen base is
+    /// untouched.
+    pub fn publish_adapter(&self, name: &str) -> Result<()> {
+        self.engine.register_adapter(name, self.adapter_tensors()?)
     }
 
     /// Restore state from host tensors (must match the state signature).
     pub fn load_state(&mut self, tensors: &[Tensor]) -> Result<()> {
         ensure!(
-            tensors.len() == self.spec.n_state,
+            tensors.len() == self.spec().n_state,
             "checkpoint has {} tensors, expected {}",
             tensors.len(),
-            self.spec.n_state
+            self.spec().n_state
         );
         self.state = tensors
             .iter()

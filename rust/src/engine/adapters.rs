@@ -1,0 +1,214 @@
+//! Named LoRA adapter registry over one frozen base.
+//!
+//! The registry is pure host-side bookkeeping: adapter tensors validated
+//! against the artifact's trainable signature, with a version counter per
+//! entry so the engine's device-literal cache knows when a hot-swap
+//! happened. Keeping it free of runtime types makes the load/swap/error
+//! contract unit-testable without artifacts or a PJRT client.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::runtime::artifact::TensorSpec;
+use crate::tensorio::Tensor;
+
+/// One registered adapter: host tensors + a version bumped on every swap.
+#[derive(Debug, Clone)]
+pub struct AdapterEntry {
+    pub tensors: Vec<Tensor>,
+    pub version: u64,
+}
+
+/// Validated name → adapter map for one artifact's trainable signature.
+#[derive(Debug, Clone)]
+pub struct AdapterRegistry {
+    /// expected trainable signature (`state_sig[..n_trainable]`)
+    sig: Vec<TensorSpec>,
+    entries: BTreeMap<String, AdapterEntry>,
+    next_version: u64,
+}
+
+impl AdapterRegistry {
+    pub fn new(sig: Vec<TensorSpec>) -> AdapterRegistry {
+        AdapterRegistry { sig, entries: BTreeMap::new(), next_version: 0 }
+    }
+
+    /// Insert (or hot-swap) adapter `name`. Tensors must match the
+    /// trainable signature in count, dtype, and shape.
+    pub fn insert(&mut self, name: &str, tensors: Vec<Tensor>) -> Result<()> {
+        ensure!(!name.is_empty(), "adapter name must be non-empty");
+        ensure!(
+            tensors.len() == self.sig.len(),
+            "adapter {name:?} has {} tensors, artifact expects {}",
+            tensors.len(),
+            self.sig.len()
+        );
+        for (t, s) in tensors.iter().zip(self.sig.iter()) {
+            if t.dtype.name() != s.dtype {
+                bail!(
+                    "adapter {name:?} tensor {:?}: dtype {} != expected {}",
+                    t.name,
+                    t.dtype.name(),
+                    s.dtype
+                );
+            }
+            if t.shape != s.shape {
+                bail!(
+                    "adapter {name:?} tensor {:?}: shape {:?} != expected \
+                     {:?} (for {})",
+                    t.name,
+                    t.shape,
+                    s.shape,
+                    s.name
+                );
+            }
+        }
+        self.next_version += 1;
+        let version = self.next_version;
+        self.entries
+            .insert(name.to_string(), AdapterEntry { tensors, version });
+        Ok(())
+    }
+
+    /// Look up adapter `name`; the error lists what *is* loaded.
+    pub fn get(&self, name: &str) -> Result<&AdapterEntry> {
+        self.entries.get(name).ok_or_else(|| {
+            anyhow!(
+                "adapter {name:?} not loaded (have: {})",
+                if self.entries.is_empty() {
+                    "none".to_string()
+                } else {
+                    self.names().join(", ")
+                }
+            )
+        })
+    }
+
+    pub fn remove(&mut self, name: &str) -> Result<()> {
+        self.entries
+            .remove(name)
+            .map(|_| ())
+            .ok_or_else(|| anyhow!("adapter {name:?} not loaded"))
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.entries.contains_key(name)
+    }
+
+    /// Registered names in sorted order.
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.keys().map(String::as_str).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sig() -> Vec<TensorSpec> {
+        vec![
+            TensorSpec {
+                name: "layer0/attn/q/lora_a".into(),
+                dtype: "f32".into(),
+                shape: vec![4, 2],
+            },
+            TensorSpec {
+                name: "layer0/attn/q/lora_b".into(),
+                dtype: "f32".into(),
+                shape: vec![2, 4],
+            },
+        ]
+    }
+
+    fn adapter(fill: f32) -> Vec<Tensor> {
+        vec![
+            Tensor::f32("a", vec![4, 2], &[fill; 8]),
+            Tensor::f32("b", vec![2, 4], &[fill; 8]),
+        ]
+    }
+
+    #[test]
+    fn load_get_roundtrip() {
+        let mut r = AdapterRegistry::new(sig());
+        assert!(r.is_empty());
+        r.insert("base", adapter(0.0)).unwrap();
+        assert_eq!(r.len(), 1);
+        assert!(r.contains("base"));
+        let e = r.get("base").unwrap();
+        assert_eq!(e.tensors.len(), 2);
+        assert_eq!(e.tensors[0].to_f32().unwrap(), vec![0.0; 8]);
+    }
+
+    #[test]
+    fn swap_replaces_and_bumps_version() {
+        let mut r = AdapterRegistry::new(sig());
+        r.insert("tuned", adapter(1.0)).unwrap();
+        let v1 = r.get("tuned").unwrap().version;
+        r.insert("tuned", adapter(2.0)).unwrap();
+        let e = r.get("tuned").unwrap();
+        assert!(e.version > v1, "swap must bump the version");
+        assert_eq!(e.tensors[0].to_f32().unwrap(), vec![2.0; 8]);
+        assert_eq!(r.len(), 1, "swap must not duplicate the entry");
+    }
+
+    #[test]
+    fn missing_adapter_error_lists_available() {
+        let mut r = AdapterRegistry::new(sig());
+        let e = format!("{}", r.get("nope").unwrap_err());
+        assert!(e.contains("nope") && e.contains("none"), "{e}");
+        r.insert("base", adapter(0.0)).unwrap();
+        r.insert("tuned", adapter(1.0)).unwrap();
+        let e = format!("{}", r.get("nope").unwrap_err());
+        assert!(e.contains("base") && e.contains("tuned"), "{e}");
+    }
+
+    #[test]
+    fn rejects_wrong_count_shape_dtype() {
+        let mut r = AdapterRegistry::new(sig());
+        // count
+        assert!(r
+            .insert("x", vec![Tensor::f32("a", vec![4, 2], &[0.0; 8])])
+            .is_err());
+        // shape
+        let bad_shape = vec![
+            Tensor::f32("a", vec![2, 4], &[0.0; 8]),
+            Tensor::f32("b", vec![2, 4], &[0.0; 8]),
+        ];
+        let e = format!("{}", r.insert("x", bad_shape).unwrap_err());
+        assert!(e.contains("shape"), "{e}");
+        // dtype
+        let bad_dtype = vec![
+            Tensor::i32("a", vec![4, 2], &[0; 8]),
+            Tensor::f32("b", vec![2, 4], &[0.0; 8]),
+        ];
+        let e = format!("{}", r.insert("x", bad_dtype).unwrap_err());
+        assert!(e.contains("dtype"), "{e}");
+        assert!(r.is_empty(), "failed inserts must not register");
+    }
+
+    #[test]
+    fn remove_works_and_missing_remove_errors() {
+        let mut r = AdapterRegistry::new(sig());
+        r.insert("base", adapter(0.0)).unwrap();
+        r.remove("base").unwrap();
+        assert!(!r.contains("base"));
+        assert!(r.remove("base").is_err());
+    }
+
+    #[test]
+    fn names_sorted() {
+        let mut r = AdapterRegistry::new(sig());
+        r.insert("zeta", adapter(0.0)).unwrap();
+        r.insert("alpha", adapter(0.0)).unwrap();
+        assert_eq!(r.names(), vec!["alpha", "zeta"]);
+    }
+}

@@ -1,0 +1,276 @@
+//! `qlora::engine` — session-based inference/serving over one frozen
+//! quantized base and many hot-swappable LoRA adapters.
+//!
+//! QLoRA's central economy (paper section 1: the authors finetune 1,000+
+//! models because adapters are tiny) is one frozen 4-bit base multiplexed
+//! across cheap adapters. This module is that economy as an API:
+//!
+//! ```text
+//!            ┌───────────────────────────────────────────────┐
+//!            │ Engine                                        │
+//!            │  · Rc<Runtime>  (PJRT client + HLO exe cache) │
+//!            │  · ArtifactSpec (shapes, signatures)          │
+//!            │  · frozen base  (NF4 literals, uploaded ONCE) │
+//!            │  · AdapterRegistry ("base", "tuned", …)       │
+//!            └───────┬───────────────────┬───────────────────┘
+//!        borrows rt, │                   │ borrows frozen +
+//!        frozen,     │                   │ one named adapter
+//!        exes        │                   │
+//!            ┌───────▼────────┐   ┌──────▼──────────────────┐
+//!            │ Trainer<'e>    │   │ Session<'e>             │
+//!            │  owns mutable  │   │  generate / stream /    │
+//!            │  state (adap-  │   │  generate_batch / eval  │
+//!            │  ters+Adam+t)  │   │  (Sampler + decode loop)│
+//!            └───────┬────────┘   └─────────────────────────┘
+//!                    │ publish_adapter(name)
+//!                    ▼
+//!              AdapterRegistry  ← load_adapter(name, file)
+//! ```
+//!
+//! Ownership rules:
+//! * `Engine` owns the runtime, the compiled executables (via the
+//!   runtime's HLO cache) and the frozen base. The base is converted to
+//!   device literals exactly once, in `Engine::new`.
+//! * Adapters live in the [`AdapterRegistry`] as host tensors; device
+//!   literals are cached per (name, version) and invalidated on swap, so
+//!   hot-swapping an adapter never re-uploads the frozen base.
+//! * `Session` and `Trainer` are *clients*: they borrow the engine
+//!   immutably. Registering/loading adapters goes through interior
+//!   mutability, so a long-lived serving session observes adapter swaps
+//!   published by a concurrent (same-thread) training loop.
+//!
+//! The decode loop and [`Sampler`] used to live in `coordinator::generate`
+//! welded to the `Trainer`; they now live here, and training is just one
+//! more client of the engine.
+
+pub mod adapters;
+pub mod sampler;
+pub mod session;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::sync::Arc;
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+use crate::data::batching::Batch;
+use crate::runtime::artifact::{ArtifactSpec, Manifest};
+use crate::runtime::client::Runtime;
+use crate::runtime::executor::{literal_from_tensor, Executable};
+use crate::tensorio::{read_tensors, Tensor};
+
+pub use adapters::AdapterRegistry;
+pub use sampler::Sampler;
+pub use session::{Session, SessionBuilder, TokenStream};
+
+/// Name under which the artifact's init-time (untrained) adapter tensors
+/// are registered by `Engine::new`.
+pub const BASE_ADAPTER: &str = "base";
+
+/// Uploaded-adapter cache entry: (registry version, device literals).
+type UploadedAdapter = (u64, Rc<Vec<xla::Literal>>);
+
+/// The serving core: one frozen quantized base, uploaded once, multiplexed
+/// across named adapters and any number of sessions/trainers.
+pub struct Engine {
+    rt: Rc<Runtime>,
+    pub spec: ArtifactSpec,
+    /// frozen quantized base — literals created once, shared by every
+    /// session and trainer
+    frozen: Vec<xla::Literal>,
+    registry: RefCell<AdapterRegistry>,
+    /// device-literal cache per adapter, invalidated on hot-swap
+    uploaded: RefCell<HashMap<String, UploadedAdapter>>,
+}
+
+impl Engine {
+    /// Load artifact `name` over a shared runtime: read init tensors,
+    /// upload the frozen base, register the init adapters as
+    /// [`BASE_ADAPTER`].
+    pub fn new(rt: Rc<Runtime>, manifest: &Manifest, name: &str) -> Result<Engine> {
+        let spec = manifest.get(name)?.clone();
+        let mut init = read_tensors(&spec.init)
+            .with_context(|| format!("init tensors for {name}"))?;
+        ensure!(
+            init.len() == spec.n_state + spec.n_frozen,
+            "init file has {} tensors, manifest expects {}",
+            init.len(),
+            spec.n_state + spec.n_frozen
+        );
+        let frozen_host = init.split_off(spec.n_state);
+        let frozen = frozen_host
+            .iter()
+            .map(literal_from_tensor)
+            .collect::<Result<Vec<_>>>()?;
+        // keep only the trainable prefix resident: serving never reads
+        // the Adam moments (Trainer::new re-reads the init file)
+        init.truncate(spec.n_trainable);
+        let mut registry =
+            AdapterRegistry::new(spec.state_sig[..spec.n_trainable].to_vec());
+        registry.insert(BASE_ADAPTER, init)?;
+        Ok(Engine {
+            rt,
+            spec,
+            frozen,
+            registry: RefCell::new(registry),
+            uploaded: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Convenience: create a fresh CPU runtime and load `name` onto it.
+    pub fn cpu(manifest: &Manifest, name: &str) -> Result<Engine> {
+        Engine::new(Rc::new(Runtime::cpu()?), manifest, name)
+    }
+
+    /// The shared runtime (clone the `Rc` to build sibling engines over
+    /// the same PJRT client).
+    pub fn runtime(&self) -> &Rc<Runtime> {
+        &self.rt
+    }
+
+    /// Frozen-base literals (uploaded once in `new`).
+    pub fn frozen(&self) -> &[xla::Literal] {
+        &self.frozen
+    }
+
+    /// Clone the host tensors of a registered adapter (e.g. to register
+    /// a copy under another name).
+    pub fn adapter_tensors(&self, name: &str) -> Result<Vec<Tensor>> {
+        Ok(self.registry.borrow().get(name)?.tensors.clone())
+    }
+
+    /// Read the artifact's full init training state (trainable ++ Adam
+    /// moments ++ step) from disk. The engine deliberately does not keep
+    /// these resident — serving needs only the frozen base and adapters —
+    /// so each trainer pays one extra file read instead of every serving
+    /// process paying the Adam-moment memory.
+    pub fn read_init_state(&self) -> Result<Vec<Tensor>> {
+        let spec = &self.spec;
+        let mut init = read_tensors(&spec.init)
+            .with_context(|| format!("init tensors for {}", spec.name))?;
+        ensure!(
+            init.len() == spec.n_state + spec.n_frozen,
+            "init file has {} tensors, manifest expects {}",
+            init.len(),
+            spec.n_state + spec.n_frozen
+        );
+        init.truncate(spec.n_state);
+        Ok(init)
+    }
+
+    /// The forward (logits) executable; errors if the artifact was built
+    /// without a fwd graph.
+    pub fn fwd_exe(&self) -> Result<Arc<Executable>> {
+        let path = self.spec.fwd_hlo.as_ref().ok_or_else(|| {
+            anyhow!("artifact {} has no fwd graph (re-run `make artifacts`)",
+                    self.spec.name)
+        })?;
+        self.rt.load_hlo(path)
+    }
+
+    /// The eval (loss, accuracy) executable.
+    pub fn eval_exe(&self) -> Result<Arc<Executable>> {
+        self.rt.load_hlo(&self.spec.eval_hlo)
+    }
+
+    /// The train-step executable (compiled lazily: inference-only engines
+    /// never pay for it).
+    pub fn train_exe(&self) -> Result<Arc<Executable>> {
+        self.rt.load_hlo(&self.spec.train_hlo)
+    }
+
+    /// Register adapter tensors under `name`, replacing (hot-swapping) any
+    /// previous adapter of that name. Sessions pick the swap up on their
+    /// next forward.
+    pub fn register_adapter(&self, name: &str, tensors: Vec<Tensor>) -> Result<()> {
+        self.registry.borrow_mut().insert(name, tensors)
+    }
+
+    /// Load an adapter from a `.tensors` checkpoint: either an
+    /// adapters-only file (`checkpoint::save_adapters`) or a full training
+    /// state (`checkpoint::save`), whose first `n_trainable` tensors are
+    /// the adapters.
+    pub fn load_adapter(&self, name: &str, path: &Path) -> Result<()> {
+        let tensors = read_tensors(path)
+            .with_context(|| format!("adapter checkpoint {path:?}"))?;
+        let n = self.spec.n_trainable;
+        ensure!(
+            tensors.len() == n || tensors.len() == self.spec.n_state,
+            "checkpoint {path:?} has {} tensors; expected {} (adapters) \
+             or {} (full state)",
+            tensors.len(),
+            n,
+            self.spec.n_state
+        );
+        self.register_adapter(name, tensors.into_iter().take(n).collect())
+    }
+
+    /// Drop adapter `name` (and its uploaded literals).
+    pub fn remove_adapter(&self, name: &str) -> Result<()> {
+        self.registry.borrow_mut().remove(name)?;
+        self.uploaded.borrow_mut().remove(name);
+        Ok(())
+    }
+
+    pub fn has_adapter(&self, name: &str) -> bool {
+        self.registry.borrow().contains(name)
+    }
+
+    /// Registered adapter names (sorted).
+    pub fn adapter_names(&self) -> Vec<String> {
+        self.registry
+            .borrow()
+            .names()
+            .into_iter()
+            .map(str::to_string)
+            .collect()
+    }
+
+    /// Device literals for adapter `name`, uploading on first use and
+    /// re-uploading only when the registry entry was swapped since. The
+    /// frozen base is never touched by this path.
+    pub(crate) fn adapter_literals(&self, name: &str) -> Result<Rc<Vec<xla::Literal>>> {
+        let registry = self.registry.borrow();
+        let entry = registry.get(name)?;
+        let mut uploaded = self.uploaded.borrow_mut();
+        if let Some((version, lits)) = uploaded.get(name) {
+            if *version == entry.version {
+                return Ok(lits.clone());
+            }
+        }
+        let lits = entry
+            .tensors
+            .iter()
+            .map(literal_from_tensor)
+            .collect::<Result<Vec<_>>>()?;
+        let rc = Rc::new(lits);
+        uploaded.insert(name.to_string(), (entry.version, rc.clone()));
+        Ok(rc)
+    }
+
+    /// Start building a [`Session`] over this engine.
+    pub fn session(&self) -> SessionBuilder<'_> {
+        SessionBuilder::new(self)
+    }
+
+    /// Convert a data batch into (tokens, loss_mask) literals, checking
+    /// the compiled shape.
+    pub(crate) fn batch_literals(&self, batch: &Batch) -> Result<[xla::Literal; 2]> {
+        ensure!(
+            batch.batch == self.spec.cfg.batch
+                && batch.seq_len == self.spec.cfg.seq_len,
+            "batch shape {}x{} does not match artifact {}x{}",
+            batch.batch,
+            batch.seq_len,
+            self.spec.cfg.batch,
+            self.spec.cfg.seq_len
+        );
+        let t = Tensor::i32("tokens", vec![batch.batch, batch.seq_len],
+                            &batch.tokens);
+        let m = Tensor::f32("loss_mask", vec![batch.batch, batch.seq_len],
+                            &batch.mask);
+        Ok([literal_from_tensor(&t)?, literal_from_tensor(&m)?])
+    }
+}

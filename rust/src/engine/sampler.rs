@@ -1,0 +1,237 @@
+//! Token sampling: nucleus (top-p) with optional top-k and temperature.
+//!
+//! The paper's evaluation setup uses nucleus sampling with p = 0.9 and
+//! temperature 0.7 throughout (section 5.2); those are the defaults here.
+//! Degenerate settings are well-defined rather than numerically explosive:
+//! temperature ≤ 0 falls back to greedy argmax, top_p ≤ 0 keeps exactly
+//! the mode, and top_k (off by default) truncates to the k most likely
+//! tokens before the nucleus cut.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct Sampler {
+    /// nucleus mass; ≤ 0 keeps exactly one token, ≥ 1 keeps all
+    pub top_p: f64,
+    /// keep only the k most likely tokens before the nucleus cut
+    pub top_k: Option<usize>,
+    /// softmax temperature; ≤ 0 means greedy argmax
+    pub temperature: f64,
+    pub max_new_tokens: usize,
+}
+
+impl Default for Sampler {
+    fn default() -> Self {
+        // paper section 5.2: "nucleus sampling with p=0.9 and temperature 0.7"
+        Sampler { top_p: 0.9, top_k: None, temperature: 0.7, max_new_tokens: 32 }
+    }
+}
+
+impl Sampler {
+    /// Build from the shared CLI flags (`--top-p`, `--top-k`,
+    /// `--temperature`, `--max-new`); `top-k 0` (the default) means off.
+    pub fn from_args(
+        args: &crate::util::cli::Args,
+        default_max_new: usize,
+    ) -> anyhow::Result<Sampler> {
+        Ok(Sampler {
+            top_p: args.f64_or("top-p", 0.9)?,
+            top_k: match args.usize_or("top-k", 0)? {
+                0 => None,
+                k => Some(k),
+            },
+            temperature: args.f64_or("temperature", 0.7)?,
+            max_new_tokens: args.usize_or("max-new", default_max_new)?,
+        })
+    }
+
+    /// Smallest prefix of `sorted` (descending probabilities) whose mass
+    /// reaches `top_p`; at least one token, all of them for top_p ≥ 1.
+    pub fn nucleus_cutoff(sorted: &[f64], top_p: f64) -> usize {
+        if top_p <= 0.0 {
+            return 1;
+        }
+        let mut cum = 0.0;
+        for (i, p) in sorted.iter().enumerate() {
+            cum += p;
+            if cum >= top_p {
+                return i + 1;
+            }
+        }
+        sorted.len()
+    }
+
+    /// Sample one token id from a logits row.
+    pub fn sample(&self, logits: &[f32], rng: &mut Rng) -> i32 {
+        if self.temperature <= 0.0 {
+            return Self::greedy(logits);
+        }
+        let inv_t = 1.0 / self.temperature;
+        // softmax with temperature
+        let mx = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut probs: Vec<(usize, f64)> = logits
+            .iter()
+            .enumerate()
+            .map(|(i, &l)| (i, (((l - mx) as f64) * inv_t).exp()))
+            .collect();
+        let z: f64 = probs.iter().map(|(_, p)| p).sum();
+        for p in probs.iter_mut() {
+            p.1 /= z;
+        }
+        probs.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        if let Some(k) = self.top_k {
+            probs.truncate(k.max(1));
+        }
+        let weights: Vec<f64> = probs.iter().map(|(_, p)| *p).collect();
+        probs.truncate(Self::nucleus_cutoff(&weights, self.top_p));
+        let weights: Vec<f64> = probs.iter().map(|(_, p)| *p).collect();
+        probs[rng.categorical(&weights)].0 as i32
+    }
+
+    /// Greedy argmax (deterministic decoding for accuracy-style eval).
+    pub fn greedy(logits: &[f32]) -> i32 {
+        logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i as i32)
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn softmax(logits: &[f32]) -> Vec<f64> {
+        let mx = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let e: Vec<f64> =
+            logits.iter().map(|&l| ((l - mx) as f64).exp()).collect();
+        let z: f64 = e.iter().sum();
+        e.into_iter().map(|p| p / z).collect()
+    }
+
+    #[test]
+    fn greedy_picks_max() {
+        assert_eq!(Sampler::greedy(&[0.1, 5.0, -2.0]), 1);
+    }
+
+    #[test]
+    fn zero_or_negative_temperature_is_greedy() {
+        // old behaviour divided by max(T, 1e-6) and exploded the exponents
+        let logits = vec![1.0, 3.0, 2.0, -1.0];
+        let mut rng = Rng::new(11);
+        for t in [0.0, -1.0, -1e9] {
+            let s = Sampler { temperature: t, top_p: 1.0, ..Sampler::default() };
+            for _ in 0..50 {
+                assert_eq!(s.sample(&logits, &mut rng), 1, "T={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn top_p_zero_keeps_exactly_the_mode() {
+        let s = Sampler { top_p: 0.0, temperature: 1.0, ..Sampler::default() };
+        let logits = vec![0.5, 0.4, 2.0, 0.1];
+        let mut rng = Rng::new(12);
+        for _ in 0..100 {
+            assert_eq!(s.sample(&logits, &mut rng), 2);
+        }
+    }
+
+    #[test]
+    fn nucleus_cutoff_is_minimal_covering_set() {
+        // deterministic RNG drives the random distributions under test
+        let mut rng = Rng::new(13);
+        for _ in 0..200 {
+            let n = 2 + rng.below(30);
+            let logits: Vec<f32> =
+                (0..n).map(|_| rng.normal() as f32 * 2.0).collect();
+            let mut probs = softmax(&logits);
+            probs.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            let p = rng.f64();
+            let cut = Sampler::nucleus_cutoff(&probs, p);
+            assert!((1..=n).contains(&cut));
+            let mass: f64 = probs[..cut].iter().sum();
+            // the kept mass covers p…
+            assert!(mass >= p - 1e-12, "mass {mass} < p {p}");
+            // …and no smaller prefix does
+            if cut > 1 {
+                let smaller: f64 = probs[..cut - 1].iter().sum();
+                assert!(smaller < p, "cut {cut} not minimal: {smaller} >= {p}");
+            }
+        }
+    }
+
+    #[test]
+    fn nucleus_restricts_tail() {
+        // with a sharply peaked distribution and p=0.5 only the mode remains
+        let s = Sampler { top_p: 0.5, temperature: 1.0, ..Sampler::default() };
+        let logits = vec![10.0, 0.0, 0.0, 0.0];
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            assert_eq!(s.sample(&logits, &mut rng), 0);
+        }
+    }
+
+    #[test]
+    fn top_k_limits_support() {
+        // k=2 over a near-uniform distribution: only the two most likely
+        // ids may ever appear
+        let s = Sampler {
+            top_p: 1.0,
+            top_k: Some(2),
+            temperature: 1.0,
+            ..Sampler::default()
+        };
+        let logits = vec![1.0, 1.01, 1.02, 0.99];
+        let mut rng = Rng::new(14);
+        for _ in 0..500 {
+            let id = s.sample(&logits, &mut rng);
+            assert!(id == 2 || id == 1, "sampled {id} outside top-2");
+        }
+        // k=1 is greedy regardless of temperature
+        let s1 = Sampler { top_k: Some(1), ..s };
+        for _ in 0..100 {
+            assert_eq!(s1.sample(&logits, &mut rng), 2);
+        }
+    }
+
+    #[test]
+    fn top_k_zero_clamps_to_one() {
+        let s = Sampler {
+            top_p: 1.0,
+            top_k: Some(0),
+            temperature: 1.0,
+            ..Sampler::default()
+        };
+        let logits = vec![0.0, 3.0];
+        let mut rng = Rng::new(15);
+        for _ in 0..50 {
+            assert_eq!(s.sample(&logits, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn temperature_flattens() {
+        // with huge temperature sampling becomes ~uniform
+        let s = Sampler { top_p: 1.0, temperature: 1e6, ..Sampler::default() };
+        let logits = vec![3.0, 0.0];
+        let mut rng = Rng::new(2);
+        let ones =
+            (0..2000).filter(|_| s.sample(&logits, &mut rng) == 1).count();
+        assert!(ones > 700, "tail sampled {ones}/2000");
+    }
+
+    #[test]
+    fn sampling_is_deterministic_under_seed() {
+        let s = Sampler { top_p: 0.9, temperature: 0.7, ..Sampler::default() };
+        let logits: Vec<f32> = (0..64).map(|i| ((i * 37) % 13) as f32).collect();
+        let seq = |seed: u64| -> Vec<i32> {
+            let mut rng = Rng::new(seed);
+            (0..32).map(|_| s.sample(&logits, &mut rng)).collect()
+        };
+        assert_eq!(seq(9), seq(9));
+        assert_ne!(seq(9), seq(10));
+    }
+}

@@ -1,0 +1,340 @@
+//! Sessions: the inference surface of the engine.
+//!
+//! A `Session` pins one named adapter over the engine's frozen base and
+//! exposes the decode loop three ways — whole-completion
+//! ([`Session::generate`]), token-by-token streaming ([`Session::stream`]
+//! / [`Session::generate_with`]), and batched multi-prompt decoding
+//! ([`Session::generate_batch`], one forward per step for *all* rows) —
+//! plus held-out evaluation ([`Session::eval`], [`Session::eval_all`]).
+//!
+//! The fwd artifact has fixed (batch, seq_len) shape, so decoding re-runs
+//! the full-sequence forward with prompts left-aligned per row and reads
+//! the logits at each row's current position (fine for demo-scale models;
+//! a KV-cache decode graph is the standard extension and now has a single
+//! home: this module).
+
+use anyhow::{ensure, Result};
+
+use crate::data::batching::{Batch, Batcher};
+use crate::data::tokenizer::{Tokenizer, BOS, EOS, PAD, SEP};
+use crate::runtime::executor::{literal_scalar_f32, literal_to_f32};
+use crate::tensorio::Tensor;
+use crate::util::rng::Rng;
+
+use super::sampler::Sampler;
+use super::{Engine, BASE_ADAPTER};
+
+/// Builder returned by [`Engine::session`].
+pub struct SessionBuilder<'e> {
+    engine: &'e Engine,
+    adapter: String,
+    sampler: Sampler,
+    greedy: bool,
+    seed: u64,
+}
+
+impl<'e> SessionBuilder<'e> {
+    pub(crate) fn new(engine: &'e Engine) -> SessionBuilder<'e> {
+        SessionBuilder {
+            engine,
+            adapter: BASE_ADAPTER.to_string(),
+            sampler: Sampler::default(),
+            greedy: false,
+            seed: 0,
+        }
+    }
+
+    /// Serve this named adapter (default: [`BASE_ADAPTER`]).
+    pub fn adapter(mut self, name: &str) -> Self {
+        self.adapter = name.to_string();
+        self
+    }
+
+    pub fn sampler(mut self, sampler: Sampler) -> Self {
+        self.sampler = sampler;
+        self
+    }
+
+    /// Deterministic argmax decoding (accuracy-style eval).
+    pub fn greedy(mut self, greedy: bool) -> Self {
+        self.greedy = greedy;
+        self
+    }
+
+    /// Seed of the session's private sampling RNG.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Validate the adapter and produce the session.
+    pub fn build(self) -> Result<Session<'e>> {
+        // resolve once so a typo fails at build time, not mid-decode
+        self.engine.adapter_literals(&self.adapter)?;
+        let tok = Tokenizer::new(self.engine.spec.cfg.vocab);
+        Ok(Session {
+            engine: self.engine,
+            adapter: self.adapter,
+            sampler: self.sampler,
+            greedy: self.greedy,
+            rng: Rng::new(self.seed),
+            tok,
+            tokens_generated: 0,
+        })
+    }
+}
+
+/// One serving session: a named adapter + sampling state over a shared
+/// engine. Cheap to construct; create one per request stream.
+pub struct Session<'e> {
+    engine: &'e Engine,
+    adapter: String,
+    pub sampler: Sampler,
+    pub greedy: bool,
+    rng: Rng,
+    tok: Tokenizer,
+    /// cumulative count of sampled (emitted) tokens — serving metric
+    tokens_generated: u64,
+}
+
+impl<'e> Session<'e> {
+    pub fn engine(&self) -> &'e Engine {
+        self.engine
+    }
+
+    pub fn adapter(&self) -> &str {
+        &self.adapter
+    }
+
+    /// Hot-swap which adapter this session serves (it must be registered).
+    pub fn set_adapter(&mut self, name: &str) -> Result<()> {
+        self.engine.adapter_literals(name)?;
+        self.adapter = name.to_string();
+        Ok(())
+    }
+
+    pub fn tokenizer(&self) -> &Tokenizer {
+        &self.tok
+    }
+
+    /// Total tokens sampled by this session (across all calls).
+    pub fn tokens_generated(&self) -> u64 {
+        self.tokens_generated
+    }
+
+    fn encode_prompt(&self, prompt: &str) -> Result<Vec<i32>> {
+        let mut ids = vec![BOS];
+        ids.extend(self.tok.encode(prompt));
+        ids.push(SEP);
+        ensure!(
+            ids.len() < self.engine.spec.cfg.seq_len,
+            "prompt too long ({} tokens, compiled seq_len {})",
+            ids.len(),
+            self.engine.spec.cfg.seq_len
+        );
+        Ok(ids)
+    }
+
+    /// One full-sequence forward: logits for the whole (batch, seq, vocab)
+    /// buffer under this session's adapter.
+    fn forward(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let cfg = &self.engine.spec.cfg;
+        let exe = self.engine.fwd_exe()?;
+        let adapter = self.engine.adapter_literals(&self.adapter)?;
+        let t = Tensor::i32("tokens", vec![cfg.batch, cfg.seq_len], tokens);
+        let tok = crate::runtime::executor::literal_from_tensor(&t)?;
+        let frozen = self.engine.frozen();
+        let mut inputs: Vec<&xla::Literal> =
+            Vec::with_capacity(adapter.len() + frozen.len() + 1);
+        inputs.extend(adapter.iter());
+        inputs.extend(frozen.iter());
+        inputs.push(&tok);
+        let out = exe.run(&inputs)?;
+        literal_to_f32(&out[0])
+    }
+
+    fn next_token(&mut self, logits_row: &[f32]) -> i32 {
+        if self.greedy {
+            Sampler::greedy(logits_row)
+        } else {
+            self.sampler.sample(logits_row, &mut self.rng)
+        }
+    }
+
+    /// Generate a full completion for one prompt.
+    pub fn generate(&mut self, prompt: &str) -> Result<String> {
+        self.generate_with(prompt, |_| {})
+    }
+
+    /// Generate a completion, invoking `on_token` with each decoded token
+    /// fragment as it is produced (callback-style streaming).
+    pub fn generate_with(
+        &mut self,
+        prompt: &str,
+        mut on_token: impl FnMut(&str),
+    ) -> Result<String> {
+        let mut out = String::new();
+        let mut stream = self.stream(prompt)?;
+        while let Some(piece) = stream.next_token_text() {
+            let piece = piece?;
+            on_token(&piece);
+            out.push_str(&piece);
+        }
+        Ok(out)
+    }
+
+    /// Token-by-token streaming decode as an iterator of decoded
+    /// fragments. Ends at EOS, `max_new_tokens`, or the compiled
+    /// `seq_len`.
+    pub fn stream(&mut self, prompt: &str) -> Result<TokenStream<'_, 'e>> {
+        self.engine.fwd_exe()?; // fail before the first next() on fwd-less artifacts
+        let prompt_ids = self.encode_prompt(prompt)?;
+        Ok(TokenStream { session: self, prompt_ids, out: Vec::new(), done: false })
+    }
+
+    /// Batched multi-prompt decoding: up to `cfg.batch` prompts advance in
+    /// lockstep, one forward per step for all unfinished rows. With greedy
+    /// decoding the per-row results are identical to `generate` on each
+    /// prompt alone.
+    pub fn generate_batch(&mut self, prompts: &[&str]) -> Result<Vec<String>> {
+        let cfg = self.engine.spec.cfg.clone();
+        ensure!(!prompts.is_empty(), "no prompts");
+        ensure!(
+            prompts.len() <= cfg.batch,
+            "{} prompts exceed the compiled batch size {}",
+            prompts.len(),
+            cfg.batch
+        );
+        let rows: Vec<Vec<i32>> = prompts
+            .iter()
+            .map(|p| self.encode_prompt(p))
+            .collect::<Result<_>>()?;
+        let n = rows.len();
+        let mut outs: Vec<Vec<i32>> = vec![Vec::new(); n];
+        let mut done = vec![false; n];
+        for _ in 0..self.sampler.max_new_tokens {
+            for r in 0..n {
+                if rows[r].len() + outs[r].len() >= cfg.seq_len {
+                    done[r] = true;
+                }
+            }
+            if done.iter().all(|&d| d) {
+                break;
+            }
+            let mut tokens = vec![PAD; cfg.batch * cfg.seq_len];
+            for r in 0..n {
+                let base = r * cfg.seq_len;
+                let plen = rows[r].len();
+                tokens[base..base + plen].copy_from_slice(&rows[r]);
+                tokens[base + plen..base + plen + outs[r].len()]
+                    .copy_from_slice(&outs[r]);
+            }
+            let logits = self.forward(&tokens)?;
+            for r in 0..n {
+                if done[r] {
+                    continue;
+                }
+                let pos = rows[r].len() + outs[r].len();
+                let off = (r * cfg.seq_len + pos - 1) * cfg.vocab;
+                let next = self.next_token(&logits[off..off + cfg.vocab]);
+                if next == EOS {
+                    done[r] = true;
+                } else {
+                    outs[r].push(next);
+                    self.tokens_generated += 1;
+                }
+            }
+        }
+        Ok(outs.iter().map(|o| self.tok.decode(o)).collect())
+    }
+
+    /// (loss, token accuracy) on one batch under this session's adapter —
+    /// no training state anywhere near this path.
+    pub fn eval(&self, batch: &Batch) -> Result<(f32, f32)> {
+        let exe = self.engine.eval_exe()?;
+        let adapter = self.engine.adapter_literals(&self.adapter)?;
+        let [tok, mask] = self.engine.batch_literals(batch)?;
+        let frozen = self.engine.frozen();
+        let mut inputs: Vec<&xla::Literal> =
+            Vec::with_capacity(adapter.len() + frozen.len() + 2);
+        inputs.extend(adapter.iter());
+        inputs.extend(frozen.iter());
+        inputs.push(&tok);
+        inputs.push(&mask);
+        let out = exe.run(&inputs)?;
+        ensure!(out.len() == 2, "eval returned {} outputs", out.len());
+        Ok((literal_scalar_f32(&out[0])?, literal_scalar_f32(&out[1])?))
+    }
+
+    /// Mean (loss, accuracy) over a whole batcher.
+    pub fn eval_all(&self, batcher: &Batcher, seed: u64) -> Result<(f32, f32)> {
+        let batches = batcher.epoch(seed);
+        ensure!(!batches.is_empty(), "empty eval set");
+        let mut loss = 0f64;
+        let mut acc = 0f64;
+        for b in &batches {
+            let (l, a) = self.eval(b)?;
+            loss += l as f64;
+            acc += a as f64;
+        }
+        let n = batches.len() as f64;
+        Ok(((loss / n) as f32, (acc / n) as f32))
+    }
+}
+
+/// Streaming decode state; see [`Session::stream`].
+pub struct TokenStream<'s, 'e> {
+    session: &'s mut Session<'e>,
+    prompt_ids: Vec<i32>,
+    out: Vec<i32>,
+    done: bool,
+}
+
+impl TokenStream<'_, '_> {
+    /// Token ids emitted so far.
+    pub fn emitted(&self) -> &[i32] {
+        &self.out
+    }
+
+    /// Produce the next decoded token fragment, or `None` when the stream
+    /// is finished (EOS / token budget / sequence length).
+    pub fn next_token_text(&mut self) -> Option<Result<String>> {
+        if self.done || self.out.len() >= self.session.sampler.max_new_tokens {
+            return None;
+        }
+        let cfg = self.session.engine.spec.cfg.clone();
+        let plen = self.prompt_ids.len();
+        let pos = plen + self.out.len();
+        if pos >= cfg.seq_len {
+            self.done = true;
+            return None;
+        }
+        let mut tokens = vec![PAD; cfg.batch * cfg.seq_len];
+        tokens[..plen].copy_from_slice(&self.prompt_ids);
+        tokens[plen..pos].copy_from_slice(&self.out);
+        let logits = match self.session.forward(&tokens) {
+            Ok(l) => l,
+            Err(e) => {
+                self.done = true;
+                return Some(Err(e));
+            }
+        };
+        let off = (pos - 1) * cfg.vocab;
+        let next = self.session.next_token(&logits[off..off + cfg.vocab]);
+        if next == EOS {
+            self.done = true;
+            return None;
+        }
+        self.out.push(next);
+        self.session.tokens_generated += 1;
+        Some(Ok(self.session.tok.decode(&[next])))
+    }
+}
+
+impl Iterator for TokenStream<'_, '_> {
+    type Item = Result<String>;
+
+    fn next(&mut self) -> Option<Result<String>> {
+        self.next_token_text()
+    }
+}

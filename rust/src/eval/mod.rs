@@ -1,11 +1,15 @@
 //! Chatbot evaluation harness: the system roster, the generative judge
-//! model (GPT-4 / human stand-ins with the biases the paper measures), and
-//! the capability model used for the large-scale benchmark rows we cannot
-//! train here (DESIGN.md section 2 documents the substitution).
+//! model (GPT-4 / human stand-ins with the biases the paper measures), the
+//! capability model used for the large-scale benchmark rows we cannot
+//! train here (DESIGN.md section 2 documents the substitution), and the
+//! judged arena that runs the same tournament protocol over *real*
+//! adapters served by `crate::engine`.
 
+pub mod arena;
 pub mod capability;
 pub mod judge;
 pub mod systems;
 
+pub use arena::{run_arena, ArenaReport};
 pub use judge::{Judge, JudgeKind};
 pub use systems::{roster, System};

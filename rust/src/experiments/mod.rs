@@ -23,13 +23,17 @@ pub mod table7;
 pub mod table8;
 pub mod train_util;
 
+use std::rc::Rc;
+
 use crate::runtime::artifact::Manifest;
 use crate::runtime::client::Runtime;
 
 /// Shared context. Training-based experiments need the runtime+manifest;
-/// analytic/simulated ones run standalone.
+/// analytic/simulated ones run standalone. The runtime is `Rc`-shared so
+/// experiments can stack per-artifact `engine::Engine`s over one PJRT
+/// client (and its executable cache).
 pub struct Ctx {
-    pub rt: Option<Runtime>,
+    pub rt: Option<Rc<Runtime>>,
     pub manifest: Option<Manifest>,
     /// global seed
     pub seed: u64,
@@ -42,7 +46,7 @@ impl Ctx {
         Ctx { rt: None, manifest: None, seed, fast: false }
     }
 
-    pub fn runtime(&self) -> anyhow::Result<(&Runtime, &Manifest)> {
+    pub fn runtime(&self) -> anyhow::Result<(&Rc<Runtime>, &Manifest)> {
         match (&self.rt, &self.manifest) {
             (Some(r), Some(m)) => Ok((r, m)),
             _ => anyhow::bail!(

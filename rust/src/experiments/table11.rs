@@ -10,6 +10,7 @@ use crate::coordinator::trainer::{TrainOptions, Trainer};
 use crate::data::batching::Batcher;
 use crate::data::synthetic::{corpus, eval_set, CorpusKind, EvalSuite};
 use crate::data::tokenizer::Tokenizer;
+use crate::engine::Engine;
 use crate::util::stats;
 
 use super::{render_table, Ctx};
@@ -26,8 +27,9 @@ use super::{render_table, Ctx};
 /// the dataset axis isolates *suitability* — the paper's actual question.
 fn cell(ctx: &Ctx, kind: CorpusKind, size: usize, epochs: usize) -> Result<f64> {
     let (rt, manifest) = ctx.runtime()?;
-    let mut trainer = Trainer::new(rt, manifest, "tiny_scope_all")?;
-    let cfg = trainer.spec.cfg.clone();
+    let engine = Engine::new(rt.clone(), manifest, "tiny_scope_all")?;
+    let mut trainer = Trainer::new(&engine)?;
+    let cfg = trainer.spec().cfg.clone();
     let tok = Tokenizer::new(cfg.vocab);
     let ds = corpus(kind, size, ctx.seed ^ size as u64);
     let b = Batcher::new(&ds, tok.clone(), cfg.batch, cfg.seq_len, false);

@@ -1,6 +1,8 @@
 //! Shared helpers for the real-training experiments (Tables 3/10/11,
-//! Figures 2/4): build a corpus, train an artifact for a fixed number of
-//! steps on the Rust coordinator, and measure held-out token accuracy.
+//! Figures 2/4): build a corpus, train an artifact through an
+//! `engine::Engine` + `Trainer` pair, and measure held-out token accuracy.
+
+use std::rc::Rc;
 
 use anyhow::Result;
 
@@ -8,6 +10,7 @@ use crate::coordinator::trainer::{TrainOptions, Trainer};
 use crate::data::batching::Batcher;
 use crate::data::synthetic::{corpus, eval_set, CorpusKind, EvalSuite};
 use crate::data::tokenizer::Tokenizer;
+use crate::engine::Engine;
 use crate::runtime::artifact::Manifest;
 use crate::runtime::client::Runtime;
 
@@ -25,7 +28,7 @@ pub struct RunResult {
 /// Train `artifact` on `kind` for `steps`, eval on `suite`.
 #[allow(clippy::too_many_arguments)]
 pub fn train_once(
-    rt: &Runtime,
+    rt: &Rc<Runtime>,
     manifest: &Manifest,
     artifact: &str,
     kind: CorpusKind,
@@ -35,8 +38,9 @@ pub fn train_once(
     data_seed: u64,
     train_on_source: bool,
 ) -> Result<RunResult> {
-    let mut trainer = Trainer::new(rt, manifest, artifact)?;
-    let cfg = trainer.spec.cfg.clone();
+    let engine = Engine::new(rt.clone(), manifest, artifact)?;
+    let mut trainer = Trainer::new(&engine)?;
+    let cfg = trainer.spec().cfg.clone();
     let tok = Tokenizer::new(cfg.vocab);
     let train_ds = corpus(kind, corpus_size, data_seed);
     let train_b = Batcher::new(&train_ds, tok.clone(), cfg.batch, cfg.seq_len,

@@ -7,18 +7,32 @@
 //!   quantization, Double Quantization, and the fused QLoRA linear.
 //! * **L2** — a JAX LLaMA-style transformer with QLoRA linears, AOT-lowered
 //!   to HLO text per configuration (`python/compile/aot.py`).
-//! * **L3** — this crate: the PJRT runtime, the finetuning coordinator
-//!   (data pipeline, batching, training loop), a bit-exact native
-//!   quantization substrate, the paged-optimizer simulator, the analytical
-//!   memory model, the Elo evaluation machinery, and the experiment harness
-//!   regenerating every table and figure of the paper.
+//! * **L3** — this crate, organized around the serving seam the paper's
+//!   economics imply (one frozen 4-bit base, many cheap adapters):
+//!   - [`engine`] — the public API core: an `Engine` owns the PJRT
+//!     runtime, the compiled executables, and the frozen quantized base
+//!     (uploaded once); an `AdapterRegistry` hot-swaps named LoRA
+//!     adapters over that base; `Session`s serve `generate` (whole,
+//!     streaming, or batched multi-prompt) and `eval` per adapter.
+//!   - [`coordinator`] — finetuning as a *client* of the engine: the
+//!     training loop borrows the runtime and frozen base, owns only the
+//!     mutable state, and publishes finished adapters back into the
+//!     engine's registry.
+//!   - the supporting subsystems: the data pipeline ([`data`]), a
+//!     bit-exact native quantization substrate ([`quant`]), the
+//!     paged-optimizer simulator ([`paged`]), the analytical memory model
+//!     ([`memory`]), the Elo evaluation machinery ([`elo`], [`eval`] —
+//!     including a judged arena over real engine sessions), and the
+//!     experiment harness regenerating every table and figure of the
+//!     paper ([`experiments`]).
 //!
-//! Python never runs on the training path: after `make artifacts` the
-//! `qlora` binary is self-contained.
+//! Python never runs on the training or serving path: after
+//! `make artifacts` the `qlora` binary is self-contained.
 
 pub mod coordinator;
 pub mod data;
 pub mod elo;
+pub mod engine;
 pub mod eval;
 pub mod experiments;
 pub mod memory;

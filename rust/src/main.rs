@@ -2,23 +2,32 @@
 //!
 //! Subcommands:
 //!   train        finetune an artifact on a synthetic corpus
-//!   eval         evaluate a checkpoint
-//!   generate     sample from a finetuned model (nucleus p=0.9, T=0.7)
+//!   eval         evaluate an adapter over the frozen base (no trainer)
+//!   generate     sample from the serving engine (single, batched, or
+//!                streamed; nucleus p=0.9, T=0.7)
+//!   arena        judged Elo tournament between adapters on one base
 //!   quantize     quantization round-trip report for a datatype
 //!   memory       analytical memory planner (Figure 6 / Table 6)
 //!   experiment   regenerate a paper table/figure (or `all`)
 //!   list         list artifacts and experiments
+//!
+//! Inference paths (`generate`, `eval`, `arena`) run entirely through
+//! `engine::Engine` + `Session`: one frozen base is uploaded once and any
+//! number of adapters are multiplexed over it.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
 
 use anyhow::{bail, Result};
 
 use qlora::coordinator::checkpoint;
-use qlora::coordinator::generate::Sampler;
 use qlora::coordinator::trainer::{TrainOptions, Trainer};
 use qlora::data::batching::Batcher;
 use qlora::data::synthetic::{corpus, eval_set, CorpusKind, EvalSuite};
 use qlora::data::tokenizer::Tokenizer;
+use qlora::engine::{Engine, Sampler, BASE_ADAPTER};
+use qlora::eval::arena::run_arena;
+use qlora::eval::Judge;
 use qlora::experiments::{runner, Ctx};
 use qlora::memory;
 use qlora::quant::codebook::DType;
@@ -26,7 +35,6 @@ use qlora::quant::error::{quant_error, synthetic_llm_weights};
 use qlora::runtime::artifact::Manifest;
 use qlora::runtime::client::Runtime;
 use qlora::util::cli::Args;
-use qlora::util::rng::Rng;
 
 fn main() {
     if let Err(e) = run() {
@@ -42,8 +50,11 @@ fn usage() -> &'static str {
      [--seed S] [--paged] [--out ckpt.tensors] [--curve loss.csv]\n\
        eval        --artifact <name> [--ckpt ckpt.tensors] [--suite \
      mmlu|vicuna]\n\
-       generate    --artifact <name> [--ckpt ...] --prompt \"rev abc\" \
-     [--greedy]\n\
+       generate    --artifact <name> [--ckpt ...] [--adapter <name>] \
+     --prompt \"rev abc\" [--prompts \"a|b\"] [--stream] [--greedy] \
+     [--top-p P] [--top-k K] [--temperature T] [--max-new N]\n\
+       arena       --artifact <name> --adapters \"tuned=ck.tensors[,...]\" \
+     [--n-prompts N] [--judge gpt4|human] [--orderings N]\n\
        quantize    [--dtype nf4] [--block 64] [--dq]\n\
        memory      [--size 65B] [--r 64] [--seq 512]\n\
        experiment  <id|all> [--fast] [--seed S] [--results results/]\n\
@@ -58,6 +69,20 @@ fn corpus_kind(name: &str) -> Result<CorpusKind> {
         .ok_or_else(|| anyhow::anyhow!(
             "unknown corpus {name:?}; one of: {}",
             CorpusKind::all().map(|k| k.name()).join(", ")))
+}
+
+/// Build the serving engine for `--artifact`, loading `--ckpt` (if given)
+/// as the adapter named "ckpt".
+fn engine_from_args(args: &Args, artifacts_dir: &Path) -> Result<Engine> {
+    let name = args
+        .get("artifact")
+        .ok_or_else(|| anyhow::anyhow!("--artifact required"))?;
+    let manifest = Manifest::load(artifacts_dir)?;
+    let engine = Engine::cpu(&manifest, name)?;
+    if let Some(ck) = args.get("ckpt") {
+        engine.load_adapter("ckpt", &PathBuf::from(ck))?;
+    }
+    Ok(engine)
 }
 
 fn run() -> Result<()> {
@@ -101,10 +126,10 @@ fn run() -> Result<()> {
             let name = args
                 .get("artifact")
                 .ok_or_else(|| anyhow::anyhow!("--artifact required"))?;
-            let rt = Runtime::cpu()?;
             let manifest = Manifest::load(&artifacts_dir)?;
-            let mut trainer = Trainer::new(&rt, &manifest, name)?;
-            let cfg = trainer.spec.cfg.clone();
+            let engine = Engine::cpu(&manifest, name)?;
+            let mut trainer = Trainer::new(&engine)?;
+            let cfg = trainer.spec().cfg.clone();
             let kind = corpus_kind(&args.get_or("corpus", "alpaca"))?;
             let tok = Tokenizer::new(cfg.vocab);
             let ds = corpus(kind, args.usize_or("corpus-size", 512)?,
@@ -154,16 +179,14 @@ fn run() -> Result<()> {
             }
         }
         "eval" => {
-            let name = args
-                .get("artifact")
-                .ok_or_else(|| anyhow::anyhow!("--artifact required"))?;
-            let rt = Runtime::cpu()?;
-            let manifest = Manifest::load(&artifacts_dir)?;
-            let mut trainer = Trainer::new(&rt, &manifest, name)?;
-            if let Some(ck) = args.get("ckpt") {
-                checkpoint::load(&mut trainer, &PathBuf::from(ck))?;
-            }
-            let cfg = trainer.spec.cfg.clone();
+            let engine = engine_from_args(&args, &artifacts_dir)?;
+            let adapter = if args.get("ckpt").is_some() {
+                "ckpt"
+            } else {
+                BASE_ADAPTER
+            };
+            let session = engine.session().adapter(adapter).build()?;
+            let cfg = engine.spec.cfg.clone();
             let suite = match args.get_or("suite", "vicuna").as_str() {
                 "mmlu" => EvalSuite::MmluProxy,
                 _ => EvalSuite::VicunaProxy,
@@ -171,40 +194,90 @@ fn run() -> Result<()> {
             let tok = Tokenizer::new(cfg.vocab);
             let ds = eval_set(suite, cfg.batch * 8, args.u64_or("seed", 7)?);
             let b = Batcher::new(&ds, tok, cfg.batch, cfg.seq_len, false);
-            let (loss, acc) = trainer.eval_all(&b, 0)?;
-            println!("eval loss {loss:.4}  token accuracy {acc:.3}");
+            let (loss, acc) = session.eval_all(&b, 0)?;
+            println!("eval[{adapter}] loss {loss:.4}  token accuracy {acc:.3}");
         }
         "generate" => {
-            let name = args
-                .get("artifact")
-                .ok_or_else(|| anyhow::anyhow!("--artifact required"))?;
-            let prompt = args
-                .get("prompt")
-                .ok_or_else(|| anyhow::anyhow!("--prompt required"))?
-                .to_string();
-            let rt = Runtime::cpu()?;
-            let manifest = Manifest::load(&artifacts_dir)?;
-            let mut trainer = Trainer::new(&rt, &manifest, name)?;
-            if let Some(ck) = args.get("ckpt") {
-                checkpoint::load(&mut trainer, &PathBuf::from(ck))?;
+            let engine = engine_from_args(&args, &artifacts_dir)?;
+            let adapter = args.get_or(
+                "adapter",
+                if args.get("ckpt").is_some() { "ckpt" } else { BASE_ADAPTER },
+            );
+            let mut session = engine
+                .session()
+                .adapter(&adapter)
+                .sampler(Sampler::from_args(&args, 32)?)
+                .greedy(args.flag("greedy"))
+                .seed(args.u64_or("seed", 0)?)
+                .build()?;
+            if let Some(batch) = args.get("prompts") {
+                // batched multi-prompt decoding: one forward per step for
+                // all prompts
+                let prompts: Vec<&str> =
+                    batch.split('|').map(str::trim).collect();
+                let outs = session.generate_batch(&prompts)?;
+                for (p, o) in prompts.iter().zip(outs.iter()) {
+                    println!("{p} -> {o}");
+                }
+            } else {
+                let prompt = args
+                    .get("prompt")
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("--prompt (or --prompts) required")
+                    })?
+                    .to_string();
+                if args.flag("stream") {
+                    use std::io::Write;
+                    print!("{prompt} -> ");
+                    std::io::stdout().flush()?;
+                    session.generate_with(&prompt, |piece| {
+                        print!("{piece}");
+                        let _ = std::io::stdout().flush();
+                    })?;
+                    println!();
+                } else {
+                    let out = session.generate(&prompt)?;
+                    println!("{prompt} -> {out}");
+                }
             }
-            let tok = Tokenizer::new(trainer.spec.cfg.vocab);
-            let sampler = Sampler {
-                top_p: args.f64_or("top-p", 0.9)?,
-                temperature: args.f64_or("temperature", 0.7)?,
-                max_new_tokens: args.usize_or("max-new", 32)?,
+        }
+        "arena" => {
+            let engine = engine_from_args(&args, &artifacts_dir)?;
+            // --adapters "name=ckpt.tensors,name2=ckpt2.tensors"
+            if let Some(spec) = args.get("adapters") {
+                for part in spec.split(',') {
+                    let Some((name, path)) = part.split_once('=') else {
+                        bail!("--adapters expects name=path[,name=path...], \
+                               got {part:?}");
+                    };
+                    engine.load_adapter(name.trim(),
+                                        &PathBuf::from(path.trim()))?;
+                }
+            }
+            let names = engine.adapter_names();
+            let adapters: Vec<&str> =
+                names.iter().map(String::as_str).collect();
+            let judge = match args.get_or("judge", "gpt4").as_str() {
+                "human" => Judge::human(),
+                _ => Judge::gpt4(),
             };
-            let mut rng = Rng::new(args.u64_or("seed", 0)?);
-            let out = sampler.generate(&trainer, &tok, &prompt, &mut rng,
-                                       args.flag("greedy"))?;
-            println!("{prompt} -> {out}");
+            let report = run_arena(
+                &engine,
+                &adapters,
+                EvalSuite::VicunaProxy,
+                args.usize_or("n-prompts", 16)?,
+                &judge,
+                args.usize_or("orderings", 500)?,
+                args.u64_or("seed", 0)?,
+            )?;
+            print!("{}", report.table());
         }
         "quantize" => {
             let dtype = DType::from_name(&args.get_or("dtype", "nf4"))
                 .ok_or_else(|| anyhow::anyhow!("unknown dtype"))?;
             let block = args.usize_or("block", 64)?;
             let dq = args.flag("dq").then_some(256);
-            let mut rng = Rng::new(args.u64_or("seed", 0)?);
+            let mut rng = qlora::util::rng::Rng::new(args.u64_or("seed", 0)?);
             let w = synthetic_llm_weights(&mut rng, 64 * 4096, 0.01, 5.0);
             let e = quant_error(&w, dtype, block, dq)?;
             println!(
@@ -254,7 +327,7 @@ fn run() -> Result<()> {
                     .any(|(n, needs, ..)| *n == id && *needs);
             let (rt, manifest) = if needs_rt {
                 match Manifest::load(&artifacts_dir) {
-                    Ok(m) => (Some(Runtime::cpu()?), Some(m)),
+                    Ok(m) => (Some(Rc::new(Runtime::cpu()?)), Some(m)),
                     Err(e) => {
                         eprintln!("warning: no artifacts ({e}); training \
                                    experiments will be skipped");

@@ -2,6 +2,8 @@
 //! experiment runs in fast mode and emits its headline shape-check lines;
 //! one real-training experiment runs when artifacts are present.
 
+use std::rc::Rc;
+
 use qlora::experiments::{runner, Ctx};
 use qlora::runtime::artifact::Manifest;
 use qlora::runtime::client::Runtime;
@@ -53,10 +55,13 @@ fn training_experiment_needs_runtime_error() {
 fn one_training_experiment_end_to_end() {
     let dir = Manifest::default_dir();
     let Ok(manifest) = Manifest::load(&dir) else {
-        eprintln!("skipped: no artifacts");
+        eprintln!(
+            "skipped: artifacts not built in {dir:?} — run `make artifacts` \
+             to exercise the training experiment"
+        );
         return;
     };
-    let rt = Runtime::cpu().unwrap();
+    let rt = Rc::new(Runtime::cpu().unwrap());
     let ctx = Ctx { rt: Some(rt), manifest: Some(manifest), seed: 1,
                     fast: true };
     // table10 is the cheapest real-training experiment (one artifact)
