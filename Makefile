@@ -1,0 +1,22 @@
+# Build-time artifact pipeline. Python runs ONCE here; afterwards the
+# Rust binary is self-contained (see ARCHITECTURE.md).
+
+ARTIFACTS ?= artifacts
+
+.PHONY: artifacts artifacts-large test test-python test-rust
+
+# Lower every model config to HLO text + init tensors + manifest.
+artifacts:
+	cd python && python3 -m compile.aot --out ../$(ARTIFACTS)
+
+# Also build the large configs (slow; needs a capable machine).
+artifacts-large:
+	cd python && python3 -m compile.aot --out ../$(ARTIFACTS) --large
+
+test: test-python test-rust
+
+test-python:
+	cd python && python3 -m pytest tests -q
+
+test-rust:
+	cd rust && cargo test -q

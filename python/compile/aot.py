@@ -10,6 +10,9 @@ Per config `<name>` this emits:
     <name>.train.hlo.txt   train_step (fwd+bwd+Adam) as one fused graph
     <name>.eval.hlo.txt    (loss, token-accuracy) on a batch
     <name>.fwd.hlo.txt     logits, for generation       (e2e config only)
+    <name>.prefill.hlo.txt full forward that also fills the KV cache
+                           (pass-through rows for continuous batching)
+    <name>.decode.hlo.txt  O(1)-per-token KV-cached decode step
     <name>.init.tensors    state leaves ++ frozen leaves (ordered)
 plus once:
     manifest.json          artifact index w/ I/O signatures (Rust reads this)
@@ -160,6 +163,39 @@ def build_config(cfg: ModelConfig, outdir: str, emit_fwd: bool,
         with open(os.path.join(outdir, f"{cfg.name}.fwd.hlo.txt"), "w") as f:
             f.write(to_hlo_text(lowered_f))
         entry["fwd_hlo"] = f"{cfg.name}.fwd.hlo.txt"
+
+        # KV-cached decode path: a prefill graph (full forward that also
+        # fills the cache, pass-through for unmasked rows) and an
+        # O(1)-per-token decode-step graph. Cache layout (B, L, S, D) —
+        # see python/compile/kernels/decode.py.
+        cache_shape = (cfg.batch, cfg.n_layers, cfg.seq_len, cfg.d_model)
+        cache_spec = jax.ShapeDtypeStruct(cache_shape, jnp.float32)
+        row_spec = jax.ShapeDtypeStruct((cfg.batch,), jnp.float32)
+        tok1_spec = jax.ShapeDtypeStruct((cfg.batch,), jnp.int32)
+        pos_spec = jax.ShapeDtypeStruct((cfg.batch,), jnp.int32)
+
+        lowered_p = jax.jit(model.make_prefill(cfg, full_ft)).lower(
+            trainable, frozen, cache_spec, cache_spec, tokens_spec, row_spec)
+        with open(os.path.join(outdir,
+                               f"{cfg.name}.prefill.hlo.txt"), "w") as f:
+            f.write(to_hlo_text(lowered_p))
+        entry["prefill_hlo"] = f"{cfg.name}.prefill.hlo.txt"
+
+        lowered_d = jax.jit(model.make_decode_step(cfg, full_ft)).lower(
+            trainable, frozen, cache_spec, cache_spec, tok1_spec, pos_spec)
+        with open(os.path.join(outdir,
+                               f"{cfg.name}.decode.hlo.txt"), "w") as f:
+            f.write(to_hlo_text(lowered_d))
+        entry["decode_hlo"] = f"{cfg.name}.decode.hlo.txt"
+
+        # prefill inputs: state[..n_trainable] ++ frozen ++ k ++ v ++
+        #   tokens ++ row_mask; outputs: (logits, k, v)
+        # decode inputs:  state[..n_trainable] ++ frozen ++ k ++ v ++
+        #   token ++ pos; outputs: (logits, k, v)
+        entry["cache_sig"] = [
+            {"name": "k_cache", "dtype": "f32", "shape": list(cache_shape)},
+            {"name": "v_cache", "dtype": "f32", "shape": list(cache_shape)},
+        ]
 
     tensorio.write_tensors(os.path.join(outdir, f"{cfg.name}.init.tensors"),
                            state_pairs + frozen_pairs)

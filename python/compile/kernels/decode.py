@@ -1,0 +1,79 @@
+"""L1: KV-cache decode primitives for the incremental generation path.
+
+The serving engine (rust/src/engine/decode.rs) decodes one token per step
+against per-row key/value caches instead of re-running the full-sequence
+forward. These helpers define the **cache contract** shared by the prefill
+and decode-step graphs (`model.make_prefill` / `model.make_decode_step`):
+
+* cache layout: ``(batch, n_layers, seq_len, d_model)`` float32, keys and
+  values stacked per layer with heads flattened into the last axis. A row
+  is contiguous in ``(layer, position)`` so one batch row is one slab.
+* position ``p`` of a row is written exactly once per decoded token (by
+  ``update_cache`` at ``pos == p``) and read by every later step's
+  attention; positions ``> pos`` are masked out, so stale slots from a
+  previous request in the same row are never observed.
+
+All math mirrors the full-sequence graph in `model.py` operation for
+operation (same RoPE frequencies, same ``-1e30`` causal mask, same
+softmax), so greedy decoding through the cached path reproduces the
+full-recompute tokens.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_at(x: jnp.ndarray, pos: jnp.ndarray) -> jnp.ndarray:
+    """RoPE for a single position per batch row.
+
+    ``x`` is ``(B, H, Dh)`` — one token's heads — and ``pos`` is ``(B,)``
+    int32. Identical to row ``pos[b]`` of `model.rope` applied to a full
+    ``(B, T, H, Dh)`` tensor: same frequency table, same rotate-half
+    pairing.
+    """
+    _, _, dh = x.shape
+    half = dh // 2
+    freqs = 1.0 / (10000.0 ** (jnp.arange(0, half) / half))       # (half,)
+    theta = pos.astype(jnp.float32)[:, None] * freqs[None, :]     # (B, half)
+    cos = jnp.cos(theta)[:, None, :]                              # (B, 1, half)
+    sin = jnp.sin(theta)[:, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+
+
+def update_cache(cache: jnp.ndarray, new: jnp.ndarray,
+                 pos: jnp.ndarray) -> jnp.ndarray:
+    """Write ``new`` ``(B, D)`` into ``cache`` ``(B, S, D)`` at per-row
+    position ``pos`` ``(B,)``.
+
+    A one-hot select rather than a scatter: every row writes exactly its
+    own position, rows at different positions coexist in one call (the
+    continuous-batching case).
+    """
+    s = cache.shape[1]
+    onehot = jnp.arange(s)[None, :] == pos[:, None]               # (B, S)
+    return jnp.where(onehot[:, :, None], new[:, None, :], cache)
+
+
+def cached_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, pos: jnp.ndarray) -> jnp.ndarray:
+    """One-token causal attention against a row's cache.
+
+    ``q`` is ``(B, H, Dh)`` (already rotated), caches are ``(B, S, H*Dh)``
+    and ``pos`` ``(B,)`` is the query's position: key positions
+    ``j <= pos[b]`` participate, the rest are masked to ``-1e30`` exactly
+    as the full-sequence graph masks its causal triangle. Returns the
+    context ``(B, H*Dh)``.
+    """
+    b, h, dh = q.shape
+    s = k_cache.shape[1]
+    k = k_cache.reshape(b, s, h, dh)
+    v = v_cache.reshape(b, s, h, dh)
+    att = jnp.einsum("bhd,bkhd->bhk", q, k) / jnp.sqrt(dh)
+    valid = jnp.arange(s)[None, :] <= pos[:, None]                # (B, S)
+    att = jnp.where(valid[:, None, :], att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    ctx = jnp.einsum("bhk,bkhd->bhd", att, v)
+    return ctx.reshape(b, h * dh)

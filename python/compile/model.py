@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from .configs import ModelConfig, PROJ_NAMES
-from .kernels import ref
+from .kernels import decode, ref
 
 Tree = Dict
 
@@ -134,7 +134,10 @@ def _linear(cfg: ModelConfig, base_entry: Tree, lora_entry: Optional[Tree],
 
 
 def _layer_fwd(cfg: ModelConfig, base_layer: Tree, lora_layer: Tree,
-               x: jnp.ndarray) -> jnp.ndarray:
+               x: jnp.ndarray):
+    """Full-sequence layer forward. Also returns the post-RoPE keys and
+    the values as (B, T, D) — the prefill graph stacks them into the KV
+    cache; the plain forward discards them (XLA dead-code-eliminates)."""
     b, t, d = x.shape
     nh, hd = cfg.n_heads, cfg.head_dim
 
@@ -160,21 +163,62 @@ def _layer_fwd(cfg: ModelConfig, base_layer: Tree, lora_layer: Tree,
     gate = jax.nn.silu(lin("wg", hpre))
     up = lin("wu", hpre)
     x = x + lin("wd", gate * up)
-    return x
+    return x, k.reshape(b, t, d), v.reshape(b, t, d)
 
 
 def forward(cfg: ModelConfig, base: Tree, lora: Tree,
-            tokens: jnp.ndarray) -> jnp.ndarray:
-    """tokens (B, T) int32 -> logits (B, T, V). lm_head tied to embedding."""
+            tokens: jnp.ndarray, return_kv: bool = False):
+    """tokens (B, T) int32 -> logits (B, T, V). lm_head tied to embedding.
+
+    With ``return_kv`` also returns the per-layer post-RoPE keys and
+    values stacked as (B, L, T, D) — the KV-cache layout of
+    `kernels.decode` (prefill fills a cache, decode steps extend it).
+    """
     x = base["embed"][tokens]
+    ks, vs = [], []
     for li in range(cfg.n_layers):
         f = functools.partial(_layer_fwd, cfg, base["layers"][li],
                               lora["layers"][li])
         if cfg.remat:
             f = jax.checkpoint(f)
-        x = f(x)
+        x, k, v = f(x)
+        ks.append(k)
+        vs.append(v)
     x = rms_norm(x, base["norm_f"])
-    return x @ base["embed"].T
+    logits = x @ base["embed"].T
+    if return_kv:
+        return logits, jnp.stack(ks, 1), jnp.stack(vs, 1)
+    return logits
+
+
+def _layer_step(cfg: ModelConfig, base_layer: Tree, lora_layer: Tree,
+                x: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                pos: jnp.ndarray):
+    """One-token layer forward against a (B, S, D) cache slice: write this
+    token's K/V at ``pos``, attend over positions <= ``pos``. The math per
+    op mirrors `_layer_fwd` restricted to one query position."""
+    b, d = x.shape
+    nh, hd = cfg.n_heads, cfg.head_dim
+
+    def lin(proj, h):
+        return _linear(cfg, base_layer[proj], lora_layer.get(proj), h,
+                       cfg.proj_shape(proj))
+
+    hpre = rms_norm(x, base_layer["ln1"])
+    q = lin("wq", hpre).reshape(b, nh, hd)
+    k = lin("wk", hpre).reshape(b, nh, hd)
+    v = lin("wv", hpre).reshape(b, nh, hd)
+    q, k = decode.rope_at(q, pos), decode.rope_at(k, pos)
+    k_cache = decode.update_cache(k_cache, k.reshape(b, d), pos)
+    v_cache = decode.update_cache(v_cache, v.reshape(b, d), pos)
+    ctx = decode.cached_attention(q, k_cache, v_cache, pos)
+    x = x + lin("wo", ctx)
+
+    hpre = rms_norm(x, base_layer["ln2"])
+    gate = jax.nn.silu(lin("wg", hpre))
+    up = lin("wu", hpre)
+    x = x + lin("wd", gate * up)
+    return x, k_cache, v_cache
 
 
 # --------------------------------------------------------------------------
@@ -264,14 +308,69 @@ def make_eval_step(cfg: ModelConfig, full_finetune: bool):
     return eval_step
 
 
+def _split(trainable, frozen, full_finetune):
+    if full_finetune:
+        return trainable, frozen["lora_stub"]
+    return frozen, trainable
+
+
 def make_forward(cfg: ModelConfig, full_finetune: bool):
     """fwd(trainable, frozen, tokens) -> logits, for generation in Rust."""
 
     def fwd(trainable, frozen, tokens):
-        if full_finetune:
-            base, lora = trainable, frozen["lora_stub"]
-        else:
-            base, lora = frozen, trainable
+        base, lora = _split(trainable, frozen, full_finetune)
         return forward(cfg, base, lora, tokens)
 
     return fwd
+
+
+def make_prefill(cfg: ModelConfig, full_finetune: bool):
+    """prefill(trainable, frozen, k_in, v_in, tokens, row_mask)
+    -> (logits (B,S,V), k (B,L,S,D), v (B,L,S,D)).
+
+    One full-sequence forward that additionally fills the KV cache. Rows
+    with ``row_mask > 0.5`` get freshly computed caches; rows with 0 pass
+    ``k_in``/``v_in`` through untouched — so the serving engine can admit
+    new prompts into free rows of a cache whose other rows are mid-decode
+    (continuous batching) with a single canonical cache value threading
+    through every graph call.
+    """
+
+    def prefill(trainable, frozen, k_in, v_in, tokens, row_mask):
+        base, lora = _split(trainable, frozen, full_finetune)
+        logits, k_new, v_new = forward(cfg, base, lora, tokens,
+                                       return_kv=True)
+        keep = row_mask[:, None, None, None] > 0.5
+        return (logits, jnp.where(keep, k_new, k_in),
+                jnp.where(keep, v_new, v_in))
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig, full_finetune: bool):
+    """decode_step(trainable, frozen, k, v, token, pos)
+    -> (logits (B,V), k', v').
+
+    One O(1)-in-generated-length decode step: embed ``token`` (B,), write
+    its K/V at per-row position ``pos`` (B,), attend over the cached
+    prefix, and emit next-token logits for every row. Idle rows are driven
+    with ``pos = seq_len - 1``: that slot is rewritten by the row's own
+    final step before it can ever be attended (positions > pos are
+    masked), so interleaving active and idle rows is safe.
+    """
+
+    def step(trainable, frozen, k_caches, v_caches, token, pos):
+        base, lora = _split(trainable, frozen, full_finetune)
+        x = base["embed"][token]                                # (B, D)
+        new_k, new_v = [], []
+        for li in range(cfg.n_layers):
+            x, kc, vc = _layer_step(cfg, base["layers"][li],
+                                    lora["layers"][li], x,
+                                    k_caches[:, li], v_caches[:, li], pos)
+            new_k.append(kc)
+            new_v.append(vc)
+        x = rms_norm(x, base["norm_f"])
+        logits = x @ base["embed"].T                            # (B, V)
+        return logits, jnp.stack(new_k, 1), jnp.stack(new_v, 1)
+
+    return step

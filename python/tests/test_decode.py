@@ -1,0 +1,237 @@
+"""KV-cached decode path tests: the prefill graph reproduces the plain
+forward, incremental decode steps reproduce full-sequence greedy decoding
+token for token, and the continuous-batching contract (pass-through rows,
+per-row positions, idle rows parked at seq_len-1) holds. These are the
+build-time guarantees the Rust engine's CachedDecode leans on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs, model
+
+CFG = configs.by_name("tiny_scope_all")
+B, S, L, D = CFG.batch, CFG.seq_len, CFG.n_layers, CFG.d_model
+PAD = 0
+
+
+@pytest.fixture(scope="module")
+def setup():
+    key = jax.random.PRNGKey(0)
+    base = model.init_base_params(key, CFG)
+    lora = model.init_lora_params(jax.random.PRNGKey(1), CFG)
+    qbase = model.quantize_base(base, CFG)
+    prefill = jax.jit(model.make_prefill(CFG, False))
+    step = jax.jit(model.make_decode_step(CFG, False))
+    fwd = jax.jit(model.make_forward(CFG, False))
+    return qbase, lora, prefill, step, fwd
+
+
+def zero_caches():
+    z = jnp.zeros((B, L, S, D), jnp.float32)
+    return z, z
+
+
+def test_prefill_logits_match_forward(setup):
+    qbase, lora, prefill, step, fwd = setup
+    tok = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, CFG.vocab)
+    k0, v0 = zero_caches()
+    mask = jnp.ones((B,), jnp.float32)
+    logits, _, _ = prefill(lora, qbase, k0, v0, tok, mask)
+    expected = fwd(lora, qbase, tok)
+    assert np.array_equal(np.asarray(logits), np.asarray(expected)), \
+        "prefill logits must be bit-identical to the fwd graph"
+
+
+def test_prefill_pass_through_rows(setup):
+    qbase, lora, prefill, step, fwd = setup
+    tok = jax.random.randint(jax.random.PRNGKey(3), (B, S), 0, CFG.vocab)
+    k0 = jax.random.normal(jax.random.PRNGKey(4), (B, L, S, D))
+    v0 = jax.random.normal(jax.random.PRNGKey(5), (B, L, S, D))
+    mask = jnp.asarray([1.0, 0.0] * (B // 2) + [1.0] * (B % 2))
+    _, k1, v1 = prefill(lora, qbase, k0, v0, tok, mask)
+    for b in range(B):
+        if mask[b] > 0.5:
+            assert not np.allclose(np.asarray(k1[b]), np.asarray(k0[b]))
+        else:
+            assert np.array_equal(np.asarray(k1[b]), np.asarray(k0[b]))
+            assert np.array_equal(np.asarray(v1[b]), np.asarray(v0[b]))
+
+
+def greedy_full(fwd, qbase, lora, prompt, n_new):
+    """Reference: full-sequence recompute per token (the fallback path)."""
+    toks = list(prompt)
+    out = []
+    for _ in range(n_new):
+        buf = np.full((B, S), PAD, np.int32)
+        buf[0, :len(toks)] = toks
+        logits = fwd(lora, qbase, jnp.asarray(buf))
+        nxt = int(jnp.argmax(logits[0, len(toks) - 1]))
+        out.append(nxt)
+        toks.append(nxt)
+    return out
+
+
+def greedy_cached(prefill, step, qbase, lora, prompt, n_new):
+    """The Rust CachedDecode protocol: one prefill, then O(1) steps."""
+    k, v = zero_caches()
+    buf = np.full((B, S), PAD, np.int32)
+    buf[0, :len(prompt)] = prompt
+    mask = np.zeros((B,), np.float32)
+    mask[0] = 1.0
+    logits, k, v = prefill(lora, qbase, k, v, jnp.asarray(buf),
+                           jnp.asarray(mask))
+    nxt = int(jnp.argmax(logits[0, len(prompt) - 1]))
+    out = [nxt]
+    pos = len(prompt)
+    for _ in range(n_new - 1):
+        token = np.zeros((B,), np.int32)
+        posv = np.full((B,), S - 1, np.int32)   # idle rows park at S-1
+        token[0], posv[0] = out[-1], pos
+        logits, k, v = step(lora, qbase, k, v, jnp.asarray(token),
+                            jnp.asarray(posv))
+        nxt = int(jnp.argmax(logits[0]))
+        out.append(nxt)
+        pos += 1
+    return out
+
+
+def test_cached_greedy_decode_matches_full(setup):
+    qbase, lora, prefill, step, fwd = setup
+    for seed, plen in [(7, 5), (8, 1), (9, 12)]:
+        prompt = list(np.random.default_rng(seed).integers(
+            1, CFG.vocab, plen))
+        full = greedy_full(fwd, qbase, lora, prompt, 10)
+        cached = greedy_cached(prefill, step, qbase, lora, prompt, 10)
+        assert full == cached, f"prompt {prompt}: {full} != {cached}"
+
+
+def test_mixed_positions_decode_rows_independently(setup):
+    """Continuous batching: rows at different positions in one step call
+    must each match their single-row decode."""
+    qbase, lora, prefill, step, fwd = setup
+    rng = np.random.default_rng(11)
+    prompts = [list(rng.integers(1, CFG.vocab, n)) for n in (4, 9, 6)]
+
+    # independent single-row references
+    refs = [greedy_cached(prefill, step, qbase, lora, p, 6) for p in prompts]
+
+    # joint: all three prompts prefilled at once, stepped in lockstep
+    k, v = zero_caches()
+    buf = np.full((B, S), PAD, np.int32)
+    mask = np.zeros((B,), np.float32)
+    for b, p in enumerate(prompts):
+        buf[b, :len(p)] = p
+        mask[b] = 1.0
+    logits, k, v = prefill(lora, qbase, k, v, jnp.asarray(buf),
+                           jnp.asarray(mask))
+    outs = [[int(jnp.argmax(logits[b, len(p) - 1]))]
+            for b, p in enumerate(prompts)]
+    pos = [len(p) for p in prompts]
+    for _ in range(5):
+        token = np.zeros((B,), np.int32)
+        posv = np.full((B,), S - 1, np.int32)
+        for b in range(len(prompts)):
+            token[b], posv[b] = outs[b][-1], pos[b]
+            pos[b] += 1
+        logits, k, v = step(lora, qbase, k, v, jnp.asarray(token),
+                            jnp.asarray(posv))
+        for b in range(len(prompts)):
+            outs[b].append(int(jnp.argmax(logits[b])))
+    assert outs == refs
+
+
+def test_mid_flight_admission_is_isolated(setup):
+    """The Rust scheduler's continuous-batching pattern: row 0 is three
+    decode steps into its request when row 1's prompt is admitted (one
+    prefill with row 0 passed through, row 0 idle-parked), after which
+    both rows step together. Each row must match its solo decode."""
+    qbase, lora, prefill, step, fwd = setup
+    rng = np.random.default_rng(21)
+    p0 = list(rng.integers(1, CFG.vocab, 6))
+    p1 = list(rng.integers(1, CFG.vocab, 8))
+    ref0 = greedy_cached(prefill, step, qbase, lora, p0, 7)
+    ref1 = greedy_cached(prefill, step, qbase, lora, p1, 4)
+
+    def prefill_row(b, prompt, k, v):
+        buf = np.full((B, S), PAD, np.int32)
+        buf[b, :len(prompt)] = prompt
+        mask = np.zeros((B,), np.float32)
+        mask[b] = 1.0
+        return prefill(lora, qbase, k, v, jnp.asarray(buf),
+                       jnp.asarray(mask))
+
+    def step_rows(active, k, v):
+        """active: {row: (token, pos)}; idle rows parked at S-1."""
+        token = np.zeros((B,), np.int32)
+        posv = np.full((B,), S - 1, np.int32)
+        for b, (t, p) in active.items():
+            token[b], posv[b] = t, p
+        return step(lora, qbase, k, v, jnp.asarray(token),
+                    jnp.asarray(posv))
+
+    k, v = zero_caches()
+    logits, k, v = prefill_row(0, p0, k, v)
+    out0 = [int(jnp.argmax(logits[0, len(p0) - 1]))]
+    pos0 = len(p0)
+    for _ in range(3):                    # row 0 decodes alone
+        logits, k, v = step_rows({0: (out0[-1], pos0)}, k, v)
+        out0.append(int(jnp.argmax(logits[0])))
+        pos0 += 1
+    # admit row 1 mid-flight: prefill must pass row 0's cache through
+    logits, k, v = prefill_row(1, p1, k, v)
+    out1 = [int(jnp.argmax(logits[1, len(p1) - 1]))]
+    pos1 = len(p1)
+    for _ in range(3):                    # both rows step together
+        logits, k, v = step_rows(
+            {0: (out0[-1], pos0), 1: (out1[-1], pos1)}, k, v)
+        out0.append(int(jnp.argmax(logits[0])))
+        out1.append(int(jnp.argmax(logits[1])))
+        pos0 += 1
+        pos1 += 1
+    assert out0 == ref0, "mid-flight admission perturbed the live row"
+    assert out1 == ref1, "admitted row diverged from its solo decode"
+
+
+def test_stale_cache_rows_never_observed(setup):
+    """A freed row's leftover cache must not influence a new request in
+    that row: decoding over a garbage-initialized cache equals decoding
+    over a zero cache (prefill overwrites, masking hides the rest)."""
+    qbase, lora, prefill, step, fwd = setup
+    prompt = list(np.random.default_rng(13).integers(1, CFG.vocab, 7))
+
+    def run(k, v):
+        buf = np.full((B, S), PAD, np.int32)
+        buf[0, :len(prompt)] = prompt
+        mask = np.zeros((B,), np.float32)
+        mask[0] = 1.0
+        logits, k, v = prefill(lora, qbase, k, v, jnp.asarray(buf),
+                               jnp.asarray(mask))
+        out = [int(jnp.argmax(logits[0, len(prompt) - 1]))]
+        pos = len(prompt)
+        for _ in range(5):
+            token = np.zeros((B,), np.int32)
+            posv = np.full((B,), S - 1, np.int32)
+            token[0], posv[0] = out[-1], pos
+            logits, k, v = step(lora, qbase, k, v, jnp.asarray(token),
+                                jnp.asarray(posv))
+            out.append(int(jnp.argmax(logits[0])))
+            pos += 1
+        return out
+
+    k0, v0 = zero_caches()
+    kg = jax.random.normal(jax.random.PRNGKey(14), (B, L, S, D)) * 50.0
+    vg = jax.random.normal(jax.random.PRNGKey(15), (B, L, S, D)) * 50.0
+    assert run(k0, v0) == run(kg, vg)
+
+
+def test_rope_at_matches_full_rope(setup):
+    from compile.kernels import decode as dk
+    x = jax.random.normal(jax.random.PRNGKey(16),
+                          (2, 5, CFG.n_heads, CFG.head_dim))
+    full = model.rope(x)
+    for p in range(5):
+        single = dk.rope_at(x[:, p], jnp.asarray([p, p], jnp.int32))
+        assert np.allclose(np.asarray(single), np.asarray(full[:, p]),
+                           atol=1e-6)

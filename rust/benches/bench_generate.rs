@@ -1,10 +1,12 @@
 //! Serving benches through `engine::Session`: tokens/sec of the decode
-//! loop for single-prompt vs batched multi-prompt generation, and the
-//! adapter hot-swap overhead (must be tiny next to a forward). Uses the
-//! repo's mini-criterion harness (`util::bench`); requires
+//! loop for the KV-cached vs full-recompute paths (single prompt,
+//! continuous-batched multi-prompt, and per-step latency as a function of
+//! generated length — the cached path's step cost must stay flat), plus
+//! the adapter hot-swap overhead (must be tiny next to a forward). Uses
+//! the repo's mini-criterion harness (`util::bench`); requires
 //! `make artifacts`.
 
-use qlora::engine::{Engine, Sampler, BASE_ADAPTER};
+use qlora::engine::{DecodeMode, Engine, Sampler, BASE_ADAPTER};
 use qlora::runtime::artifact::Manifest;
 use qlora::util::bench::Bencher;
 
@@ -20,49 +22,102 @@ fn main() {
         return;
     };
     let cfg = engine.spec.cfg.clone();
-    let sampler = Sampler { max_new_tokens: 16, ..Sampler::default() };
     let mut b = Bencher::new();
     b.group(&format!(
-        "Session::generate over \"e2e\" ({} params, batch {}x{})",
+        "Session decode over \"e2e\" ({} params, batch {}x{})",
         cfg.n_params(), cfg.batch, cfg.seq_len
     ));
 
-    // greedy decoding is deterministic, so count tokens once and use the
-    // count as the per-iteration throughput denominator
-    let mut session = engine
-        .session()
-        .sampler(sampler.clone())
-        .greedy(true)
-        .build()
-        .expect("session");
+    let modes: Vec<(&str, DecodeMode)> = if engine.has_cached_decode() {
+        vec![("cached", DecodeMode::Cached), ("full", DecodeMode::Full)]
+    } else {
+        println!("(artifact has no decode graphs; re-run `make artifacts` \
+                  for cached-path numbers)");
+        vec![("full", DecodeMode::Full)]
+    };
     let prompt = "copy qlora engine";
-    let before = session.tokens_generated();
-    session.generate(prompt).expect("warm generate");
-    let tokens_single = (session.tokens_generated() - before).max(1) as usize;
-    b.bench_items(&format!("single prompt ({tokens_single} tok)"),
-                  tokens_single, || {
-        session.generate(prompt).unwrap()
-    });
 
-    // batched: fill the compiled batch with distinct prompts
-    let prompts: Vec<String> = (0..cfg.batch)
-        .map(|i| format!("rev prompt{i}"))
-        .collect();
-    let refs: Vec<&str> = prompts.iter().map(String::as_str).collect();
-    let before = session.tokens_generated();
-    session.generate_batch(&refs).expect("warm batch");
-    let tokens_batch = (session.tokens_generated() - before).max(1) as usize;
-    b.bench_items(
-        &format!("batched x{} ({tokens_batch} tok)", refs.len()),
-        tokens_batch,
-        || session.generate_batch(&refs).unwrap(),
-    );
+    for &(label, mode) in &modes {
+        // greedy decoding is deterministic, so count tokens once and use
+        // the count as the per-iteration throughput denominator
+        let sampler = Sampler { max_new_tokens: 16, ..Sampler::default() };
+        let mut session = engine
+            .session()
+            .sampler(sampler)
+            .greedy(true)
+            .decode(mode)
+            .build()
+            .expect("session");
+        let before = session.tokens_generated();
+        session.generate(prompt).expect("warm generate");
+        let tokens = (session.tokens_generated() - before).max(1) as usize;
+        b.bench_items(&format!("[{label}] single prompt ({tokens} tok)"),
+                      tokens, || session.generate(prompt).unwrap());
+
+        // 2x the compiled batch rows: continuous batching refills rows
+        // mid-flight instead of running two padded batches
+        let prompts: Vec<String> = (0..cfg.batch * 2)
+            .map(|i| format!("rev prompt{i}"))
+            .collect();
+        let refs: Vec<&str> = prompts.iter().map(String::as_str).collect();
+        let before = session.tokens_generated();
+        session.generate_batch(&refs).expect("warm batch");
+        let tokens_batch =
+            (session.tokens_generated() - before).max(1) as usize;
+        b.bench_items(
+            &format!("[{label}] continuous batch x{} ({tokens_batch} tok)",
+                     refs.len()),
+            tokens_batch,
+            || session.generate_batch(&refs).unwrap(),
+        );
+
+        // per-step cost as a function of generated length: time whole
+        // generations at increasing gen_len, then report the *marginal*
+        // cost per extra token between lengths — this subtracts out the
+        // (shared) prefill, so a flat marginal across the windows is the
+        // visible signature of the O(1) cached step; the full path shows
+        // a far larger marginal (a whole full-sequence forward per token)
+        let mut points: Vec<(f64, f64)> = Vec::new(); // (tokens, mean_ns)
+        for gen_len in [4usize, 16, 32] {
+            let s = Sampler { max_new_tokens: gen_len, ..Sampler::default() };
+            let mut sess = engine
+                .session()
+                .sampler(s)
+                .greedy(true)
+                .decode(mode)
+                .build()
+                .expect("session");
+            let before = sess.tokens_generated();
+            sess.generate(prompt).expect("warm generate");
+            let tokens = (sess.tokens_generated() - before).max(1) as usize;
+            let summary = b.bench_items(
+                &format!("[{label}] generate @ gen_len {gen_len} \
+                          ({tokens} tok)"),
+                tokens,
+                || sess.generate(prompt).unwrap(),
+            );
+            points.push((tokens as f64, summary.mean_ns));
+        }
+        for w in points.windows(2) {
+            let (tok0, t0) = w[0];
+            let (tok1, t1) = w[1];
+            if tok1 > tok0 {
+                let step_ns = (t1 - t0) / (tok1 - tok0);
+                println!(
+                    "{:<44} {:>10}",
+                    format!("[{label}] marginal step cost {tok0}→{tok1} tok"),
+                    qlora::util::bench::human_ns(step_ns.max(0.0)),
+                );
+            }
+        }
+    }
 
     // hot-swap: re-register the base adapters under a new name (bumping
     // the registry version so the device-literal cache is invalidated)
     // and switch to them — this measures the real swap path, registry
     // insert + literal re-upload, not a cache hit
     let tensors = engine.adapter_tensors(BASE_ADAPTER).expect("base tensors");
+    let mut session = engine.session().build().expect("session");
     b.bench("adapter hot-swap (register + upload + switch)", || {
         engine.register_adapter("swap", tensors.clone()).unwrap();
         session.set_adapter("swap").unwrap();

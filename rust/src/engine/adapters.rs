@@ -16,7 +16,10 @@ use crate::tensorio::Tensor;
 /// One registered adapter: host tensors + a version bumped on every swap.
 #[derive(Debug, Clone)]
 pub struct AdapterEntry {
+    /// The adapter's host tensors, in trainable-signature order.
     pub tensors: Vec<Tensor>,
+    /// Registry-wide monotonic version; bumped on every (hot-)swap so
+    /// device-literal caches know when to re-upload.
     pub version: u64,
 }
 
@@ -30,6 +33,8 @@ pub struct AdapterRegistry {
 }
 
 impl AdapterRegistry {
+    /// An empty registry validating against `sig`
+    /// (`state_sig[..n_trainable]` of the artifact).
     pub fn new(sig: Vec<TensorSpec>) -> AdapterRegistry {
         AdapterRegistry { sig, entries: BTreeMap::new(), next_version: 0 }
     }
@@ -85,6 +90,7 @@ impl AdapterRegistry {
         })
     }
 
+    /// Drop adapter `name`; errors if it was never loaded.
     pub fn remove(&mut self, name: &str) -> Result<()> {
         self.entries
             .remove(name)
@@ -92,6 +98,7 @@ impl AdapterRegistry {
             .ok_or_else(|| anyhow!("adapter {name:?} not loaded"))
     }
 
+    /// Whether adapter `name` is registered.
     pub fn contains(&self, name: &str) -> bool {
         self.entries.contains_key(name)
     }
@@ -101,10 +108,12 @@ impl AdapterRegistry {
         self.entries.keys().map(String::as_str).collect()
     }
 
+    /// Number of registered adapters.
     pub fn len(&self) -> usize {
         self.entries.len()
     }
 
+    /// Whether no adapter is registered.
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }

@@ -1,0 +1,459 @@
+//! The decode hot path: one abstraction, two engines.
+//!
+//! [`DecodeGraph`] is the row-oriented contract the serving loops
+//! ([`Session::generate_batch`](super::Session::generate_batch),
+//! [`Session::stream`](super::Session::stream)) drive: start a prompt in a
+//! row, step all live rows with one graph execution, push the sampled
+//! token, free the row. Two implementations share it:
+//!
+//! * [`FullDecode`] — the fallback: every step re-runs the full-sequence
+//!   forward over the whole `(batch, seq_len)` buffer and reads each row's
+//!   logits at its current position. Per-step cost is O(seq_len²) in
+//!   attention no matter how little actually changed.
+//! * [`CachedDecode`] — the KV-cached path: one *prefill* execution fills
+//!   per-row key/value caches for the prompt (and emits its last-position
+//!   logits), then each generated token costs a single O(1)-in-
+//!   generated-length *decode step* against the caches.
+//!
+//! ### Cache discipline (why continuous batching is safe)
+//!
+//! The caches are two `(batch, layers, seq_len, d_model)` tensors that
+//! thread through every graph call as opaque literals — Rust never
+//! inspects their layout (that contract lives in
+//! `python/compile/kernels/decode.py`). Three invariants make mid-flight
+//! row reuse sound:
+//!
+//! 1. the prefill graph recomputes cache rows only where its `row_mask`
+//!    input is 1 and passes every other row through bit-untouched, so
+//!    admitting a new prompt never perturbs rows that are mid-decode;
+//! 2. a decode step writes each row's K/V at exactly that row's position
+//!    input, and rows with nothing to do are parked at `seq_len - 1` — a
+//!    slot any live request overwrites with its own K/V before its
+//!    attention window (`positions <= pos`) can ever reach it;
+//! 3. attention masks positions beyond the row's current length, so
+//!    whatever a retired request left behind in a freed row is dead data:
+//!    the next request's prefill overwrites the prefix it will read, and
+//!    the mask hides the rest.
+//!
+//! Adapter literals are resolved **once, at graph construction**: a decode
+//! in flight keeps serving the adapter version it started with even if the
+//! registry hot-swaps that name mid-decode (K/V computed under two adapter
+//! versions must never mix). Swaps are picked up by the next
+//! `generate`/`stream`/`generate_batch` call, which builds a fresh graph.
+
+use std::rc::Rc;
+use std::sync::Arc;
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::data::tokenizer::PAD;
+use crate::runtime::executor::{literal_from_tensor, literal_to_f32, Executable};
+use crate::tensorio::Tensor;
+
+use super::Engine;
+
+/// Which decode implementation a [`Session`](super::Session) uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DecodeMode {
+    /// KV-cached when the artifact ships prefill/decode graphs, full
+    /// recompute otherwise.
+    #[default]
+    Auto,
+    /// Force the KV-cached path; building a session errors if the
+    /// artifact has no decode graphs.
+    Cached,
+    /// Force the full-recompute fallback (the reference for equivalence
+    /// tests and benchmarks).
+    Full,
+}
+
+/// Row-oriented incremental decoding over one adapter + frozen base.
+///
+/// Rows are slots `0..capacity()`. The serving loop owns the protocol:
+/// `start_row` with the prompt, then repeatedly `step` every live row
+/// (one graph execution for all of them), sample from the returned
+/// logits, and either `push` the token or `free_row`. Implementations
+/// may batch arbitrary mixtures of freshly started and mid-decode rows
+/// in one `step` call — that is what continuous batching relies on.
+pub trait DecodeGraph {
+    /// Number of concurrent rows (the artifact's compiled batch size).
+    fn capacity(&self) -> usize;
+
+    /// The compiled sequence length (prompt + generated tokens per row).
+    fn seq_len(&self) -> usize;
+
+    /// Begin decoding `prompt` in `row`. The row must be free and the
+    /// prompt non-empty and shorter than [`DecodeGraph::seq_len`].
+    fn start_row(&mut self, row: usize, prompt: &[i32]) -> Result<()>;
+
+    /// Append a sampled token to `row`'s history.
+    fn push(&mut self, row: usize, token: i32) -> Result<()>;
+
+    /// Release `row` for reuse by a later [`DecodeGraph::start_row`].
+    fn free_row(&mut self, row: usize);
+
+    /// Advance every row in `rows` by one position and return each row's
+    /// next-token logits (vocab-sized, in `rows` order).
+    fn step(&mut self, rows: &[usize]) -> Result<Vec<Vec<f32>>>;
+
+    /// `"cached"` or `"full"` — for logs and benchmark labels.
+    fn kind(&self) -> &'static str;
+}
+
+/// Per-row bookkeeping shared by both implementations.
+#[derive(Default)]
+struct Row {
+    /// prompt ++ generated tokens
+    history: Vec<i32>,
+    /// number of leading history positions whose K/V are cached
+    /// (always 0 for the full-recompute path)
+    cached: usize,
+    live: bool,
+}
+
+fn check_start(rows: &mut [Row], row: usize, prompt: &[i32],
+               seq_len: usize) -> Result<()> {
+    ensure!(row < rows.len(), "row {row} out of range (capacity {})",
+            rows.len());
+    ensure!(!rows[row].live, "row {row} is still live (free it first)");
+    ensure!(!prompt.is_empty(), "empty prompt for row {row}");
+    ensure!(
+        prompt.len() < seq_len,
+        "prompt of {} tokens does not fit the compiled seq_len {}",
+        prompt.len(),
+        seq_len
+    );
+    rows[row] = Row { history: prompt.to_vec(), cached: 0, live: true };
+    Ok(())
+}
+
+fn check_push(rows: &mut [Row], row: usize, token: i32,
+              seq_len: usize) -> Result<()> {
+    ensure!(row < rows.len() && rows[row].live, "row {row} is not live");
+    ensure!(
+        rows[row].history.len() < seq_len,
+        "row {row} is full ({seq_len} tokens)"
+    );
+    rows[row].history.push(token);
+    Ok(())
+}
+
+fn check_step_rows(rows: &[Row], selected: &[usize]) -> Result<()> {
+    ensure!(!selected.is_empty(), "step called with no rows");
+    for &r in selected {
+        ensure!(r < rows.len() && rows[r].live, "row {r} is not live");
+    }
+    Ok(())
+}
+
+// --------------------------------------------------------------------------
+// Full-recompute fallback
+// --------------------------------------------------------------------------
+
+/// Fallback [`DecodeGraph`]: re-runs the full-sequence forward each step.
+///
+/// Works with any artifact that has a `fwd` graph; the per-step cost is
+/// the whole `(batch, seq_len)` forward regardless of how many tokens are
+/// new. Kept as the bit-exact reference the cached path is tested against.
+pub struct FullDecode<'e> {
+    engine: &'e Engine,
+    exe: Arc<Executable>,
+    adapter: Rc<Vec<xla::Literal>>,
+    rows: Vec<Row>,
+    batch: usize,
+    seq_len: usize,
+    vocab: usize,
+}
+
+impl<'e> FullDecode<'e> {
+    /// Build over `engine`, pinning `adapter`'s current version.
+    pub fn new(engine: &'e Engine, adapter: &str) -> Result<FullDecode<'e>> {
+        let cfg = &engine.spec.cfg;
+        Ok(FullDecode {
+            engine,
+            exe: engine.fwd_exe()?,
+            adapter: engine.adapter_literals(adapter)?,
+            rows: (0..cfg.batch).map(|_| Row::default()).collect(),
+            batch: cfg.batch,
+            seq_len: cfg.seq_len,
+            vocab: cfg.vocab,
+        })
+    }
+}
+
+impl DecodeGraph for FullDecode<'_> {
+    fn capacity(&self) -> usize {
+        self.batch
+    }
+
+    fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    fn start_row(&mut self, row: usize, prompt: &[i32]) -> Result<()> {
+        check_start(&mut self.rows, row, prompt, self.seq_len)
+    }
+
+    fn push(&mut self, row: usize, token: i32) -> Result<()> {
+        check_push(&mut self.rows, row, token, self.seq_len)
+    }
+
+    fn free_row(&mut self, row: usize) {
+        if row < self.rows.len() {
+            self.rows[row] = Row::default();
+        }
+    }
+
+    fn step(&mut self, rows: &[usize]) -> Result<Vec<Vec<f32>>> {
+        check_step_rows(&self.rows, rows)?;
+        let mut tokens = vec![PAD; self.batch * self.seq_len];
+        for &r in rows {
+            let h = &self.rows[r].history;
+            tokens[r * self.seq_len..r * self.seq_len + h.len()]
+                .copy_from_slice(h);
+        }
+        let t = Tensor::i32("tokens", vec![self.batch, self.seq_len], &tokens);
+        let tok = literal_from_tensor(&t)?;
+        let frozen = self.engine.frozen();
+        let mut inputs: Vec<&xla::Literal> =
+            Vec::with_capacity(self.adapter.len() + frozen.len() + 1);
+        inputs.extend(self.adapter.iter());
+        inputs.extend(frozen.iter());
+        inputs.push(&tok);
+        let out = self.exe.run(&inputs)?;
+        let logits = literal_to_f32(&out[0])?;
+        Ok(rows
+            .iter()
+            .map(|&r| {
+                let pos = self.rows[r].history.len() - 1;
+                let off = (r * self.seq_len + pos) * self.vocab;
+                logits[off..off + self.vocab].to_vec()
+            })
+            .collect())
+    }
+
+    fn kind(&self) -> &'static str {
+        "full"
+    }
+}
+
+// --------------------------------------------------------------------------
+// KV-cached path
+// --------------------------------------------------------------------------
+
+/// KV-cached [`DecodeGraph`]: one prefill per admitted prompt, then
+/// O(1)-per-token decode steps.
+///
+/// The caches thread through every execution as opaque literals (layout
+/// owned by `python/compile/kernels/decode.py`); rows needing a prefill
+/// and rows mid-decode are advanced in the same [`DecodeGraph::step`]
+/// call with at most one prefill plus one decode execution.
+pub struct CachedDecode<'e> {
+    engine: &'e Engine,
+    prefill: Arc<Executable>,
+    decode: Arc<Executable>,
+    adapter: Rc<Vec<xla::Literal>>,
+    /// canonical (k, v) caches; `None` until the first prefill
+    caches: Option<(xla::Literal, xla::Literal)>,
+    rows: Vec<Row>,
+    batch: usize,
+    seq_len: usize,
+    vocab: usize,
+}
+
+impl<'e> CachedDecode<'e> {
+    /// Build over `engine`, pinning `adapter`'s current version. Errors
+    /// if the artifact was built without prefill/decode graphs.
+    pub fn new(engine: &'e Engine, adapter: &str) -> Result<CachedDecode<'e>> {
+        let cfg = &engine.spec.cfg;
+        ensure!(
+            engine.spec.cache_sig.len() == 2,
+            "artifact {} has no KV-cache signature (re-run `make artifacts`)",
+            engine.spec.name
+        );
+        Ok(CachedDecode {
+            engine,
+            prefill: engine.prefill_exe()?,
+            decode: engine.decode_exe()?,
+            adapter: engine.adapter_literals(adapter)?,
+            caches: None,
+            rows: (0..cfg.batch).map(|_| Row::default()).collect(),
+            batch: cfg.batch,
+            seq_len: cfg.seq_len,
+            vocab: cfg.vocab,
+        })
+    }
+
+    /// Zero-filled cache literals matching the artifact's cache signature
+    /// (used before the first prefill; content is irrelevant — see the
+    /// module docs on cache discipline).
+    fn zero_caches(&self) -> Result<(xla::Literal, xla::Literal)> {
+        let mut out = Vec::with_capacity(2);
+        for spec in &self.engine.spec.cache_sig {
+            ensure!(
+                spec.dtype == "f32",
+                "cache tensor {} has unsupported dtype {}",
+                spec.name,
+                spec.dtype
+            );
+            let zeros = vec![0.0; spec.elems()];
+            let t = Tensor::f32(&spec.name, spec.shape.clone(), &zeros);
+            out.push(literal_from_tensor(&t)?);
+        }
+        let v = out.pop().ok_or_else(|| anyhow!("missing v_cache"))?;
+        let k = out.pop().ok_or_else(|| anyhow!("missing k_cache"))?;
+        Ok((k, v))
+    }
+
+    /// Execute `exe` with `adapter ++ frozen ++ caches ++ extra`, adopt
+    /// the returned caches as canonical, and return the logits literal.
+    /// On failure the input caches are restored, so a caller retrying
+    /// after a transient error never decodes against an empty cache.
+    fn run_with_caches(
+        &mut self,
+        exe: &Arc<Executable>,
+        kc: xla::Literal,
+        vc: xla::Literal,
+        extra: [&xla::Literal; 2],
+    ) -> Result<xla::Literal> {
+        let result = {
+            let frozen = self.engine.frozen();
+            let mut inputs: Vec<&xla::Literal> =
+                Vec::with_capacity(self.adapter.len() + frozen.len() + 4);
+            inputs.extend(self.adapter.iter());
+            inputs.extend(frozen.iter());
+            inputs.push(&kc);
+            inputs.push(&vc);
+            inputs.extend(extra);
+            exe.run(&inputs)
+        };
+        let mut out = match result {
+            Ok(out) if out.len() == 3 => out,
+            Ok(out) => {
+                self.caches = Some((kc, vc));
+                return Err(anyhow!(
+                    "decode graph returned {} outputs, expected 3",
+                    out.len()
+                ));
+            }
+            Err(e) => {
+                self.caches = Some((kc, vc));
+                return Err(e);
+            }
+        };
+        let v_new = out.pop().expect("v cache output");
+        let k_new = out.pop().expect("k cache output");
+        let logits = out.pop().expect("logits output");
+        self.caches = Some((k_new, v_new));
+        Ok(logits)
+    }
+
+    fn take_caches(&mut self) -> Result<(xla::Literal, xla::Literal)> {
+        match self.caches.take() {
+            Some(kv) => Ok(kv),
+            None => self.zero_caches(),
+        }
+    }
+}
+
+impl DecodeGraph for CachedDecode<'_> {
+    fn capacity(&self) -> usize {
+        self.batch
+    }
+
+    fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    fn start_row(&mut self, row: usize, prompt: &[i32]) -> Result<()> {
+        check_start(&mut self.rows, row, prompt, self.seq_len)
+    }
+
+    fn push(&mut self, row: usize, token: i32) -> Result<()> {
+        check_push(&mut self.rows, row, token, self.seq_len)
+    }
+
+    fn free_row(&mut self, row: usize) {
+        // leftover K/V in the freed row are unreachable: the next
+        // request's prefill overwrites the prefix it reads, and the
+        // position mask hides everything beyond it
+        if row < self.rows.len() {
+            self.rows[row] = Row::default();
+        }
+    }
+
+    fn step(&mut self, rows: &[usize]) -> Result<Vec<Vec<f32>>> {
+        check_step_rows(&self.rows, rows)?;
+        // a row steps incrementally only when exactly its last token is
+        // uncached; anything else (fresh row, drifted history) prefills
+        let needs_prefill = |r: &Row| r.cached + 1 != r.history.len();
+        let (pre, inc): (Vec<usize>, Vec<usize>) = rows
+            .iter()
+            .copied()
+            .partition(|&r| needs_prefill(&self.rows[r]));
+
+        let mut per_row: Vec<Option<Vec<f32>>> = vec![None; self.batch];
+
+        if !pre.is_empty() {
+            let mut tokens = vec![PAD; self.batch * self.seq_len];
+            let mut mask = vec![0f32; self.batch];
+            for &r in &pre {
+                let h = &self.rows[r].history;
+                tokens[r * self.seq_len..r * self.seq_len + h.len()]
+                    .copy_from_slice(h);
+                mask[r] = 1.0;
+            }
+            let tok = literal_from_tensor(&Tensor::i32(
+                "tokens", vec![self.batch, self.seq_len], &tokens))?;
+            let m = literal_from_tensor(&Tensor::f32(
+                "row_mask", vec![self.batch], &mask))?;
+            let (kc, vc) = self.take_caches()?;
+            let exe = self.prefill.clone();
+            let logits_lit = self.run_with_caches(&exe, kc, vc, [&tok, &m])?;
+            let logits = literal_to_f32(&logits_lit)?;
+            for &r in &pre {
+                let len = self.rows[r].history.len();
+                self.rows[r].cached = len;
+                let off = (r * self.seq_len + len - 1) * self.vocab;
+                per_row[r] = Some(logits[off..off + self.vocab].to_vec());
+            }
+        }
+
+        if !inc.is_empty() {
+            let mut token = vec![0i32; self.batch];
+            // idle rows park at seq_len-1: rewritten by a live row's own
+            // final step before its attention window can reach it
+            let mut pos = vec![(self.seq_len - 1) as i32; self.batch];
+            for &r in &inc {
+                let h = &self.rows[r].history;
+                token[r] = *h.last().expect("live row has history");
+                pos[r] = (h.len() - 1) as i32;
+            }
+            let t = literal_from_tensor(&Tensor::i32(
+                "token", vec![self.batch], &token))?;
+            let p = literal_from_tensor(&Tensor::i32(
+                "pos", vec![self.batch], &pos))?;
+            let (kc, vc) = self.take_caches()?;
+            let exe = self.decode.clone();
+            let logits_lit = self.run_with_caches(&exe, kc, vc, [&t, &p])?;
+            let logits = literal_to_f32(&logits_lit)?;
+            for &r in &inc {
+                self.rows[r].cached = self.rows[r].history.len();
+                let off = r * self.vocab;
+                per_row[r] = Some(logits[off..off + self.vocab].to_vec());
+            }
+        }
+
+        rows.iter()
+            .map(|&r| {
+                per_row[r]
+                    .take()
+                    .ok_or_else(|| anyhow!("row {r} produced no logits"))
+            })
+            .collect()
+    }
+
+    fn kind(&self) -> &'static str {
+        "cached"
+    }
+}

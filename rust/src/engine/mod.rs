@@ -3,7 +3,8 @@
 //!
 //! QLoRA's central economy (paper section 1: the authors finetune 1,000+
 //! models because adapters are tiny) is one frozen 4-bit base multiplexed
-//! across cheap adapters. This module is that economy as an API:
+//! across cheap adapters. This module is that economy as an API
+//! (`ARCHITECTURE.md` has the whole-system picture):
 //!
 //! ```text
 //!            ┌───────────────────────────────────────────────┐
@@ -20,11 +21,18 @@
 //!            │ Trainer<'e>    │   │ Session<'e>             │
 //!            │  owns mutable  │   │  generate / stream /    │
 //!            │  state (adap-  │   │  generate_batch / eval  │
-//!            │  ters+Adam+t)  │   │  (Sampler + decode loop)│
-//!            └───────┬────────┘   └─────────────────────────┘
-//!                    │ publish_adapter(name)
-//!                    ▼
-//!              AdapterRegistry  ← load_adapter(name, file)
+//!            │  ters+Adam+t)  │   │  (Sampler over logits)  │
+//!            └───────┬────────┘   └──────┬──────────────────┘
+//!                    │ publish_          │ Scheduler admits/retires
+//!                    │ adapter(name)     │ prompts over rows
+//!                    ▼                   ▼
+//!              AdapterRegistry    ┌─────────────────────────┐
+//!                    ▲            │ DecodeGraph             │
+//!                    │            │  CachedDecode: prefill +│
+//!       load_adapter(name, file)  │   O(1) KV-cached steps  │
+//!                                 │  FullDecode: full-seq   │
+//!                                 │   recompute fallback    │
+//!                                 └─────────────────────────┘
 //! ```
 //!
 //! Ownership rules:
@@ -38,13 +46,21 @@
 //!   immutably. Registering/loading adapters goes through interior
 //!   mutability, so a long-lived serving session observes adapter swaps
 //!   published by a concurrent (same-thread) training loop.
+//! * A [`DecodeGraph`] pins its adapter's device literals at
+//!   construction, so hot-swapping an adapter never corrupts KV caches
+//!   built under the previous version mid-decode (see the
+//!   [`decode`] module docs for the full cache-lifetime contract).
 //!
 //! The decode loop and [`Sampler`] used to live in `coordinator::generate`
 //! welded to the `Trainer`; they now live here, and training is just one
 //! more client of the engine.
 
+#![cfg_attr(doc, warn(missing_docs))]
+
 pub mod adapters;
+pub mod decode;
 pub mod sampler;
+pub mod scheduler;
 pub mod session;
 
 use std::cell::RefCell;
@@ -62,7 +78,9 @@ use crate::runtime::executor::{literal_from_tensor, Executable};
 use crate::tensorio::{read_tensors, Tensor};
 
 pub use adapters::AdapterRegistry;
+pub use decode::{CachedDecode, DecodeGraph, DecodeMode, FullDecode};
 pub use sampler::Sampler;
+pub use scheduler::Scheduler;
 pub use session::{Session, SessionBuilder, TokenStream};
 
 /// Name under which the artifact's init-time (untrained) adapter tensors
@@ -72,10 +90,26 @@ pub const BASE_ADAPTER: &str = "base";
 /// Uploaded-adapter cache entry: (registry version, device literals).
 type UploadedAdapter = (u64, Rc<Vec<xla::Literal>>);
 
+/// Read and validate an artifact's init-tensor file
+/// (state ++ frozen, in manifest order).
+fn read_init_tensors(spec: &ArtifactSpec) -> Result<Vec<Tensor>> {
+    let init = read_tensors(&spec.init)
+        .with_context(|| format!("init tensors for {}", spec.name))?;
+    ensure!(
+        init.len() == spec.n_state + spec.n_frozen,
+        "init file has {} tensors, manifest expects {}",
+        init.len(),
+        spec.n_state + spec.n_frozen
+    );
+    Ok(init)
+}
+
 /// The serving core: one frozen quantized base, uploaded once, multiplexed
 /// across named adapters and any number of sessions/trainers.
 pub struct Engine {
     rt: Rc<Runtime>,
+    /// The loaded artifact's manifest entry: model config, I/O
+    /// signatures, and graph paths.
     pub spec: ArtifactSpec,
     /// frozen quantized base — literals created once, shared by every
     /// session and trainer
@@ -91,14 +125,7 @@ impl Engine {
     /// [`BASE_ADAPTER`].
     pub fn new(rt: Rc<Runtime>, manifest: &Manifest, name: &str) -> Result<Engine> {
         let spec = manifest.get(name)?.clone();
-        let mut init = read_tensors(&spec.init)
-            .with_context(|| format!("init tensors for {name}"))?;
-        ensure!(
-            init.len() == spec.n_state + spec.n_frozen,
-            "init file has {} tensors, manifest expects {}",
-            init.len(),
-            spec.n_state + spec.n_frozen
-        );
+        let mut init = read_init_tensors(&spec)?;
         let frozen_host = init.split_off(spec.n_state);
         let frozen = frozen_host
             .iter()
@@ -147,16 +174,8 @@ impl Engine {
     /// so each trainer pays one extra file read instead of every serving
     /// process paying the Adam-moment memory.
     pub fn read_init_state(&self) -> Result<Vec<Tensor>> {
-        let spec = &self.spec;
-        let mut init = read_tensors(&spec.init)
-            .with_context(|| format!("init tensors for {}", spec.name))?;
-        ensure!(
-            init.len() == spec.n_state + spec.n_frozen,
-            "init file has {} tensors, manifest expects {}",
-            init.len(),
-            spec.n_state + spec.n_frozen
-        );
-        init.truncate(spec.n_state);
+        let mut init = read_init_tensors(&self.spec)?;
+        init.truncate(self.spec.n_state);
         Ok(init)
     }
 
@@ -168,6 +187,35 @@ impl Engine {
                     self.spec.name)
         })?;
         self.rt.load_hlo(path)
+    }
+
+    /// The prefill executable (full forward that also fills the KV
+    /// cache); errors if the artifact was built without decode graphs.
+    pub fn prefill_exe(&self) -> Result<Arc<Executable>> {
+        let path = self.spec.prefill_hlo.as_ref().ok_or_else(|| {
+            anyhow!("artifact {} has no prefill graph (re-run `make artifacts`)",
+                    self.spec.name)
+        })?;
+        self.rt.load_hlo(path)
+    }
+
+    /// The O(1)-per-token KV-cached decode-step executable; errors if the
+    /// artifact was built without decode graphs.
+    pub fn decode_exe(&self) -> Result<Arc<Executable>> {
+        let path = self.spec.decode_hlo.as_ref().ok_or_else(|| {
+            anyhow!("artifact {} has no decode graph (re-run `make artifacts`)",
+                    self.spec.name)
+        })?;
+        self.rt.load_hlo(path)
+    }
+
+    /// Whether this artifact ships the KV-cached decode path (prefill +
+    /// decode graphs + cache signature). [`DecodeMode::Auto`] keys off
+    /// this.
+    pub fn has_cached_decode(&self) -> bool {
+        self.spec.prefill_hlo.is_some()
+            && self.spec.decode_hlo.is_some()
+            && self.spec.cache_sig.len() == 2
     }
 
     /// The eval (loss, accuracy) executable.
@@ -214,6 +262,7 @@ impl Engine {
         Ok(())
     }
 
+    /// Whether adapter `name` is currently registered.
     pub fn has_adapter(&self, name: &str) -> bool {
         self.registry.borrow().contains(name)
     }

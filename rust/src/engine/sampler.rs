@@ -9,6 +9,8 @@
 
 use crate::util::rng::Rng;
 
+/// Sampling configuration for the decode loop (nucleus + top-k +
+/// temperature, with a per-request token budget).
 #[derive(Debug, Clone)]
 pub struct Sampler {
     /// nucleus mass; ≤ 0 keeps exactly one token, ≥ 1 keeps all
@@ -17,6 +19,7 @@ pub struct Sampler {
     pub top_k: Option<usize>,
     /// softmax temperature; ≤ 0 means greedy argmax
     pub temperature: f64,
+    /// maximum number of tokens generated per request
     pub max_new_tokens: usize,
 }
 

@@ -1,0 +1,214 @@
+//! Continuous-batching scheduler: many prompts over few decode rows.
+//!
+//! A [`Scheduler`] accepts any number of submitted prompts, multiplexes
+//! them onto the decode graph's fixed row capacity, and retires each row
+//! the moment its request finishes — the freed row is re-admitted to the
+//! next queued prompt on the following loop iteration instead of idling
+//! until the slowest row of the batch completes. That converts
+//! `generate_batch` from "pad everything to the slowest prompt" into a
+//! rolling pipeline whose throughput tracks aggregate tokens, not the
+//! worst row.
+//!
+//! The scheduler is pure bookkeeping (no runtime types), mirroring
+//! [`AdapterRegistry`](super::AdapterRegistry): admission order, row
+//! reuse, and result ordering are unit-tested without artifacts or a
+//! PJRT client. The serving loop in
+//! [`Session::generate_batch`](super::Session::generate_batch) drives a
+//! [`DecodeGraph`](super::DecodeGraph) from its decisions.
+
+use std::collections::VecDeque;
+
+/// FIFO multiplexer of submitted prompts onto `capacity` decode rows.
+pub struct Scheduler {
+    queue: VecDeque<Job>,
+    rows: Vec<Option<Active>>,
+    /// final token outputs by job id (`None` while in queue / in flight)
+    results: Vec<Option<Vec<i32>>>,
+}
+
+struct Job {
+    id: usize,
+    prompt: Vec<i32>,
+}
+
+struct Active {
+    id: usize,
+    prompt_len: usize,
+    out: Vec<i32>,
+}
+
+impl Scheduler {
+    /// A scheduler over `capacity` rows (the decode graph's batch size).
+    pub fn new(capacity: usize) -> Scheduler {
+        Scheduler {
+            queue: VecDeque::new(),
+            rows: (0..capacity.max(1)).map(|_| None).collect(),
+            results: Vec::new(),
+        }
+    }
+
+    /// Enqueue a tokenized prompt; returns its job id (= submission
+    /// index, which is also its slot in [`Scheduler::take_results`]).
+    pub fn submit(&mut self, prompt: Vec<i32>) -> usize {
+        let id = self.results.len();
+        self.results.push(None);
+        self.queue.push_back(Job { id, prompt });
+        id
+    }
+
+    /// Place queued prompts into free rows (FIFO). Returns the
+    /// `(row, prompt)` placements so the caller can
+    /// [`start_row`](super::DecodeGraph::start_row) each one.
+    pub fn admit(&mut self) -> Vec<(usize, Vec<i32>)> {
+        let mut placed = Vec::new();
+        for (row, slot) in self.rows.iter_mut().enumerate() {
+            if slot.is_some() {
+                continue;
+            }
+            let Some(job) = self.queue.pop_front() else { break };
+            *slot = Some(Active {
+                id: job.id,
+                prompt_len: job.prompt.len(),
+                out: Vec::new(),
+            });
+            placed.push((row, job.prompt));
+        }
+        placed
+    }
+
+    /// Rows currently serving a request, ascending.
+    pub fn active_rows(&self) -> Vec<usize> {
+        self.rows
+            .iter()
+            .enumerate()
+            .filter_map(|(r, s)| s.as_ref().map(|_| r))
+            .collect()
+    }
+
+    /// Tokens generated so far by the request in `row`.
+    pub fn out_len(&self, row: usize) -> usize {
+        self.rows[row].as_ref().map_or(0, |a| a.out.len())
+    }
+
+    /// Prompt + generated length of the request in `row`.
+    pub fn total_len(&self, row: usize) -> usize {
+        self.rows[row]
+            .as_ref()
+            .map_or(0, |a| a.prompt_len + a.out.len())
+    }
+
+    /// Record a sampled token for the request in `row`.
+    pub fn push(&mut self, row: usize, token: i32) {
+        if let Some(a) = self.rows[row].as_mut() {
+            a.out.push(token);
+        }
+    }
+
+    /// Finish the request in `row`, freeing the row and recording its
+    /// generated tokens; returns the job id.
+    pub fn retire(&mut self, row: usize) -> usize {
+        let a = self.rows[row].take().expect("retire of an empty row");
+        let id = a.id;
+        self.results[id] = Some(a.out);
+        id
+    }
+
+    /// True when every submitted request has been retired.
+    pub fn finished(&self) -> bool {
+        self.queue.is_empty() && self.rows.iter().all(Option::is_none)
+    }
+
+    /// Generated tokens per job, in submission order. Unretired jobs
+    /// (only possible if the driving loop aborted early) come back empty.
+    pub fn take_results(self) -> Vec<Vec<i32>> {
+        self.results
+            .into_iter()
+            .map(Option::unwrap_or_default)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admits_in_fifo_order_up_to_capacity() {
+        let mut s = Scheduler::new(2);
+        for p in 0..4 {
+            s.submit(vec![p]);
+        }
+        let placed = s.admit();
+        assert_eq!(placed.len(), 2);
+        assert_eq!(placed[0], (0, vec![0]));
+        assert_eq!(placed[1], (1, vec![1]));
+        assert_eq!(s.active_rows(), vec![0, 1]);
+        // no free rows: nothing more admitted
+        assert!(s.admit().is_empty());
+    }
+
+    #[test]
+    fn retiring_frees_the_row_for_the_next_job() {
+        let mut s = Scheduler::new(2);
+        for p in 0..3 {
+            s.submit(vec![10 + p]);
+        }
+        s.admit();
+        s.push(0, 7);
+        assert_eq!(s.retire(0), 0);
+        assert!(!s.finished(), "job 2 still queued");
+        let placed = s.admit();
+        assert_eq!(placed, vec![(0, vec![12])], "freed row 0 is reused");
+        assert_eq!(s.active_rows(), vec![0, 1]);
+    }
+
+    #[test]
+    fn results_come_back_in_submission_order() {
+        let mut s = Scheduler::new(2);
+        for p in 0..4 {
+            s.submit(vec![p]);
+        }
+        s.admit();
+        // finish job 1 (row 1) first, then job 0; rows refill as 2, 3
+        s.push(1, 101);
+        s.retire(1);
+        s.admit();
+        s.push(0, 100);
+        s.retire(0);
+        s.admit();
+        s.push(0, 103); // row 0 now serves job 3
+        s.push(1, 102); // row 1 now serves job 2
+        s.retire(1);
+        s.retire(0);
+        assert!(s.finished());
+        assert_eq!(
+            s.take_results(),
+            vec![vec![100], vec![101], vec![102], vec![103]]
+        );
+    }
+
+    #[test]
+    fn lengths_track_prompt_and_output() {
+        let mut s = Scheduler::new(1);
+        s.submit(vec![1, 2, 3]);
+        s.admit();
+        assert_eq!(s.total_len(0), 3);
+        assert_eq!(s.out_len(0), 0);
+        s.push(0, 9);
+        assert_eq!(s.total_len(0), 4);
+        assert_eq!(s.out_len(0), 1);
+    }
+
+    #[test]
+    fn zero_output_jobs_finish_empty() {
+        let mut s = Scheduler::new(1);
+        s.submit(vec![1]);
+        s.submit(vec![2]);
+        s.admit();
+        s.retire(0); // e.g. max_new_tokens == 0
+        s.admit();
+        s.retire(0);
+        assert!(s.finished());
+        assert_eq!(s.take_results(), vec![Vec::<i32>::new(), vec![]]);
+    }
+}

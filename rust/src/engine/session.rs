@@ -4,24 +4,29 @@
 //! exposes the decode loop three ways — whole-completion
 //! ([`Session::generate`]), token-by-token streaming ([`Session::stream`]
 //! / [`Session::generate_with`]), and batched multi-prompt decoding
-//! ([`Session::generate_batch`], one forward per step for *all* rows) —
-//! plus held-out evaluation ([`Session::eval`], [`Session::eval_all`]).
+//! ([`Session::generate_batch`]) — plus held-out evaluation
+//! ([`Session::eval`], [`Session::eval_all`]).
 //!
-//! The fwd artifact has fixed (batch, seq_len) shape, so decoding re-runs
-//! the full-sequence forward with prompts left-aligned per row and reads
-//! the logits at each row's current position (fine for demo-scale models;
-//! a KV-cache decode graph is the standard extension and now has a single
-//! home: this module).
+//! Decoding runs through a [`DecodeGraph`]: by default the KV-cached
+//! incremental path (one prefill per prompt, then O(1)-per-token steps
+//! against per-row key/value caches), falling back to the full-sequence
+//! recompute when the artifact ships no decode graphs — see
+//! [`DecodeMode`] and the [`decode`](super::decode) module docs.
+//! `generate_batch` accepts more prompts than the compiled batch size:
+//! a [`Scheduler`] admits queued prompts into rows the moment earlier
+//! requests retire (continuous batching), so throughput tracks aggregate
+//! tokens rather than the slowest prompt of a padded batch.
 
 use anyhow::{ensure, Result};
 
 use crate::data::batching::{Batch, Batcher};
-use crate::data::tokenizer::{Tokenizer, BOS, EOS, PAD, SEP};
-use crate::runtime::executor::{literal_scalar_f32, literal_to_f32};
-use crate::tensorio::Tensor;
+use crate::data::tokenizer::{Tokenizer, BOS, EOS, SEP};
+use crate::runtime::executor::literal_scalar_f32;
 use crate::util::rng::Rng;
 
+use super::decode::{CachedDecode, DecodeGraph, DecodeMode, FullDecode};
 use super::sampler::Sampler;
+use super::scheduler::Scheduler;
 use super::{Engine, BASE_ADAPTER};
 
 /// Builder returned by [`Engine::session`].
@@ -31,6 +36,7 @@ pub struct SessionBuilder<'e> {
     sampler: Sampler,
     greedy: bool,
     seed: u64,
+    decode: DecodeMode,
 }
 
 impl<'e> SessionBuilder<'e> {
@@ -41,6 +47,7 @@ impl<'e> SessionBuilder<'e> {
             sampler: Sampler::default(),
             greedy: false,
             seed: 0,
+            decode: DecodeMode::Auto,
         }
     }
 
@@ -50,6 +57,7 @@ impl<'e> SessionBuilder<'e> {
         self
     }
 
+    /// Sampling configuration for the decode loop.
     pub fn sampler(mut self, sampler: Sampler) -> Self {
         self.sampler = sampler;
         self
@@ -67,6 +75,13 @@ impl<'e> SessionBuilder<'e> {
         self
     }
 
+    /// Which decode path to use (default [`DecodeMode::Auto`]: KV-cached
+    /// when the artifact ships decode graphs, full recompute otherwise).
+    pub fn decode(mut self, mode: DecodeMode) -> Self {
+        self.decode = mode;
+        self
+    }
+
     /// Validate the adapter and produce the session.
     pub fn build(self) -> Result<Session<'e>> {
         // resolve once so a typo fails at build time, not mid-decode
@@ -77,6 +92,7 @@ impl<'e> SessionBuilder<'e> {
             adapter: self.adapter,
             sampler: self.sampler,
             greedy: self.greedy,
+            decode: self.decode,
             rng: Rng::new(self.seed),
             tok,
             tokens_generated: 0,
@@ -89,8 +105,12 @@ impl<'e> SessionBuilder<'e> {
 pub struct Session<'e> {
     engine: &'e Engine,
     adapter: String,
+    /// Sampling configuration (nucleus/top-k/temperature/token budget).
     pub sampler: Sampler,
+    /// Deterministic argmax decoding instead of sampling.
     pub greedy: bool,
+    /// Decode-path selection; see [`DecodeMode`].
+    pub decode: DecodeMode,
     rng: Rng,
     tok: Tokenizer,
     /// cumulative count of sampled (emitted) tokens — serving metric
@@ -98,21 +118,26 @@ pub struct Session<'e> {
 }
 
 impl<'e> Session<'e> {
+    /// The engine this session serves from.
     pub fn engine(&self) -> &'e Engine {
         self.engine
     }
 
+    /// Name of the adapter this session serves.
     pub fn adapter(&self) -> &str {
         &self.adapter
     }
 
     /// Hot-swap which adapter this session serves (it must be registered).
+    /// Decodes already in flight keep their pinned adapter literals; the
+    /// swap applies from the next `generate`/`stream`/`generate_batch`.
     pub fn set_adapter(&mut self, name: &str) -> Result<()> {
         self.engine.adapter_literals(name)?;
         self.adapter = name.to_string();
         Ok(())
     }
 
+    /// The session's tokenizer (byte-level, artifact vocab).
     pub fn tokenizer(&self) -> &Tokenizer {
         &self.tok
     }
@@ -135,22 +160,19 @@ impl<'e> Session<'e> {
         Ok(ids)
     }
 
-    /// One full-sequence forward: logits for the whole (batch, seq, vocab)
-    /// buffer under this session's adapter.
-    fn forward(&self, tokens: &[i32]) -> Result<Vec<f32>> {
-        let cfg = &self.engine.spec.cfg;
-        let exe = self.engine.fwd_exe()?;
-        let adapter = self.engine.adapter_literals(&self.adapter)?;
-        let t = Tensor::i32("tokens", vec![cfg.batch, cfg.seq_len], tokens);
-        let tok = crate::runtime::executor::literal_from_tensor(&t)?;
-        let frozen = self.engine.frozen();
-        let mut inputs: Vec<&xla::Literal> =
-            Vec::with_capacity(adapter.len() + frozen.len() + 1);
-        inputs.extend(adapter.iter());
-        inputs.extend(frozen.iter());
-        inputs.push(&tok);
-        let out = exe.run(&inputs)?;
-        literal_to_f32(&out[0])
+    /// Build the decode graph this session is configured for, pinning the
+    /// current adapter version.
+    fn decode_graph(&self) -> Result<Box<dyn DecodeGraph + 'e>> {
+        let use_cached = match self.decode {
+            DecodeMode::Cached => true,
+            DecodeMode::Full => false,
+            DecodeMode::Auto => self.engine.has_cached_decode(),
+        };
+        if use_cached {
+            Ok(Box::new(CachedDecode::new(self.engine, &self.adapter)?))
+        } else {
+            Ok(Box::new(FullDecode::new(self.engine, &self.adapter)?))
+        }
     }
 
     fn next_token(&mut self, logits_row: &[f32]) -> i32 {
@@ -187,65 +209,64 @@ impl<'e> Session<'e> {
     /// fragments. Ends at EOS, `max_new_tokens`, or the compiled
     /// `seq_len`.
     pub fn stream(&mut self, prompt: &str) -> Result<TokenStream<'_, 'e>> {
-        self.engine.fwd_exe()?; // fail before the first next() on fwd-less artifacts
+        let mut graph = self.decode_graph()?;
         let prompt_ids = self.encode_prompt(prompt)?;
-        Ok(TokenStream { session: self, prompt_ids, out: Vec::new(), done: false })
+        let plen = prompt_ids.len();
+        graph.start_row(0, &prompt_ids)?;
+        Ok(TokenStream { session: self, graph, plen, out: Vec::new(), done: false })
     }
 
-    /// Batched multi-prompt decoding: up to `cfg.batch` prompts advance in
-    /// lockstep, one forward per step for all unfinished rows. With greedy
-    /// decoding the per-row results are identical to `generate` on each
-    /// prompt alone.
+    /// Batched multi-prompt decoding with continuous batching: any number
+    /// of prompts are multiplexed over the compiled batch rows, new
+    /// prompts entering a row as soon as an earlier one retires (EOS,
+    /// token budget, or sequence length). Results come back in prompt
+    /// order. With greedy decoding each row's result is identical to
+    /// `generate` on that prompt alone.
     pub fn generate_batch(&mut self, prompts: &[&str]) -> Result<Vec<String>> {
-        let cfg = self.engine.spec.cfg.clone();
         ensure!(!prompts.is_empty(), "no prompts");
-        ensure!(
-            prompts.len() <= cfg.batch,
-            "{} prompts exceed the compiled batch size {}",
-            prompts.len(),
-            cfg.batch
-        );
-        let rows: Vec<Vec<i32>> = prompts
-            .iter()
-            .map(|p| self.encode_prompt(p))
-            .collect::<Result<_>>()?;
-        let n = rows.len();
-        let mut outs: Vec<Vec<i32>> = vec![Vec::new(); n];
-        let mut done = vec![false; n];
-        for _ in 0..self.sampler.max_new_tokens {
-            for r in 0..n {
-                if rows[r].len() + outs[r].len() >= cfg.seq_len {
-                    done[r] = true;
+        let mut graph = self.decode_graph()?;
+        let seq_len = graph.seq_len();
+        let max_new = self.sampler.max_new_tokens;
+        let mut sched = Scheduler::new(graph.capacity());
+        for p in prompts {
+            sched.submit(self.encode_prompt(p)?);
+        }
+        while !sched.finished() {
+            for (row, prompt) in sched.admit() {
+                graph.start_row(row, &prompt)?;
+            }
+            // retire rows that have exhausted their budget or the
+            // compiled sequence before (not after) stepping them
+            for row in sched.active_rows() {
+                if sched.out_len(row) >= max_new
+                    || sched.total_len(row) >= seq_len
+                {
+                    sched.retire(row);
+                    graph.free_row(row);
                 }
             }
-            if done.iter().all(|&d| d) {
-                break;
+            let rows = sched.active_rows();
+            if rows.is_empty() {
+                continue; // freed rows refill on the next iteration
             }
-            let mut tokens = vec![PAD; cfg.batch * cfg.seq_len];
-            for r in 0..n {
-                let base = r * cfg.seq_len;
-                let plen = rows[r].len();
-                tokens[base..base + plen].copy_from_slice(&rows[r]);
-                tokens[base + plen..base + plen + outs[r].len()]
-                    .copy_from_slice(&outs[r]);
-            }
-            let logits = self.forward(&tokens)?;
-            for r in 0..n {
-                if done[r] {
-                    continue;
-                }
-                let pos = rows[r].len() + outs[r].len();
-                let off = (r * cfg.seq_len + pos - 1) * cfg.vocab;
-                let next = self.next_token(&logits[off..off + cfg.vocab]);
+            let logits = graph.step(&rows)?;
+            for (&row, row_logits) in rows.iter().zip(logits.iter()) {
+                let next = self.next_token(row_logits);
                 if next == EOS {
-                    done[r] = true;
+                    sched.retire(row);
+                    graph.free_row(row);
                 } else {
-                    outs[r].push(next);
                     self.tokens_generated += 1;
+                    sched.push(row, next);
+                    graph.push(row, next)?;
                 }
             }
         }
-        Ok(outs.iter().map(|o| self.tok.decode(o)).collect())
+        Ok(sched
+            .take_results()
+            .iter()
+            .map(|o| self.tok.decode(o))
+            .collect())
     }
 
     /// (loss, token accuracy) on one batch under this session's adapter —
@@ -282,10 +303,13 @@ impl<'e> Session<'e> {
     }
 }
 
-/// Streaming decode state; see [`Session::stream`].
+/// Streaming decode state; see [`Session::stream`]. Holds its own
+/// [`DecodeGraph`] (row 0), so the per-token cost is one incremental
+/// decode step on KV-cached artifacts.
 pub struct TokenStream<'s, 'e> {
     session: &'s mut Session<'e>,
-    prompt_ids: Vec<i32>,
+    graph: Box<dyn DecodeGraph + 'e>,
+    plen: usize,
     out: Vec<i32>,
     done: bool,
 }
@@ -302,28 +326,25 @@ impl TokenStream<'_, '_> {
         if self.done || self.out.len() >= self.session.sampler.max_new_tokens {
             return None;
         }
-        let cfg = self.session.engine.spec.cfg.clone();
-        let plen = self.prompt_ids.len();
-        let pos = plen + self.out.len();
-        if pos >= cfg.seq_len {
+        if self.plen + self.out.len() >= self.graph.seq_len() {
             self.done = true;
             return None;
         }
-        let mut tokens = vec![PAD; cfg.batch * cfg.seq_len];
-        tokens[..plen].copy_from_slice(&self.prompt_ids);
-        tokens[plen..pos].copy_from_slice(&self.out);
-        let logits = match self.session.forward(&tokens) {
-            Ok(l) => l,
+        let row_logits = match self.graph.step(&[0]) {
+            Ok(mut l) => l.remove(0),
             Err(e) => {
                 self.done = true;
                 return Some(Err(e));
             }
         };
-        let off = (pos - 1) * cfg.vocab;
-        let next = self.session.next_token(&logits[off..off + cfg.vocab]);
+        let next = self.session.next_token(&row_logits);
         if next == EOS {
             self.done = true;
             return None;
+        }
+        if let Err(e) = self.graph.push(0, next) {
+            self.done = true;
+            return Some(Err(e));
         }
         self.out.push(next);
         self.session.tokens_generated += 1;

@@ -1,12 +1,15 @@
 //! # qlora — a full-system reproduction of *QLoRA: Efficient Finetuning of
 //! Quantized LLMs* (Dettmers et al., NeurIPS 2023)
 //!
-//! Three-layer architecture (see `DESIGN.md`):
+//! Three-layer architecture (`README.md` has the quickstart and paper →
+//! module map; `ARCHITECTURE.md` the full system picture):
 //!
 //! * **L1** — Pallas kernels (build-time Python) for block-wise NF4/FP4/Int4
-//!   quantization, Double Quantization, and the fused QLoRA linear.
+//!   quantization, Double Quantization, the fused QLoRA linear, and the
+//!   KV-cache decode primitives (`python/compile/kernels/decode.py`).
 //! * **L2** — a JAX LLaMA-style transformer with QLoRA linears, AOT-lowered
-//!   to HLO text per configuration (`python/compile/aot.py`).
+//!   to HLO text per configuration (`python/compile/aot.py`): train, eval,
+//!   and — on generation artifacts — fwd / prefill / decode-step graphs.
 //! * **L3** — this crate, organized around the serving seam the paper's
 //!   economics imply (one frozen 4-bit base, many cheap adapters):
 //!   - [`engine`] — the public API core: an `Engine` owns the PJRT
@@ -14,6 +17,10 @@
 //!     (uploaded once); an `AdapterRegistry` hot-swaps named LoRA
 //!     adapters over that base; `Session`s serve `generate` (whole,
 //!     streaming, or batched multi-prompt) and `eval` per adapter.
+//!     Decoding runs through a `DecodeGraph` — KV-cached incremental
+//!     steps by default, full-sequence recompute as fallback — and
+//!     `generate_batch` continuously batches any number of prompts over
+//!     the compiled rows via a `Scheduler`.
 //!   - [`coordinator`] — finetuning as a *client* of the engine: the
 //!     training loop borrows the runtime and frozen base, owns only the
 //!     mutable state, and publishes finished adapters back into the

@@ -25,7 +25,7 @@ use qlora::coordinator::trainer::{TrainOptions, Trainer};
 use qlora::data::batching::Batcher;
 use qlora::data::synthetic::{corpus, eval_set, CorpusKind, EvalSuite};
 use qlora::data::tokenizer::Tokenizer;
-use qlora::engine::{Engine, Sampler, BASE_ADAPTER};
+use qlora::engine::{DecodeMode, Engine, Sampler, BASE_ADAPTER};
 use qlora::eval::arena::run_arena;
 use qlora::eval::Judge;
 use qlora::experiments::{runner, Ctx};
@@ -51,7 +51,8 @@ fn usage() -> &'static str {
        eval        --artifact <name> [--ckpt ckpt.tensors] [--suite \
      mmlu|vicuna]\n\
        generate    --artifact <name> [--ckpt ...] [--adapter <name>] \
-     --prompt \"rev abc\" [--prompts \"a|b\"] [--stream] [--greedy] \
+     --prompt \"rev abc\" [--prompts \"a|b|...\" (any count: continuous \
+     batching)] [--decode auto|cached|full] [--stream] [--greedy] \
      [--top-p P] [--top-k K] [--temperature T] [--max-new N]\n\
        arena       --artifact <name> --adapters \"tuned=ck.tensors[,...]\" \
      [--n-prompts N] [--judge gpt4|human] [--orderings N]\n\
@@ -203,16 +204,24 @@ fn run() -> Result<()> {
                 "adapter",
                 if args.get("ckpt").is_some() { "ckpt" } else { BASE_ADAPTER },
             );
+            let decode = match args.get_or("decode", "auto").as_str() {
+                "auto" => DecodeMode::Auto,
+                "cached" => DecodeMode::Cached,
+                "full" => DecodeMode::Full,
+                other => bail!("--decode must be auto|cached|full, \
+                                got {other:?}"),
+            };
             let mut session = engine
                 .session()
                 .adapter(&adapter)
                 .sampler(Sampler::from_args(&args, 32)?)
                 .greedy(args.flag("greedy"))
                 .seed(args.u64_or("seed", 0)?)
+                .decode(decode)
                 .build()?;
             if let Some(batch) = args.get("prompts") {
-                // batched multi-prompt decoding: one forward per step for
-                // all prompts
+                // continuous batching: any number of prompts multiplexed
+                // over the compiled batch rows, refilled as rows retire
                 let prompts: Vec<&str> =
                     batch.split('|').map(str::trim).collect();
                 let outs = session.generate_batch(&prompts)?;

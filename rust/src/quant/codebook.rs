@@ -25,6 +25,7 @@ pub enum DType {
 }
 
 impl DType {
+    /// Canonical lowercase name (matches `configs.py` / the CLI).
     pub fn name(self) -> &'static str {
         match self {
             DType::NF4 => "nf4",
@@ -36,6 +37,7 @@ impl DType {
         }
     }
 
+    /// Parse a canonical name back into a datatype.
     pub fn from_name(s: &str) -> Option<DType> {
         Some(match s {
             "nf4" => DType::NF4,
@@ -83,13 +85,17 @@ const NF4_OFFSET: f64 = 0.9677083;
 /// A sorted codebook plus precomputed bin midpoints.
 #[derive(Debug, Clone)]
 pub struct Codebook {
+    /// The datatype these values realize.
     pub dtype: DType,
+    /// Sorted normalized values in [-1, 1].
     pub values: Vec<f32>,
     /// midpoints between consecutive values (len = values.len() - 1)
     mids: Vec<f32>,
 }
 
 impl Codebook {
+    /// The canonical codebook for `dtype` (NF4 uses the paper's exact
+    /// published table).
     pub fn new(dtype: DType) -> Codebook {
         let values = match dtype {
             DType::NF4 => NF4_PAPER.to_vec(),
@@ -102,6 +108,7 @@ impl Codebook {
         Self::from_values(dtype, values)
     }
 
+    /// Build from explicit sorted values (e.g. a derived NFk table).
     pub fn from_values(dtype: DType, values: Vec<f32>) -> Codebook {
         debug_assert!(values.windows(2).all(|w| w[0] < w[1]), "must be sorted");
         // midpoints in f32 — identical arithmetic to the Python reference
@@ -112,10 +119,12 @@ impl Codebook {
         Codebook { dtype, values, mids }
     }
 
+    /// Number of codebook entries (2^bits, minus ±0 collapses).
     pub fn len(&self) -> usize {
         self.values.len()
     }
 
+    /// Whether the codebook has no entries (never true for built-ins).
     pub fn is_empty(&self) -> bool {
         self.values.is_empty()
     }
@@ -139,6 +148,7 @@ impl Codebook {
         lo as u8
     }
 
+    /// The normalized value a code dequantizes to.
     #[inline]
     pub fn decode(&self, code: u8) -> f32 {
         self.values[code as usize]

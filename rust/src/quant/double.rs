@@ -25,6 +25,7 @@ pub struct DoubleQuant {
     pub mean: f32,
     /// original (pre-padding) count
     pub n: usize,
+    /// second-level blocksize (the paper uses 256)
     pub block2: usize,
 }
 

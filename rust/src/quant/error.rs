@@ -10,9 +10,12 @@ use super::absmax::{dequantize_blockwise, quantize_blockwise};
 use super::codebook::{Codebook, DType};
 use super::double::{double_dequantize, double_quantize};
 
+/// Round-trip quantization error summary for one tensor.
 #[derive(Debug, Clone, Copy)]
 pub struct ErrorStats {
+    /// mean squared error
     pub mse: f64,
+    /// mean absolute error
     pub mae: f64,
     /// signal-to-quantization-noise ratio in dB
     pub sqnr_db: f64,

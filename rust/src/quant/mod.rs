@@ -12,6 +12,8 @@
 //! model, Table 2 / Figure 3 quantization-error measurements, and the
 //! quantization benches.
 
+#![cfg_attr(doc, warn(missing_docs))]
+
 pub mod absmax;
 pub mod codebook;
 pub mod double;

@@ -3,6 +3,7 @@
 
 use anyhow::{ensure, Result};
 
+/// Pack pairs of 4-bit codes into bytes (`codes[0] | codes[1] << 4`).
 pub fn pack_nibbles(codes: &[u8]) -> Result<Vec<u8>> {
     ensure!(codes.len() % 2 == 0, "need even number of codes");
     ensure!(codes.iter().all(|&c| c < 16), "codes must fit 4 bits");
@@ -12,6 +13,7 @@ pub fn pack_nibbles(codes: &[u8]) -> Result<Vec<u8>> {
         .collect())
 }
 
+/// Inverse of [`pack_nibbles`]: two 4-bit codes per input byte.
 pub fn unpack_nibbles(packed: &[u8]) -> Vec<u8> {
     let mut out = Vec::with_capacity(packed.len() * 2);
     for &b in packed {

@@ -13,18 +13,24 @@ use super::pack::{pack_nibbles, unpack_nibbles};
 /// Absmax constants: raw FP32 or double-quantized.
 #[derive(Debug, Clone)]
 pub enum Constants {
+    /// One FP32 constant per quantization block.
     Raw(Vec<f32>),
+    /// Double-quantized constants (paper section 3).
     Double(DoubleQuant),
 }
 
+/// A block-quantized weight: packed codes + quantization constants.
 #[derive(Debug, Clone)]
 pub struct QuantizedTensor {
+    /// The codebook datatype the codes index into.
     pub dtype: DType,
     /// packed nibbles for 4-bit dtypes, raw codes for 8-bit
     pub data: Vec<u8>,
+    /// Per-block absmax constants (raw or double-quantized).
     pub constants: Constants,
     /// logical (h, o) shape of the original weight
     pub shape: (usize, usize),
+    /// quantization blocksize along the reduction dimension
     pub block: usize,
 }
 

@@ -89,6 +89,14 @@ pub struct ArtifactSpec {
     pub train_hlo: PathBuf,
     pub eval_hlo: PathBuf,
     pub fwd_hlo: Option<PathBuf>,
+    /// Full-sequence forward that also fills the KV cache (generation
+    /// artifacts only; `None` on train-only configs).
+    pub prefill_hlo: Option<PathBuf>,
+    /// O(1)-per-token KV-cached decode step (generation artifacts only).
+    pub decode_hlo: Option<PathBuf>,
+    /// Key/value cache signatures (shape `[batch, layers, seq, d_model]`);
+    /// empty when the artifact has no cached decode graphs.
+    pub cache_sig: Vec<TensorSpec>,
     pub init: PathBuf,
     pub n_state: usize,
     pub n_trainable: usize,
@@ -136,6 +144,20 @@ impl Manifest {
                     .opt("fwd_hlo")
                     .and_then(|v| v.str().ok())
                     .map(|s| dir.join(s)),
+                prefill_hlo: a
+                    .opt("prefill_hlo")
+                    .and_then(|v| v.str().ok())
+                    .map(|s| dir.join(s)),
+                decode_hlo: a
+                    .opt("decode_hlo")
+                    .and_then(|v| v.str().ok())
+                    .map(|s| dir.join(s)),
+                cache_sig: match a.opt("cache_sig") {
+                    Some(v) => {
+                        v.arr()?.iter().map(TensorSpec::parse).collect::<Result<_>>()?
+                    }
+                    None => Vec::new(),
+                },
                 init: dir.join(a.get("init")?.str()?),
                 n_state: a.get("n_state")?.usize()?,
                 n_trainable: a.get("n_trainable")?.usize()?,
@@ -194,6 +216,10 @@ mod tests {
         let a = m.get("t").unwrap();
         assert_eq!(a.cfg.d_model, 4);
         assert_eq!(a.state_sig[1].elems(), 1);
+        // decode-path keys are optional: absent means full-recompute only
+        assert!(a.fwd_hlo.is_none());
+        assert!(a.prefill_hlo.is_none() && a.decode_hlo.is_none());
+        assert!(a.cache_sig.is_empty());
         assert!(m.get("missing").is_err());
     }
 }

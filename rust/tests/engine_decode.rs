@@ -1,0 +1,193 @@
+//! KV-cached decode equivalence + continuous batching, over real
+//! artifacts. The acceptance bar of the decode subsystem: greedy decoding
+//! through the cached path must be byte-identical to the full-recompute
+//! fallback, and continuous batching must preserve per-prompt outputs
+//! versus sequential generation. Each test skips with a message when
+//! artifacts (or their decode graphs) are not built, so `cargo test -q`
+//! is green from a fresh clone.
+
+use std::rc::Rc;
+
+use qlora::engine::{DecodeMode, Engine, Sampler};
+use qlora::runtime::artifact::Manifest;
+use qlora::runtime::client::Runtime;
+
+// PjRtClient is single-threaded (Rc internally), so each test builds its
+// own runtime; executable compilation is cached per-runtime only.
+fn env() -> Option<(Rc<Runtime>, Manifest)> {
+    let dir = Manifest::default_dir();
+    let Ok(manifest) = Manifest::load(&dir) else {
+        eprintln!(
+            "skipped: artifacts not built in {dir:?} — run `make artifacts` \
+             to exercise the decode tests"
+        );
+        return None;
+    };
+    let rt = match Runtime::cpu() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipped: PJRT CPU runtime unavailable: {e:#}");
+            return None;
+        }
+    };
+    Some((Rc::new(rt), manifest))
+}
+
+/// The e2e engine, or `None` (with a message) when its decode graphs are
+/// missing — e.g. artifacts from before the KV-cache change.
+fn cached_engine(rt: &Rc<Runtime>, manifest: &Manifest) -> Option<Engine> {
+    let eng = Engine::new(rt.clone(), manifest, "e2e").ok()?;
+    if !eng.has_cached_decode() {
+        eprintln!(
+            "skipped: artifact \"e2e\" has no decode graphs — re-run \
+             `make artifacts`"
+        );
+        return None;
+    }
+    Some(eng)
+}
+
+const PROMPTS: [&str; 5] =
+    ["copy ab", "rev abcd", "up hi", "copy qlora engine", "rev x"];
+
+#[test]
+fn cached_greedy_is_byte_identical_to_full() {
+    let Some((rt, manifest)) = env() else { return };
+    let Some(eng) = cached_engine(&rt, &manifest) else { return };
+    let sampler = Sampler { max_new_tokens: 12, ..Sampler::default() };
+    let mut full = eng
+        .session()
+        .sampler(sampler.clone())
+        .greedy(true)
+        .decode(DecodeMode::Full)
+        .build()
+        .unwrap();
+    let mut cached = eng
+        .session()
+        .sampler(sampler)
+        .greedy(true)
+        .decode(DecodeMode::Cached)
+        .build()
+        .unwrap();
+    for p in PROMPTS {
+        let a = full.generate(p).unwrap();
+        let b = cached.generate(p).unwrap();
+        assert_eq!(a, b, "cached decode diverged from full on {p:?}");
+    }
+}
+
+#[test]
+fn cached_batch_matches_full_batch() {
+    let Some((rt, manifest)) = env() else { return };
+    let Some(eng) = cached_engine(&rt, &manifest) else { return };
+    let sampler = Sampler { max_new_tokens: 8, ..Sampler::default() };
+    let prompts = &PROMPTS[..3];
+    let mut full = eng
+        .session()
+        .sampler(sampler.clone())
+        .greedy(true)
+        .decode(DecodeMode::Full)
+        .build()
+        .unwrap();
+    let mut cached = eng
+        .session()
+        .sampler(sampler)
+        .greedy(true)
+        .decode(DecodeMode::Cached)
+        .build()
+        .unwrap();
+    assert_eq!(
+        full.generate_batch(prompts).unwrap(),
+        cached.generate_batch(prompts).unwrap()
+    );
+}
+
+#[test]
+fn continuous_batching_preserves_per_prompt_outputs() {
+    let Some((rt, manifest)) = env() else { return };
+    let Some(eng) = cached_engine(&rt, &manifest) else { return };
+    let batch = eng.spec.cfg.batch;
+    // more prompts than rows: rows must retire and re-admit mid-flight,
+    // interleaving prefills of late prompts with decode steps of early
+    // ones — each output must still equal the prompt decoded alone
+    let prompts: Vec<String> = (0..batch + 3)
+        .map(|i| format!("rev p{i}"))
+        .collect();
+    let refs: Vec<&str> = prompts.iter().map(String::as_str).collect();
+    for mode in [DecodeMode::Cached, DecodeMode::Full] {
+        let sampler = Sampler { max_new_tokens: 6, ..Sampler::default() };
+        let mut s = eng
+            .session()
+            .sampler(sampler)
+            .greedy(true)
+            .decode(mode)
+            .build()
+            .unwrap();
+        let batched = s.generate_batch(&refs).unwrap();
+        assert_eq!(batched.len(), refs.len());
+        for (p, b) in refs.iter().zip(batched.iter()) {
+            let single = s.generate(p).unwrap();
+            assert_eq!(&single, b, "{mode:?}: row for {p:?} diverged");
+        }
+    }
+}
+
+#[test]
+fn cached_streaming_matches_full_generation() {
+    let Some((rt, manifest)) = env() else { return };
+    let Some(eng) = cached_engine(&rt, &manifest) else { return };
+    let sampler = Sampler { max_new_tokens: 8, ..Sampler::default() };
+    let mut full = eng
+        .session()
+        .sampler(sampler.clone())
+        .greedy(true)
+        .decode(DecodeMode::Full)
+        .build()
+        .unwrap();
+    let whole = full.generate("copy ab").unwrap();
+    let mut cached = eng
+        .session()
+        .sampler(sampler)
+        .greedy(true)
+        .decode(DecodeMode::Cached)
+        .build()
+        .unwrap();
+    let mut streamed = String::new();
+    let mut stream = cached.stream("copy ab").unwrap();
+    while let Some(piece) = stream.next_token_text() {
+        streamed.push_str(&piece.unwrap());
+    }
+    assert_eq!(whole, streamed);
+}
+
+#[test]
+fn zero_token_budget_returns_empty_without_stepping() {
+    let Some((rt, manifest)) = env() else { return };
+    let Ok(eng) = Engine::new(rt.clone(), &manifest, "e2e") else { return };
+    let sampler = Sampler { max_new_tokens: 0, ..Sampler::default() };
+    let mut s = eng.session().sampler(sampler).greedy(true).build().unwrap();
+    let outs = s.generate_batch(&["copy ab", "rev cd"]).unwrap();
+    assert_eq!(outs, vec![String::new(), String::new()]);
+    assert_eq!(s.tokens_generated(), 0);
+}
+
+#[test]
+fn forcing_cached_mode_without_decode_graphs_is_a_clear_error() {
+    let Some((rt, manifest)) = env() else { return };
+    // train-only artifact: no fwd/prefill/decode graphs at all
+    let Ok(eng) = Engine::new(rt.clone(), &manifest, "tiny_scope_all") else {
+        return;
+    };
+    assert!(!eng.has_cached_decode());
+    let mut s = eng
+        .session()
+        .decode(DecodeMode::Cached)
+        .greedy(true)
+        .build()
+        .unwrap();
+    let err = match s.generate("copy ab") {
+        Err(e) => format!("{e:#}"),
+        Ok(_) => panic!("cached decode over a train-only artifact"),
+    };
+    assert!(err.contains("make artifacts"), "unhelpful error: {err}");
+}
