@@ -3,7 +3,7 @@
 
 ARTIFACTS ?= artifacts
 
-.PHONY: artifacts artifacts-large test test-python test-rust
+.PHONY: artifacts artifacts-large test test-python test-rust bench-quant
 
 # Lower every model config to HLO text + init tensors + manifest.
 artifacts:
@@ -20,3 +20,8 @@ test-python:
 
 test-rust:
 	cd rust && cargo test -q
+
+# Quant-kernel perf trajectory: fused-vs-scalar throughput + speedups,
+# persisted machine-readably at the repo root (tracked from PR 3 onward).
+bench-quant:
+	cd rust && cargo bench --bench bench_quant -- --json ../BENCH_quant.json

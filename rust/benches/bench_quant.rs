@@ -1,37 +1,87 @@
-//! Quantization benches — the kernels behind Table 2 / Figure 3 and the
-//! load-time weight preparation path. Throughput in params/sec.
+//! Quantization benches — the kernels behind Table 2 / Figure 3, engine
+//! weight prep, and checkpoint round-trips. Throughput in params/sec.
+//!
+//! Headline: the fused-vs-scalar comparison on a 4096x4096 NF4+DQ weight
+//! (the `QuantizedTensor` hot path), measured three ways — scalar
+//! reference tier, fused single-thread, fused multicore — with derived
+//! speedups printed and persisted.
+//!
+//! Flags (after `--`):
+//!   --smoke        tiny tensors + short budgets (CI bit-rot check)
+//!   --json <path>  write results + speedups as JSON (the perf
+//!                  trajectory file: `make bench-quant` writes
+//!                  BENCH_quant.json at the repo root)
+
+use std::path::PathBuf;
 
 use qlora::quant::codebook::{Codebook, DType};
+use qlora::quant::double::{double_dequantize, double_quantize};
+use qlora::quant::kernels::{
+    auto_threads, dequantize_blockwise_fused, quantize_blockwise_fused,
+};
+use qlora::quant::tensor::QuantizedTensor;
 use qlora::quant::{
     dequantize_blockwise, pack_nibbles, quantize_blockwise, unpack_nibbles,
 };
-use qlora::quant::double::{double_dequantize, double_quantize};
-use qlora::quant::tensor::QuantizedTensor;
 use qlora::util::bench::Bencher;
+use qlora::util::json::Value;
 use qlora::util::rng::Rng;
 
 fn main() {
+    let mut smoke = false;
+    let mut json_path: Option<PathBuf> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--smoke" => smoke = true,
+            "--json" => {
+                json_path = Some(PathBuf::from(
+                    args.next().expect("--json needs a path"),
+                ))
+            }
+            // cargo passes --bench to every bench binary, even with
+            // harness = false (criterion ignores it the same way)
+            "--bench" => {}
+            other => panic!("unknown bench_quant flag {other:?}"),
+        }
+    }
+    if smoke {
+        std::env::set_var("QLORA_BENCH_FAST", "1");
+    }
+
     let mut b = Bencher::new();
     let mut rng = Rng::new(1);
-    let n = 64 * 4096; // 256k params
+    let n = if smoke { 64 * 256 } else { 64 * 4096 };
     let x: Vec<f32> = rng.normal_vec_f32(n);
 
-    b.group("blockwise quantize (block=64)");
+    b.group("blockwise quantize (block=64): scalar vs fused");
     for dt in [DType::NF4, DType::FP4E2M1, DType::Int4, DType::Int8] {
         let cb = Codebook::new(dt);
-        b.bench_items(&format!("quantize/{}", dt.name()), n, || {
+        b.bench_items(&format!("quantize/{}/scalar", dt.name()), n, || {
             quantize_blockwise(&x, &cb, 64).unwrap()
+        });
+        b.bench_items(&format!("quantize/{}/fused1", dt.name()), n, || {
+            quantize_blockwise_fused(&x, &cb, 64, Some(1)).unwrap()
+        });
+        b.bench_items(&format!("quantize/{}/fusedN", dt.name()), n, || {
+            quantize_blockwise_fused(&x, &cb, 64, None).unwrap()
         });
     }
 
-    b.group("blockwise dequantize");
+    b.group("blockwise dequantize: scalar vs fused");
     let cb = Codebook::new(DType::NF4);
     let (codes, absmax) = quantize_blockwise(&x, &cb, 64).unwrap();
-    b.bench_items("dequantize/nf4", n, || {
+    b.bench_items("dequantize/nf4/scalar", n, || {
         dequantize_blockwise(&codes, &absmax, &cb, 64).unwrap()
     });
+    b.bench_items("dequantize/nf4/fused1", n, || {
+        dequantize_blockwise_fused(&codes, &absmax, &cb, 64, Some(1)).unwrap()
+    });
+    b.bench_items("dequantize/nf4/fusedN", n, || {
+        dequantize_blockwise_fused(&codes, &absmax, &cb, 64, None).unwrap()
+    });
 
-    b.group("nibble packing");
+    b.group("nibble packing (scalar tier)");
     b.bench_items("pack", n, || pack_nibbles(&codes).unwrap());
     let packed = pack_nibbles(&codes).unwrap();
     b.bench_items("unpack", n, || unpack_nibbles(&packed));
@@ -45,16 +95,87 @@ fn main() {
         double_dequantize(&dq).unwrap()
     });
 
-    b.group("full weight container (quantize+pack+DQ)");
-    let (h, o) = (512, 512);
-    let w: Vec<f32> = rng.normal_vec_f32(h * o);
-    b.bench_items("QuantizedTensor::quantize 512x512", h * o, || {
+    // ----------------------------------------------------------------
+    // Headline: the full weight container (quantize+pack+DQ / LUT
+    // dequant) — the engine weight-prep and checkpoint-round-trip path.
+    // ----------------------------------------------------------------
+    let (h, o) = if smoke { (512, 512) } else { (4096, 4096) };
+    let np = h * o;
+    let threads = auto_threads(np);
+    // the fused1 passes pin the kernels to one thread via the env knob;
+    // restore any externally set value so the fusedN passes (and the
+    // `threads` recorded above) stay consistent with the caller's intent
+    let prior_threads = std::env::var("QLORA_QUANT_THREADS").ok();
+    let restore_threads = || match &prior_threads {
+        Some(v) => std::env::set_var("QLORA_QUANT_THREADS", v),
+        None => std::env::remove_var("QLORA_QUANT_THREADS"),
+    };
+    b.group(&format!(
+        "QuantizedTensor {h}x{o} NF4+DQ: scalar vs fused ({threads} threads)"
+    ));
+    let w: Vec<f32> = rng.normal_vec_f32(np);
+    let qt = |name: &str| format!("QuantizedTensor::quantize {h}x{o}/{name}");
+    let dt_ = |name: &str| format!("QuantizedTensor::dequantize {h}x{o}/{name}");
+    b.bench_items(&qt("scalar"), np, || {
+        QuantizedTensor::quantize_scalar(&w, (h, o), DType::NF4, 64, Some(256))
+            .unwrap()
+    });
+    std::env::set_var("QLORA_QUANT_THREADS", "1");
+    b.bench_items(&qt("fused1"), np, || {
+        QuantizedTensor::quantize(&w, (h, o), DType::NF4, 64, Some(256))
+            .unwrap()
+    });
+    restore_threads();
+    b.bench_items(&qt("fusedN"), np, || {
         QuantizedTensor::quantize(&w, (h, o), DType::NF4, 64, Some(256))
             .unwrap()
     });
     let q = QuantizedTensor::quantize(&w, (h, o), DType::NF4, 64, Some(256))
         .unwrap();
-    b.bench_items("QuantizedTensor::dequantize 512x512", h * o, || {
-        q.dequantize().unwrap()
+    // both sides allocate their output (the public API shape), so the
+    // ratios don't flatter the fused path with a pre-allocated buffer
+    b.bench_items(&dt_("scalar"), np, || q.dequantize_scalar().unwrap());
+    std::env::set_var("QLORA_QUANT_THREADS", "1");
+    b.bench_items(&dt_("fused1"), np, || q.dequantize().unwrap());
+    restore_threads();
+    b.bench_items(&dt_("fusedN"), np, || q.dequantize().unwrap());
+    // the zero-alloc variant engine code can use for repeated dequants
+    let mut out = vec![0f32; np];
+    b.bench_items(&dt_("fusedN_into"), np, || {
+        q.dequantize_into(&mut out).unwrap()
     });
+
+    // derived speedups (mean-based; quantize+dequantize combined is the
+    // acceptance metric: >= 2x fused single-thread, >= 4x multicore)
+    let mean = |name: &str| b.find(name).map(|s| s.mean_ns).unwrap_or(f64::NAN);
+    let qs = mean(&qt("scalar"));
+    let ds = mean(&dt_("scalar"));
+    let speed = |tag: &str| {
+        let (qf, df) = (mean(&qt(tag)), mean(&dt_(tag)));
+        (qs / qf, ds / df, (qs + ds) / (qf + df))
+    };
+    let (q1, d1, c1) = speed("fused1");
+    let (qn, dn, cn) = speed("fusedN");
+    println!("\n== speedups vs scalar ({h}x{o} NF4+DQ) ==");
+    println!("fused single-thread: quantize {q1:.2}x  dequantize {d1:.2}x  \
+              combined {c1:.2}x (target >= 2x)");
+    println!("fused {threads}-thread:      quantize {qn:.2}x  \
+              dequantize {dn:.2}x  combined {cn:.2}x (target >= 4x)");
+
+    if let Some(path) = json_path {
+        let meta = [
+            ("bench", Value::s("bench_quant")),
+            ("mode", Value::s(if smoke { "smoke" } else { "full" })),
+            ("shape", Value::array([Value::n(h as f64), Value::n(o as f64)])),
+            ("threads", Value::n(threads as f64)),
+            ("speedup_quantize_fused1", Value::n(q1)),
+            ("speedup_dequantize_fused1", Value::n(d1)),
+            ("speedup_combined_fused1", Value::n(c1)),
+            ("speedup_quantize_fusedN", Value::n(qn)),
+            ("speedup_dequantize_fusedN", Value::n(dn)),
+            ("speedup_combined_fusedN", Value::n(cn)),
+        ];
+        b.write_json(&path, &meta).unwrap();
+        println!("\nwrote {}", path.display());
+    }
 }

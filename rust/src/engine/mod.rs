@@ -62,6 +62,7 @@ pub mod decode;
 pub mod sampler;
 pub mod scheduler;
 pub mod session;
+pub mod weights;
 
 use std::cell::RefCell;
 use std::collections::HashMap;

@@ -1,0 +1,242 @@
+//! Host-side engine weight preparation — the Rust twin of
+//! `model.quantize_base` / `ref.quantize_weight`, on the fused multicore
+//! kernels.
+//!
+//! The artifact pipeline quantizes the frozen base in Python at AOT time;
+//! this module is the native equivalent, so raw f32 checkpoints can be
+//! prepared for (and recovered from) the engine's frozen-tensor layout
+//! without a Python round-trip. Tensor names and ordering mirror
+//! `aot.flatten_named` exactly (jax keystr paths, **sorted dict keys**),
+//! so prepared tensors interleave with artifact `frozen_sig` entries:
+//!
+//! ```text
+//! <prefix>['absmax2']  f32 [nb2]     (double-quant only)
+//! <prefix>['codes2']   u8  [nb_pad]  (double-quant only)
+//! <prefix>['mean']     f32 []        (double-quant only)
+//! <prefix>['packed']   u8  [h*o/2]   (4-bit; raw codes u8 [h*o] for 8-bit)
+//! <prefix>['absmax']   f32 [nb]      (raw-constants only)
+//! ```
+//!
+//! Round-trips are lossless by construction: `to_tensors` → `from_tensors`
+//! reproduces the exact `QuantizedTensor` (unit-tested), and the
+//! quantize/dequantize themselves are the bit-exact fused kernels.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::quant::codebook::{Codebook, DType};
+use crate::quant::double::DoubleQuant;
+use crate::quant::tensor::{Constants, QuantizedTensor};
+use crate::tensorio::{find, Tensor};
+
+/// Quantize one row-major `(h, o)` weight straight into frozen-layout
+/// host tensors (fused multicore path). `double_q` is the second-level
+/// blocksize, as in [`QuantizedTensor::quantize`].
+pub fn prepare_weight(
+    prefix: &str,
+    w: &[f32],
+    shape: (usize, usize),
+    dtype: DType,
+    block: usize,
+    double_q: Option<usize>,
+) -> Result<Vec<Tensor>> {
+    let q = QuantizedTensor::quantize(w, shape, dtype, block, double_q)?;
+    Ok(to_tensors(prefix, &q))
+}
+
+/// Serialize a [`QuantizedTensor`] into frozen-layout host tensors (names
+/// and order per the module docs).
+pub fn to_tensors(prefix: &str, q: &QuantizedTensor) -> Vec<Tensor> {
+    // both code widths store under 'packed', exactly like
+    // ref.quantize_weight (8-bit "packed" is just the raw codes)
+    let mut out = Vec::with_capacity(4);
+    match &q.constants {
+        Constants::Double(dq) => {
+            // sorted key order: absmax2, codes2, mean, packed
+            out.push(Tensor::f32(
+                &format!("{prefix}['absmax2']"),
+                vec![dq.absmax2.len()],
+                &dq.absmax2,
+            ));
+            out.push(Tensor::u8(
+                &format!("{prefix}['codes2']"),
+                vec![dq.codes2.len()],
+                dq.codes2.clone(),
+            ));
+            out.push(Tensor::f32(
+                &format!("{prefix}['mean']"),
+                vec![],
+                &[dq.mean],
+            ));
+            out.push(Tensor::u8(
+                &format!("{prefix}['packed']"),
+                vec![q.data.len()],
+                q.data.clone(),
+            ));
+        }
+        Constants::Raw(a) => {
+            // sorted key order: absmax, packed
+            out.push(Tensor::f32(
+                &format!("{prefix}['absmax']"),
+                vec![a.len()],
+                a,
+            ));
+            out.push(Tensor::u8(
+                &format!("{prefix}['packed']"),
+                vec![q.data.len()],
+                q.data.clone(),
+            ));
+        }
+    }
+    out
+}
+
+/// Reassemble a [`QuantizedTensor`] from frozen-layout host tensors
+/// (inverse of [`to_tensors`]; looks tensors up by name, so extra tensors
+/// in the slice are fine). `block2` is the DQ blocksize the artifact was
+/// built with (the paper's 256) — only consulted when the double-quant
+/// tensors are present.
+pub fn from_tensors(
+    prefix: &str,
+    tensors: &[Tensor],
+    shape: (usize, usize),
+    dtype: DType,
+    block: usize,
+    block2: usize,
+) -> Result<QuantizedTensor> {
+    let (h, o) = shape;
+    let n = h * o;
+    ensure!(block > 0 && n % block == 0, "bad shape/block");
+    ensure!(block2 > 0, "block2 must be positive");
+    let nb = n / block;
+    let data = find(tensors, &format!("{prefix}['packed']"))?.data.clone();
+    let expect = if dtype.bits() == 4 { n / 2 } else { n };
+    ensure!(
+        data.len() == expect,
+        "{prefix}: packed length {} != {expect}",
+        data.len()
+    );
+    // reject out-of-range codes up front: the fused decode LUT clamps
+    // them (where the scalar tier panics), so a corrupted artifact must
+    // fail loudly here rather than dequantize to silently wrong weights
+    let cb_len = Codebook::new(dtype).len() as u8; // canonical books: <= 255
+    let in_range = if dtype.bits() == 4 {
+        // 16-entry books admit every nibble; smaller ones must be checked
+        cb_len == 16
+            || data.iter().all(|&b| (b & 0xF) < cb_len && (b >> 4) < cb_len)
+    } else {
+        data.iter().all(|&b| b < cb_len)
+    };
+    ensure!(in_range, "{prefix}: packed codes out of codebook range");
+    let constants = if let Ok(c2) = find(tensors, &format!("{prefix}['codes2']"))
+    {
+        let absmax2 =
+            find(tensors, &format!("{prefix}['absmax2']"))?.to_f32()?;
+        let mean_t = find(tensors, &format!("{prefix}['mean']"))?.to_f32()?;
+        ensure!(mean_t.len() == 1, "{prefix}: mean must be scalar");
+        ensure!(
+            c2.data.len() % block2 == 0
+                && c2.data.len() / block2 == absmax2.len(),
+            "{prefix}: inconsistent double-quant tensors"
+        );
+        // exact padded length: codes2 from a different-sized weight must
+        // fail loudly, not silently dequantize from the wrong constants
+        ensure!(
+            c2.data.len() == nb.div_ceil(block2) * block2,
+            "{prefix}: codes2 length {} != padded block count {}",
+            c2.data.len(),
+            nb.div_ceil(block2) * block2
+        );
+        ensure!(
+            c2.data.iter().all(|&b| b < u8::MAX), // FP8 book: 255 entries
+            "{prefix}: codes2 out of FP8 codebook range"
+        );
+        Constants::Double(DoubleQuant {
+            codes2: c2.data.clone(),
+            absmax2,
+            mean: mean_t[0],
+            n: nb,
+            block2,
+        })
+    } else if let Ok(a) = find(tensors, &format!("{prefix}['absmax']")) {
+        let a = a.to_f32()?;
+        ensure!(a.len() == nb, "{prefix}: absmax length {} != {nb}", a.len());
+        Constants::Raw(a)
+    } else {
+        bail!("{prefix}: neither double-quant nor raw absmax tensors found");
+    };
+    Ok(QuantizedTensor { dtype, data, constants, shape, block })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_is_lossless_dq_and_raw() {
+        let mut rng = Rng::new(31);
+        let (h, o) = (64, 48);
+        let w: Vec<f32> = rng.normal_vec_f32(h * o);
+        for (dtype, dq) in [(DType::NF4, Some(256)), (DType::NF4, None),
+                            (DType::Int8, Some(256))] {
+            let q = QuantizedTensor::quantize(&w, (h, o), dtype, 64, dq)
+                .unwrap();
+            let prefix = "frozen['layers'][0]['wq']";
+            let ts = to_tensors(prefix, &q);
+            let back =
+                from_tensors(prefix, &ts, (h, o), dtype, 64, 256).unwrap();
+            assert_eq!(back.data, q.data);
+            let (a, b) = (q.dequantize().unwrap(), back.dequantize().unwrap());
+            for (x, y) in a.iter().zip(b.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn tensor_names_follow_sorted_keystr_convention() {
+        let mut rng = Rng::new(32);
+        let w: Vec<f32> = rng.normal_vec_f32(64 * 2);
+        let ts = prepare_weight("p", &w, (64, 2), DType::NF4, 64, Some(256))
+            .unwrap();
+        let names: Vec<&str> = ts.iter().map(|t| t.name.as_str()).collect();
+        assert_eq!(names, ["p['absmax2']", "p['codes2']", "p['mean']",
+                           "p['packed']"]);
+        let mut sorted = names.clone();
+        sorted.sort();
+        assert_eq!(names, sorted, "must already be in sorted key order");
+        let raw = prepare_weight("p", &w, (64, 2), DType::NF4, 64, None)
+            .unwrap();
+        let names: Vec<&str> = raw.iter().map(|t| t.name.as_str()).collect();
+        assert_eq!(names, ["p['absmax']", "p['packed']"]);
+    }
+
+    #[test]
+    fn rejects_out_of_range_codes() {
+        // Int4's 15-entry codebook leaves nibble 0xF invalid: a corrupted
+        // artifact must fail at load, not dequantize to wrong weights
+        let mut rng = Rng::new(34);
+        let w: Vec<f32> = rng.normal_vec_f32(64 * 2);
+        let mut ts = prepare_weight("p", &w, (64, 2), DType::Int4, 64, None)
+            .unwrap();
+        let packed = ts.iter_mut().find(|t| t.name.ends_with("'packed']"))
+            .unwrap();
+        packed.data[0] = 0xFF;
+        let err = from_tensors("p", &ts, (64, 2), DType::Int4, 64, 256)
+            .unwrap_err();
+        assert!(err.to_string().contains("out of codebook range"), "{err}");
+    }
+
+    #[test]
+    fn prepared_bytes_match_paper_accounting() {
+        // NF4+DQ 256x256: ~4.127 bits/param through the tensor layout too
+        let mut rng = Rng::new(33);
+        let (h, o) = (256, 256);
+        let w: Vec<f32> = rng.normal_vec_f32(h * o);
+        let ts = prepare_weight("p", &w, (h, o), DType::NF4, 64, Some(256))
+            .unwrap();
+        let bytes: usize = ts.iter().map(|t| t.data.len()).sum();
+        let bits = bytes as f64 * 8.0 / (h * o) as f64;
+        assert!((bits - 4.127).abs() < 0.01, "bits {bits}");
+    }
+}

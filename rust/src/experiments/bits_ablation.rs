@@ -10,7 +10,7 @@ use anyhow::Result;
 
 use crate::quant::codebook::nfk_codebook;
 use crate::quant::error::synthetic_llm_weights;
-use crate::quant::{dequantize_blockwise, quantize_blockwise};
+use crate::quant::{dequantize_blockwise_fused, quantize_blockwise_fused};
 use crate::util::rng::Rng;
 
 use super::{render_table, Ctx};
@@ -29,9 +29,11 @@ pub fn compute(seed: u64) -> Result<Vec<BitsRow>> {
     // NF4+DQ reference error for the recovery-calibrated penalty map
     // (same coefficients as eval::capability::dtype_penalty)
     let rmse_of = |bits: u32| -> Result<f64> {
+        // fused kernels (NFk books with k > 4 exercise the generic
+        // encoder; k <= 4 the branchless 16-entry path)
         let cb = nfk_codebook(bits);
-        let (c, a) = quantize_blockwise(&w, &cb, 64)?;
-        let y = dequantize_blockwise(&c, &a, &cb, 64)?;
+        let (c, a) = quantize_blockwise_fused(&w, &cb, 64, None)?;
+        let y = dequantize_blockwise_fused(&c, &a, &cb, 64, None)?;
         Ok((w
             .iter()
             .zip(y.iter())

@@ -4,7 +4,9 @@
 //!
 //! Hybrid reproduction: the datatype axis comes from *measured*
 //! quantization error (inference-time, no finetuning recovery); the size
-//! axis is a scaling baseline (`eval::capability::zero_shot`).
+//! axis is a scaling baseline (`eval::capability::zero_shot`). The error
+//! measurements run on the fused multicore kernels (`quant::kernels`, via
+//! `quant_error`).
 
 use anyhow::Result;
 

@@ -6,7 +6,8 @@
 //! Substitution (DESIGN.md section 2): no Pile or pretrained LLMs here; we
 //! *measure* block-quantization error over the paper's weight model
 //! (zero-centered normal, Appendix F, plus outlier coordinates) across a
-//! family of synthetic "models" (different sizes/outlier profiles), and
+//! family of synthetic "models" (different sizes/outlier profiles) — on
+//! the fused multicore kernels (`quant::kernels`, via `quant_error`) — and
 //! map RMSE to perplexity with a single calibrated exponential
 //! (PPL = PPL16 · exp(k·rmse)), anchored at the paper's NF4 and Int4
 //! endpoints. The *measured* part is the datatype error ordering.

@@ -4,6 +4,12 @@
 //! normalized by its absolute maximum and mapped to the nearest codebook
 //! entry. Small blocks (the paper uses B=64 for weights) bound the damage
 //! any outlier can do to its neighbours.
+//!
+//! This module is the **scalar reference tier**: simple, obviously-correct
+//! single-threaded kernels that serve as the bit-exactness oracle for the
+//! fused/parallel tier in [`super::kernels`] (see ARCHITECTURE.md,
+//! "Quantization layer"). Hot paths should call the fused tier; changes
+//! here must keep the two tiers bit-identical (property-tested).
 
 use anyhow::{ensure, Result};
 
@@ -25,14 +31,9 @@ pub fn quantize_blockwise(
     let nb = x.len() / block;
     let mut codes = vec![0u8; x.len()];
     let mut absmax = vec![0f32; nb];
-    // fast path for symmetric integer codebooks: code = round(xn*half)+half
-    // (bit-identical to midpoint search for these uniform grids — the
-    // midpoints are exactly (2i+1)/(2*half) and ties round up either way)
-    let int_half = match cb.dtype {
-        super::codebook::DType::Int4 => Some(7f32),
-        super::codebook::DType::Int8 => Some(127f32),
-        _ => None,
-    };
+    // fast path for symmetric integer codebooks (shared with the fused
+    // encoder in `quant::kernels` — see `Codebook::int_fast_half`)
+    let int_half = cb.int_fast_half();
     for b in 0..nb {
         let chunk = &x[b * block..(b + 1) * block];
         let mut am = 0f32;

@@ -124,6 +124,28 @@ impl Codebook {
         self.values.len()
     }
 
+    /// The precomputed bin midpoints (len = `values.len() - 1`). Exposed
+    /// for the fused kernels (`quant::kernels`), which precompute padded
+    /// compare tables from them.
+    pub fn midpoints(&self) -> &[f32] {
+        &self.mids
+    }
+
+    /// The symmetric-integer encode shortcut: `Some(half)` when codes can
+    /// be computed as `floor(clamp(x, -1, 1)·half + half + 0.5)` —
+    /// bit-identical to the midpoint search for these uniform grids (the
+    /// midpoints are exactly `(2i+1)/(2·half)` and ties round up either
+    /// way; property-tested in `tests/prop_quant_extra.rs`). Keyed off
+    /// `dtype` like the historical fast path, so it applies only to the
+    /// canonical `Codebook::new` tables, never to derived NFk values.
+    pub fn int_fast_half(&self) -> Option<f32> {
+        match self.dtype {
+            DType::Int4 => Some(7f32),
+            DType::Int8 => Some(127f32),
+            _ => None,
+        }
+    }
+
     /// Whether the codebook has no entries (never true for built-ins).
     pub fn is_empty(&self) -> bool {
         self.values.is_empty()

@@ -13,6 +13,7 @@ use anyhow::Result;
 
 use super::absmax::{dequantize_blockwise, quantize_blockwise};
 use super::codebook::{Codebook, DType};
+use super::kernels::{dequantize_blockwise_fused, quantize_blockwise_fused};
 
 /// Double-quantized quantization constants.
 #[derive(Debug, Clone)]
@@ -29,8 +30,28 @@ pub struct DoubleQuant {
     pub block2: usize,
 }
 
-/// Quantize absmax constants (f32 mean accumulation like the reference).
+/// Quantize absmax constants (f32 mean accumulation like the reference),
+/// on the fused kernels — for a 4096x4096/64 weight this is 262k
+/// constants, well past the parallel threshold. Bit-identical to
+/// [`double_quantize_scalar`].
 pub fn double_quantize(absmax: &[f32], block2: usize) -> Result<DoubleQuant> {
+    double_quantize_impl(absmax, block2, true)
+}
+
+/// Scalar-tier twin of [`double_quantize`] — part of the reference
+/// oracle, so it must never route through the fused kernels under test.
+pub fn double_quantize_scalar(
+    absmax: &[f32],
+    block2: usize,
+) -> Result<DoubleQuant> {
+    double_quantize_impl(absmax, block2, false)
+}
+
+fn double_quantize_impl(
+    absmax: &[f32],
+    block2: usize,
+    fused: bool,
+) -> Result<DoubleQuant> {
     let n = absmax.len();
     // mean in f64 accumulate, cast f32 (close enough to XLA's tree reduce;
     // cross-boundary equality is tested with tolerance on dequant)
@@ -43,14 +64,32 @@ pub fn double_quantize(absmax: &[f32], block2: usize) -> Result<DoubleQuant> {
         *v -= mean;
     }
     let cb = Codebook::new(DType::FP8E4M3);
-    let (codes2, absmax2) = quantize_blockwise(&padded, &cb, block2)?;
+    let (codes2, absmax2) = if fused {
+        quantize_blockwise_fused(&padded, &cb, block2, None)?
+    } else {
+        quantize_blockwise(&padded, &cb, block2)?
+    };
     Ok(DoubleQuant { codes2, absmax2, mean, n, block2 })
 }
 
-/// Recover the (approximate) constants; returns exactly `dq.n` values.
+/// Recover the (approximate) constants; returns exactly `dq.n` values
+/// (fused kernels; bit-identical to [`double_dequantize_scalar`]).
 pub fn double_dequantize(dq: &DoubleQuant) -> Result<Vec<f32>> {
+    double_dequantize_impl(dq, true)
+}
+
+/// Scalar-tier twin of [`double_dequantize`] for the reference oracle.
+pub fn double_dequantize_scalar(dq: &DoubleQuant) -> Result<Vec<f32>> {
+    double_dequantize_impl(dq, false)
+}
+
+fn double_dequantize_impl(dq: &DoubleQuant, fused: bool) -> Result<Vec<f32>> {
     let cb = Codebook::new(DType::FP8E4M3);
-    let mut out = dequantize_blockwise(&dq.codes2, &dq.absmax2, &cb, dq.block2)?;
+    let mut out = if fused {
+        dequantize_blockwise_fused(&dq.codes2, &dq.absmax2, &cb, dq.block2, None)?
+    } else {
+        dequantize_blockwise(&dq.codes2, &dq.absmax2, &cb, dq.block2)?
+    };
     for v in out.iter_mut() {
         *v += dq.mean;
     }

@@ -6,9 +6,9 @@
 
 use anyhow::Result;
 
-use super::absmax::{dequantize_blockwise, quantize_blockwise};
 use super::codebook::{Codebook, DType};
 use super::double::{double_dequantize, double_quantize};
+use super::kernels::{dequantize_blockwise_fused, quantize_blockwise_fused};
 
 /// Round-trip quantization error summary for one tensor.
 #[derive(Debug, Clone, Copy)]
@@ -28,13 +28,15 @@ pub fn quant_error(
     block: usize,
     double_q: Option<usize>,
 ) -> Result<ErrorStats> {
+    // fused tier: this round-trip is the inner loop of the Table 2 /
+    // Figure 3 sweeps and the capability model, so it runs multicore
     let cb = Codebook::new(dtype);
-    let (codes, absmax) = quantize_blockwise(x, &cb, block)?;
+    let (codes, absmax) = quantize_blockwise_fused(x, &cb, block, None)?;
     let absmax = match double_q {
         Some(b2) => double_dequantize(&double_quantize(&absmax, b2)?)?,
         None => absmax,
     };
-    let y = dequantize_blockwise(&codes, &absmax, &cb, block)?;
+    let y = dequantize_blockwise_fused(&codes, &absmax, &cb, block, None)?;
     let n = x.len() as f64;
     let mut se = 0f64;
     let mut ae = 0f64;

@@ -1,0 +1,657 @@
+//! Fused, parallel quantization kernels — the performance tier of the
+//! quant substrate (the scalar tier in [`super::absmax`] / [`super::pack`]
+//! stays as the bit-exactness reference oracle).
+//!
+//! What "fused" buys over the scalar pipeline:
+//!
+//! * **`quantize_fused`** — transpose + absmax + encode + nibble-pack in a
+//!   single pass per block with zero intermediate allocations. The scalar
+//!   path (`QuantizedTensor::quantize_scalar`) materializes a transposed
+//!   `Vec<f32>`, then a full unpacked `codes` Vec, then re-scans it in
+//!   `pack_nibbles`; here each block is gathered straight out of the
+//!   row-major weight into a stack buffer and written as packed bytes.
+//! * **`dequantize_fused_into`** — a per-codebook 256-entry byte →
+//!   `(f32, f32)` paired-decode LUT turns each packed byte into two scaled
+//!   outputs with no `unpack_nibbles` buffer, no `data` clone, and the
+//!   absmax multiply fused in; output goes into a caller-provided buffer.
+//! * **[`Encoder`]** — a branchless 4-step unrolled midpoint compare for
+//!   codebooks with ≤ 16 entries (every 4-bit datatype) replacing the
+//!   generic binary search, plus the shared symmetric-integer shortcut
+//!   ([`Codebook::int_fast_half`]).
+//! * **Block-range sharding** — `std::thread::scope` +
+//!   `available_parallelism` (no new deps) spreads block ranges across
+//!   cores for tensors at or above [`PAR_THRESHOLD`] elements. Blocks are
+//!   independent by construction (paper Eq. 1–2), so results are
+//!   deterministic and identical for every shard count.
+//!
+//! **Bit-exactness contract.** Every function here is bit-identical to its
+//! scalar twin — same true division by the block absmax (never a
+//! reciprocal multiply; see the NOTE in `absmax.rs`), same comparison
+//! order, same f32 arithmetic — enforced by `rust/tests/golden.rs` and the
+//! fused-vs-scalar property suite (`rust/tests/prop_quant_fused.rs`).
+//!
+//! All functions take `threads: Option<usize>`; `None` picks
+//! [`auto_threads`] (tests pass odd explicit counts to exercise shard
+//! boundaries; benches pass `Some(1)` to isolate single-thread gains).
+//! Whether codes are nibble-packed is derived from the codebook exactly as
+//! in the Python reference (`ref.quantize_weight`): packed iff the
+//! codebook has ≤ 16 entries.
+
+use std::ops::Range;
+
+use anyhow::{ensure, Result};
+
+use super::codebook::Codebook;
+
+/// Tensors with at least this many elements are sharded across cores by
+/// [`auto_threads`]; smaller ones run single-threaded (thread spawn costs
+/// more than it saves below ~64k elements).
+pub const PAR_THRESHOLD: usize = 1 << 16;
+
+/// Largest blocksize gathered through the per-thread stack buffer in
+/// `quantize_fused`; larger blocks fall back to a two-pass strided walk
+/// (still allocation-free). Covers every blocksize the repo uses
+/// (weights: 32–256, DQ constants: 256).
+const SCRATCH: usize = 512;
+
+/// Row tile for the fused dequantizer's blocked un-transpose: bounds the
+/// write working set to `ROW_TILE` distinct output rows (one cache line
+/// each) so the column-major decode reuses row cache lines across
+/// consecutive columns.
+const ROW_TILE: usize = 256;
+
+/// Worker count the fused kernels use for an `n_items`-element tensor:
+/// 1 below [`PAR_THRESHOLD`], else `available_parallelism` (optionally
+/// capped by env `QLORA_QUANT_THREADS`).
+pub fn auto_threads(n_items: usize) -> usize {
+    if n_items < PAR_THRESHOLD {
+        return 1;
+    }
+    let hw = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let cap = std::env::var("QLORA_QUANT_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(hw);
+    cap.min(hw).max(1)
+}
+
+/// Split `nb` work units into at most `threads` contiguous, near-equal
+/// ranges (the first `nb % threads` ranges get one extra unit). Empty
+/// ranges are dropped, so odd unit counts and over-subscribed thread
+/// counts are both fine.
+pub fn shard_ranges(nb: usize, threads: usize) -> Vec<Range<usize>> {
+    let t = threads.max(1).min(nb.max(1));
+    let base = nb / t;
+    let extra = nb % t;
+    let mut out = Vec::with_capacity(t);
+    let mut start = 0;
+    for k in 0..t {
+        let len = base + usize::from(k < extra);
+        if len == 0 {
+            continue;
+        }
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// A per-codebook specialized encoder. All variants are bit-identical to
+/// [`Codebook::encode`] over absmax-normalized inputs (`|x| <= 1`, or NaN
+/// for degenerate blocks — the only values the fused kernels ever feed
+/// it); the property suite pins this down.
+pub enum Encoder<'c> {
+    /// Uniform symmetric-integer grids: `floor(clamp(x)·half + half + ½)`
+    /// (the shortcut shared with the scalar tier via
+    /// [`Codebook::int_fast_half`]).
+    Int {
+        /// Largest code magnitude (7 for Int4, 127 for Int8).
+        half: f32,
+    },
+    /// Any codebook with ≤ 16 entries (≤ 15 midpoints): a branchless
+    /// 4-step unrolled midpoint compare over the midpoints padded to 16
+    /// entries with `+∞`. Each step is a flag-to-offset add, so there is
+    /// no data-dependent branch to mispredict.
+    Unrolled16 {
+        /// Midpoints padded to 16 entries with `f32::INFINITY`.
+        mids: [f32; 16],
+    },
+    /// Fallback for larger codebooks: the generic binary search.
+    Generic(&'c Codebook),
+}
+
+impl<'c> Encoder<'c> {
+    /// Pick the fastest bit-identical encoder for `cb`.
+    pub fn new(cb: &'c Codebook) -> Encoder<'c> {
+        if let Some(half) = cb.int_fast_half() {
+            return Encoder::Int { half };
+        }
+        let m = cb.midpoints();
+        if m.len() <= 15 {
+            let mut mids = [f32::INFINITY; 16];
+            mids[..m.len()].copy_from_slice(m);
+            return Encoder::Unrolled16 { mids };
+        }
+        Encoder::Generic(cb)
+    }
+
+    /// Nearest code for an absmax-normalized value (`|x| <= 1` or NaN).
+    /// Bit-identical to `Codebook::encode` / the scalar integer shortcut
+    /// on that domain.
+    #[inline]
+    pub fn encode(&self, x: f32) -> u8 {
+        match self {
+            Encoder::Int { half } => {
+                let half = *half;
+                let xn = x.clamp(-1.0, 1.0);
+                // round-half-up matches `sum(xn >= mids)` exactly
+                (xn * half + half + 0.5).floor() as u8
+            }
+            Encoder::Unrolled16 { mids } => {
+                // rank of x in the padded midpoint table = the same
+                // `sum(x >= mids)` the binary search computes (identical
+                // comparisons, so identical ties and NaN handling; the
+                // +inf pads never compare true for normalized inputs)
+                let mut c = usize::from(x >= mids[7]) * 8;
+                c += usize::from(x >= mids[c + 3]) * 4;
+                c += usize::from(x >= mids[c + 1]) * 2;
+                c += usize::from(x >= mids[c]);
+                c as u8
+            }
+            Encoder::Generic(cb) => cb.encode(x),
+        }
+    }
+}
+
+/// 256-entry decode value table: `lut[code] = values[code]`, with
+/// out-of-range codes clamped to the top entry (the scalar tier would
+/// panic on them; neither occurs for codes our quantizers produce).
+fn value_lut(cb: &Codebook) -> [f32; 256] {
+    let top = cb.len() - 1;
+    let mut lut = [0f32; 256];
+    for (code, slot) in lut.iter_mut().enumerate() {
+        *slot = cb.values[code.min(top)];
+    }
+    lut
+}
+
+/// 256-entry paired-decode table for packed nibbles:
+/// `lut[byte] = (values[byte & 0xF], values[byte >> 4])`, clamped like
+/// [`value_lut`].
+fn pair_lut(cb: &Codebook) -> [(f32, f32); 256] {
+    let top = cb.len() - 1;
+    let mut lut = [(0f32, 0f32); 256];
+    for (byte, slot) in lut.iter_mut().enumerate() {
+        *slot = (
+            cb.values[(byte & 0xF).min(top)],
+            cb.values[(byte >> 4).min(top)],
+        );
+    }
+    lut
+}
+
+/// Walk the implicit transposed flat layout `flat[j*h + i] = w[i*o + j]`
+/// from flat index `f0`, calling `g` on each of `len` values in flat
+/// order — the gather that replaces materializing the transposed Vec.
+#[inline]
+fn walk_transposed(
+    w: &[f32],
+    h: usize,
+    o: usize,
+    f0: usize,
+    len: usize,
+    mut g: impl FnMut(f32),
+) {
+    let mut i = f0 % h;
+    let mut j = f0 / h;
+    let mut src = i * o + j;
+    for _ in 0..len {
+        g(w[src]);
+        i += 1;
+        src += o;
+        if i == h {
+            i = 0;
+            j += 1;
+            src = j;
+        }
+    }
+}
+
+/// Shard `nb` work units of `unit` primary elements each across `threads`
+/// scoped workers. Each worker gets its global unit range plus disjoint
+/// `&mut` windows of `primary` (`unit` elements per work unit) and
+/// `per_block` (1 element per unit; pass `&mut []` when the kernel has no
+/// per-unit output).
+fn run_sharded<T: Send>(
+    nb: usize,
+    unit: usize,
+    threads: usize,
+    primary: &mut [T],
+    per_block: &mut [f32],
+    run: &(dyn Fn(Range<usize>, &mut [T], &mut [f32]) + Sync),
+) {
+    if threads <= 1 || nb < 2 {
+        run(0..nb, primary, per_block);
+        return;
+    }
+    let has_per_block = !per_block.is_empty();
+    let ranges = shard_ranges(nb, threads);
+    std::thread::scope(|s| {
+        let mut prest: &mut [T] = primary;
+        let mut arest: &mut [f32] = per_block;
+        for r in ranges {
+            let (p, pt) =
+                std::mem::take(&mut prest).split_at_mut(r.len() * unit);
+            prest = pt;
+            let a_len = if has_per_block { r.len() } else { 0 };
+            let (a, at) = std::mem::take(&mut arest).split_at_mut(a_len);
+            arest = at;
+            s.spawn(move || run(r, p, a));
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// flat (already-laid-out) kernels — drop-ins for the scalar absmax tier
+// ---------------------------------------------------------------------------
+
+/// Fused flat block quantization: absmax + encode in one pass per block,
+/// block ranges sharded across cores. Drop-in for
+/// [`super::absmax::quantize_blockwise`] (unpacked codes) and
+/// bit-identical to it.
+pub fn quantize_blockwise_fused(
+    x: &[f32],
+    cb: &Codebook,
+    block: usize,
+    threads: Option<usize>,
+) -> Result<(Vec<u8>, Vec<f32>)> {
+    ensure!(block > 0, "block must be positive");
+    ensure!(
+        x.len() % block == 0,
+        "length {} not divisible by block {}",
+        x.len(),
+        block
+    );
+    let nb = x.len() / block;
+    let mut codes = vec![0u8; x.len()];
+    let mut absmax = vec![0f32; nb];
+    let enc = Encoder::new(cb);
+    // `range` is the global block range this shard owns; `codes`/`absmax`
+    // are that shard's disjoint output windows.
+    let run = |range: Range<usize>, codes: &mut [u8], absmax: &mut [f32]| {
+        for (k, b) in range.enumerate() {
+            let chunk = &x[b * block..(b + 1) * block];
+            let mut am = 0f32;
+            for &v in chunk {
+                am = am.max(v.abs());
+            }
+            absmax[k] = am;
+            let scale = if am > 0.0 { am } else { 1.0 };
+            let out = &mut codes[k * block..(k + 1) * block];
+            // NOTE: x/scale must stay a true division (not *reciprocal) to
+            // remain bit-identical with the XLA reference computation.
+            for (c, &v) in out.iter_mut().zip(chunk) {
+                *c = enc.encode(v / scale);
+            }
+        }
+    };
+    let t = threads.unwrap_or_else(|| auto_threads(x.len()));
+    run_sharded(nb, block, t, &mut codes, &mut absmax, &run);
+    Ok((codes, absmax))
+}
+
+/// Fused flat dequantization into a caller buffer: decode-LUT lookup with
+/// the absmax multiply fused in, no allocations, block ranges sharded
+/// across cores. Bit-identical to
+/// [`super::absmax::dequantize_blockwise`] for in-range codes.
+///
+/// Divergence on invalid input: codes `>= cb.len()` decode to the top
+/// codebook entry here (LUT clamp) where the scalar twin would panic —
+/// validate externally sourced codes before dequantizing (as
+/// `engine::weights::from_tensors` does for artifact loads).
+pub fn dequantize_blockwise_into(
+    codes: &[u8],
+    absmax: &[f32],
+    cb: &Codebook,
+    block: usize,
+    out: &mut [f32],
+    threads: Option<usize>,
+) -> Result<()> {
+    ensure!(block > 0, "block must be positive");
+    ensure!(codes.len() % block == 0, "bad codes length");
+    ensure!(codes.len() / block == absmax.len(), "absmax length mismatch");
+    ensure!(out.len() == codes.len(), "output length mismatch");
+    let lut = value_lut(cb);
+    let run = |range: Range<usize>, dst: &mut [f32], _a: &mut [f32]| {
+        for (k, b) in range.enumerate() {
+            let am = absmax[b];
+            let src = &codes[b * block..(b + 1) * block];
+            let win = &mut dst[k * block..(k + 1) * block];
+            for (d, &c) in win.iter_mut().zip(src) {
+                *d = lut[c as usize] * am;
+            }
+        }
+    };
+    let t = threads.unwrap_or_else(|| auto_threads(codes.len()));
+    run_sharded(absmax.len(), block, t, out, &mut [], &run);
+    Ok(())
+}
+
+/// Allocating convenience wrapper over [`dequantize_blockwise_into`]
+/// (same in-range bit-identity and same out-of-range clamp divergence).
+pub fn dequantize_blockwise_fused(
+    codes: &[u8],
+    absmax: &[f32],
+    cb: &Codebook,
+    block: usize,
+    threads: Option<usize>,
+) -> Result<Vec<f32>> {
+    let mut out = vec![0f32; codes.len()];
+    dequantize_blockwise_into(codes, absmax, cb, block, &mut out, threads)?;
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// weight-container kernels — the QuantizedTensor hot path
+// ---------------------------------------------------------------------------
+
+/// Fused weight quantization for the `QuantizedTensor` layout: transpose
+/// gather + absmax + encode + (for ≤ 16-entry codebooks) nibble-pack, one
+/// pass per block with zero intermediate allocations, block ranges
+/// sharded across cores.
+///
+/// `w` is the row-major `(h, o)` weight; blocks run along the transposed
+/// flat order `flat[j*h + i] = w[i*o + j]` exactly as in the scalar path.
+/// Returns `(packed-or-raw codes, per-block absmax)`, bit-identical to
+/// `quantize_blockwise` + `pack_nibbles` over the materialized transpose.
+///
+/// The packed (4-bit) layout requires an even `block` so packed bytes
+/// never straddle block (and therefore shard) boundaries —
+/// `QuantizedTensor::quantize` falls back to the scalar tier for the
+/// odd-block corner.
+pub fn quantize_fused(
+    w: &[f32],
+    shape: (usize, usize),
+    cb: &Codebook,
+    block: usize,
+    threads: Option<usize>,
+) -> Result<(Vec<u8>, Vec<f32>)> {
+    let (h, o) = shape;
+    let n = h * o;
+    ensure!(w.len() == n, "weight length mismatch");
+    ensure!(block > 0, "block must be positive");
+    ensure!(n % block == 0, "size not divisible by block");
+    let pack = cb.len() <= 16;
+    if pack {
+        ensure!(block % 2 == 0, "packed path needs an even block");
+    }
+    let nb = n / block;
+    let bytes_per_block = if pack { block / 2 } else { block };
+    let mut data = vec![0u8; nb * bytes_per_block];
+    let mut absmax = vec![0f32; nb];
+    let enc = Encoder::new(cb);
+    let run = |range: Range<usize>, data: &mut [u8], absmax: &mut [f32]| {
+        let mut buf = [0f32; SCRATCH];
+        for (k, b) in range.enumerate() {
+            let f0 = b * block;
+            let ob =
+                &mut data[k * bytes_per_block..(k + 1) * bytes_per_block];
+            if block <= SCRATCH {
+                // gather the block once into the stack buffer, then
+                // absmax + encode + pack out of L1
+                let vals = &mut buf[..block];
+                let mut idx = 0;
+                walk_transposed(w, h, o, f0, block, |v| {
+                    vals[idx] = v;
+                    idx += 1;
+                });
+                let mut am = 0f32;
+                for &v in vals.iter() {
+                    am = am.max(v.abs());
+                }
+                absmax[k] = am;
+                let scale = if am > 0.0 { am } else { 1.0 };
+                // NOTE: true division, as in the scalar tier.
+                if pack {
+                    for (byte, pair) in
+                        ob.iter_mut().zip(vals.chunks_exact(2))
+                    {
+                        let lo = enc.encode(pair[0] / scale);
+                        let hi = enc.encode(pair[1] / scale);
+                        *byte = lo | (hi << 4);
+                    }
+                } else {
+                    for (c, &v) in ob.iter_mut().zip(vals.iter()) {
+                        *c = enc.encode(v / scale);
+                    }
+                }
+            } else {
+                // oversized block: two strided walks, still allocation-free
+                let mut am = 0f32;
+                walk_transposed(w, h, o, f0, block, |v| am = am.max(v.abs()));
+                absmax[k] = am;
+                let scale = if am > 0.0 { am } else { 1.0 };
+                if pack {
+                    let mut lo: Option<u8> = None;
+                    let mut bi = 0;
+                    walk_transposed(w, h, o, f0, block, |v| {
+                        let c = enc.encode(v / scale);
+                        match lo.take() {
+                            None => lo = Some(c),
+                            Some(l) => {
+                                ob[bi] = l | (c << 4);
+                                bi += 1;
+                            }
+                        }
+                    });
+                } else {
+                    let mut bi = 0;
+                    walk_transposed(w, h, o, f0, block, |v| {
+                        ob[bi] = enc.encode(v / scale);
+                        bi += 1;
+                    });
+                }
+            }
+        }
+    };
+    let t = threads.unwrap_or_else(|| auto_threads(n));
+    run_sharded(nb, bytes_per_block, t, &mut data, &mut absmax, &run);
+    Ok((data, absmax))
+}
+
+/// Fused weight dequantization into a caller-provided row-major `(h, o)`
+/// buffer: paired-decode LUT over packed bytes (or a value LUT over raw
+/// 8-bit codes), absmax multiply fused in, no unpack buffer, no clones.
+/// Bit-identical to the scalar unpack → dequantize → un-transpose
+/// pipeline for in-range codes (out-of-range codes clamp to the top
+/// codebook entry where the scalar tier panics — see
+/// [`dequantize_blockwise_into`]).
+///
+/// Parallelism shards **output rows** (each worker owns a contiguous
+/// `&mut` band of `out`), and each band decodes column segments of the
+/// packed data in [`ROW_TILE`] row tiles so the scattered writes of the
+/// un-transpose stay cache-resident. Packed data needs an even `block`
+/// (callers fall back to the scalar tier otherwise).
+pub fn dequantize_fused_into(
+    data: &[u8],
+    absmax: &[f32],
+    cb: &Codebook,
+    block: usize,
+    shape: (usize, usize),
+    out: &mut [f32],
+    threads: Option<usize>,
+) -> Result<()> {
+    let (h, o) = shape;
+    let n = h * o;
+    ensure!(block > 0, "block must be positive");
+    ensure!(n % block == 0, "size not divisible by block");
+    ensure!(out.len() == n, "output length mismatch");
+    ensure!(absmax.len() == n / block, "absmax length mismatch");
+    let pack = cb.len() <= 16;
+    if pack {
+        ensure!(block % 2 == 0, "packed path needs an even block");
+        ensure!(data.len() * 2 == n, "packed data length mismatch");
+    } else {
+        ensure!(data.len() == n, "raw data length mismatch");
+    }
+    let plut = pair_lut(cb);
+    let vlut = value_lut(cb);
+    // Decode one column segment flat[j*h+i0 .. j*h+i0+rows) into column j
+    // of `tile` (whose row 0 is global row i0).
+    let seg_packed = |j: usize, i0: usize, rows: usize, tile: &mut [f32]| {
+        let fa = j * h + i0;
+        let fb = fa + rows;
+        let mut f = fa;
+        let mut row = 0usize;
+        let mut b = f / block;
+        let mut rem = f % block;
+        let mut am = absmax[b];
+        // leading element on an odd flat index uses its byte's high nibble
+        if f & 1 == 1 {
+            tile[row * o + j] = plut[data[f >> 1] as usize].1 * am;
+            row += 1;
+            f += 1;
+            rem += 1;
+            if rem == block {
+                rem = 0;
+                b += 1;
+                if f < fb {
+                    am = absmax[b];
+                }
+            }
+        }
+        // aligned pairs: one byte -> two scaled outputs (block is even, so
+        // a pair never straddles an absmax boundary)
+        while f + 2 <= fb {
+            let (v0, v1) = plut[data[f >> 1] as usize];
+            let idx = row * o + j;
+            tile[idx] = v0 * am;
+            tile[idx + o] = v1 * am;
+            row += 2;
+            f += 2;
+            rem += 2;
+            if rem == block {
+                rem = 0;
+                b += 1;
+                if f < fb {
+                    am = absmax[b];
+                }
+            }
+        }
+        // trailing element (segment ends on an odd flat index): low nibble
+        if f < fb {
+            tile[row * o + j] = plut[data[f >> 1] as usize].0 * am;
+        }
+    };
+    let seg_raw = |j: usize, i0: usize, rows: usize, tile: &mut [f32]| {
+        let fa = j * h + i0;
+        let mut b = fa / block;
+        let mut rem = fa % block;
+        let mut am = absmax[b];
+        for r in 0..rows {
+            tile[r * o + j] = vlut[data[fa + r] as usize] * am;
+            rem += 1;
+            if rem == block {
+                rem = 0;
+                b += 1;
+                if r + 1 < rows {
+                    am = absmax[b];
+                }
+            }
+        }
+    };
+    // `range` is this shard's band of output rows; `band` is
+    // out[range.start*o .. range.end*o].
+    let run = |range: Range<usize>, band: &mut [f32], _a: &mut [f32]| {
+        let band_start = range.start;
+        let mut t0 = range.start;
+        while t0 < range.end {
+            let rows = ROW_TILE.min(range.end - t0);
+            let tile = &mut band[(t0 - band_start) * o..];
+            for j in 0..o {
+                if pack {
+                    seg_packed(j, t0, rows, tile);
+                } else {
+                    seg_raw(j, t0, rows, tile);
+                }
+            }
+            t0 += rows;
+        }
+    };
+    let t = threads.unwrap_or_else(|| auto_threads(n));
+    run_sharded(h, o, t, out, &mut [], &run);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::absmax::{dequantize_blockwise, quantize_blockwise};
+    use crate::quant::codebook::DType;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn shard_ranges_cover_and_partition() {
+        for (nb, t) in [(1, 1), (7, 3), (8, 3), (64, 7), (5, 9), (0, 4)] {
+            let ranges = shard_ranges(nb, t);
+            let mut next = 0;
+            for r in &ranges {
+                assert_eq!(r.start, next, "nb={nb} t={t}");
+                assert!(!r.is_empty());
+                next = r.end;
+            }
+            assert_eq!(next, nb, "nb={nb} t={t}");
+            assert!(ranges.len() <= t.max(1));
+        }
+    }
+
+    #[test]
+    fn encoder_matches_codebook_encode_on_normalized_domain() {
+        let mut rng = Rng::new(41);
+        for dt in [DType::NF4, DType::FP4E2M1, DType::FP4E3M0, DType::Int4,
+                   DType::Int8, DType::FP8E4M3] {
+            let cb = Codebook::new(dt);
+            let enc = Encoder::new(&cb);
+            // dense sweep + exact codebook values + exact midpoints (ties)
+            for k in 0..=2000 {
+                let x = -1.0 + 2.0 * (k as f32) / 2000.0;
+                assert_eq!(enc.encode(x), cb.encode(x), "{dt:?} x={x}");
+            }
+            for &v in &cb.values {
+                assert_eq!(enc.encode(v), cb.encode(v), "{dt:?} value {v}");
+            }
+            for &m in cb.midpoints() {
+                assert_eq!(enc.encode(m), cb.encode(m), "{dt:?} mid {m}");
+            }
+            for _ in 0..500 {
+                let x = rng.range_f64(-1.0, 1.0) as f32;
+                assert_eq!(enc.encode(x), cb.encode(x), "{dt:?} x={x}");
+            }
+            assert_eq!(enc.encode(f32::NAN), cb.encode(f32::NAN), "{dt:?}");
+        }
+    }
+
+    #[test]
+    fn flat_fused_matches_scalar_across_threads() {
+        let mut rng = Rng::new(42);
+        let cb = Codebook::new(DType::NF4);
+        let x = rng.normal_vec_f32(64 * 37); // 37 blocks: odd shard splits
+        let (sc, sa) = quantize_blockwise(&x, &cb, 64).unwrap();
+        for t in [1, 2, 3, 5, 8] {
+            let (fc, fa) =
+                quantize_blockwise_fused(&x, &cb, 64, Some(t)).unwrap();
+            assert_eq!(fc, sc, "codes t={t}");
+            assert_eq!(fa, sa, "absmax t={t}");
+            let sd = dequantize_blockwise(&sc, &sa, &cb, 64).unwrap();
+            let fd =
+                dequantize_blockwise_fused(&fc, &fa, &cb, 64, Some(t))
+                    .unwrap();
+            for (a, b) in sd.iter().zip(fd.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "dequant t={t}");
+            }
+        }
+    }
+}

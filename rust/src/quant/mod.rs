@@ -8,9 +8,17 @@
 //! bit-for-bit against the Python reference via golden vectors emitted by
 //! `aot.py` (see `rust/tests/golden.rs`).
 //!
-//! This substrate backs: weight preparation for the runtime, the memory
-//! model, Table 2 / Figure 3 quantization-error measurements, and the
-//! quantization benches.
+//! The substrate is **two-tier** (see ARCHITECTURE.md, "Quantization
+//! layer"): [`kernels`] holds the fused, multicore kernels every hot path
+//! goes through; [`absmax`] / [`pack`] are the simple scalar twins that
+//! serve as the bit-exactness reference oracle. The two tiers are
+//! bit-identical by contract, enforced by the golden vectors and the
+//! fused-vs-scalar property suite (`rust/tests/prop_quant_fused.rs`).
+//!
+//! This substrate backs: weight preparation for the engine and runtime,
+//! the memory model, Table 2 / Figure 3 quantization-error measurements,
+//! and the quantization benches (`make bench-quant` →
+//! `BENCH_quant.json`).
 
 #![cfg_attr(doc, warn(missing_docs))]
 
@@ -18,11 +26,19 @@ pub mod absmax;
 pub mod codebook;
 pub mod double;
 pub mod error;
+pub mod kernels;
 pub mod pack;
 pub mod tensor;
 
 pub use absmax::{dequantize_blockwise, quantize_blockwise};
 pub use codebook::{Codebook, DType};
-pub use double::{double_dequantize, double_quantize, DoubleQuant};
+pub use double::{
+    double_dequantize, double_dequantize_scalar, double_quantize,
+    double_quantize_scalar, DoubleQuant,
+};
+pub use kernels::{
+    dequantize_blockwise_fused, dequantize_blockwise_into,
+    dequantize_fused_into, quantize_blockwise_fused, quantize_fused, Encoder,
+};
 pub use pack::{pack_nibbles, unpack_nibbles};
 pub use tensor::QuantizedTensor;

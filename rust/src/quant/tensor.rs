@@ -2,12 +2,22 @@
 //! (optionally double-quantized) absmax constants — the cross-boundary
 //! weight representation of `ref.quantize_weight` (layout: W^T flattened
 //! row-major, quantization blocks contiguous along the reduction dim).
+//!
+//! `quantize`/`dequantize` run on the fused multicore kernels
+//! ([`super::kernels`]); `quantize_scalar`/`dequantize_scalar` keep the
+//! original single-threaded pipeline as the bit-exactness reference
+//! oracle (the two are bit-identical — see
+//! `rust/tests/prop_quant_fused.rs`).
 
 use anyhow::{ensure, Result};
 
 use super::absmax::{dequantize_blockwise, quantize_blockwise};
 use super::codebook::{Codebook, DType};
-use super::double::{double_dequantize, double_quantize, DoubleQuant};
+use super::double::{
+    double_dequantize, double_dequantize_scalar, double_quantize,
+    double_quantize_scalar, DoubleQuant,
+};
+use super::kernels::{dequantize_fused_into, quantize_fused};
 use super::pack::{pack_nibbles, unpack_nibbles};
 
 /// Absmax constants: raw FP32 or double-quantized.
@@ -35,8 +45,33 @@ pub struct QuantizedTensor {
 }
 
 impl QuantizedTensor {
-    /// Quantize a (h, o) weight given in row-major `w[h][o]` order.
+    /// Quantize a (h, o) weight given in row-major `w[h][o]` order, on the
+    /// fused multicore kernels (transpose + absmax + encode + pack in one
+    /// pass per block; bit-identical to [`Self::quantize_scalar`]).
     pub fn quantize(
+        w: &[f32],
+        shape: (usize, usize),
+        dtype: DType,
+        block: usize,
+        double_q: Option<usize>,
+    ) -> Result<QuantizedTensor> {
+        if dtype.bits() == 4 && block % 2 != 0 {
+            // packed bytes would straddle blocks; the scalar tier handles
+            // this (never hit by the paper's configs — blocks are even)
+            return Self::quantize_scalar(w, shape, dtype, block, double_q);
+        }
+        let cb = Codebook::new(dtype);
+        let (data, absmax) = quantize_fused(w, shape, &cb, block, None)?;
+        let constants = match double_q {
+            Some(block2) => Constants::Double(double_quantize(&absmax, block2)?),
+            None => Constants::Raw(absmax),
+        };
+        Ok(QuantizedTensor { dtype, data, constants, shape, block })
+    }
+
+    /// Scalar reference quantizer: the original transpose → encode → pack
+    /// pipeline, kept as the bit-exactness oracle for the fused path.
+    pub fn quantize_scalar(
         w: &[f32],
         shape: (usize, usize),
         dtype: DType,
@@ -61,27 +96,74 @@ impl QuantizedTensor {
             codes
         };
         let constants = match double_q {
-            Some(block2) => Constants::Double(double_quantize(&absmax, block2)?),
+            // scalar DQ twin: the oracle must not run the fused kernels
+            Some(block2) => {
+                Constants::Double(double_quantize_scalar(&absmax, block2)?)
+            }
             None => Constants::Raw(absmax),
         };
         Ok(QuantizedTensor { dtype, data, constants, shape, block })
     }
 
     /// Recover the dequantized weight in row-major (h, o) order
-    /// (paper Eq. 6 `doubleDequant` when constants are double-quantized).
+    /// (paper Eq. 6 `doubleDequant` when constants are double-quantized),
+    /// on the fused kernels. Allocates only the output (and, for DQ, the
+    /// small recovered-constants vector).
     pub fn dequantize(&self) -> Result<Vec<f32>> {
         let (h, o) = self.shape;
+        let mut w = vec![0f32; h * o];
+        self.dequantize_into(&mut w)?;
+        Ok(w)
+    }
+
+    /// Dequantize into a caller-provided row-major `(h, o)` buffer —
+    /// paired-decode LUT, fused absmax multiply, no unpack buffer, no
+    /// clones. Bit-identical to [`Self::dequantize_scalar`].
+    pub fn dequantize_into(&self, out: &mut [f32]) -> Result<()> {
+        ensure!(
+            out.len() == self.shape.0 * self.shape.1,
+            "output length mismatch"
+        );
+        if self.dtype.bits() == 4 && self.block % 2 != 0 {
+            let w = self.dequantize_scalar()?;
+            out.copy_from_slice(&w);
+            return Ok(());
+        }
         let cb = Codebook::new(self.dtype);
-        let codes = if self.dtype.bits() == 4 {
-            unpack_nibbles(&self.data)
+        let recovered; // keeps the DQ-recovered constants alive
+        let absmax: &[f32] = match &self.constants {
+            Constants::Raw(a) => a,
+            Constants::Double(dq) => {
+                recovered = double_dequantize(dq)?;
+                &recovered
+            }
+        };
+        dequantize_fused_into(
+            &self.data, absmax, &cb, self.block, self.shape, out, None,
+        )
+    }
+
+    /// Scalar reference dequantizer (unpack → dequantize → un-transpose),
+    /// kept as the bit-exactness oracle for the fused path.
+    pub fn dequantize_scalar(&self) -> Result<Vec<f32>> {
+        let (h, o) = self.shape;
+        let cb = Codebook::new(self.dtype);
+        let unpacked; // 4-bit codes need a decode buffer; 8-bit borrow
+        let codes: &[u8] = if self.dtype.bits() == 4 {
+            unpacked = unpack_nibbles(&self.data);
+            &unpacked
         } else {
-            self.data.clone()
+            &self.data
         };
-        let absmax = match &self.constants {
-            Constants::Raw(a) => a.clone(),
-            Constants::Double(dq) => double_dequantize(dq)?,
+        let recovered;
+        let absmax: &[f32] = match &self.constants {
+            Constants::Raw(a) => a,
+            Constants::Double(dq) => {
+                recovered = double_dequantize_scalar(dq)?;
+                &recovered
+            }
         };
-        let flat = dequantize_blockwise(&codes, &absmax, &cb, self.block)?;
+        let flat = dequantize_blockwise(codes, absmax, &cb, self.block)?;
         // un-transpose
         let mut w = vec![0f32; h * o];
         for j in 0..o {
@@ -159,5 +241,26 @@ mod tests {
         }
         let back = q.dequantize().unwrap();
         assert_eq!(back, w); // exact: ±1 codes exist
+    }
+
+    #[test]
+    fn fused_matches_scalar_container() {
+        // the full-container contract; exhaustive coverage lives in
+        // tests/prop_quant_fused.rs
+        let mut rng = Rng::new(10);
+        let (h, o) = (96, 48);
+        let w: Vec<f32> = rng.normal_vec_f32(h * o);
+        for dq in [None, Some(256)] {
+            let f = QuantizedTensor::quantize(&w, (h, o), DType::NF4, 32, dq)
+                .unwrap();
+            let s = QuantizedTensor::quantize_scalar(&w, (h, o), DType::NF4,
+                                                     32, dq).unwrap();
+            assert_eq!(f.data, s.data);
+            let (fd, sd) = (f.dequantize().unwrap(),
+                            s.dequantize_scalar().unwrap());
+            for (a, b) in fd.iter().zip(sd.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
     }
 }

@@ -1,8 +1,15 @@
 //! Mini-criterion: a timing harness for `rust/benches/` (the offline
 //! registry has no `criterion`). Warmup + timed iterations, reports
-//! mean / median / p95 / stddev and optional throughput.
+//! mean / median / p95 / stddev and optional throughput, and can emit
+//! results as JSON ([`Bencher::write_json`]) so the perf trajectory is
+//! machine-tracked (`make bench-quant` → `BENCH_quant.json`).
 
+use std::path::Path;
 use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Value;
 
 /// One benchmark measurement summary.
 #[derive(Debug, Clone)]
@@ -143,6 +150,42 @@ impl Bencher {
     pub fn group(&self, title: &str) {
         println!("\n== {title} ==");
     }
+
+    /// Look a finished measurement up by name (for derived metrics such
+    /// as fused-vs-scalar speedups).
+    pub fn find(&self, name: &str) -> Option<&Summary> {
+        self.results.iter().find(|s| s.name == name)
+    }
+
+    /// All results as a JSON array (one object per [`Summary`]).
+    pub fn to_json(&self) -> Value {
+        Value::array(self.results.iter().map(|s| {
+            let mut pairs = vec![
+                ("name", Value::s(s.name.clone())),
+                ("iters", Value::n(s.iters as f64)),
+                ("mean_ns", Value::n(s.mean_ns)),
+                ("median_ns", Value::n(s.median_ns)),
+                ("p95_ns", Value::n(s.p95_ns)),
+                ("std_ns", Value::n(s.std_ns)),
+            ];
+            if let Some(t) = s.throughput {
+                pairs.push(("throughput_per_s", Value::n(t)));
+            }
+            Value::object(pairs)
+        }))
+    }
+
+    /// Write `{"results": [...], <meta...>}` to `path` — the
+    /// machine-readable form of a bench run. `meta` pairs (e.g. mode,
+    /// thread count, derived speedups) are merged at the top level.
+    pub fn write_json(&self, path: &Path, meta: &[(&str, Value)]) -> Result<()> {
+        let mut pairs = vec![("results", self.to_json())];
+        pairs.extend(meta.iter().cloned());
+        let mut doc = Value::object(pairs).to_string();
+        doc.push('\n');
+        std::fs::write(path, doc)
+            .with_context(|| format!("writing bench json {}", path.display()))
+    }
 }
 
 #[cfg(test)]
@@ -158,6 +201,28 @@ mod tests {
         });
         assert!(s.mean_ns > 0.0);
         assert!(s.iters >= 5);
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        std::env::set_var("QLORA_BENCH_FAST", "1");
+        let mut b = Bencher::new();
+        b.bench_items("with-items", 100, || 1u64 + 1);
+        b.bench("no-items", || 2u64 * 3);
+        let v = b.to_json();
+        let arr = v.arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("name").unwrap().str().unwrap(), "with-items");
+        assert!(arr[0].get("throughput_per_s").unwrap().num().unwrap() > 0.0);
+        assert!(arr[1].opt("throughput_per_s").is_none());
+        assert!(b.find("no-items").is_some());
+        let dir = std::env::temp_dir().join("qlora_bench_json_test.json");
+        b.write_json(&dir, &[("mode", Value::s("smoke"))]).unwrap();
+        let back = Value::parse(&std::fs::read_to_string(&dir).unwrap())
+            .unwrap();
+        assert_eq!(back.get("mode").unwrap().str().unwrap(), "smoke");
+        assert_eq!(back.get("results").unwrap().arr().unwrap().len(), 2);
+        let _ = std::fs::remove_file(&dir);
     }
 
     #[test]

@@ -1,0 +1,325 @@
+//! Fused-vs-scalar contract suite: the fused multicore kernels
+//! (`quant::kernels`) must be **bit-identical** to the scalar reference
+//! tier across all six dtypes × block sizes {32, 64, 256} × edge cases
+//! (all-zero blocks, outlier blocks, ±absmax endpoints) × odd
+//! thread-shard boundaries. This is the contract that lets every hot path
+//! run fused while `rust/tests/golden.rs` keeps pinning the scalar tier
+//! (and therefore both tiers) to the Python reference.
+
+use qlora::quant::codebook::{nfk_codebook, Codebook, DType};
+use qlora::quant::kernels::{
+    dequantize_blockwise_fused, dequantize_fused_into, quantize_blockwise_fused,
+    quantize_fused, Encoder,
+};
+use qlora::quant::tensor::{Constants, QuantizedTensor};
+use qlora::quant::{
+    dequantize_blockwise, pack_nibbles, quantize_blockwise, unpack_nibbles,
+};
+use qlora::util::prop::{self, gen};
+use qlora::util::rng::Rng;
+
+const DTYPES: [DType; 6] = [DType::NF4, DType::FP4E2M1, DType::FP4E3M0,
+                            DType::Int4, DType::Int8, DType::FP8E4M3];
+const BLOCKS: [usize; 3] = [32, 64, 256];
+// deliberately awkward shard counts (incl. more shards than blocks)
+const THREADS: [usize; 4] = [1, 3, 5, 7];
+
+fn bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what} length");
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}[{i}]: {x} vs {y}");
+    }
+}
+
+/// Edge-case input families the suite sweeps in addition to random ones.
+fn edge_inputs(rng: &mut Rng, n: usize, block: usize) -> Vec<Vec<f32>> {
+    let mut cases = Vec::new();
+    // all-zero tensor (absmax = 0 -> scale fallback path)
+    cases.push(vec![0f32; n]);
+    // normal with a zeroed-out block in the middle
+    let mut z = rng.normal_vec_f32(n);
+    let b = (n / block) / 2;
+    for v in &mut z[b * block..(b + 1) * block] {
+        *v = 0.0;
+    }
+    cases.push(z);
+    // heavy outliers (LLM.int8 phenomenology)
+    cases.push(gen::outlier_vec(rng, n, 0.05, 100.0));
+    // exact ±absmax endpoints: every block contains +m and -m so the
+    // normalized values hit exactly ±1.0 (the codebook endpoints)
+    let mut e = rng.normal_vec_f32(n);
+    for b in 0..n / block {
+        e[b * block] = 3.5;
+        e[b * block + block / 2] = -3.5;
+    }
+    cases.push(e);
+    // tiny denormal-ish magnitudes (scale division stress)
+    cases.push((0..n).map(|i| (i as f32 - n as f32 / 2.0) * 1e-30).collect());
+    cases
+}
+
+#[test]
+fn flat_fused_bit_identical_to_scalar() {
+    for dt in DTYPES {
+        let cb = Codebook::new(dt);
+        for block in BLOCKS {
+            prop::check(
+                &format!("flat-fused-{}-b{block}", dt.name()),
+                8,
+                |rng| {
+                    let nb = 1 + rng.below(9); // 1..9 blocks: odd shard splits
+                    let n = nb * block;
+                    let mut inputs = edge_inputs(rng, n, block);
+                    inputs.push(gen::weight_vec(rng, n));
+                    for x in inputs {
+                        let (sc, sa) = quantize_blockwise(&x, &cb, block)
+                            .unwrap();
+                        let sd = dequantize_blockwise(&sc, &sa, &cb, block)
+                            .unwrap();
+                        for t in THREADS {
+                            let (fc, fa) = quantize_blockwise_fused(
+                                &x, &cb, block, Some(t),
+                            )
+                            .unwrap();
+                            assert_eq!(fc, sc, "{dt:?} b{block} t{t} codes");
+                            bits_eq(&fa, &sa, "absmax");
+                            let fd = dequantize_blockwise_fused(
+                                &fc, &fa, &cb, block, Some(t),
+                            )
+                            .unwrap();
+                            bits_eq(&fd, &sd, "dequant");
+                        }
+                    }
+                },
+            );
+        }
+    }
+}
+
+#[test]
+fn weight_container_fused_bit_identical_to_scalar() {
+    // transpose + pack path: odd h (bytes straddle columns), odd shard
+    // boundaries, DQ and raw constants
+    for dt in [DType::NF4, DType::Int4, DType::Int8] {
+        let cb = Codebook::new(dt);
+        prop::check(&format!("container-fused-{}", dt.name()), 12, |rng| {
+            let shapes = [(64, 2), (32, 6), (31, 64), (37, 32), (128, 16)];
+            let (h, o) = shapes[rng.below(shapes.len())];
+            let block = [32, 64][rng.below(2)];
+            if (h * o) % block != 0 {
+                return;
+            }
+            let w = gen::weight_vec(rng, h * o);
+            // scalar reference via the materialized transpose
+            let mut flat = vec![0f32; h * o];
+            for i in 0..h {
+                for j in 0..o {
+                    flat[j * h + i] = w[i * o + j];
+                }
+            }
+            let (sc, sa) = quantize_blockwise(&flat, &cb, block).unwrap();
+            let sdata = if cb.len() <= 16 {
+                pack_nibbles(&sc).unwrap()
+            } else {
+                sc.clone()
+            };
+            for t in THREADS {
+                let (fdata, fa) =
+                    quantize_fused(&w, (h, o), &cb, block, Some(t)).unwrap();
+                assert_eq!(fdata, sdata, "{dt:?} {h}x{o} b{block} t{t} data");
+                bits_eq(&fa, &sa, "absmax");
+                // fused dequant == scalar unpack+dequant+untranspose
+                let codes = if cb.len() <= 16 {
+                    unpack_nibbles(&fdata)
+                } else {
+                    fdata.clone()
+                };
+                let sflat =
+                    dequantize_blockwise(&codes, &fa, &cb, block).unwrap();
+                let mut sw = vec![0f32; h * o];
+                for j in 0..o {
+                    for i in 0..h {
+                        sw[i * o + j] = sflat[j * h + i];
+                    }
+                }
+                let mut fw = vec![0f32; h * o];
+                dequantize_fused_into(
+                    &fdata, &fa, &cb, block, (h, o), &mut fw, Some(t),
+                )
+                .unwrap();
+                bits_eq(&fw, &sw, "weight dequant");
+            }
+        });
+    }
+}
+
+#[test]
+fn tall_weights_cross_row_tile_boundaries() {
+    // the fused dequantizer tiles output rows in chunks of 256; h > 256
+    // (with shard bands both above and below one tile) must stay
+    // bit-identical to the scalar pipeline — this is the branch every
+    // production-sized weight (e.g. 4096x4096) takes
+    let mut rng = Rng::new(77);
+    let cb = Codebook::new(DType::NF4);
+    for (h, o) in [(600, 2), (512, 3), (257, 8)] {
+        let block = 8; // (h*o) % 8 == 0 for all three shapes
+        let w = {
+            let mut v = rng.normal_vec_f32(h * o);
+            v[0] = 7.5; // endpoint in the first block
+            v
+        };
+        let mut flat = vec![0f32; h * o];
+        for i in 0..h {
+            for j in 0..o {
+                flat[j * h + i] = w[i * o + j];
+            }
+        }
+        let (sc, sa) = quantize_blockwise(&flat, &cb, block).unwrap();
+        let sdata = pack_nibbles(&sc).unwrap();
+        let sflat = dequantize_blockwise(&sc, &sa, &cb, block).unwrap();
+        let mut sw = vec![0f32; h * o];
+        for j in 0..o {
+            for i in 0..h {
+                sw[i * o + j] = sflat[j * h + i];
+            }
+        }
+        for t in [1, 2, 5] {
+            let (fdata, fa) =
+                quantize_fused(&w, (h, o), &cb, block, Some(t)).unwrap();
+            assert_eq!(fdata, sdata, "h={h} o={o} t={t}");
+            let mut fw = vec![0f32; h * o];
+            dequantize_fused_into(
+                &fdata, &fa, &cb, block, (h, o), &mut fw, Some(t),
+            )
+            .unwrap();
+            bits_eq(&fw, &sw, "tall dequant");
+        }
+    }
+}
+
+#[test]
+fn oversized_blocks_use_the_strided_fallback() {
+    // block > 512 exceeds the gather scratch buffer: quantize_fused must
+    // take the two-pass strided walk (packed and raw) bit-identically
+    let mut rng = Rng::new(78);
+    for (dt, block, h, o) in [(DType::NF4, 1024, 128, 16),
+                              (DType::Int8, 600, 150, 12)] {
+        let cb = Codebook::new(dt);
+        assert_eq!((h * o) % block, 0);
+        let w = rng.normal_vec_f32(h * o);
+        let mut flat = vec![0f32; h * o];
+        for i in 0..h {
+            for j in 0..o {
+                flat[j * h + i] = w[i * o + j];
+            }
+        }
+        let (sc, sa) = quantize_blockwise(&flat, &cb, block).unwrap();
+        let sdata = if cb.len() <= 16 {
+            pack_nibbles(&sc).unwrap()
+        } else {
+            sc
+        };
+        for t in [1, 3] {
+            let (fdata, fa) =
+                quantize_fused(&w, (h, o), &cb, block, Some(t)).unwrap();
+            assert_eq!(fdata, sdata, "{dt:?} block={block} t={t}");
+            bits_eq(&fa, &sa, "oversized-block absmax");
+        }
+    }
+}
+
+#[test]
+fn quantized_tensor_api_matches_scalar_oracle() {
+    // the public container API (auto threads) across dtypes × DQ modes
+    prop::check("qt-api-oracle", 24, |rng| {
+        let dt = DTYPES[rng.below(DTYPES.len())];
+        let dq = if rng.bool(0.5) { Some(256) } else { None };
+        let (h, o) = (64, 1 + rng.below(8));
+        let w = gen::weight_vec(rng, h * o);
+        let f = QuantizedTensor::quantize(&w, (h, o), dt, 32, dq).unwrap();
+        let s = QuantizedTensor::quantize_scalar(&w, (h, o), dt, 32, dq)
+            .unwrap();
+        assert_eq!(f.data, s.data, "{dt:?} dq={dq:?} data");
+        match (&f.constants, &s.constants) {
+            (Constants::Raw(a), Constants::Raw(b)) => bits_eq(a, b, "absmax"),
+            (Constants::Double(a), Constants::Double(b)) => {
+                assert_eq!(a.codes2, b.codes2, "codes2");
+                bits_eq(&a.absmax2, &b.absmax2, "absmax2");
+                assert_eq!(a.mean.to_bits(), b.mean.to_bits(), "mean");
+                assert_eq!((a.n, a.block2), (b.n, b.block2));
+            }
+            _ => panic!("constants kind diverged"),
+        }
+        bits_eq(
+            &f.dequantize().unwrap(),
+            &s.dequantize_scalar().unwrap(),
+            "dequantize",
+        );
+    });
+}
+
+#[test]
+fn double_quant_fused_bit_identical_to_scalar() {
+    // the DQ leg runs fused on the hot path; its scalar twin is the
+    // oracle — the two must agree bit-for-bit (including the padding
+    // block and the mean)
+    use qlora::quant::{
+        double_dequantize, double_dequantize_scalar, double_quantize,
+        double_quantize_scalar,
+    };
+    prop::check("dq-fused-oracle", 24, |rng| {
+        let n = 1 + rng.below(1200); // exercises padding (n % 256 != 0)
+        let am: Vec<f32> =
+            (0..n).map(|_| (rng.normal().abs() * 0.3 + 2.0) as f32).collect();
+        let f = double_quantize(&am, 256).unwrap();
+        let s = double_quantize_scalar(&am, 256).unwrap();
+        assert_eq!(f.codes2, s.codes2, "codes2");
+        bits_eq(&f.absmax2, &s.absmax2, "absmax2");
+        assert_eq!(f.mean.to_bits(), s.mean.to_bits(), "mean");
+        assert_eq!((f.n, f.block2), (s.n, s.block2));
+        bits_eq(
+            &double_dequantize(&f).unwrap(),
+            &double_dequantize_scalar(&s).unwrap(),
+            "recovered constants",
+        );
+    });
+}
+
+#[test]
+fn derived_nfk_codebooks_also_bit_identical() {
+    // k<4 exercises the padded branchless encoder, k>4 the generic one
+    for k in [2u32, 3, 5, 8] {
+        let cb = nfk_codebook(k);
+        prop::check(&format!("nfk-{k}-fused"), 8, |rng| {
+            let n = 64 * (1 + rng.below(5));
+            let x = gen::outlier_vec(rng, n, 0.02, 10.0);
+            let (sc, sa) = quantize_blockwise(&x, &cb, 64).unwrap();
+            let (fc, fa) = quantize_blockwise_fused(&x, &cb, 64, Some(3))
+                .unwrap();
+            assert_eq!(fc, sc);
+            bits_eq(&fa, &sa, "absmax");
+        });
+    }
+}
+
+#[test]
+fn encoder_specializations_agree_with_binary_search() {
+    // direct Encoder contract over the normalized domain, all dtypes
+    let mut rng = Rng::new(99);
+    for dt in DTYPES {
+        let cb = Codebook::new(dt);
+        let enc = Encoder::new(&cb);
+        for _ in 0..4000 {
+            let x = rng.range_f64(-1.0, 1.0) as f32;
+            assert_eq!(enc.encode(x), cb.encode(x), "{dt:?} x={x}");
+        }
+        for &v in &cb.values {
+            assert_eq!(enc.encode(v), cb.encode(v), "{dt:?} value");
+        }
+        for &m in cb.midpoints() {
+            assert_eq!(enc.encode(m), cb.encode(m), "{dt:?} tie at mid");
+            let lo = f32::from_bits(m.to_bits().wrapping_sub(1));
+            assert_eq!(enc.encode(lo), cb.encode(lo), "{dt:?} below mid");
+        }
+    }
+}
