@@ -1,12 +1,16 @@
 //! Serving benches through `engine::Session`: tokens/sec of the decode
 //! loop for the KV-cached vs full-recompute paths (single prompt,
 //! continuous-batched multi-prompt, and per-step latency as a function of
-//! generated length — the cached path's step cost must stay flat), plus
-//! the adapter hot-swap overhead (must be tiny next to a forward). Uses
-//! the repo's mini-criterion harness (`util::bench`); requires
+//! generated length — the cached path's step cost must stay flat), the
+//! request-lifecycle serve path (mixed-priority workload, with the
+//! scheduler's `ServerStats` block: throughput, mean TTFT, preemptions),
+//! plus the adapter hot-swap overhead (must be tiny next to a forward).
+//! Uses the repo's mini-criterion harness (`util::bench`); requires
 //! `make artifacts`.
 
-use qlora::engine::{DecodeMode, Engine, Sampler, BASE_ADAPTER};
+use qlora::engine::{
+    DecodeMode, Engine, GenRequest, Priority, Sampler, BASE_ADAPTER,
+};
 use qlora::runtime::artifact::Manifest;
 use qlora::util::bench::Bencher;
 
@@ -111,6 +115,45 @@ fn main() {
             }
         }
     }
+
+    // request-lifecycle serving: a mixed-priority workload (2x the
+    // compiled rows) through Session::serve, which adds priority/aging
+    // admission, token-budget accounting and per-step stats on top of
+    // the raw continuous-batching loop — the interesting number is how
+    // little throughput that bookkeeping costs vs generate_batch above
+    let mixed_requests = |n: usize| -> Vec<GenRequest> {
+        (0..n)
+            .map(|i| {
+                let r = GenRequest::new(format!("rev prompt{i}"));
+                match i % 3 {
+                    0 => r.priority(Priority::High),
+                    1 => r,
+                    _ => r.priority(Priority::Low),
+                }
+            })
+            .collect()
+    };
+    let n_reqs = cfg.batch * 2;
+    let sampler = Sampler { max_new_tokens: 16, ..Sampler::default() };
+    let mut session = engine
+        .session()
+        .sampler(sampler)
+        .greedy(true)
+        .build()
+        .expect("session");
+    let report = session.serve(mixed_requests(n_reqs)).expect("warm serve");
+    let tokens_serve = report.stats.tokens_generated.max(1) as usize;
+    b.bench_items(
+        &format!("lifecycle serve x{n_reqs} mixed-priority \
+                  ({tokens_serve} tok)"),
+        tokens_serve,
+        || session.serve(mixed_requests(n_reqs)).unwrap(),
+    );
+    println!(
+        "{:<44} {}",
+        "lifecycle serve stats (warm run)",
+        report.stats.summary()
+    );
 
     // hot-swap: re-register the base adapters under a new name (bumping
     // the registry version so the device-literal cache is invalidated)

@@ -32,7 +32,7 @@ fn main() {
         ("tight/long-seq", 9, 4096),
     ] {
         let mut sim =
-            PagedOptimizerSim::new(budget_mb << 20, 0, 8 << 20, 512, 1024, 8);
-        b.bench(&format!("on_step/{label}"), || sim.on_step(seq, seq));
+            PagedOptimizerSim::new(budget_mb << 20, 0, 8 << 20, 1024, 8);
+        b.bench(&format!("on_step/{label}"), || sim.on_step(seq));
     }
 }

@@ -4,30 +4,36 @@
 //! "the LoRA parameters take up only 26 MB" for 7B) — which is what makes
 //! releasing "a collection of adapters" practical. Either file shape can
 //! be loaded straight into a serving engine with `Engine::load_adapter`.
+//!
+//! Saves are **atomic**: the tensors are written to a temp file in the
+//! destination directory and renamed into place, so a crash mid-save
+//! (the classic way to lose a run) leaves the previous checkpoint
+//! intact rather than a truncated, unreadable file.
 
 use std::path::Path;
 
 use anyhow::{ensure, Context, Result};
 
 use crate::coordinator::trainer::Trainer;
-use crate::tensorio::{read_tensors, write_tensors};
+use crate::tensorio::{read_tensors, write_tensors_atomic};
 
-/// Save the full training state.
+/// Save the full training state (atomic write-then-rename).
 pub fn save(trainer: &Trainer<'_>, path: &Path) -> Result<()> {
     let tensors = trainer.state_tensors()?;
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
     }
-    write_tensors(path, &tensors).context("writing checkpoint")
+    write_tensors_atomic(path, &tensors).context("writing checkpoint")
 }
 
-/// Save only the adapters (the releasable artifact).
+/// Save only the adapters (the releasable artifact); atomic like
+/// [`save`].
 pub fn save_adapters(trainer: &Trainer<'_>, path: &Path) -> Result<()> {
     let adapters = trainer.adapter_tensors()?;
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
     }
-    write_tensors(path, &adapters).context("writing adapters")
+    write_tensors_atomic(path, &adapters).context("writing adapters")
 }
 
 /// Restore a full training state checkpoint.

@@ -90,31 +90,25 @@ impl<'e> Trainer<'e> {
 
     /// Attach the paged-optimizer simulation (sizes taken from the state
     /// signature: adam_m/adam_v tensors are the paged allocations).
+    /// Tensor bytes use each spec's real dtype width — sizing every
+    /// non-u8 tensor as 4 bytes over-counted f16/bf16 frozen tensors 2×
+    /// and skewed the simulated device budget.
     pub fn attach_pager(&mut self, device_budget: usize) {
         let spec = &self.engine.spec;
         let opt_bytes: usize = spec
             .state_sig
             .iter()
             .filter(|t| t.name.starts_with("adam_"))
-            .map(|t| t.elems() * 4)
+            .map(|t| t.nbytes())
             .sum();
-        let model_bytes: usize = spec
-            .frozen_sig
-            .iter()
-            .map(|t| t.elems() * if t.dtype == "u8" { 1 } else { 4 })
-            .sum();
-        let (tokens, d_model, n_layers) = (
-            spec.cfg.batch * spec.cfg.seq_len,
-            spec.cfg.d_model,
-            spec.cfg.n_layers,
-        );
+        let model_bytes: usize =
+            spec.frozen_sig.iter().map(|t| t.nbytes()).sum();
         self.pager = Some(PagedOptimizerSim::new(
             device_budget,
             model_bytes,
             opt_bytes,
-            tokens,
-            d_model,
-            n_layers,
+            spec.cfg.d_model,
+            spec.cfg.n_layers,
         ));
     }
 
@@ -142,7 +136,7 @@ impl<'e> Trainer<'e> {
         if let Some(p) = &mut self.pager {
             // max sequence length in the batch drives the activation spike
             let max_len = batch.lens.iter().copied().max().unwrap_or(0);
-            p.on_step(max_len, batch.seq_len);
+            p.on_step(max_len);
         }
         Ok(loss)
     }

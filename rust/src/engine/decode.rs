@@ -90,7 +90,15 @@ pub trait DecodeGraph {
     fn push(&mut self, row: usize, token: i32) -> Result<()>;
 
     /// Release `row` for reuse by a later [`DecodeGraph::start_row`].
-    fn free_row(&mut self, row: usize);
+    ///
+    /// This is the row-retirement hook of the request lifecycle: the
+    /// serving loop calls it for normal completion (EOS / token budget)
+    /// *and* for mid-flight preemption (cancellation, deadline expiry) —
+    /// implementations must tolerate a row being vacated at any point of
+    /// its decode, not only at a natural stopping point. Returns whether
+    /// the row was actually live (`false` for a free or out-of-range
+    /// row, which is a harmless no-op).
+    fn free_row(&mut self, row: usize) -> bool;
 
     /// Advance every row in `rows` by one position and return each row's
     /// next-token logits (vocab-sized, in `rows` order).
@@ -136,6 +144,16 @@ fn check_push(rows: &mut [Row], row: usize, token: i32,
     );
     rows[row].history.push(token);
     Ok(())
+}
+
+fn free_row_common(rows: &mut [Row], row: usize) -> bool {
+    match rows.get_mut(row) {
+        Some(r) if r.live => {
+            *r = Row::default();
+            true
+        }
+        _ => false,
+    }
 }
 
 fn check_step_rows(rows: &[Row], selected: &[usize]) -> Result<()> {
@@ -198,10 +216,8 @@ impl DecodeGraph for FullDecode<'_> {
         check_push(&mut self.rows, row, token, self.seq_len)
     }
 
-    fn free_row(&mut self, row: usize) {
-        if row < self.rows.len() {
-            self.rows[row] = Row::default();
-        }
+    fn free_row(&mut self, row: usize) -> bool {
+        free_row_common(&mut self.rows, row)
     }
 
     fn step(&mut self, rows: &[usize]) -> Result<Vec<Vec<f32>>> {
@@ -373,13 +389,12 @@ impl DecodeGraph for CachedDecode<'_> {
         check_push(&mut self.rows, row, token, self.seq_len)
     }
 
-    fn free_row(&mut self, row: usize) {
-        // leftover K/V in the freed row are unreachable: the next
-        // request's prefill overwrites the prefix it reads, and the
-        // position mask hides everything beyond it
-        if row < self.rows.len() {
-            self.rows[row] = Row::default();
-        }
+    fn free_row(&mut self, row: usize) -> bool {
+        // leftover K/V in the freed row are unreachable — even when the
+        // request was preempted mid-decode by cancellation or deadline
+        // expiry: the next request's prefill overwrites the prefix it
+        // reads, and the position mask hides everything beyond it
+        free_row_common(&mut self.rows, row)
     }
 
     fn step(&mut self, rows: &[usize]) -> Result<Vec<Vec<f32>>> {

@@ -20,11 +20,12 @@
 //!            ┌───────▼────────┐   ┌──────▼──────────────────┐
 //!            │ Trainer<'e>    │   │ Session<'e>             │
 //!            │  owns mutable  │   │  generate / stream /    │
-//!            │  state (adap-  │   │  generate_batch / eval  │
-//!            │  ters+Adam+t)  │   │  (Sampler over logits)  │
+//!            │  state (adap-  │   │  serve (GenRequests) /  │
+//!            │  ters+Adam+t)  │   │  generate_batch / eval  │
 //!            └───────┬────────┘   └──────┬──────────────────┘
-//!                    │ publish_          │ Scheduler admits/retires
-//!                    │ adapter(name)     │ prompts over rows
+//!                    │ publish_          │ Scheduler: priorities,
+//!                    │ adapter(name)     │ deadlines, cancellation,
+//!                    │                   │ token-budget admission
 //!                    ▼                   ▼
 //!              AdapterRegistry    ┌─────────────────────────┐
 //!                    ▲            │ DecodeGraph             │
@@ -81,8 +82,14 @@ use crate::tensorio::{read_tensors, Tensor};
 pub use adapters::AdapterRegistry;
 pub use decode::{CachedDecode, DecodeGraph, DecodeMode, FullDecode};
 pub use sampler::Sampler;
-pub use scheduler::Scheduler;
-pub use session::{Session, SessionBuilder, TokenStream};
+pub use scheduler::{
+    CancelHandle, JobId, JobOutcome, JobResult, Priority, Request, Scheduler,
+    ServerStats,
+};
+pub use session::{
+    GenRequest, ServeOutput, ServeProgress, ServeReport, Session,
+    SessionBuilder, TokenStream,
+};
 
 /// Name under which the artifact's init-time (untrained) adapter tensors
 /// are registered by `Engine::new`.

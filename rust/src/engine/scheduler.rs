@@ -1,77 +1,500 @@
-//! Continuous-batching scheduler: many prompts over few decode rows.
+//! Request-lifecycle scheduler: priorities, deadlines, cancellation and
+//! token-budget admission over few decode rows.
 //!
-//! A [`Scheduler`] accepts any number of submitted prompts, multiplexes
-//! them onto the decode graph's fixed row capacity, and retires each row
-//! the moment its request finishes — the freed row is re-admitted to the
-//! next queued prompt on the following loop iteration instead of idling
-//! until the slowest row of the batch completes. That converts
-//! `generate_batch` from "pad everything to the slowest prompt" into a
-//! rolling pipeline whose throughput tracks aggregate tokens, not the
-//! worst row.
+//! The paper's one-base/many-adapters economy (QLoRA section 4) pays off
+//! at serving scale, where many tenants share one frozen base. What used
+//! to be a bare FIFO multiplexer is now a request pipeline:
 //!
-//! The scheduler is pure bookkeeping (no runtime types), mirroring
-//! [`AdapterRegistry`](super::AdapterRegistry): admission order, row
-//! reuse, and result ordering are unit-tested without artifacts or a
-//! PJRT client. The serving loop in
-//! [`Session::generate_batch`](super::Session::generate_batch) drives a
+//! * every submission is a [`Request`] — tokenized prompt, a
+//!   [`Priority`] class, an optional deadline, and a per-request
+//!   `max_new_tokens` budget;
+//! * admission is priority-ordered with aging (a queued job's effective
+//!   priority rises the longer it waits, so `Low` traffic cannot starve
+//!   forever) and **token-budget** gated: the sum of *reserved* tokens
+//!   (`prompt + max_new_tokens`) across resident rows never exceeds
+//!   [`Scheduler::with_budget`]'s cap while more than one job is
+//!   resident, so one 4k-token prompt cannot crowd a whole batch out of
+//!   memory — row count alone is the wrong unit;
+//! * every job ends in exactly one typed [`JobOutcome`] — `Done`,
+//!   `Cancelled` (via a [`CancelHandle`]), `DeadlineExceeded`, or
+//!   `Aborted` (the driving loop stopped early) — instead of a silent
+//!   empty vec;
+//! * [`Scheduler::stats`] snapshots a [`ServerStats`] block (queue depth,
+//!   resident/reserved tokens, time-to-first-token, preemptions) for the
+//!   serving surface (`Session::serve`, `qlora serve`, `bench_generate`).
+//!
+//! The scheduler stays pure bookkeeping: no runtime types, no clocks of
+//! its own (every time-dependent entry point takes `now: Instant`), so
+//! admission order, cancellation, deadlines and budget accounting are all
+//! unit- and property-testable without artifacts or a PJRT client. The
+//! serving loop in [`Session::serve`](super::Session::serve) drives a
 //! [`DecodeGraph`](super::DecodeGraph) from its decisions.
+//!
+//! Row operations ([`Scheduler::push`], [`Scheduler::retire`]) return
+//! `Result` instead of indexing unchecked — an out-of-range row or a
+//! double-retire from a buggy driving loop is a recoverable error, not a
+//! panic that takes the whole serve loop down.
 
+use std::cmp::Reverse;
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
-/// FIFO multiplexer of submitted prompts onto `capacity` decode rows.
-pub struct Scheduler {
-    queue: VecDeque<Job>,
-    rows: Vec<Option<Active>>,
-    /// final token outputs by job id (`None` while in queue / in flight)
-    results: Vec<Option<Vec<i32>>>,
+use anyhow::{bail, Result};
+
+/// Job identifier: the submission index, which is also the job's slot in
+/// [`Scheduler::take_results`].
+pub type JobId = usize;
+
+/// Admission priority class. Higher classes are admitted first; within a
+/// class, submission order wins. Queued jobs age upward (one class per
+/// [`AGING_ROUNDS`] admission rounds) so `Low` cannot starve.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum Priority {
+    /// Background work (batch eval, speculative traffic).
+    Low,
+    /// The default class for interactive traffic.
+    #[default]
+    Normal,
+    /// Latency-sensitive traffic; jumps every queued `Normal`/`Low` job.
+    High,
 }
 
-struct Job {
-    id: usize,
+impl Priority {
+    fn rank(self) -> usize {
+        match self {
+            Priority::Low => 0,
+            Priority::Normal => 1,
+            Priority::High => 2,
+        }
+    }
+}
+
+/// Admission rounds a queued job waits before its effective priority
+/// rises one class (aging, so low-priority jobs cannot starve forever).
+pub const AGING_ROUNDS: usize = 32;
+
+/// Cooperative cancellation flag for one request. Clone it, hand one copy
+/// to the submission and keep the other; [`CancelHandle::cancel`] takes
+/// effect at the scheduler's next [`Scheduler::poll`] — queued jobs never
+/// start, in-flight jobs are retired (their row freed) within one step.
+/// The flag is an `Arc<AtomicBool>`, so it may be flipped from another
+/// thread even though the serve loop itself is single-threaded.
+#[derive(Debug, Clone, Default)]
+pub struct CancelHandle(Arc<AtomicBool>);
+
+impl CancelHandle {
+    /// A fresh, un-cancelled handle.
+    pub fn new() -> CancelHandle {
+        CancelHandle::default()
+    }
+
+    /// Request cancellation (idempotent, thread-safe).
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::SeqCst);
+    }
+
+    /// Whether [`CancelHandle::cancel`] has been called.
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::SeqCst)
+    }
+}
+
+/// One unit of serving work: a tokenized prompt plus its lifecycle
+/// parameters. Build with [`Request::new`] and chain the setters.
+#[derive(Debug, Clone, Default)]
+pub struct Request {
+    /// Prompt token ids (already encoded; the scheduler never tokenizes).
+    pub prompt: Vec<i32>,
+    /// Admission class; see [`Priority`].
+    pub priority: Priority,
+    /// Give up on the job this long after submission (queued jobs expire
+    /// without running; in-flight jobs are retired mid-decode and keep
+    /// the tokens generated so far).
+    pub deadline: Option<Duration>,
+    /// Per-request generation budget; together with the prompt length
+    /// this is the job's *reserved* footprint for budget admission.
+    pub max_new_tokens: usize,
+}
+
+impl Request {
+    /// A `Normal`-priority request with no deadline and a `max_new`
+    /// budget of `max_new_tokens`.
+    pub fn new(prompt: Vec<i32>, max_new_tokens: usize) -> Request {
+        Request { prompt, max_new_tokens, ..Request::default() }
+    }
+
+    /// Set the admission class.
+    pub fn priority(mut self, p: Priority) -> Request {
+        self.priority = p;
+        self
+    }
+
+    /// Set a deadline relative to submission time.
+    pub fn deadline(mut self, d: Duration) -> Request {
+        self.deadline = Some(d);
+        self
+    }
+}
+
+/// How a job's life ended. Every submitted job reaches exactly one of
+/// these (the property test's core invariant).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobOutcome {
+    /// Ran to completion (EOS, token budget, or sequence length).
+    Done,
+    /// Cancelled via its [`CancelHandle`] (queued or in flight).
+    Cancelled,
+    /// Its deadline passed before completion (queued or in flight).
+    DeadlineExceeded,
+    /// The driving loop stopped before the job terminated.
+    Aborted,
+}
+
+/// Terminal state of one job: the typed outcome plus whatever tokens were
+/// generated before it ended (partial output for `Cancelled`/
+/// `DeadlineExceeded`/`Aborted`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct JobResult {
+    /// How the job ended.
+    pub outcome: JobOutcome,
+    /// Generated tokens (complete for `Done`, partial otherwise).
+    pub tokens: Vec<i32>,
+}
+
+/// One admission decision: start `prompt` in decode row `row`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Admission {
+    /// The decode row the job was placed into.
+    pub row: usize,
+    /// The admitted job.
+    pub job: JobId,
+    /// The job's prompt, to be fed to
+    /// [`DecodeGraph::start_row`](super::DecodeGraph::start_row).
+    pub prompt: Vec<i32>,
+}
+
+/// One mid-flight retirement from [`Scheduler::poll`]: the caller must
+/// free `row` on its decode graph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Retirement {
+    /// The decode row that was vacated.
+    pub row: usize,
+    /// The job that was retired.
+    pub job: JobId,
+    /// Why it was retired (`Cancelled` or `DeadlineExceeded`).
+    pub outcome: JobOutcome,
+}
+
+/// Aggregate serving statistics; snapshot via [`Scheduler::stats`].
+/// `elapsed` is filled in by the serving loop (the scheduler has no
+/// clock), after which [`ServerStats::tokens_per_sec`] is meaningful.
+#[derive(Debug, Clone, Default)]
+pub struct ServerStats {
+    /// Jobs submitted over the scheduler's lifetime.
+    pub submitted: u64,
+    /// Jobs that ran to completion.
+    pub completed: u64,
+    /// Jobs cancelled via their [`CancelHandle`].
+    pub cancelled: u64,
+    /// Jobs that hit their deadline (queued or in flight).
+    pub deadline_exceeded: u64,
+    /// In-flight retirements (cancel/deadline) — rows vacated mid-decode.
+    pub preemptions: u64,
+    /// Jobs currently waiting for a row.
+    pub queue_depth: usize,
+    /// Rows currently serving a job.
+    pub active_rows: usize,
+    /// Sum of `prompt + generated` tokens across resident rows.
+    pub resident_tokens: usize,
+    /// Sum of `prompt + max_new_tokens` across resident rows (what budget
+    /// admission charges).
+    pub reserved_tokens: usize,
+    /// The admission cap on `reserved_tokens` (`usize::MAX` = unbounded).
+    pub token_budget: usize,
+    /// Tokens recorded via [`Scheduler::push`].
+    pub tokens_generated: u64,
+    /// Mean time from submission to a job's first generated token, in
+    /// microseconds (0 when no job has produced a token yet).
+    pub mean_ttft_us: f64,
+    /// Wall-clock span of the serve loop; filled by the caller.
+    pub elapsed: Duration,
+}
+
+impl ServerStats {
+    /// Generation throughput over `elapsed` (0 until `elapsed` is set).
+    pub fn tokens_per_sec(&self) -> f64 {
+        let secs = self.elapsed.as_secs_f64();
+        if secs > 0.0 {
+            self.tokens_generated as f64 / secs
+        } else {
+            0.0
+        }
+    }
+
+    /// One-line human summary for CLIs and benches.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} done / {} cancelled / {} deadline-exceeded of {} submitted; \
+             {} preemptions; {} tokens ({:.1} tok/s); mean TTFT {:.1} ms",
+            self.completed,
+            self.cancelled,
+            self.deadline_exceeded,
+            self.submitted,
+            self.preemptions,
+            self.tokens_generated,
+            self.tokens_per_sec(),
+            self.mean_ttft_us / 1e3,
+        )
+    }
+}
+
+/// Per-job lifecycle bookkeeping kept for the job's whole life.
+struct JobMeta {
+    priority: Priority,
+    /// absolute expiry instant (submission time + requested deadline)
+    deadline: Option<Instant>,
+    cancel: CancelHandle,
+    submitted_at: Instant,
+    max_new_tokens: usize,
+    /// admission rounds spent waiting in the queue (drives aging)
+    waited_rounds: usize,
+}
+
+impl JobMeta {
+    /// Effective rank after aging: one class per [`AGING_ROUNDS`] spent
+    /// queued, capped at `High`. Ties break by submission order.
+    fn effective_rank(&self) -> usize {
+        (self.priority.rank() + self.waited_rounds / AGING_ROUNDS)
+            .min(Priority::High.rank())
+    }
+}
+
+struct Queued {
+    id: JobId,
     prompt: Vec<i32>,
 }
 
 struct Active {
-    id: usize,
+    id: JobId,
     prompt_len: usize,
+    max_new_tokens: usize,
     out: Vec<i32>,
 }
 
+impl Active {
+    fn resident(&self) -> usize {
+        self.prompt_len + self.out.len()
+    }
+
+    fn reserved(&self) -> usize {
+        self.prompt_len + self.max_new_tokens
+    }
+}
+
+/// Priority/deadline-aware multiplexer of [`Request`]s onto `capacity`
+/// decode rows under a resident-token budget.
+pub struct Scheduler {
+    queue: VecDeque<Queued>,
+    rows: Vec<Option<Active>>,
+    /// terminal state by job id (`None` while queued / in flight)
+    results: Vec<Option<JobResult>>,
+    /// lifecycle metadata by job id
+    meta: Vec<JobMeta>,
+    /// cap on Σ reserved tokens across resident rows
+    token_budget: usize,
+    // --- stats accumulators (terminal outcomes counted incrementally so
+    // the per-step `stats()` snapshot never rescans `results`) ---
+    n_done: u64,
+    n_cancelled: u64,
+    n_deadline: u64,
+    preemptions: u64,
+    tokens_generated: u64,
+    ttft_total: Duration,
+    ttft_count: u64,
+}
+
 impl Scheduler {
-    /// A scheduler over `capacity` rows (the decode graph's batch size).
+    /// A scheduler over `capacity` rows with an unbounded token budget
+    /// (row count is the only admission limit — the pre-lifecycle
+    /// behaviour).
     pub fn new(capacity: usize) -> Scheduler {
+        Scheduler::with_budget(capacity, usize::MAX)
+    }
+
+    /// A scheduler over `capacity` rows that keeps the sum of reserved
+    /// (`prompt + max_new`) tokens across resident rows at or below
+    /// `token_budget`. A single job larger than the whole budget is still
+    /// admitted when the machine is idle (sole-tenant override) so it can
+    /// never deadlock the queue.
+    pub fn with_budget(capacity: usize, token_budget: usize) -> Scheduler {
         Scheduler {
             queue: VecDeque::new(),
             rows: (0..capacity.max(1)).map(|_| None).collect(),
             results: Vec::new(),
+            meta: Vec::new(),
+            token_budget,
+            n_done: 0,
+            n_cancelled: 0,
+            n_deadline: 0,
+            preemptions: 0,
+            tokens_generated: 0,
+            ttft_total: Duration::ZERO,
+            ttft_count: 0,
         }
     }
 
-    /// Enqueue a tokenized prompt; returns its job id (= submission
-    /// index, which is also its slot in [`Scheduler::take_results`]).
-    pub fn submit(&mut self, prompt: Vec<i32>) -> usize {
-        let id = self.results.len();
-        self.results.push(None);
-        self.queue.push_back(Job { id, prompt });
-        id
+    /// Enqueue a request; returns its job id (= submission index, which
+    /// is also its slot in [`Scheduler::take_results`]) and the
+    /// cancellation handle for this job.
+    pub fn submit(&mut self, req: Request, now: Instant) -> (JobId, CancelHandle) {
+        self.submit_with_handle(req, CancelHandle::new(), now)
     }
 
-    /// Place queued prompts into free rows (FIFO). Returns the
-    /// `(row, prompt)` placements so the caller can
-    /// [`start_row`](super::DecodeGraph::start_row) each one.
-    pub fn admit(&mut self) -> Vec<(usize, Vec<i32>)> {
-        let mut placed = Vec::new();
-        for (row, slot) in self.rows.iter_mut().enumerate() {
-            if slot.is_some() {
-                continue;
+    /// Like [`Scheduler::submit`], but cancellation is observed through a
+    /// caller-provided handle (e.g. one already shared with another
+    /// thread).
+    pub fn submit_with_handle(
+        &mut self,
+        req: Request,
+        cancel: CancelHandle,
+        now: Instant,
+    ) -> (JobId, CancelHandle) {
+        let id = self.results.len();
+        self.results.push(None);
+        self.meta.push(JobMeta {
+            priority: req.priority,
+            deadline: req.deadline.map(|d| now + d),
+            cancel: cancel.clone(),
+            submitted_at: now,
+            max_new_tokens: req.max_new_tokens,
+            waited_rounds: 0,
+        });
+        self.queue.push_back(Queued { id, prompt: req.prompt });
+        (id, cancel)
+    }
+
+    /// Record a terminal outcome (central spot for the stats counters).
+    fn record_outcome(&mut self, id: JobId, outcome: JobOutcome, tokens: Vec<i32>) {
+        match outcome {
+            JobOutcome::Done => self.n_done += 1,
+            JobOutcome::Cancelled => self.n_cancelled += 1,
+            JobOutcome::DeadlineExceeded => self.n_deadline += 1,
+            JobOutcome::Aborted => {}
+        }
+        self.results[id] = Some(JobResult { outcome, tokens });
+    }
+
+    /// Whether job `id` should be terminated early (cancelled or past
+    /// its deadline), and with which outcome. Shared by the queued sweep
+    /// and the in-flight poll so the two can never diverge.
+    fn queued_expiry(&self, id: JobId, now: Instant) -> Option<JobOutcome> {
+        let m = &self.meta[id];
+        if m.cancel.is_cancelled() {
+            Some(JobOutcome::Cancelled)
+        } else if m.deadline.is_some_and(|d| now >= d) {
+            Some(JobOutcome::DeadlineExceeded)
+        } else {
+            None
+        }
+    }
+
+    /// Drop queued jobs that were cancelled or whose deadline passed.
+    /// The common no-expiry case is a read-only scan (no reallocation),
+    /// so calling this every decode step is cheap.
+    fn sweep_queue(&mut self, now: Instant) {
+        let any_expired = self
+            .queue
+            .iter()
+            .any(|q| self.queued_expiry(q.id, now).is_some());
+        if !any_expired {
+            return;
+        }
+        let mut kept = VecDeque::with_capacity(self.queue.len());
+        while let Some(q) = self.queue.pop_front() {
+            match self.queued_expiry(q.id, now) {
+                Some(outcome) => self.record_outcome(q.id, outcome, Vec::new()),
+                None => kept.push_back(q),
             }
-            let Some(job) = self.queue.pop_front() else { break };
-            *slot = Some(Active {
-                id: job.id,
-                prompt_len: job.prompt.len(),
+        }
+        self.queue = kept;
+    }
+
+    /// Retire active rows whose request was cancelled or whose deadline
+    /// passed, and expire queued jobs likewise. Returns the vacated rows
+    /// so the caller can `free_row` them on its decode graph — a
+    /// cancelled in-flight request frees its row within one step.
+    pub fn poll(&mut self, now: Instant) -> Vec<Retirement> {
+        self.sweep_queue(now);
+        let mut retired = Vec::new();
+        for row in 0..self.rows.len() {
+            let Some(a) = self.rows[row].as_ref() else { continue };
+            // same expiry rules as for queued jobs (the helper reads
+            // only the job's metadata, nothing queue-specific)
+            if let Some(outcome) = self.queued_expiry(a.id, now) {
+                let a = self.rows[row].take().expect("checked above");
+                let job = a.id;
+                self.record_outcome(job, outcome, a.out);
+                self.preemptions += 1;
+                retired.push(Retirement { row, job, outcome });
+            }
+        }
+        retired
+    }
+
+    /// Place queued jobs into free rows in effective-priority order
+    /// (priority class + aging, ties by submission order), charging each
+    /// admission's reserved (`prompt + max_new`) tokens against the
+    /// budget. Admission stops at the first job that does not fit —
+    /// no bypass, so a fitting low-priority job can never overtake a
+    /// non-fitting high-priority one. Returns the placements for
+    /// [`DecodeGraph::start_row`](super::DecodeGraph::start_row).
+    pub fn admit(&mut self, now: Instant) -> Vec<Admission> {
+        self.sweep_queue(now);
+        let mut free_rows: VecDeque<usize> = self
+            .rows
+            .iter()
+            .enumerate()
+            .filter_map(|(r, s)| s.is_none().then_some(r))
+            .collect();
+        if self.queue.is_empty() || free_rows.is_empty() {
+            // nothing can be placed: skip the sort, but queued jobs
+            // still age one round
+            for q in &self.queue {
+                self.meta[q.id].waited_rounds += 1;
+            }
+            return Vec::new();
+        }
+        // stable order: effective rank desc, then submission order
+        self.queue
+            .make_contiguous()
+            .sort_by_key(|q| (Reverse(self.meta[q.id].effective_rank()), q.id));
+        let mut placed = Vec::new();
+        let mut reserved = self.reserved_tokens();
+        while let Some(q) = self.queue.front() {
+            let Some(&row) = free_rows.front() else { break };
+            let need = q.prompt.len() + self.meta[q.id].max_new_tokens;
+            // sole-tenant override: an oversized job may run alone
+            let fits = reserved == 0
+                || reserved.saturating_add(need) <= self.token_budget;
+            if !fits {
+                break;
+            }
+            free_rows.pop_front();
+            let q = self.queue.pop_front().expect("peeked above");
+            reserved += need;
+            self.rows[row] = Some(Active {
+                id: q.id,
+                prompt_len: q.prompt.len(),
+                max_new_tokens: self.meta[q.id].max_new_tokens,
                 out: Vec::new(),
             });
-            placed.push((row, job.prompt));
+            placed.push(Admission { row, job: q.id, prompt: q.prompt });
+        }
+        // whoever is still queued waited one more round (drives aging)
+        for q in &self.queue {
+            self.meta[q.id].waited_rounds += 1;
         }
         placed
     }
@@ -85,45 +508,147 @@ impl Scheduler {
             .collect()
     }
 
-    /// Tokens generated so far by the request in `row`.
+    /// The job occupying `row`, if any.
+    pub fn job_in(&self, row: usize) -> Option<JobId> {
+        self.rows.get(row)?.as_ref().map(|a| a.id)
+    }
+
+    /// Tokens generated so far by the request in `row` (0 for a free or
+    /// out-of-range row).
     pub fn out_len(&self, row: usize) -> usize {
-        self.rows[row].as_ref().map_or(0, |a| a.out.len())
+        self.rows
+            .get(row)
+            .and_then(Option::as_ref)
+            .map_or(0, |a| a.out.len())
     }
 
-    /// Prompt + generated length of the request in `row`.
+    /// Prompt + generated length of the request in `row` (0 for a free or
+    /// out-of-range row).
     pub fn total_len(&self, row: usize) -> usize {
-        self.rows[row]
-            .as_ref()
-            .map_or(0, |a| a.prompt_len + a.out.len())
+        self.rows
+            .get(row)
+            .and_then(Option::as_ref)
+            .map_or(0, Active::resident)
     }
 
-    /// Record a sampled token for the request in `row`.
-    pub fn push(&mut self, row: usize, token: i32) {
-        if let Some(a) = self.rows[row].as_mut() {
-            a.out.push(token);
+    /// Sum of `prompt + generated` tokens across resident rows.
+    pub fn resident_tokens(&self) -> usize {
+        self.rows
+            .iter()
+            .flatten()
+            .map(Active::resident)
+            .sum()
+    }
+
+    /// Sum of `prompt + max_new` tokens across resident rows — what
+    /// budget admission charges.
+    pub fn reserved_tokens(&self) -> usize {
+        self.rows
+            .iter()
+            .flatten()
+            .map(Active::reserved)
+            .sum()
+    }
+
+    /// Whether the request in `row` has exhausted its own `max_new`
+    /// budget or the compiled sequence (the caller retires it then).
+    /// `false` for a free or out-of-range row.
+    pub fn budget_exhausted(&self, row: usize, seq_len: usize) -> bool {
+        self.rows
+            .get(row)
+            .and_then(Option::as_ref)
+            .is_some_and(|a| {
+                a.out.len() >= a.max_new_tokens || a.resident() >= seq_len
+            })
+    }
+
+    /// Record a sampled token for the request in `row`; `now` feeds the
+    /// time-to-first-token statistic. Errors (rather than panicking) on a
+    /// free or out-of-range row.
+    pub fn push(&mut self, row: usize, token: i32, now: Instant) -> Result<()> {
+        let Some(a) = self.rows.get_mut(row).and_then(Option::as_mut) else {
+            bail!("push into free or out-of-range row {row}");
+        };
+        if a.out.is_empty() {
+            let ttft = now.saturating_duration_since(
+                self.meta[a.id].submitted_at,
+            );
+            self.ttft_total += ttft;
+            self.ttft_count += 1;
         }
+        a.out.push(token);
+        self.tokens_generated += 1;
+        Ok(())
     }
 
-    /// Finish the request in `row`, freeing the row and recording its
-    /// generated tokens; returns the job id.
-    pub fn retire(&mut self, row: usize) -> usize {
-        let a = self.rows[row].take().expect("retire of an empty row");
+    /// Finish the request in `row` normally ([`JobOutcome::Done`]),
+    /// freeing the row and recording its tokens; returns the job id.
+    /// A double-retire or out-of-range row is an error, not a panic.
+    pub fn retire(&mut self, row: usize) -> Result<JobId> {
+        let Some(slot) = self.rows.get_mut(row) else {
+            bail!("retire of out-of-range row {row}");
+        };
+        let Some(a) = slot.take() else {
+            bail!("retire of already-free row {row}");
+        };
         let id = a.id;
-        self.results[id] = Some(a.out);
-        id
+        self.record_outcome(id, JobOutcome::Done, a.out);
+        Ok(id)
     }
 
-    /// True when every submitted request has been retired.
+    /// True when every submitted request has reached a terminal outcome.
     pub fn finished(&self) -> bool {
         self.queue.is_empty() && self.rows.iter().all(Option::is_none)
     }
 
-    /// Generated tokens per job, in submission order. Unretired jobs
-    /// (only possible if the driving loop aborted early) come back empty.
-    pub fn take_results(self) -> Vec<Vec<i32>> {
+    /// Snapshot the serving statistics (fill `elapsed` yourself — the
+    /// scheduler has no clock). O(capacity), not O(jobs ever submitted):
+    /// cheap enough to call after every decode step.
+    pub fn stats(&self) -> ServerStats {
+        ServerStats {
+            submitted: self.results.len() as u64,
+            completed: self.n_done,
+            cancelled: self.n_cancelled,
+            deadline_exceeded: self.n_deadline,
+            preemptions: self.preemptions,
+            queue_depth: self.queue.len(),
+            active_rows: self.rows.iter().flatten().count(),
+            resident_tokens: self.resident_tokens(),
+            reserved_tokens: self.reserved_tokens(),
+            token_budget: self.token_budget,
+            tokens_generated: self.tokens_generated,
+            mean_ttft_us: if self.ttft_count > 0 {
+                self.ttft_total.as_micros() as f64 / self.ttft_count as f64
+            } else {
+                0.0
+            },
+            elapsed: Duration::ZERO,
+        }
+    }
+
+    /// Terminal state per job, in submission order. Jobs that never
+    /// terminated (the driving loop stopped early) come back as
+    /// [`JobOutcome::Aborted`] with whatever tokens they had — never a
+    /// silent empty vec.
+    pub fn take_results(mut self) -> Vec<JobResult> {
+        // queued jobs first (no partial tokens), then anything mid-flight
+        while let Some(q) = self.queue.pop_front() {
+            self.results[q.id] = Some(JobResult {
+                outcome: JobOutcome::Aborted,
+                tokens: Vec::new(),
+            });
+        }
+        for slot in &mut self.rows {
+            if let Some(a) = slot.take() {
+                self.results[a.id] = Some(JobResult {
+                    outcome: JobOutcome::Aborted,
+                    tokens: a.out,
+                });
+            }
+        }
         self.results
             .into_iter()
-            .map(Option::unwrap_or_default)
+            .map(|r| r.expect("every job has a terminal outcome"))
             .collect()
     }
 }
@@ -132,83 +657,343 @@ impl Scheduler {
 mod tests {
     use super::*;
 
+    fn t0() -> Instant {
+        Instant::now()
+    }
+
+    fn req(prompt: &[i32], max_new: usize) -> Request {
+        Request::new(prompt.to_vec(), max_new)
+    }
+
+    /// Convenience: tokens of every `Done` job, in submission order
+    /// (mirrors the old `take_results` shape for ported tests).
+    fn done_tokens(results: Vec<JobResult>) -> Vec<Vec<i32>> {
+        results
+            .into_iter()
+            .map(|r| {
+                assert_eq!(r.outcome, JobOutcome::Done);
+                r.tokens
+            })
+            .collect()
+    }
+
     #[test]
     fn admits_in_fifo_order_up_to_capacity() {
+        let now = t0();
         let mut s = Scheduler::new(2);
         for p in 0..4 {
-            s.submit(vec![p]);
+            s.submit(req(&[p], 8), now);
         }
-        let placed = s.admit();
+        let placed = s.admit(now);
         assert_eq!(placed.len(), 2);
-        assert_eq!(placed[0], (0, vec![0]));
-        assert_eq!(placed[1], (1, vec![1]));
+        assert_eq!(placed[0], Admission { row: 0, job: 0, prompt: vec![0] });
+        assert_eq!(placed[1], Admission { row: 1, job: 1, prompt: vec![1] });
         assert_eq!(s.active_rows(), vec![0, 1]);
         // no free rows: nothing more admitted
-        assert!(s.admit().is_empty());
+        assert!(s.admit(now).is_empty());
     }
 
     #[test]
     fn retiring_frees_the_row_for_the_next_job() {
+        let now = t0();
         let mut s = Scheduler::new(2);
         for p in 0..3 {
-            s.submit(vec![10 + p]);
+            s.submit(req(&[10 + p], 8), now);
         }
-        s.admit();
-        s.push(0, 7);
-        assert_eq!(s.retire(0), 0);
+        s.admit(now);
+        s.push(0, 7, now).unwrap();
+        assert_eq!(s.retire(0).unwrap(), 0);
         assert!(!s.finished(), "job 2 still queued");
-        let placed = s.admit();
-        assert_eq!(placed, vec![(0, vec![12])], "freed row 0 is reused");
+        let placed = s.admit(now);
+        assert_eq!(
+            placed,
+            vec![Admission { row: 0, job: 2, prompt: vec![12] }],
+            "freed row 0 is reused"
+        );
         assert_eq!(s.active_rows(), vec![0, 1]);
     }
 
     #[test]
     fn results_come_back_in_submission_order() {
+        let now = t0();
         let mut s = Scheduler::new(2);
         for p in 0..4 {
-            s.submit(vec![p]);
+            s.submit(req(&[p], 8), now);
         }
-        s.admit();
+        s.admit(now);
         // finish job 1 (row 1) first, then job 0; rows refill as 2, 3
-        s.push(1, 101);
-        s.retire(1);
-        s.admit();
-        s.push(0, 100);
-        s.retire(0);
-        s.admit();
-        s.push(0, 103); // row 0 now serves job 3
-        s.push(1, 102); // row 1 now serves job 2
-        s.retire(1);
-        s.retire(0);
+        s.push(1, 101, now).unwrap();
+        s.retire(1).unwrap();
+        s.admit(now);
+        s.push(0, 100, now).unwrap();
+        s.retire(0).unwrap();
+        s.admit(now);
+        s.push(0, 103, now).unwrap(); // row 0 now serves job 3
+        s.push(1, 102, now).unwrap(); // row 1 now serves job 2
+        s.retire(1).unwrap();
+        s.retire(0).unwrap();
         assert!(s.finished());
         assert_eq!(
-            s.take_results(),
+            done_tokens(s.take_results()),
             vec![vec![100], vec![101], vec![102], vec![103]]
         );
     }
 
     #[test]
     fn lengths_track_prompt_and_output() {
+        let now = t0();
         let mut s = Scheduler::new(1);
-        s.submit(vec![1, 2, 3]);
-        s.admit();
+        s.submit(req(&[1, 2, 3], 8), now);
+        s.admit(now);
         assert_eq!(s.total_len(0), 3);
         assert_eq!(s.out_len(0), 0);
-        s.push(0, 9);
+        assert_eq!(s.resident_tokens(), 3);
+        assert_eq!(s.reserved_tokens(), 11);
+        s.push(0, 9, now).unwrap();
         assert_eq!(s.total_len(0), 4);
         assert_eq!(s.out_len(0), 1);
+        assert_eq!(s.resident_tokens(), 4);
     }
 
     #[test]
-    fn zero_output_jobs_finish_empty() {
+    fn zero_output_jobs_finish_with_done_outcome() {
+        let now = t0();
         let mut s = Scheduler::new(1);
-        s.submit(vec![1]);
-        s.submit(vec![2]);
-        s.admit();
-        s.retire(0); // e.g. max_new_tokens == 0
-        s.admit();
-        s.retire(0);
+        s.submit(req(&[1], 0), now);
+        s.submit(req(&[2], 0), now);
+        s.admit(now);
+        assert!(s.budget_exhausted(0, 16), "max_new 0 retires immediately");
+        s.retire(0).unwrap();
+        s.admit(now);
+        s.retire(0).unwrap();
         assert!(s.finished());
-        assert_eq!(s.take_results(), vec![Vec::<i32>::new(), vec![]]);
+        assert_eq!(
+            done_tokens(s.take_results()),
+            vec![Vec::<i32>::new(), vec![]]
+        );
+    }
+
+    #[test]
+    fn row_misuse_is_an_error_not_a_panic() {
+        let now = t0();
+        let mut s = Scheduler::new(2);
+        s.submit(req(&[1], 4), now);
+        s.admit(now);
+        // out-of-range everywhere
+        assert!(s.push(99, 5, now).is_err());
+        assert!(s.retire(99).is_err());
+        assert_eq!(s.out_len(99), 0);
+        assert_eq!(s.total_len(99), 0);
+        assert_eq!(s.job_in(99), None);
+        assert!(!s.budget_exhausted(99, 16));
+        // free row
+        assert!(s.push(1, 5, now).is_err());
+        assert!(s.retire(1).is_err());
+        // double retire
+        s.retire(0).unwrap();
+        assert!(s.retire(0).is_err(), "double retire must not panic");
+        assert!(s.finished());
+    }
+
+    #[test]
+    fn high_priority_jumps_queued_low_priority_under_full_budget() {
+        // the acceptance scenario: budget full, low-priority jobs queued,
+        // then a late high-priority submission — it must be admitted
+        // first when the budget frees
+        let now = t0();
+        let mut s = Scheduler::with_budget(2, 10);
+        // job 0 fills the budget (4 prompt + 4 max_new = 8 reserved)
+        s.submit(req(&[1, 2, 3, 4], 4), now);
+        assert_eq!(s.admit(now).len(), 1);
+        // low-priority job 1 does not fit (8 + 6 > 10): queued
+        s.submit(req(&[5, 6], 4).priority(Priority::Low), now);
+        assert!(s.admit(now).is_empty(), "budget full: nothing admitted");
+        // late high-priority job 2
+        s.submit(req(&[7, 8], 4).priority(Priority::High), now);
+        assert!(s.admit(now).is_empty(), "still no room");
+        // budget frees: the high-priority job is admitted before the
+        // earlier low-priority one
+        s.retire(0).unwrap();
+        let placed = s.admit(now);
+        assert_eq!(placed.len(), 1, "6 + 6 > 10: only one fits");
+        assert_eq!(placed[0].job, 2, "high priority jumps the queue");
+        s.retire(placed[0].row).unwrap();
+        let placed = s.admit(now);
+        assert_eq!(placed[0].job, 1, "low-priority job runs afterwards");
+        s.retire(placed[0].row).unwrap();
+        let results = s.take_results();
+        assert!(results.iter().all(|r| r.outcome == JobOutcome::Done));
+    }
+
+    #[test]
+    fn budget_admission_counts_tokens_not_rows() {
+        let now = t0();
+        // 4 rows but a 12-token budget: a big job crowds out by tokens
+        let mut s = Scheduler::with_budget(4, 12);
+        s.submit(req(&[0; 6], 4), now); // reserved 10
+        s.submit(req(&[1; 3], 2), now); // reserved 5: does not fit
+        s.submit(req(&[2; 1], 1), now); // reserved 2: would fit, but FIFO
+        let placed = s.admit(now);
+        assert_eq!(placed.len(), 1, "token budget, not row count, gates");
+        assert_eq!(placed[0].job, 0);
+        assert_eq!(s.reserved_tokens(), 10);
+        // no bypass: job 2 fits but must not overtake job 1
+        assert!(s.admit(now).is_empty());
+        s.retire(0).unwrap();
+        let placed = s.admit(now);
+        assert_eq!(placed.len(), 2, "both small jobs fit now");
+        assert_eq!(placed[0].job, 1);
+        assert_eq!(placed[1].job, 2);
+    }
+
+    #[test]
+    fn oversized_job_runs_alone_instead_of_deadlocking() {
+        let now = t0();
+        let mut s = Scheduler::with_budget(2, 4);
+        s.submit(req(&[0; 8], 4), now); // reserved 12 > budget 4
+        let placed = s.admit(now);
+        assert_eq!(placed.len(), 1, "sole-tenant override admits it");
+        // but nothing else joins while it is resident
+        s.submit(req(&[1], 1), now);
+        assert!(s.admit(now).is_empty());
+        s.retire(0).unwrap();
+        assert_eq!(s.admit(now).len(), 1);
+    }
+
+    #[test]
+    fn cancelled_in_flight_frees_its_row_within_one_poll() {
+        let now = t0();
+        let mut s = Scheduler::new(1);
+        let (id, handle) = s.submit(req(&[1, 2], 8), now);
+        s.submit(req(&[3], 8), now);
+        s.admit(now);
+        s.push(0, 42, now).unwrap();
+        handle.cancel();
+        let retired = s.poll(now);
+        assert_eq!(retired.len(), 1);
+        assert_eq!(retired[0].row, 0);
+        assert_eq!(retired[0].job, id);
+        assert_eq!(retired[0].outcome, JobOutcome::Cancelled);
+        // the freed row is immediately reusable
+        let placed = s.admit(now);
+        assert_eq!(placed[0].row, 0);
+        assert_eq!(placed[0].job, 1);
+        s.retire(0).unwrap();
+        let results = s.take_results();
+        assert_eq!(results[0].outcome, JobOutcome::Cancelled);
+        assert_eq!(results[0].tokens, vec![42], "partial output kept");
+        assert_eq!(results[1].outcome, JobOutcome::Done);
+    }
+
+    #[test]
+    fn cancelled_while_queued_never_runs() {
+        let now = t0();
+        let mut s = Scheduler::new(1);
+        s.submit(req(&[1], 8), now);
+        let (_, handle) = s.submit(req(&[2], 8), now);
+        s.admit(now);
+        handle.cancel();
+        assert!(s.poll(now).is_empty(), "queued cancel vacates no row");
+        s.retire(0).unwrap();
+        assert!(s.admit(now).is_empty(), "cancelled job is not admitted");
+        assert!(s.finished());
+        let results = s.take_results();
+        assert_eq!(results[1].outcome, JobOutcome::Cancelled);
+        assert!(results[1].tokens.is_empty());
+    }
+
+    #[test]
+    fn deadline_expiry_retires_mid_flight_and_in_queue() {
+        let now = t0();
+        let mut s = Scheduler::new(1);
+        s.submit(
+            req(&[1, 2], 8).deadline(Duration::from_millis(5)),
+            now,
+        );
+        s.submit(
+            req(&[3], 8).deadline(Duration::from_millis(5)),
+            now,
+        );
+        s.admit(now);
+        s.push(0, 7, now).unwrap();
+        // nothing expires before the deadline
+        assert!(s.poll(now + Duration::from_millis(4)).is_empty());
+        let late = now + Duration::from_millis(10);
+        let retired = s.poll(late);
+        assert_eq!(retired.len(), 1, "active job retired");
+        assert_eq!(retired[0].outcome, JobOutcome::DeadlineExceeded);
+        assert!(s.finished(), "queued job expired in the same poll");
+        let results = s.take_results();
+        assert_eq!(results[0].outcome, JobOutcome::DeadlineExceeded);
+        assert_eq!(results[0].tokens, vec![7], "partial output kept");
+        assert_eq!(results[1].outcome, JobOutcome::DeadlineExceeded);
+    }
+
+    #[test]
+    fn aging_promotes_a_starved_low_priority_job() {
+        let now = t0();
+        let mut s = Scheduler::new(1);
+        let (low_id, _) = s.submit(req(&[9], 2).priority(Priority::Low), now);
+        // a continuous stream of high-priority arrivals
+        let mut admitted_low = false;
+        for round in 0..(2 * AGING_ROUNDS + 2) {
+            s.submit(req(&[round as i32], 2).priority(Priority::High), now);
+            for a in s.admit(now) {
+                if a.job == low_id {
+                    admitted_low = true;
+                }
+                s.retire(a.row).unwrap();
+            }
+            if admitted_low {
+                break;
+            }
+        }
+        assert!(
+            admitted_low,
+            "aging must eventually admit the low-priority job"
+        );
+    }
+
+    #[test]
+    fn take_results_reports_aborted_for_unfinished_jobs() {
+        let now = t0();
+        let mut s = Scheduler::new(1);
+        s.submit(req(&[1], 8), now);
+        s.submit(req(&[2], 8), now);
+        s.admit(now);
+        s.push(0, 5, now).unwrap();
+        // driving loop stops here without retiring anything
+        let results = s.take_results();
+        assert_eq!(results[0].outcome, JobOutcome::Aborted);
+        assert_eq!(results[0].tokens, vec![5], "partial output kept");
+        assert_eq!(results[1].outcome, JobOutcome::Aborted);
+        assert!(results[1].tokens.is_empty());
+    }
+
+    #[test]
+    fn stats_track_the_lifecycle() {
+        let now = t0();
+        let mut s = Scheduler::with_budget(2, 100);
+        let (_, h) = s.submit(req(&[1, 2], 4), now);
+        s.submit(req(&[3], 4), now);
+        s.submit(req(&[4], 4), now);
+        s.admit(now);
+        let st = s.stats();
+        assert_eq!(st.submitted, 3);
+        assert_eq!(st.active_rows, 2);
+        assert_eq!(st.queue_depth, 1);
+        assert_eq!(st.resident_tokens, 3);
+        assert_eq!(st.reserved_tokens, 11);
+        assert_eq!(st.token_budget, 100);
+        let later = now + Duration::from_millis(2);
+        s.push(0, 7, later).unwrap();
+        h.cancel();
+        s.poll(later);
+        let st = s.stats();
+        assert_eq!(st.tokens_generated, 1);
+        assert_eq!(st.cancelled, 1);
+        assert_eq!(st.preemptions, 1);
+        assert!(st.mean_ttft_us >= 2_000.0, "ttft {:.1}", st.mean_ttft_us);
+        assert!(!st.summary().is_empty());
     }
 }

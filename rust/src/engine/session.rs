@@ -1,21 +1,29 @@
 //! Sessions: the inference surface of the engine.
 //!
 //! A `Session` pins one named adapter over the engine's frozen base and
-//! exposes the decode loop three ways — whole-completion
+//! exposes the decode loop four ways — whole-completion
 //! ([`Session::generate`]), token-by-token streaming ([`Session::stream`]
-//! / [`Session::generate_with`]), and batched multi-prompt decoding
-//! ([`Session::generate_batch`]) — plus held-out evaluation
-//! ([`Session::eval`], [`Session::eval_all`]).
+//! / [`Session::generate_with`]), batched multi-prompt decoding
+//! ([`Session::generate_batch`]), and full request-lifecycle serving
+//! ([`Session::serve`]) — plus held-out evaluation ([`Session::eval`],
+//! [`Session::eval_all`]).
 //!
 //! Decoding runs through a [`DecodeGraph`]: by default the KV-cached
 //! incremental path (one prefill per prompt, then O(1)-per-token steps
 //! against per-row key/value caches), falling back to the full-sequence
 //! recompute when the artifact ships no decode graphs — see
 //! [`DecodeMode`] and the [`decode`](super::decode) module docs.
-//! `generate_batch` accepts more prompts than the compiled batch size:
-//! a [`Scheduler`] admits queued prompts into rows the moment earlier
-//! requests retire (continuous batching), so throughput tracks aggregate
-//! tokens rather than the slowest prompt of a padded batch.
+//!
+//! Serving is a request pipeline, not "batch of strings in, strings
+//! out": each [`GenRequest`] carries its own sampling parameters,
+//! [`Priority`] class, optional deadline, and cancellation handle. A
+//! [`Scheduler`] multiplexes any number of requests over the compiled
+//! batch rows (continuous batching) under a resident-token budget, and
+//! [`Session::serve`] reports a typed [`JobOutcome`] per request plus a
+//! [`ServerStats`] block — see the
+//! [`scheduler`](super::scheduler) module docs for the admission policy.
+
+use std::time::{Duration, Instant};
 
 use anyhow::{ensure, Result};
 
@@ -26,7 +34,9 @@ use crate::util::rng::Rng;
 
 use super::decode::{CachedDecode, DecodeGraph, DecodeMode, FullDecode};
 use super::sampler::Sampler;
-use super::scheduler::Scheduler;
+use super::scheduler::{
+    CancelHandle, JobOutcome, Priority, Request, Scheduler, ServerStats,
+};
 use super::{Engine, BASE_ADAPTER};
 
 /// Builder returned by [`Engine::session`].
@@ -37,6 +47,7 @@ pub struct SessionBuilder<'e> {
     greedy: bool,
     seed: u64,
     decode: DecodeMode,
+    token_budget: Option<usize>,
 }
 
 impl<'e> SessionBuilder<'e> {
@@ -48,6 +59,7 @@ impl<'e> SessionBuilder<'e> {
             greedy: false,
             seed: 0,
             decode: DecodeMode::Auto,
+            token_budget: None,
         }
     }
 
@@ -57,7 +69,8 @@ impl<'e> SessionBuilder<'e> {
         self
     }
 
-    /// Sampling configuration for the decode loop.
+    /// Default sampling configuration for the decode loop (requests may
+    /// override it per-request via [`GenRequest::sampler`]).
     pub fn sampler(mut self, sampler: Sampler) -> Self {
         self.sampler = sampler;
         self
@@ -82,17 +95,32 @@ impl<'e> SessionBuilder<'e> {
         self
     }
 
+    /// Admission cap on the sum of reserved (`prompt + max_new`) tokens
+    /// across resident rows — see
+    /// [`Scheduler::with_budget`](super::Scheduler::with_budget). The
+    /// default (`batch × seq_len`) never constrains beyond the compiled
+    /// row capacity; tighten it to bound serving memory by tokens rather
+    /// than rows.
+    pub fn token_budget(mut self, budget: usize) -> Self {
+        self.token_budget = Some(budget);
+        self
+    }
+
     /// Validate the adapter and produce the session.
     pub fn build(self) -> Result<Session<'e>> {
         // resolve once so a typo fails at build time, not mid-decode
         self.engine.adapter_literals(&self.adapter)?;
         let tok = Tokenizer::new(self.engine.spec.cfg.vocab);
+        let cfg = &self.engine.spec.cfg;
+        let token_budget =
+            self.token_budget.unwrap_or(cfg.batch * cfg.seq_len);
         Ok(Session {
             engine: self.engine,
             adapter: self.adapter,
             sampler: self.sampler,
             greedy: self.greedy,
             decode: self.decode,
+            token_budget,
             rng: Rng::new(self.seed),
             tok,
             tokens_generated: 0,
@@ -100,17 +128,112 @@ impl<'e> SessionBuilder<'e> {
     }
 }
 
+/// One request through the serving pipeline: a prompt plus per-request
+/// sampling parameters and lifecycle controls. Build with
+/// [`GenRequest::new`] and chain the setters; everything defaults to the
+/// session's own configuration.
+#[derive(Debug, Clone, Default)]
+pub struct GenRequest {
+    /// The prompt text (tokenized by the session on submission).
+    pub prompt: String,
+    /// Admission class; see [`Priority`].
+    pub priority: Priority,
+    /// Give up this long after submission (queued requests expire
+    /// without running; in-flight requests keep their partial output).
+    pub deadline: Option<Duration>,
+    /// Per-request sampling parameters; `None` uses the session sampler.
+    pub sampler: Option<Sampler>,
+    /// Cooperative cancellation flag; `None` makes the request
+    /// uncancellable (a fresh private handle is used internally).
+    pub cancel: Option<CancelHandle>,
+}
+
+impl GenRequest {
+    /// A `Normal`-priority request with the session's default sampler,
+    /// no deadline, and no cancellation handle.
+    pub fn new(prompt: impl Into<String>) -> GenRequest {
+        GenRequest { prompt: prompt.into(), ..GenRequest::default() }
+    }
+
+    /// Set the admission class.
+    pub fn priority(mut self, p: Priority) -> GenRequest {
+        self.priority = p;
+        self
+    }
+
+    /// Set a deadline relative to submission.
+    pub fn deadline(mut self, d: Duration) -> GenRequest {
+        self.deadline = Some(d);
+        self
+    }
+
+    /// Override the session sampler for this request (nucleus/top-k/
+    /// temperature/`max_new_tokens`). The override is complete: it also
+    /// replaces the session's `greedy` flag for this request — ask for
+    /// per-request argmax decoding with `temperature: 0.0` (a
+    /// non-positive temperature is exactly greedy; see [`Sampler`]).
+    pub fn sampler(mut self, s: Sampler) -> GenRequest {
+        self.sampler = Some(s);
+        self
+    }
+
+    /// Attach a fresh [`CancelHandle`] and return it alongside the
+    /// request; call [`CancelHandle::cancel`] (from any thread, or from
+    /// a [`Session::serve_with`] step callback) to retire the request.
+    pub fn cancellable(mut self) -> (GenRequest, CancelHandle) {
+        let handle = CancelHandle::new();
+        self.cancel = Some(handle.clone());
+        (self, handle)
+    }
+}
+
+/// Terminal state of one served request: the typed outcome plus the
+/// decoded text (partial for `Cancelled`/`DeadlineExceeded`/`Aborted`).
+#[derive(Debug, Clone)]
+pub struct ServeOutput {
+    /// How the request ended.
+    pub outcome: JobOutcome,
+    /// Decoded completion text (whatever was generated before the end).
+    pub text: String,
+}
+
+/// Everything [`Session::serve`] returns: per-request outcomes in
+/// submission order plus the aggregate serving statistics.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    /// Per-request terminal states, in submission order.
+    pub outputs: Vec<ServeOutput>,
+    /// Aggregate statistics over the whole serve call (with `elapsed`
+    /// filled in).
+    pub stats: ServerStats,
+}
+
+/// Per-step progress snapshot handed to the [`Session::serve_with`]
+/// callback after every decode step — the hook for live dashboards and
+/// for cancelling in-flight requests from single-threaded drivers.
+#[derive(Debug, Clone)]
+pub struct ServeProgress {
+    /// Decode steps executed so far (1 on the first callback).
+    pub step: usize,
+    /// Scheduler statistics at this step.
+    pub stats: ServerStats,
+}
+
 /// One serving session: a named adapter + sampling state over a shared
 /// engine. Cheap to construct; create one per request stream.
 pub struct Session<'e> {
     engine: &'e Engine,
     adapter: String,
-    /// Sampling configuration (nucleus/top-k/temperature/token budget).
+    /// Default sampling configuration (nucleus/top-k/temperature/token
+    /// budget); [`GenRequest::sampler`] overrides it per request.
     pub sampler: Sampler,
     /// Deterministic argmax decoding instead of sampling.
     pub greedy: bool,
     /// Decode-path selection; see [`DecodeMode`].
     pub decode: DecodeMode,
+    /// Resident-token admission budget for [`Session::serve`]; see
+    /// [`SessionBuilder::token_budget`].
+    pub token_budget: usize,
     rng: Rng,
     tok: Tokenizer,
     /// cumulative count of sampled (emitted) tokens — serving metric
@@ -130,7 +253,7 @@ impl<'e> Session<'e> {
 
     /// Hot-swap which adapter this session serves (it must be registered).
     /// Decodes already in flight keep their pinned adapter literals; the
-    /// swap applies from the next `generate`/`stream`/`generate_batch`.
+    /// swap applies from the next `generate`/`stream`/`serve` call.
     pub fn set_adapter(&mut self, name: &str) -> Result<()> {
         self.engine.adapter_literals(name)?;
         self.adapter = name.to_string();
@@ -175,12 +298,22 @@ impl<'e> Session<'e> {
         }
     }
 
-    fn next_token(&mut self, logits_row: &[f32]) -> i32 {
-        if self.greedy {
+    /// Sample one token under `sampler` (or argmax when `greedy`).
+    fn sample_token(
+        greedy: bool,
+        sampler: &Sampler,
+        rng: &mut Rng,
+        logits_row: &[f32],
+    ) -> i32 {
+        if greedy {
             Sampler::greedy(logits_row)
         } else {
-            self.sampler.sample(logits_row, &mut self.rng)
+            sampler.sample(logits_row, rng)
         }
+    }
+
+    fn next_token(&mut self, logits_row: &[f32]) -> i32 {
+        Self::sample_token(self.greedy, &self.sampler, &mut self.rng, logits_row)
     }
 
     /// Generate a full completion for one prompt.
@@ -222,26 +355,85 @@ impl<'e> Session<'e> {
     /// token budget, or sequence length). Results come back in prompt
     /// order. With greedy decoding each row's result is identical to
     /// `generate` on that prompt alone.
+    ///
+    /// This is the plain-prompt convenience over [`Session::serve`]:
+    /// every prompt runs at `Normal` priority with the session sampler,
+    /// no deadline, and no cancellation, so every outcome is `Done`.
     pub fn generate_batch(&mut self, prompts: &[&str]) -> Result<Vec<String>> {
         ensure!(!prompts.is_empty(), "no prompts");
+        let reqs = prompts.iter().map(|p| GenRequest::new(*p)).collect();
+        let report = self.serve(reqs)?;
+        Ok(report.outputs.into_iter().map(|o| o.text).collect())
+    }
+
+    /// Serve a set of [`GenRequest`]s to completion; convenience over
+    /// [`Session::serve_with`] without a progress callback.
+    pub fn serve(&mut self, requests: Vec<GenRequest>) -> Result<ServeReport> {
+        self.serve_with(requests, |_| {})
+    }
+
+    /// The request-lifecycle serving loop: multiplex `requests` over the
+    /// compiled batch rows under the session's [`token
+    /// budget`](SessionBuilder::token_budget), honouring priorities,
+    /// deadlines, and cancellation. `on_step` runs after every decode
+    /// step with a [`ServeProgress`] snapshot — cancel handles flipped
+    /// inside it take effect before the next step (the row is freed and
+    /// refilled from the queue within one step).
+    ///
+    /// Every request ends in exactly one typed [`JobOutcome`]; partial
+    /// output survives cancellation and deadline expiry. An error from
+    /// the decode graph aborts the whole loop and is returned as the
+    /// `Err` (no report is produced in that case).
+    pub fn serve_with(
+        &mut self,
+        requests: Vec<GenRequest>,
+        mut on_step: impl FnMut(&ServeProgress),
+    ) -> Result<ServeReport> {
+        ensure!(!requests.is_empty(), "no requests");
         let mut graph = self.decode_graph()?;
         let seq_len = graph.seq_len();
-        let max_new = self.sampler.max_new_tokens;
-        let mut sched = Scheduler::new(graph.capacity());
-        for p in prompts {
-            sched.submit(self.encode_prompt(p)?);
-        }
-        while !sched.finished() {
-            for (row, prompt) in sched.admit() {
-                graph.start_row(row, &prompt)?;
+        let mut sched =
+            Scheduler::with_budget(graph.capacity(), self.token_budget);
+        // (sampler, greedy) per job: a per-request sampler is a complete
+        // override, so the session's greedy flag only applies to
+        // requests that inherit the session sampler
+        let mut samplers: Vec<(Sampler, bool)> =
+            Vec::with_capacity(requests.len());
+        let now = Instant::now();
+        for req in requests {
+            let prompt = self.encode_prompt(&req.prompt)?;
+            let (sampler, greedy) = match req.sampler {
+                Some(s) => (s, false),
+                None => (self.sampler.clone(), self.greedy),
+            };
+            // clamp to what the compiled sequence can hold so the
+            // reservation never overstates a request's footprint
+            let max_new =
+                sampler.max_new_tokens.min(seq_len - prompt.len());
+            let mut r = Request::new(prompt, max_new).priority(req.priority);
+            if let Some(d) = req.deadline {
+                r = r.deadline(d);
             }
-            // retire rows that have exhausted their budget or the
+            sched.submit_with_handle(r, req.cancel.unwrap_or_default(), now);
+            samplers.push((sampler, greedy));
+        }
+        let started = Instant::now();
+        let mut step = 0usize;
+        while !sched.finished() {
+            let now = Instant::now();
+            // cancellation + deadline expiry first: a cancelled in-flight
+            // request vacates its row before this step's admissions
+            for ret in sched.poll(now) {
+                graph.free_row(ret.row);
+            }
+            for adm in sched.admit(now) {
+                graph.start_row(adm.row, &adm.prompt)?;
+            }
+            // retire rows that have exhausted their own budget or the
             // compiled sequence before (not after) stepping them
             for row in sched.active_rows() {
-                if sched.out_len(row) >= max_new
-                    || sched.total_len(row) >= seq_len
-                {
-                    sched.retire(row);
+                if sched.budget_exhausted(row, seq_len) {
+                    sched.retire(row)?;
                     graph.free_row(row);
                 }
             }
@@ -250,23 +442,39 @@ impl<'e> Session<'e> {
                 continue; // freed rows refill on the next iteration
             }
             let logits = graph.step(&rows)?;
+            let now = Instant::now();
             for (&row, row_logits) in rows.iter().zip(logits.iter()) {
-                let next = self.next_token(row_logits);
+                let id = sched.job_in(row).expect("stepped row is occupied");
+                let (sampler, greedy) = &samplers[id];
+                let next = Self::sample_token(
+                    *greedy,
+                    sampler,
+                    &mut self.rng,
+                    row_logits,
+                );
                 if next == EOS {
-                    sched.retire(row);
+                    sched.retire(row)?;
                     graph.free_row(row);
                 } else {
                     self.tokens_generated += 1;
-                    sched.push(row, next);
+                    sched.push(row, next, now)?;
                     graph.push(row, next)?;
                 }
             }
+            step += 1;
+            on_step(&ServeProgress { step, stats: sched.stats() });
         }
-        Ok(sched
+        let mut stats = sched.stats();
+        stats.elapsed = started.elapsed();
+        let outputs = sched
             .take_results()
-            .iter()
-            .map(|o| self.tok.decode(o))
-            .collect())
+            .into_iter()
+            .map(|r| ServeOutput {
+                outcome: r.outcome,
+                text: self.tok.decode(&r.tokens),
+            })
+            .collect();
+        Ok(ServeReport { outputs, stats })
     }
 
     /// (loss, token accuracy) on one batch under this session's adapter —

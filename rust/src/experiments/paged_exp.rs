@@ -26,14 +26,8 @@ pub fn scenario(
     steps: usize,
     seed: u64,
 ) -> ScenarioResult {
-    let mut sim = PagedOptimizerSim::new(
-        device_mb << 20,
-        0,
-        opt_mb << 20,
-        16 * 512,
-        4096,
-        32,
-    );
+    let mut sim =
+        PagedOptimizerSim::new(device_mb << 20, 0, opt_mb << 20, 4096, 32);
     let mut rng = Rng::new(seed);
     let weights: Vec<f64> = seq_dist.iter().map(|(_, w)| *w).collect();
     let lens: Vec<usize> = seq_dist.iter().map(|(l, _)| *l).collect();
@@ -41,7 +35,7 @@ pub fn scenario(
     let mut warm_stall = 0.0;
     for step in 0..steps {
         let len = lens[rng.categorical(&weights)];
-        sim.on_step(len, max_len);
+        sim.on_step(len);
         if step == steps / 5 {
             warm_stall = sim.stats.stall_us; // after warmup
         }

@@ -19,8 +19,10 @@
 //!     streaming, or batched multi-prompt) and `eval` per adapter.
 //!     Decoding runs through a `DecodeGraph` — KV-cached incremental
 //!     steps by default, full-sequence recompute as fallback — and
-//!     `generate_batch` continuously batches any number of prompts over
-//!     the compiled rows via a `Scheduler`.
+//!     `serve` runs the request lifecycle (per-request priorities,
+//!     deadlines, cancellation, token-budget admission, typed outcomes)
+//!     and `generate_batch` continuously batches any number of prompts
+//!     over the compiled rows via the same `Scheduler`.
 //!   - [`coordinator`] — finetuning as a *client* of the engine: the
 //!     training loop borrows the runtime and frozen base, owns only the
 //!     mutable state, and publishes finished adapters back into the

@@ -5,6 +5,9 @@
 //!   eval         evaluate an adapter over the frozen base (no trainer)
 //!   generate     sample from the serving engine (single, batched, or
 //!                streamed; nucleus p=0.9, T=0.7)
+//!   serve        request-lifecycle serving: per-request priorities and
+//!                deadlines, token-budget admission, typed outcomes, and
+//!                a ServerStats block
 //!   arena        judged Elo tournament between adapters on one base
 //!   quantize     quantization round-trip report for a datatype
 //!   memory       analytical memory planner (Figure 6 / Table 6)
@@ -25,7 +28,9 @@ use qlora::coordinator::trainer::{TrainOptions, Trainer};
 use qlora::data::batching::Batcher;
 use qlora::data::synthetic::{corpus, eval_set, CorpusKind, EvalSuite};
 use qlora::data::tokenizer::Tokenizer;
-use qlora::engine::{DecodeMode, Engine, Sampler, BASE_ADAPTER};
+use qlora::engine::{
+    DecodeMode, Engine, GenRequest, Priority, Sampler, BASE_ADAPTER,
+};
 use qlora::eval::arena::run_arena;
 use qlora::eval::Judge;
 use qlora::experiments::{runner, Ctx};
@@ -54,6 +59,9 @@ fn usage() -> &'static str {
      --prompt \"rev abc\" [--prompts \"a|b|...\" (any count: continuous \
      batching)] [--decode auto|cached|full] [--stream] [--greedy] \
      [--top-p P] [--top-k K] [--temperature T] [--max-new N]\n\
+       serve       --artifact <name> [--ckpt ...] [--adapter <name>] \
+     --requests \"spec|spec|...\" (spec: [high|normal|low[@<ms>]:]prompt) \
+     [--token-budget N] [--decode ...] [sampling flags as generate]\n\
        arena       --artifact <name> --adapters \"tuned=ck.tensors[,...]\" \
      [--n-prompts N] [--judge gpt4|human] [--orderings N]\n\
        quantize    [--dtype nf4] [--block 64] [--dq]\n\
@@ -70,6 +78,36 @@ fn corpus_kind(name: &str) -> Result<CorpusKind> {
         .ok_or_else(|| anyhow::anyhow!(
             "unknown corpus {name:?}; one of: {}",
             CorpusKind::all().map(|k| k.name()).join(", ")))
+}
+
+/// Parse one `serve` request spec: `[high|normal|low[@<deadline ms>]:]
+/// prompt`. A bare prompt is `Normal` priority with no deadline; a
+/// prompt that happens to start with a priority word followed by `:` can
+/// be escaped as `normal:high: actual prompt`.
+fn parse_request_spec(spec: &str) -> Result<GenRequest> {
+    let Some((head, rest)) = spec.split_once(':') else {
+        return Ok(GenRequest::new(spec));
+    };
+    let (prio_word, deadline_ms) = match head.split_once('@') {
+        Some((p, ms)) => (p, Some(ms)),
+        None => (head, None),
+    };
+    let priority = match prio_word.trim() {
+        "high" => Priority::High,
+        "normal" => Priority::Normal,
+        "low" => Priority::Low,
+        // not a priority prefix: the colon belongs to the prompt itself
+        _ => return Ok(GenRequest::new(spec)),
+    };
+    let mut req = GenRequest::new(rest.trim()).priority(priority);
+    if let Some(ms) = deadline_ms {
+        let ms: u64 = ms.trim().parse().map_err(|_| {
+            anyhow::anyhow!("bad deadline {ms:?} in request spec {spec:?} \
+                             (expected milliseconds)")
+        })?;
+        req = req.deadline(std::time::Duration::from_millis(ms));
+    }
+    Ok(req)
 }
 
 /// Build the serving engine for `--artifact`, loading `--ckpt` (if given)
@@ -249,6 +287,57 @@ fn run() -> Result<()> {
                     println!("{prompt} -> {out}");
                 }
             }
+        }
+        "serve" => {
+            let engine = engine_from_args(&args, &artifacts_dir)?;
+            let adapter = args.get_or(
+                "adapter",
+                if args.get("ckpt").is_some() { "ckpt" } else { BASE_ADAPTER },
+            );
+            let decode = match args.get_or("decode", "auto").as_str() {
+                "auto" => DecodeMode::Auto,
+                "cached" => DecodeMode::Cached,
+                "full" => DecodeMode::Full,
+                other => bail!("--decode must be auto|cached|full, \
+                                got {other:?}"),
+            };
+            let mut builder = engine
+                .session()
+                .adapter(&adapter)
+                .sampler(Sampler::from_args(&args, 32)?)
+                .greedy(args.flag("greedy"))
+                .seed(args.u64_or("seed", 0)?)
+                .decode(decode);
+            if let Some(budget) = args.get("token-budget") {
+                builder = builder.token_budget(budget.parse()?);
+            }
+            let mut session = builder.build()?;
+            let spec = args.get("requests").ok_or_else(|| {
+                anyhow::anyhow!("--requests \"spec|spec|...\" required \
+                                 (spec: [high|normal|low[@<ms>]:]prompt)")
+            })?;
+            let requests = spec
+                .split('|')
+                .map(|part| parse_request_spec(part.trim()))
+                .collect::<Result<Vec<_>>>()?;
+            let prompts: Vec<String> =
+                requests.iter().map(|r| r.prompt.clone()).collect();
+            let report = session.serve(requests)?;
+            for (p, out) in prompts.iter().zip(report.outputs.iter()) {
+                println!("[{:?}] {} -> {}", out.outcome, p, out.text);
+            }
+            let s = &report.stats;
+            println!("--- server stats ---");
+            println!("{}", s.summary());
+            println!(
+                "token budget {}; elapsed {:.1} ms",
+                if s.token_budget == usize::MAX {
+                    "unbounded".to_string()
+                } else {
+                    s.token_budget.to_string()
+                },
+                s.elapsed.as_secs_f64() * 1e3
+            );
         }
         "arena" => {
             let engine = engine_from_args(&args, &artifacts_dir)?;

@@ -34,6 +34,24 @@ impl TensorSpec {
     pub fn elems(&self) -> usize {
         self.shape.iter().product::<usize>().max(1)
     }
+
+    /// Bytes per element for this spec's dtype. Half-precision dtypes
+    /// (f16/bf16) are 2 bytes — sizing them as 4 would double-count
+    /// every frozen tensor in memory-budget math (e.g. the paged
+    /// optimizer's device budget). Unknown dtypes fall back to 4.
+    pub fn dtype_bytes(&self) -> usize {
+        match self.dtype.as_str() {
+            "u8" | "i8" | "bool" => 1,
+            "f16" | "bf16" | "u16" | "i16" => 2,
+            "f64" | "i64" | "u64" => 8,
+            _ => 4, // f32, i32, u32, and a conservative default
+        }
+    }
+
+    /// Total bytes of this tensor (`elems × dtype width`).
+    pub fn nbytes(&self) -> usize {
+        self.elems() * self.dtype_bytes()
+    }
 }
 
 /// Model configuration mirrored from `python/compile/configs.py`.
@@ -221,5 +239,23 @@ mod tests {
         assert!(a.prefill_hlo.is_none() && a.decode_hlo.is_none());
         assert!(a.cache_sig.is_empty());
         assert!(m.get("missing").is_err());
+    }
+
+    #[test]
+    fn dtype_widths_are_real_not_all_four_bytes() {
+        let spec = |dtype: &str| TensorSpec {
+            name: "t".into(),
+            dtype: dtype.into(),
+            shape: vec![3, 5],
+        };
+        assert_eq!(spec("u8").dtype_bytes(), 1);
+        assert_eq!(spec("f16").dtype_bytes(), 2);
+        assert_eq!(spec("bf16").dtype_bytes(), 2);
+        assert_eq!(spec("f32").dtype_bytes(), 4);
+        assert_eq!(spec("i32").dtype_bytes(), 4);
+        assert_eq!(spec("f64").dtype_bytes(), 8);
+        assert_eq!(spec("mystery").dtype_bytes(), 4, "unknown -> 4");
+        assert_eq!(spec("bf16").nbytes(), 30);
+        assert_eq!(spec("u8").nbytes(), 15);
     }
 }

@@ -8,7 +8,7 @@
 
 use std::fs;
 use std::io::Write;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
@@ -105,8 +105,9 @@ impl Tensor {
     }
 }
 
-/// Write tensors preserving order.
-pub fn write_tensors(path: &Path, tensors: &[Tensor]) -> Result<()> {
+/// Write tensors preserving order, returning the (writable) file handle
+/// so callers that need durability can fsync it.
+fn write_tensors_file(path: &Path, tensors: &[Tensor]) -> Result<fs::File> {
     let mut entries = Vec::new();
     let mut offset = 0usize;
     for t in tensors {
@@ -132,7 +133,62 @@ pub fn write_tensors(path: &Path, tensors: &[Tensor]) -> Result<()> {
     for t in tensors {
         f.write_all(&t.data)?;
     }
-    Ok(())
+    Ok(f)
+}
+
+/// Write tensors preserving order.
+pub fn write_tensors(path: &Path, tensors: &[Tensor]) -> Result<()> {
+    write_tensors_file(path, tensors).map(|_| ())
+}
+
+/// Write tensors atomically: the bytes go to a hidden temp file in the
+/// *same* directory (same filesystem, so the final step is a true
+/// `rename(2)`), are fsynced, and only then renamed over `path`. A crash
+/// mid-write leaves the previous file intact instead of a truncated,
+/// unreadable `.tensors` — checkpoints must never corrupt the only copy
+/// of the run state.
+pub fn write_tensors_atomic(path: &Path, tensors: &[Tensor]) -> Result<()> {
+    let file_name = path
+        .file_name()
+        .ok_or_else(|| anyhow!("no file name in {path:?}"))?;
+    let mut tmp_name = std::ffi::OsString::from(".");
+    tmp_name.push(file_name);
+    tmp_name.push(format!(".tmp.{}", std::process::id()));
+    let tmp: PathBuf = match path.parent() {
+        Some(dir) if !dir.as_os_str().is_empty() => dir.join(&tmp_name),
+        _ => PathBuf::from(&tmp_name),
+    };
+    let result = write_tensors_file(&tmp, tensors).and_then(|f| {
+        // flush to disk (via the still-writable handle — a read-only
+        // reopen cannot fsync on every platform) before the rename
+        // makes the bytes visible; a sync failure must fail the save,
+        // not fake durability
+        f.sync_all().with_context(|| format!("fsync {tmp:?}"))?;
+        drop(f);
+        fs::rename(&tmp, path)
+            .with_context(|| format!("atomic rename {tmp:?} -> {path:?}"))?;
+        // the rename itself lives in the directory entry: fsync the
+        // parent too, or a crash right after a "successful" save can
+        // roll the file back to its previous version (unix only — on
+        // other platforms opening a directory for sync is not portable)
+        #[cfg(unix)]
+        {
+            let dir: &Path = match path.parent() {
+                Some(d) if !d.as_os_str().is_empty() => d,
+                _ => Path::new("."),
+            };
+            let d = fs::File::open(dir)
+                .with_context(|| format!("open dir {dir:?} for fsync"))?;
+            d.sync_all().with_context(|| format!("fsync dir {dir:?}"))?;
+        }
+        Ok(())
+    });
+    if result.is_err() {
+        // never leave a straggler temp file behind a failed save (after
+        // a successful rename the temp no longer exists; this is a no-op)
+        let _ = fs::remove_file(&tmp);
+    }
+    result
 }
 
 /// Read all tensors (order preserved).
@@ -212,6 +268,37 @@ mod tests {
         assert_eq!(back[3].to_f32().unwrap(), vec![42.0]);
         assert_eq!(find(&back, "tok").unwrap().name, "tok");
         assert!(find(&back, "nope").is_err());
+    }
+
+    #[test]
+    fn atomic_write_roundtrips_and_leaves_no_temp_files() {
+        let dir = std::env::temp_dir().join("qlora_tio_atomic");
+        fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ckpt.tensors");
+        let v1 = vec![Tensor::f32("a", vec![2], &[1.0, 2.0])];
+        write_tensors_atomic(&path, &v1).unwrap();
+        assert_eq!(read_tensors(&path).unwrap()[0].to_f32().unwrap(),
+                   vec![1.0, 2.0]);
+        // overwriting an existing checkpoint replaces it atomically
+        let v2 = vec![Tensor::f32("a", vec![2], &[3.0, 4.0])];
+        write_tensors_atomic(&path, &v2).unwrap();
+        assert_eq!(read_tensors(&path).unwrap()[0].to_f32().unwrap(),
+                   vec![3.0, 4.0]);
+        // no `.ckpt.tensors.tmp.*` stragglers
+        let leftovers: Vec<_> = fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains(".tmp."))
+            .collect();
+        assert!(leftovers.is_empty(), "temp files left: {leftovers:?}");
+        // a bare relative file name (no parent directory) also works
+        let cwd_rel = PathBuf::from(format!(
+            "qlora_tio_atomic_rel_{}.tensors",
+            std::process::id()
+        ));
+        write_tensors_atomic(&cwd_rel, &v1).unwrap();
+        assert!(read_tensors(&cwd_rel).is_ok());
+        let _ = fs::remove_file(&cwd_rel);
     }
 
     #[test]

@@ -1,0 +1,231 @@
+//! Request-lifecycle serving over real artifacts: typed outcomes,
+//! cancellation, deadlines, token-budget admission and server stats
+//! through `Session::serve`, end to end. Each test skips with a message
+//! when artifacts are not built, so `cargo test -q` is green from a
+//! fresh clone; the pure scheduling policy itself is covered without
+//! artifacts by the `engine::scheduler` unit tests and
+//! `tests/prop_scheduler.rs`.
+
+use std::rc::Rc;
+use std::time::Duration;
+
+use qlora::engine::{
+    DecodeMode, Engine, GenRequest, JobOutcome, Priority, Sampler,
+};
+use qlora::runtime::artifact::Manifest;
+use qlora::runtime::client::Runtime;
+
+// PjRtClient is single-threaded (Rc internally), so each test builds its
+// own runtime; executable compilation is cached per-runtime only.
+fn env() -> Option<(Rc<Runtime>, Manifest)> {
+    let dir = Manifest::default_dir();
+    let Ok(manifest) = Manifest::load(&dir) else {
+        eprintln!(
+            "skipped: artifacts not built in {dir:?} — run `make artifacts` \
+             to exercise the serve tests"
+        );
+        return None;
+    };
+    let rt = match Runtime::cpu() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipped: PJRT CPU runtime unavailable: {e:#}");
+            return None;
+        }
+    };
+    Some((Rc::new(rt), manifest))
+}
+
+fn engine(rt: &Rc<Runtime>, manifest: &Manifest) -> Option<Engine> {
+    match Engine::new(rt.clone(), manifest, "e2e") {
+        Ok(eng) => Some(eng),
+        Err(e) => {
+            eprintln!("skipped: artifact \"e2e\" unavailable: {e:#}");
+            None
+        }
+    }
+}
+
+#[test]
+fn serve_matches_generate_batch_and_reports_done_outcomes() {
+    let Some((rt, manifest)) = env() else { return };
+    let Some(eng) = engine(&rt, &manifest) else { return };
+    let sampler = Sampler { max_new_tokens: 8, ..Sampler::default() };
+    let prompts = ["copy ab", "rev abcd", "up hi"];
+    let mut s = eng
+        .session()
+        .sampler(sampler)
+        .greedy(true)
+        .build()
+        .unwrap();
+    let batch = s.generate_batch(&prompts).unwrap();
+    let report = s
+        .serve(prompts.iter().map(|p| GenRequest::new(*p)).collect())
+        .unwrap();
+    assert_eq!(report.outputs.len(), prompts.len());
+    for (out, expect) in report.outputs.iter().zip(batch.iter()) {
+        assert_eq!(out.outcome, JobOutcome::Done, "plain prompts end Done");
+        assert_eq!(&out.text, expect, "serve == generate_batch (greedy)");
+    }
+    let st = &report.stats;
+    assert_eq!(st.submitted, prompts.len() as u64);
+    assert_eq!(st.completed, prompts.len() as u64);
+    assert_eq!(st.cancelled + st.deadline_exceeded + st.preemptions, 0);
+    assert!(st.elapsed > Duration::from_secs(0), "elapsed was filled in");
+    if st.tokens_generated > 0 {
+        assert!(st.tokens_per_sec() > 0.0);
+    }
+}
+
+#[test]
+fn mixed_priority_workload_with_cancellation_and_deadline() {
+    let Some((rt, manifest)) = env() else { return };
+    let Some(eng) = engine(&rt, &manifest) else { return };
+    let batch = eng.spec.cfg.batch;
+    let sampler = Sampler { max_new_tokens: 6, ..Sampler::default() };
+    let mut s = eng
+        .session()
+        .sampler(sampler)
+        .greedy(true)
+        .build()
+        .unwrap();
+    // more requests than rows, mixed priorities, one cancellable, one
+    // with an already-expired deadline (it must never run)
+    let mut requests: Vec<GenRequest> = (0..batch + 2)
+        .map(|i| {
+            GenRequest::new(format!("rev p{i}")).priority(match i % 3 {
+                0 => Priority::High,
+                1 => Priority::Normal,
+                _ => Priority::Low,
+            })
+        })
+        .collect();
+    let (cancellable, handle) =
+        GenRequest::new("copy cancel me").cancellable();
+    requests.push(cancellable);
+    let n_cancel = requests.len() - 1;
+    requests.push(
+        GenRequest::new("copy too late")
+            .deadline(Duration::from_millis(0)),
+    );
+    let n_deadline = requests.len() - 1;
+    let n = requests.len();
+
+    // cancel mid-flight from the step callback; record how quickly the
+    // preemption lands
+    let mut cancel_step = None;
+    let mut preempted_step = None;
+    let report = s
+        .serve_with(requests, |p| {
+            if p.step == 1 {
+                cancel_step = Some(p.step);
+                handle.cancel();
+            }
+            if p.stats.preemptions > 0 && preempted_step.is_none() {
+                preempted_step = Some(p.step);
+            }
+        })
+        .unwrap();
+
+    assert_eq!(report.outputs.len(), n);
+    assert_eq!(
+        report.outputs[n_deadline].outcome,
+        JobOutcome::DeadlineExceeded,
+        "expired deadline must never run"
+    );
+    assert_eq!(report.outputs[n_deadline].text, "");
+    assert_eq!(
+        report.outputs[n_cancel].outcome,
+        JobOutcome::Cancelled,
+        "cancel handle must retire the request"
+    );
+    for (i, out) in report.outputs.iter().enumerate() {
+        if i != n_cancel && i != n_deadline {
+            assert_eq!(out.outcome, JobOutcome::Done, "request {i}");
+        }
+    }
+    // the cancelled row was freed within one step of the cancel landing
+    // (it may have been queued rather than in flight, in which case no
+    // preemption is recorded at all — both are within-one-step retires)
+    if let (Some(c), Some(p)) = (cancel_step, preempted_step) {
+        assert!(
+            p <= c + 1,
+            "cancel at step {c} only freed the row at step {p}"
+        );
+    }
+    let st = &report.stats;
+    assert_eq!(st.submitted, n as u64);
+    assert_eq!(st.completed, (n - 2) as u64);
+    assert_eq!(st.cancelled, 1);
+    assert_eq!(st.deadline_exceeded, 1);
+    if st.tokens_generated > 0 {
+        assert!(st.mean_ttft_us > 0.0, "ttft recorded with first tokens");
+    }
+}
+
+#[test]
+fn tight_token_budget_serializes_but_preserves_outputs() {
+    let Some((rt, manifest)) = env() else { return };
+    let Some(eng) = engine(&rt, &manifest) else { return };
+    let sampler = Sampler { max_new_tokens: 6, ..Sampler::default() };
+    let prompts = ["copy ab", "rev cd", "up ef"];
+    // a budget far below batch × seq_len: admission is gated by tokens,
+    // not row count, so requests run (near-)serially — outputs must be
+    // bit-identical to the roomy continuous batch all the same
+    let mut tight = eng
+        .session()
+        .sampler(sampler.clone())
+        .greedy(true)
+        .token_budget(16)
+        .build()
+        .unwrap();
+    let report = tight
+        .serve(prompts.iter().map(|p| GenRequest::new(*p)).collect())
+        .unwrap();
+    let mut roomy = eng
+        .session()
+        .sampler(sampler)
+        .greedy(true)
+        .build()
+        .unwrap();
+    let expect = roomy.generate_batch(&prompts).unwrap();
+    for ((out, expect), p) in
+        report.outputs.iter().zip(expect.iter()).zip(prompts.iter())
+    {
+        assert_eq!(out.outcome, JobOutcome::Done);
+        assert_eq!(&out.text, expect, "budget changed the output for {p:?}");
+    }
+}
+
+#[test]
+fn forcing_decode_modes_through_serve_agree() {
+    let Some((rt, manifest)) = env() else { return };
+    let Some(eng) = engine(&rt, &manifest) else { return };
+    if !eng.has_cached_decode() {
+        eprintln!("skipped: artifact \"e2e\" has no decode graphs");
+        return;
+    }
+    let sampler = Sampler { max_new_tokens: 6, ..Sampler::default() };
+    let prompts = ["copy ab", "rev p0", "rev p1"];
+    let mut texts = Vec::new();
+    for mode in [DecodeMode::Cached, DecodeMode::Full] {
+        let mut s = eng
+            .session()
+            .sampler(sampler.clone())
+            .greedy(true)
+            .decode(mode)
+            .build()
+            .unwrap();
+        let report = s
+            .serve(prompts.iter().map(|p| GenRequest::new(*p)).collect())
+            .unwrap();
+        texts.push(
+            report
+                .outputs
+                .into_iter()
+                .map(|o| o.text)
+                .collect::<Vec<_>>(),
+        );
+    }
+    assert_eq!(texts[0], texts[1], "cached serve diverged from full");
+}

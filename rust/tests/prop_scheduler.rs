@@ -1,0 +1,239 @@
+//! Property-style tests for the request-lifecycle scheduler: randomized
+//! submit/admit/push/cancel/deadline/retire interleavings (driven by the
+//! repo's deterministic RNG — no artifacts, no runtime) must preserve the
+//! core serving invariants:
+//!
+//! 1. every job reaches **exactly one** terminal [`JobOutcome`] — never a
+//!    silent empty result, never two outcomes;
+//! 2. results come back in **submission order** (job `i`'s tokens are job
+//!    `i`'s tokens, checked by stamping each push with its job id);
+//! 3. the **resident-token budget is never exceeded**: the sum of
+//!    reserved (`prompt + max_new`) tokens across resident rows stays at
+//!    or below the admission budget at every step (resident `prompt +
+//!    generated` is bounded by reserved, so it is covered too);
+//! 4. row misuse (out-of-range, double retire) is an `Err`, not a panic.
+//!
+//! The driving loop mirrors `Session::serve_with` exactly: poll →
+//! admit → retire-exhausted → step (push or EOS-retire), with time
+//! fabricated instead of wall-clock so deadlines are deterministic.
+
+use std::time::{Duration, Instant};
+
+use qlora::engine::scheduler::{
+    JobOutcome, Priority, Request, Scheduler,
+};
+use qlora::util::rng::Rng;
+
+/// Everything the test remembers about one submitted job.
+struct Spec {
+    max_new: usize,
+    cancel_at_step: Option<usize>,
+    has_deadline: bool,
+    handle: qlora::engine::CancelHandle,
+}
+
+fn random_priority(rng: &mut Rng) -> Priority {
+    match rng.below(3) {
+        0 => Priority::Low,
+        1 => Priority::Normal,
+        _ => Priority::High,
+    }
+}
+
+/// One randomized serving run; returns whether it took the abort path.
+fn run_case(seed: u64) -> bool {
+    let mut rng = Rng::new(seed);
+    let capacity = 1 + rng.below(4);
+    let seq_len = 8 + rng.below(24); // 8..32
+    let n_jobs = 1 + rng.below(12);
+    // budget ≥ seq_len so every single job fits (mirrors the session,
+    // which clamps max_new to seq_len - prompt_len): the invariant below
+    // can then be asserted strictly, with no sole-tenant carve-out
+    let budget = if rng.below(3) == 0 {
+        usize::MAX
+    } else {
+        seq_len + rng.below(3 * seq_len)
+    };
+    let mut sched = Scheduler::with_budget(capacity, budget);
+    let abort_at = (rng.below(4) == 0).then(|| rng.below(30));
+
+    // jobs trickle in: each has a submission step, some get cancelled at
+    // a later step, some carry (sometimes already-tight) deadlines
+    let mut arrivals: Vec<(usize, Request)> = Vec::new();
+    let mut specs: Vec<Spec> = Vec::new();
+    for _ in 0..n_jobs {
+        let at_step = rng.below(12);
+        let prompt_len = 1 + rng.below(seq_len - 1);
+        let max_new = rng.below(seq_len - prompt_len + 1);
+        let mut req = Request::new(vec![0; prompt_len], max_new)
+            .priority(random_priority(&mut rng));
+        let has_deadline = rng.below(4) == 0;
+        if has_deadline {
+            req = req.deadline(Duration::from_millis(rng.below(60) as u64));
+        }
+        arrivals.push((at_step, req));
+        specs.push(Spec {
+            max_new,
+            cancel_at_step: (rng.below(5) == 0).then(|| rng.below(25)),
+            has_deadline,
+            handle: qlora::engine::CancelHandle::new(),
+        });
+    }
+
+    // fabricated clock: 1-4 ms per loop iteration
+    let mut now = Instant::now();
+    let mut step = 0usize;
+    let mut submitted = vec![false; n_jobs];
+    // scheduler job ids follow *submission* order, which differs from
+    // the arrivals order when arrival steps differ — map back to specs
+    let mut spec_of_job: Vec<usize> = Vec::new();
+    let mut aborted = false;
+    loop {
+        let all_submitted = submitted.iter().all(|&s| s);
+        if all_submitted && sched.finished() {
+            break;
+        }
+        if abort_at == Some(step) {
+            aborted = true;
+            break;
+        }
+        assert!(step < 10_000, "livelock: case {seed} never finished");
+        now += Duration::from_millis(1 + rng.below(4) as u64);
+
+        for (id, (at, req)) in arrivals.iter().enumerate() {
+            if *at == step.min(11) && !submitted[id] {
+                let (jid, _) = sched.submit_with_handle(
+                    req.clone(),
+                    specs[id].handle.clone(),
+                    now,
+                );
+                assert_eq!(jid, spec_of_job.len(), "ids are submission order");
+                spec_of_job.push(id);
+                submitted[id] = true;
+            }
+        }
+        for spec in &specs {
+            if spec.cancel_at_step == Some(step) {
+                spec.handle.cancel();
+            }
+        }
+
+        // --- the serve loop, verbatim ---
+        sched.poll(now);
+        sched.admit(now);
+        // invariant 3: the budget gates admission at every step
+        assert!(
+            sched.reserved_tokens() <= budget,
+            "case {seed}: reserved {} > budget {budget}",
+            sched.reserved_tokens()
+        );
+        assert!(
+            sched.resident_tokens() <= sched.reserved_tokens(),
+            "case {seed}: resident above reserved"
+        );
+        for row in sched.active_rows() {
+            if sched.budget_exhausted(row, seq_len) {
+                sched.retire(row).unwrap();
+            }
+        }
+        for row in sched.active_rows() {
+            let id = sched.job_in(row).expect("active row has a job");
+            if rng.below(8) == 0 {
+                sched.retire(row).unwrap(); // "EOS"
+            } else {
+                // stamp every token with its job id (invariant 2)
+                sched.push(row, 1000 + id as i32, now).unwrap();
+            }
+        }
+        step += 1;
+    }
+
+    let results = sched.take_results();
+    // invariant 1: exactly one terminal outcome per submitted job
+    let n_submitted = submitted.iter().filter(|&&s| s).count();
+    assert_eq!(
+        results.len(),
+        n_submitted,
+        "case {seed}: every submitted job must appear exactly once"
+    );
+    for (id, r) in results.iter().enumerate() {
+        // invariant 2: job i's slot holds only job i's tokens
+        assert!(
+            r.tokens.iter().all(|&t| t == 1000 + id as i32),
+            "case {seed}: job {id} result holds foreign tokens {:?}",
+            r.tokens
+        );
+        let spec = &specs[spec_of_job[id]];
+        assert!(
+            r.tokens.len() <= spec.max_new,
+            "case {seed}: job {id} overran its max_new"
+        );
+        if !aborted {
+            assert_ne!(
+                r.outcome,
+                JobOutcome::Aborted,
+                "case {seed}: completed run may not leave Aborted jobs"
+            );
+        }
+        // a job nobody interfered with must finish normally
+        if !aborted && spec.cancel_at_step.is_none() && !spec.has_deadline {
+            assert_eq!(
+                r.outcome,
+                JobOutcome::Done,
+                "case {seed}: undisturbed job {id} must end Done"
+            );
+        }
+    }
+    aborted
+}
+
+#[test]
+fn randomized_lifecycles_preserve_scheduler_invariants() {
+    let mut saw_abort = false;
+    for case in 0..120u64 {
+        saw_abort |= run_case(0xC0FFEE ^ case);
+    }
+    assert!(saw_abort, "abort path never exercised — widen the sampling");
+}
+
+#[test]
+fn random_row_misuse_never_panics() {
+    let mut rng = Rng::new(7);
+    let now = Instant::now();
+    for _ in 0..50 {
+        let capacity = 1 + rng.below(3);
+        let mut sched = Scheduler::with_budget(capacity, 64);
+        for _ in 0..200 {
+            match rng.below(6) {
+                0 => {
+                    let len = 1 + rng.below(6);
+                    sched.submit(Request::new(vec![1; len], rng.below(8)), now);
+                }
+                1 => {
+                    sched.admit(now);
+                }
+                2 => {
+                    // rows may be free, active, or out of range — all fine
+                    let _ = sched.push(rng.below(capacity + 3), 1, now);
+                }
+                3 => {
+                    let _ = sched.retire(rng.below(capacity + 3));
+                }
+                4 => {
+                    sched.poll(now);
+                }
+                _ => {
+                    let row = rng.below(capacity + 3);
+                    let _ = sched.out_len(row);
+                    let _ = sched.total_len(row);
+                    let _ = sched.budget_exhausted(row, 16);
+                    let _ = sched.job_in(row);
+                    let _ = sched.stats();
+                }
+            }
+        }
+        // whatever state the fuzz left behind, results are still typed
+        let n = sched.stats().submitted as usize;
+        assert_eq!(sched.take_results().len(), n);
+    }
+}
