@@ -3,7 +3,8 @@
 
 ARTIFACTS ?= artifacts
 
-.PHONY: artifacts artifacts-large test test-python test-rust bench-quant
+.PHONY: artifacts artifacts-large test test-python test-rust bench-quant \
+        bench-generate bench-compare
 
 # Lower every model config to HLO text + init tensors + manifest.
 artifacts:
@@ -25,3 +26,21 @@ test-rust:
 # persisted machine-readably at the repo root (tracked from PR 3 onward).
 bench-quant:
 	cd rust && cargo bench --bench bench_quant -- --json ../BENCH_quant.json
+
+# Serving perf trajectory: decode tokens/sec, lifecycle-serve overhead,
+# and the shared-prefix capacity comparison (dense reservation vs
+# block-granular KV admission). Needs `make artifacts` first.
+bench-generate:
+	cd rust && cargo bench --bench bench_generate -- --json ../BENCH_generate.json
+
+# After re-running the bench targets (which overwrite the working-tree
+# BENCH_*.json), diff them against the last committed baselines and fail
+# on >25% mean-time regressions. Placeholder baselines (committed before
+# any machine could run the benches) compare vacuously green.
+bench-compare:
+	@git show HEAD:BENCH_quant.json > .bench_baseline.json && \
+	 python3 scripts/bench_compare.py .bench_baseline.json BENCH_quant.json; \
+	 st=$$?; rm -f .bench_baseline.json; exit $$st
+	@git show HEAD:BENCH_generate.json > .bench_baseline.json && \
+	 python3 scripts/bench_compare.py .bench_baseline.json BENCH_generate.json; \
+	 st=$$?; rm -f .bench_baseline.json; exit $$st

@@ -1,0 +1,551 @@
+"""Python mirror of the Rust KV block manager + block-granular admission
+(`rust/src/paged/blocks.rs`, `rust/src/engine/scheduler.rs`).
+
+The build container has no Rust toolchain (see
+`.claude/skills/verify/SKILL.md`), so this line-for-line port is the
+*runnable* verification of the algorithm: the same invariants the Rust
+property tests (`rust/tests/prop_blocks.rs`) assert are re-derived here
+against an independent implementation.
+
+Invariants mirrored:
+  1. refcounts never leak: after every row detaches, allocated == freed;
+  2. CoW never mutates a shared block: each row's concatenated block
+     contents equal its own externally-tracked history at every step;
+  3. blocks in use never exceed the pool at any step of a serve loop;
+  4. a shared-prefix workload admits strictly more rows than the dense
+     worst-case `prompt + max_new` reservation at the same token budget;
+  5. results are bit-identical with prefix sharing on and off;
+  6. both admission code paths age queued jobs identically (the
+     double-bookkeeping fix in `Scheduler::admit`).
+"""
+
+import random
+
+import pytest
+
+# ---------------------------------------------------------------------------
+# BlockPool mirror (paged/pool.rs)
+
+
+class BlockPool:
+    def __init__(self, n):
+        self.n = n
+        self.refcounts = [0] * n
+        # descending stack so pop() hands out ascending ids, as in Rust
+        self.free = list(range(n - 1, -1, -1))
+        self.allocated = 0
+        self.freed = 0
+
+    def free_blocks(self):
+        return len(self.free)
+
+    def in_use(self):
+        return self.n - len(self.free)
+
+    def alloc(self):
+        if not self.free:
+            return None
+        bid = self.free.pop()
+        self.refcounts[bid] = 1
+        self.allocated += 1
+        return bid
+
+    def retain(self, bid):
+        assert self.refcounts[bid] > 0, f"retain of free block {bid}"
+        self.refcounts[bid] += 1
+
+    def release(self, bid):
+        assert self.refcounts[bid] > 0, f"release of free block {bid}"
+        self.refcounts[bid] -= 1
+        if self.refcounts[bid] == 0:
+            self.free.append(bid)
+            self.freed += 1
+            return True
+        return False
+
+
+# ---------------------------------------------------------------------------
+# BlockManager mirror (paged/blocks.rs)
+
+
+def blocks_for(tokens, block_tokens):
+    return -(-tokens // block_tokens)  # div_ceil
+
+
+class BlockManager:
+    def __init__(self, block_tokens, n_blocks, sharing=True, headroom=1):
+        assert block_tokens >= 1 and n_blocks >= 1
+        self.bt = block_tokens
+        self.sharing = sharing
+        self.headroom = headroom
+        self.pool = BlockPool(n_blocks)
+        # per-slot content: (tokens list, parent id, registered flag)
+        self.blocks = [None] * n_blocks
+        self.share = {}  # (parent, tuple(tokens)) -> block id
+        self.rows = {}  # row -> [block ids]
+        self.row_len = {}  # row -> tokens covered
+        self.shared_hits = 0
+        self.cow_forks = 0
+        self.swap_outs = 0
+
+    def n_blocks(self):
+        return self.pool.n
+
+    def free_blocks(self):
+        return self.pool.free_blocks()
+
+    def blocks_in_use(self):
+        return self.pool.in_use()
+
+    def _chunks(self, history):
+        return [history[i:i + self.bt] for i in range(0, len(history), self.bt)]
+
+    def _key(self, bid):
+        tokens, parent, _ = self.blocks[bid]
+        return (parent, tuple(tokens))
+
+    def _try_register(self, bid):
+        if not self.sharing:
+            return
+        key = self._key(bid)
+        if key not in self.share:
+            self.share[key] = bid
+            tokens, parent, _ = self.blocks[bid]
+            self.blocks[bid] = (tokens, parent, True)
+
+    def _unregister(self, bid):
+        tokens, parent, registered = self.blocks[bid]
+        if registered:
+            assert self.share.pop((parent, tuple(tokens))) == bid
+            self.blocks[bid] = (tokens, parent, False)
+
+    def _shared_chain(self, history):
+        chain = []
+        if not self.sharing:
+            return chain
+        parent = None
+        for chunk in self._chunks(history):
+            bid = self.share.get((parent, tuple(chunk)))
+            if bid is None:
+                break
+            chain.append(bid)
+            parent = bid
+        return chain
+
+    def probe_attach(self, history):
+        return len(self._chunks(history)) - len(self._shared_chain(history))
+
+    def attach(self, row, history):
+        assert row not in self.rows and history
+        shared = self._shared_chain(history)
+        chunks = self._chunks(history)
+        fresh = len(chunks) - len(shared)
+        if fresh > self.pool.free_blocks():
+            raise MemoryError("pool exhausted")
+        for bid in shared:
+            self.pool.retain(bid)
+            self.shared_hits += 1
+        table = list(shared)
+        parent = table[-1] if table else None
+        for chunk in chunks[len(shared):]:
+            bid = self.pool.alloc()
+            self.blocks[bid] = (list(chunk), parent, False)
+            self._try_register(bid)
+            table.append(bid)
+            parent = bid
+        self.rows[row] = table
+        self.row_len[row] = len(history)
+        return len(shared)
+
+    def append(self, row, token):
+        assert row in self.rows, f"append to unattached row {row}"
+        table = self.rows[row]
+        pos = self.row_len[row] % self.bt
+        if pos == 0:
+            bid = self.pool.alloc()
+            if bid is None:
+                return "need_block"
+            parent = table[-1] if table else None
+            self.blocks[bid] = ([token], parent, False)
+            table.append(bid)
+            self.row_len[row] += 1
+            return "appended"
+        tail = table[-1]
+        if self.pool.refcounts[tail] > 1:
+            bid = self.pool.alloc()
+            if bid is None:
+                return "need_block"
+            tokens, parent, _ = self.blocks[tail]
+            self.blocks[bid] = (list(tokens) + [token], parent, False)
+            self.pool.release(tail)
+            self.cow_forks += 1
+            table[-1] = bid
+            self.row_len[row] += 1
+            return "appended"
+        self._unregister(tail)
+        self.blocks[tail][0].append(token)
+        self.row_len[row] += 1
+        return "appended"
+
+    def release_row(self, row):
+        table = self.rows.pop(row)
+        del self.row_len[row]
+        freed = 0
+        for bid in reversed(table):  # children before parents
+            if self.pool.release(bid):
+                self._unregister(bid)
+                self.blocks[bid] = None
+                freed += 1
+        return freed
+
+    def swap_out(self, row):
+        freed = self.release_row(row)
+        self.swap_outs += 1
+        return freed
+
+    def row_tokens(self, row):
+        if row not in self.rows:
+            return None
+        out = []
+        for bid in self.rows[row]:
+            out.extend(self.blocks[bid][0])
+        return out
+
+    def check_invariants(self):
+        refs = {}
+        for row, table in self.rows.items():
+            assert len(table) == blocks_for(self.row_len[row], self.bt)
+            covered = 0
+            for i, bid in enumerate(table):
+                refs[bid] = refs.get(bid, 0) + 1
+                got = len(self.blocks[bid][0])
+                if i + 1 < len(table):
+                    assert got == self.bt, "interior blocks are full"
+                covered += got
+            assert covered == self.row_len[row], "blocks cover the history"
+        for bid, n in refs.items():
+            assert self.pool.refcounts[bid] == n, f"refcount of block {bid}"
+        assert len(refs) == self.pool.in_use(), "live blocks all referenced"
+        for (parent, tokens), bid in self.share.items():
+            btokens, bparent, registered = self.blocks[bid]
+            assert registered and self.pool.refcounts[bid] > 0
+            assert parent == bparent and tokens == tuple(btokens)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler mirror (engine/scheduler.rs) — the admission/push/retire core;
+# no deadlines or cancellation (those paths predate this PR and are
+# covered by the Rust unit tests that do run elsewhere)
+
+AGING_ROUNDS = 32
+RANKS = {"low": 0, "normal": 1, "high": 2}
+
+
+class Scheduler:
+    def __init__(self, capacity, token_budget=None, block_cfg=None):
+        assert (token_budget is None) != (block_cfg is None)
+        self.rows = [None] * max(capacity, 1)  # each: dict or None
+        self.queue = []  # dicts: id, prompt, out
+        self.meta = []  # dicts: priority, max_new, waited
+        self.results = []  # None until terminal (outcome, tokens)
+        self.budget = token_budget
+        self.mgr = BlockManager(**block_cfg) if block_cfg else None
+        self.swapped = []
+
+    def submit(self, prompt, max_new, priority="normal"):
+        jid = len(self.results)
+        self.results.append(None)
+        self.meta.append(
+            {"priority": priority, "max_new": max_new, "waited": 0})
+        self.queue.append({"id": jid, "prompt": list(prompt), "out": []})
+        return jid
+
+    def rank(self, jid):
+        m = self.meta[jid]
+        return min(RANKS[m["priority"]] + m["waited"] // AGING_ROUNDS,
+                   RANKS["high"])
+
+    def reserved_tokens(self):
+        return sum(len(a["prompt"]) + self.meta[a["id"]]["max_new"]
+                   for a in self.rows if a)
+
+    def _pick_victim(self, below=None):
+        best = None
+        for r, a in enumerate(self.rows):
+            if a is None:
+                continue
+            rank = self.rank(a["id"])
+            if below is not None and rank >= below:
+                continue
+            # min by (rank, Reverse(id)): lowest rank, then largest id
+            key = (rank, -a["id"])
+            if best is None or key < best[0]:
+                best = (key, r)
+        return None if best is None else best[1]
+
+    def _swap_out_row(self, row):
+        a = self.rows[row]
+        self.rows[row] = None
+        self.mgr.swap_out(row)
+        self.swapped.append((row, a["id"]))
+        self.queue.append(
+            {"id": a["id"], "prompt": a["prompt"], "out": a["out"]})
+
+    def admit(self):
+        placed = []
+        free = [r for r, a in enumerate(self.rows) if a is None]
+        if self.queue and free:
+            self.queue.sort(key=lambda q: (-self.rank(q["id"]), q["id"]))
+            if self.budget is not None:
+                reserved = self.reserved_tokens()
+                while self.queue and free:
+                    q = self.queue[0]
+                    need = len(q["prompt"]) + self.meta[q["id"]]["max_new"]
+                    if reserved != 0 and reserved + need > self.budget:
+                        break
+                    row = free.pop(0)
+                    self.queue.pop(0)
+                    reserved += need
+                    self.rows[row] = q
+                    placed.append((row, q["id"], q["prompt"] + q["out"]))
+            else:
+                mgr = self.mgr
+                while self.queue and free:
+                    q = self.queue[0]
+                    history = q["prompt"] + q["out"]
+                    if blocks_for(len(history), mgr.bt) > mgr.n_blocks():
+                        self.queue.pop(0)
+                        self.results[q["id"]] = ("aborted", q["out"])
+                        continue
+                    need = mgr.probe_attach(history)
+                    idle = not placed and all(a is None for a in self.rows)
+                    headroom = 0 if idle else mgr.headroom
+                    if need + headroom <= mgr.free_blocks():
+                        row = free.pop(0)
+                        self.queue.pop(0)
+                        mgr.attach(row, history)
+                        self.rows[row] = q
+                        placed.append((row, q["id"], history))
+                        continue
+                    victim = self._pick_victim(below=self.rank(q["id"]))
+                    if victim is None:
+                        break
+                    self._swap_out_row(victim)
+                    free.append(victim)
+        # the single post-round aging pass (the bug fix under test #6)
+        for q in self.queue:
+            self.meta[q["id"]]["waited"] += 1
+        return placed
+
+    def push(self, row, token):
+        a = self.rows[row]
+        assert a is not None, f"push into free row {row}"
+        if self.mgr is not None:
+            while True:
+                outcome = self.mgr.append(row, token)
+                if outcome == "appended":
+                    break
+                victim = self._pick_victim()
+                assert victim is not None, "row itself is resident"
+                self._swap_out_row(victim)
+                if victim == row:
+                    return False
+        a["out"].append(token)
+        return True
+
+    def retire(self, row):
+        a = self.rows[row]
+        self.rows[row] = None
+        if self.mgr is not None:
+            self.mgr.release_row(row)
+        self.results[a["id"]] = ("done", a["out"])
+
+    def budget_exhausted(self, row, seq_len):
+        a = self.rows[row]
+        return (len(a["out"]) >= self.meta[a["id"]]["max_new"]
+                or len(a["prompt"]) + len(a["out"]) >= seq_len)
+
+    def finished(self):
+        return not self.queue and all(a is None for a in self.rows)
+
+
+# ---------------------------------------------------------------------------
+# 1 + 2: manager lifecycle — no leaks, CoW isolation
+
+
+@pytest.mark.parametrize("seed", range(40))
+def test_refcounts_never_leak_and_cow_never_mutates_shared(seed):
+    rng = random.Random(0x5EED0000 + seed)
+    bt = rng.randint(1, 4)
+    n_rows = rng.randint(1, 6)
+    m = BlockManager(bt, rng.randint(4, 31),
+                     sharing=rng.random() < 0.75)
+    expected = [None] * n_rows
+    prefixes = [[rng.randrange(5) for _ in range(bt * rng.randint(1, 3))]
+                for _ in range(3)]
+    for _ in range(300):
+        row = rng.randrange(n_rows)
+        if expected[row] is None:
+            hist = list(rng.choice(prefixes))
+            hist += [rng.randrange(5)
+                     for _ in range(rng.randrange(2 * bt))]
+            if m.probe_attach(hist) > m.free_blocks():
+                with pytest.raises(MemoryError):
+                    m.attach(row, hist)
+            else:
+                shared = m.attach(row, hist)
+                assert shared + m.probe_attach(hist) >= shared  # sanity
+                expected[row] = hist
+        else:
+            op = rng.randrange(10)
+            if op == 0:
+                m.release_row(row)
+                expected[row] = None
+            elif op == 1:
+                m.swap_out(row)
+                expected[row] = None
+            else:
+                tok = rng.randrange(5)
+                if m.append(row, tok) == "appended":
+                    expected[row].append(tok)
+                else:
+                    assert m.free_blocks() == 0
+        m.check_invariants()
+        for r in range(n_rows):
+            assert m.row_tokens(r) == expected[r], (
+                f"row {r} content diverged (seed {seed})")
+    for row in range(n_rows):
+        if expected[row] is not None:
+            m.release_row(row)
+    assert m.blocks_in_use() == 0, "all blocks returned"
+    assert not m.share, "share map drained with the pool"
+    assert m.pool.allocated == m.pool.freed, "every allocation freed"
+
+
+# ---------------------------------------------------------------------------
+# 3 + 5: serve-loop mirror — pool bound at every step, sharing on/off
+# bit-identity, one outcome per job
+
+
+def run_serve(jobs, capacity, seq_len, block_cfg):
+    s = Scheduler(capacity, block_cfg=block_cfg)
+    for prompt, max_new in jobs:
+        s.submit(prompt, max_new)
+    steps = 0
+    while not s.finished():
+        steps += 1
+        assert steps < 10_000, "livelock"
+        s.admit()
+        s.swapped.clear()
+        assert s.mgr.blocks_in_use() <= s.mgr.n_blocks()
+        s.mgr.check_invariants()
+        for row in range(len(s.rows)):
+            if s.rows[row] and s.budget_exhausted(row, seq_len):
+                s.retire(row)
+        for row in range(len(s.rows)):
+            a = s.rows[row]
+            if a is None:
+                continue  # swapped out by an earlier push this step
+            s.push(row, 1000 * (a["id"] + 1) + len(a["out"]))
+        s.swapped.clear()
+    return s.results, s.mgr
+
+
+@pytest.mark.parametrize("seed", range(40))
+def test_blocks_mode_serving_preserves_lifecycles(seed):
+    rng = random.Random(0xB10C + seed)
+    bt = rng.randint(1, 4)
+    seq_len = rng.randint(8, 31)
+    capacity = rng.randint(1, 4)
+    per_row = blocks_for(seq_len, bt)
+    cfg = dict(block_tokens=bt, n_blocks=per_row + rng.randrange(16))
+    shared = list(range(rng.randint(1, seq_len // 2)))
+    jobs = []
+    for _ in range(rng.randint(1, 10)):
+        prompt = list(shared) if rng.random() < 0.5 else [rng.randrange(100)]
+        while len(prompt) < seq_len and rng.random() < 0.67:
+            prompt.append(rng.randrange(100))
+        jobs.append((prompt, rng.randint(0, seq_len - len(prompt))))
+    results, _ = run_serve(jobs, capacity, seq_len, cfg)
+    assert all(r is not None for r in results), "one outcome per job"
+    for jid, (outcome, tokens) in enumerate(results):
+        assert outcome == "done"
+        want = [1000 * (jid + 1) + i for i in range(jobs[jid][1])]
+        assert tokens == want, f"job {jid} tokens survived swaps"
+
+
+def test_results_identical_with_sharing_on_and_off():
+    jobs = [([3] * 8 + [50 + i], 6) for i in range(4)]
+    on, mgr_on = run_serve(
+        jobs, 4, 24, dict(block_tokens=4, n_blocks=12, sharing=True))
+    off, mgr_off = run_serve(
+        jobs, 4, 24, dict(block_tokens=4, n_blocks=12, sharing=False))
+    assert on == off, "outputs must not depend on prefix sharing"
+    assert mgr_on.shared_hits > 0 and mgr_off.shared_hits == 0
+
+
+# ---------------------------------------------------------------------------
+# 4: the admission-capacity acceptance criterion
+
+
+def test_shared_prefix_admits_more_rows_than_dense_reservation():
+    prompts = [[7] * 24 + [100 + i] for i in range(6)]
+    dense = Scheduler(8, token_budget=64)
+    for p in prompts:
+        dense.submit(p, 4)
+    dense_admitted = len(dense.admit())
+    assert dense_admitted == 2, "worst-case reservation admits 2 of 6"
+
+    blocks = Scheduler(8, block_cfg=dict(
+        block_tokens=8, n_blocks=blocks_for(64, 8)))
+    for p in prompts:
+        blocks.submit(p, 4)
+    blocks_admitted = len(blocks.admit())
+    assert blocks_admitted > dense_admitted
+    assert blocks_admitted == 4, "3 shared prefix blocks + 1 private each"
+    assert blocks.mgr.shared_hits == 9, "3 followers x 3 shared blocks"
+
+
+# ---------------------------------------------------------------------------
+# 6: both admission paths age queued jobs identically (the bug fix: the
+# two old aging loops could double-count or skip depending on the exit
+# path; the single post-round pass cannot)
+
+
+def test_both_admission_paths_age_queued_jobs_identically():
+    # path A: a free row exists, but admission stops mid-round
+    a = Scheduler(1, token_budget=10**9)
+    for p in range(3):
+        a.submit([p], 4)
+    a.admit()  # places job 0; jobs 1, 2 remain queued
+    # path B: no free row at all when the round starts
+    b = Scheduler(1, token_budget=10**9)
+    b.submit([0], 4)
+    b.admit()
+    for p in range(1, 3):
+        b.submit([p], 4)
+    b.admit()  # nothing placeable
+    for jid in (1, 2):
+        assert a.meta[jid]["waited"] == 1, f"path A aged job {jid} once"
+        assert a.meta[jid]["waited"] == b.meta[jid]["waited"]
+    # and the same invariant through the blocks path under pressure
+    c = Scheduler(1, block_cfg=dict(block_tokens=2, n_blocks=4))
+    for p in range(3):
+        c.submit([p, p, p], 2)
+    c.admit()
+    assert [c.meta[j]["waited"] for j in range(3)] == [0, 1, 1]
+
+
+def test_aging_promotes_a_starved_low_priority_job():
+    s = Scheduler(1, block_cfg=dict(block_tokens=2, n_blocks=8))
+    low = s.submit([9], 2, priority="low")
+    admitted_low = False
+    for round_ in range(2 * AGING_ROUNDS + 2):
+        s.submit([round_ % 50], 2, priority="high")
+        for row, jid, _ in s.admit():
+            if jid == low:
+                admitted_low = True
+            s.retire(row)
+        if admitted_low:
+            break
+    assert admitted_low, "aging must eventually admit the low job"

@@ -4,17 +4,49 @@
 //! generated length — the cached path's step cost must stay flat), the
 //! request-lifecycle serve path (mixed-priority workload, with the
 //! scheduler's `ServerStats` block: throughput, mean TTFT, preemptions),
-//! plus the adapter hot-swap overhead (must be tiny next to a forward).
-//! Uses the repo's mini-criterion harness (`util::bench`); requires
-//! `make artifacts`.
+//! the shared-prefix capacity comparison (N requests opening with one
+//! system prompt: block-granular admission with copy-on-write prefix
+//! sharing vs the dense worst-case token reservation — peak concurrent
+//! rows and tokens/sec), plus the adapter hot-swap overhead (must be
+//! tiny next to a forward). Uses the repo's mini-criterion harness
+//! (`util::bench`); requires `make artifacts`.
+//!
+//! Flags (after `--`):
+//!   --smoke        short budgets (CI bit-rot check)
+//!   --json <path>  write results as JSON (the perf trajectory file:
+//!                  `make bench-generate` writes BENCH_generate.json at
+//!                  the repo root)
+
+use std::path::PathBuf;
 
 use qlora::engine::{
     DecodeMode, Engine, GenRequest, Priority, Sampler, BASE_ADAPTER,
 };
 use qlora::runtime::artifact::Manifest;
 use qlora::util::bench::Bencher;
+use qlora::util::json::Value;
 
 fn main() {
+    let mut smoke = false;
+    let mut json_path: Option<PathBuf> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--smoke" => smoke = true,
+            "--json" => {
+                json_path = Some(PathBuf::from(
+                    args.next().expect("--json needs a path"),
+                ))
+            }
+            // cargo passes --bench to every bench binary
+            "--bench" => {}
+            other => panic!("unknown bench_generate flag {other:?}"),
+        }
+    }
+    if smoke {
+        std::env::set_var("QLORA_BENCH_FAST", "1");
+    }
+
     let dir = Manifest::default_dir();
     let Ok(manifest) = Manifest::load(&dir) else {
         println!("bench_generate: artifacts not built (run `make \
@@ -155,6 +187,89 @@ fn main() {
         report.stats.summary()
     );
 
+    // ----------------------------------------------------------------
+    // Shared-prefix capacity: N requests opening with one system prompt.
+    // The dense baseline reserves `prompt + max_new` tokens per row up
+    // front; block-granular admission stores the shared prefix once and
+    // charges only the blocks actually allocated, so it runs strictly
+    // more rows concurrently at the same token budget (this PR's
+    // acceptance criterion, measured end to end).
+    // ----------------------------------------------------------------
+    b.group("shared-prefix serving: dense budget vs KV blocks");
+    let seq_len = cfg.seq_len;
+    // a "system prompt" taking ~half the sequence, per-request suffix
+    let system: String =
+        std::iter::repeat('s').take(seq_len / 2).collect();
+    let shared_requests = || -> Vec<GenRequest> {
+        (0..cfg.batch * 2)
+            .map(|i| GenRequest::new(format!("rev {system}{:02}", i)))
+            .collect()
+    };
+    let budget_tokens = 2 * seq_len; // fits ~2 dense rows
+    let block_tokens = 8usize;
+    let max_new = if smoke { 4 } else { 8 };
+    let sampler = Sampler { max_new_tokens: max_new, ..Sampler::default() };
+    let mut peaks: Vec<(&str, usize, u64)> = Vec::new();
+    let mut shared_texts: Vec<Vec<String>> = Vec::new();
+    for (label, share) in
+        [("dense", None), ("blocks", Some(true)), ("noshare", Some(false))]
+    {
+        let mut builder = engine
+            .session()
+            .sampler(sampler.clone())
+            .greedy(true);
+        builder = match share {
+            None => builder.token_budget(budget_tokens),
+            Some(on) => builder
+                .kv_block_tokens(block_tokens)
+                .kv_blocks(budget_tokens / block_tokens)
+                .prefix_sharing(on),
+        };
+        let mut session = builder.build().expect("session");
+        let mut peak_rows = 0usize;
+        let report = session
+            .serve_with(shared_requests(), |p| {
+                peak_rows = peak_rows.max(p.stats.active_rows);
+            })
+            .expect("warm serve");
+        let tokens = report.stats.tokens_generated.max(1) as usize;
+        b.bench_items(
+            &format!("[{label}] shared-prefix serve x{} ({tokens} tok)",
+                     cfg.batch * 2),
+            tokens,
+            || session.serve(shared_requests()).unwrap(),
+        );
+        println!(
+            "{:<44} peak {} concurrent rows; {}",
+            format!("[{label}] shared-prefix capacity"),
+            peak_rows,
+            report.stats.summary()
+        );
+        peaks.push((label, peak_rows, report.stats.shared_block_hits));
+        if share.is_some() {
+            shared_texts.push(
+                report.outputs.iter().map(|o| o.text.clone()).collect(),
+            );
+        }
+    }
+    assert_eq!(
+        shared_texts[0], shared_texts[1],
+        "prefix sharing changed greedy serve outputs"
+    );
+    let dense_peak = peaks[0].1;
+    let blocks_peak = peaks[1].1;
+    println!(
+        "{:<44} {} vs {} rows ({}x)",
+        "capacity: blocks vs dense at equal budget",
+        blocks_peak,
+        dense_peak,
+        if dense_peak > 0 {
+            blocks_peak as f64 / dense_peak as f64
+        } else {
+            f64::NAN
+        }
+    );
+
     // hot-swap: re-register the base adapters under a new name (bumping
     // the registry version so the device-literal cache is invalidated)
     // and switch to them — this measures the real swap path, registry
@@ -166,4 +281,18 @@ fn main() {
         session.set_adapter("swap").unwrap();
         session.set_adapter(BASE_ADAPTER).unwrap();
     });
+
+    if let Some(path) = json_path {
+        let meta = [
+            ("bench", Value::s("bench_generate")),
+            ("mode", Value::s(if smoke { "smoke" } else { "full" })),
+            ("artifact", Value::s(cfg.name.as_str())),
+            ("peak_rows_dense", Value::n(peaks[0].1 as f64)),
+            ("peak_rows_blocks", Value::n(peaks[1].1 as f64)),
+            ("peak_rows_noshare", Value::n(peaks[2].1 as f64)),
+            ("shared_block_hits", Value::n(peaks[1].2 as f64)),
+        ];
+        b.write_json(&path, &meta).unwrap();
+        println!("\nwrote {}", path.display());
+    }
 }

@@ -104,6 +104,22 @@ pub trait DecodeGraph {
     /// next-token logits (vocab-sized, in `rows` order).
     fn step(&mut self, rows: &[usize]) -> Result<Vec<Vec<f32>>>;
 
+    /// Record the physical KV block table backing `row` (from the
+    /// scheduler's block manager). On this substrate the compiled
+    /// graphs address a dense per-row cache slab, so the table is the
+    /// *accounting* view — which blocks the row's K/V occupy for
+    /// admission, sharing and swap decisions — not a gather index; the
+    /// default is a no-op and [`FullDecode`] keeps it (no cache to
+    /// page). A row's logits depend only on its own history (invariants
+    /// above), which is why block policy cannot change its output.
+    fn set_block_table(&mut self, _row: usize, _blocks: &[u32]) {}
+
+    /// The block table last recorded for `row` (`None` when the
+    /// implementation keeps no tables or the row has none).
+    fn block_table(&self, _row: usize) -> Option<&[u32]> {
+        None
+    }
+
     /// `"cached"` or `"full"` — for logs and benchmark labels.
     fn kind(&self) -> &'static str;
 }
@@ -116,6 +132,10 @@ struct Row {
     /// number of leading history positions whose K/V are cached
     /// (always 0 for the full-recompute path)
     cached: usize,
+    /// physical KV blocks backing this row (the scheduler's accounting
+    /// view; empty under token-budget admission or for the full path).
+    /// Freed along with the row by `free_row_common`'s reset.
+    blocks: Vec<u32>,
     live: bool,
 }
 
@@ -131,7 +151,8 @@ fn check_start(rows: &mut [Row], row: usize, prompt: &[i32],
         prompt.len(),
         seq_len
     );
-    rows[row] = Row { history: prompt.to_vec(), cached: 0, live: true };
+    rows[row] =
+        Row { history: prompt.to_vec(), cached: 0, blocks: Vec::new(), live: true };
     Ok(())
 }
 
@@ -395,6 +416,22 @@ impl DecodeGraph for CachedDecode<'_> {
         // expiry: the next request's prefill overwrites the prefix it
         // reads, and the position mask hides everything beyond it
         free_row_common(&mut self.rows, row)
+    }
+
+    fn set_block_table(&mut self, row: usize, blocks: &[u32]) {
+        if let Some(r) = self.rows.get_mut(row) {
+            if r.live {
+                r.blocks.clear();
+                r.blocks.extend_from_slice(blocks);
+            }
+        }
+    }
+
+    fn block_table(&self, row: usize) -> Option<&[u32]> {
+        self.rows
+            .get(row)
+            .filter(|r| r.live && !r.blocks.is_empty())
+            .map(|r| r.blocks.as_slice())
     }
 
     fn step(&mut self, rows: &[usize]) -> Result<Vec<Vec<f32>>> {

@@ -25,7 +25,7 @@
 //!            └───────┬────────┘   └──────┬──────────────────┘
 //!                    │ publish_          │ Scheduler: priorities,
 //!                    │ adapter(name)     │ deadlines, cancellation,
-//!                    │                   │ token-budget admission
+//!                    │                   │ block-granular KV admission
 //!                    ▼                   ▼
 //!              AdapterRegistry    ┌─────────────────────────┐
 //!                    ▲            │ DecodeGraph             │
@@ -84,7 +84,7 @@ pub use decode::{CachedDecode, DecodeGraph, DecodeMode, FullDecode};
 pub use sampler::Sampler;
 pub use scheduler::{
     CancelHandle, JobId, JobOutcome, JobResult, Priority, Request, Scheduler,
-    ServerStats,
+    ServerStats, SwapOut,
 };
 pub use session::{
     GenRequest, ServeOutput, ServeProgress, ServeReport, Session,

@@ -65,23 +65,41 @@ impl Sampler {
     }
 
     /// Sample one token id from a logits row.
+    ///
+    /// Robust to corrupt rows: a NaN logit is treated as `-inf` (never
+    /// sampled, never a panic — one bad artifact must not kill the
+    /// serving thread mid-batch), a `+inf` logit wins deterministically,
+    /// and an all-NaN row degrades to [`Sampler::greedy`]'s fallback.
     pub fn sample(&self, logits: &[f32], rng: &mut Rng) -> i32 {
         if self.temperature <= 0.0 {
             return Self::greedy(logits);
         }
         let inv_t = 1.0 / self.temperature;
-        // softmax with temperature
-        let mx = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        // softmax with temperature over the well-defined logits
+        let mx = logits
+            .iter()
+            .filter(|l| !l.is_nan())
+            .cloned()
+            .fold(f32::NEG_INFINITY, f32::max);
+        if mx == f32::NEG_INFINITY || mx == f32::INFINITY {
+            // nothing finite to soften (all-NaN/-inf) or an infinite
+            // spike: both are argmax cases, not softmax cases
+            return Self::greedy(logits);
+        }
         let mut probs: Vec<(usize, f64)> = logits
             .iter()
             .enumerate()
-            .map(|(i, &l)| (i, (((l - mx) as f64) * inv_t).exp()))
+            .map(|(i, &l)| {
+                let l = if l.is_nan() { f32::NEG_INFINITY } else { l };
+                (i, (((l - mx) as f64) * inv_t).exp())
+            })
             .collect();
+        // z ≥ exp(0) = 1 (the max logit is finite), so never 0 or NaN
         let z: f64 = probs.iter().map(|(_, p)| p).sum();
         for p in probs.iter_mut() {
             p.1 /= z;
         }
-        probs.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        probs.sort_by(|a, b| b.1.total_cmp(&a.1));
         if let Some(k) = self.top_k {
             probs.truncate(k.max(1));
         }
@@ -92,11 +110,14 @@ impl Sampler {
     }
 
     /// Greedy argmax (deterministic decoding for accuracy-style eval).
+    /// NaN logits are never candidates (`total_cmp` would rank a NaN
+    /// above every real value); an all-NaN row falls back to id 0.
     pub fn greedy(logits: &[f32]) -> i32 {
         logits
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .filter(|(_, l)| !l.is_nan())
+            .max_by(|a, b| a.1.total_cmp(b.1))
             .map(|(i, _)| i as i32)
             .unwrap_or(0)
     }
@@ -151,7 +172,7 @@ mod tests {
             let logits: Vec<f32> =
                 (0..n).map(|_| rng.normal() as f32 * 2.0).collect();
             let mut probs = softmax(&logits);
-            probs.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            probs.sort_by(|a, b| b.total_cmp(a));
             let p = rng.f64();
             let cut = Sampler::nucleus_cutoff(&probs, p);
             assert!((1..=n).contains(&cut));
@@ -224,6 +245,29 @@ mod tests {
         let ones =
             (0..2000).filter(|_| s.sample(&logits, &mut rng) == 1).count();
         assert!(ones > 700, "tail sampled {ones}/2000");
+    }
+
+    #[test]
+    fn nan_logits_never_panic_or_get_sampled() {
+        // a corrupt artifact can hand the sampler NaN logits mid-batch;
+        // the serving thread must keep going, never panic, and never
+        // emit the corrupt id (the old partial_cmp().unwrap() died here)
+        let logits = vec![0.5, f32::NAN, 2.0, f32::NAN, 1.0];
+        assert_eq!(Sampler::greedy(&logits), 2);
+        let s = Sampler { top_p: 1.0, temperature: 1.0, ..Sampler::default() };
+        let mut rng = Rng::new(3);
+        for _ in 0..200 {
+            let id = s.sample(&logits, &mut rng) as usize;
+            assert!(logits[id].is_finite(), "sampled corrupt id {id}");
+        }
+        // a fully corrupt row degrades to a deterministic fallback
+        let all_nan = vec![f32::NAN; 4];
+        assert_eq!(Sampler::greedy(&all_nan), 0);
+        assert_eq!(s.sample(&all_nan, &mut rng), 0);
+        // an infinite spike wins deterministically instead of poisoning
+        // the softmax with inf - inf
+        let spiked = vec![0.0, f32::INFINITY, 1.0];
+        assert_eq!(s.sample(&spiked, &mut rng), 1);
     }
 
     #[test]

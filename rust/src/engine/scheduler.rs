@@ -1,5 +1,5 @@
 //! Request-lifecycle scheduler: priorities, deadlines, cancellation and
-//! token-budget admission over few decode rows.
+//! memory-aware admission over few decode rows.
 //!
 //! The paper's one-base/many-adapters economy (QLoRA section 4) pays off
 //! at serving scale, where many tenants share one frozen base. What used
@@ -10,25 +10,41 @@
 //!   `max_new_tokens` budget;
 //! * admission is priority-ordered with aging (a queued job's effective
 //!   priority rises the longer it waits, so `Low` traffic cannot starve
-//!   forever) and **token-budget** gated: the sum of *reserved* tokens
-//!   (`prompt + max_new_tokens`) across resident rows never exceeds
-//!   [`Scheduler::with_budget`]'s cap while more than one job is
-//!   resident, so one 4k-token prompt cannot crowd a whole batch out of
-//!   memory — row count alone is the wrong unit;
+//!   forever) and **memory** gated, in one of two modes:
+//!   - [`Scheduler::with_blocks`] (what `Session::serve` uses): each
+//!     row's KV cache is a block table in a
+//!     [`BlockManager`](crate::paged::BlockManager), and admission
+//!     charges the blocks a job would *actually allocate* — after
+//!     copy-on-write prefix sharing — plus a small growth headroom.
+//!     Requests opening with the same system prompt attach to the same
+//!     physical blocks, so shared-prefix traffic admits far more
+//!     concurrent rows than any worst-case reservation. Under pressure,
+//!     the lowest-priority resident row is **swapped out** (its blocks
+//!     released, the job re-queued with its partial output) to make
+//!     room for a strictly higher-priority admission or for a resident
+//!     row that needs one more block mid-decode;
+//!   - [`Scheduler::with_budget`] (legacy): the sum of worst-case
+//!     reserved tokens (`prompt + max_new_tokens`) across resident rows
+//!     never exceeds a fixed cap. Simple, but it over-reserves badly
+//!     for short completions and cannot see prefix sharing at all;
 //! * every job ends in exactly one typed [`JobOutcome`] — `Done`,
 //!   `Cancelled` (via a [`CancelHandle`]), `DeadlineExceeded`, or
-//!   `Aborted` (the driving loop stopped early) — instead of a silent
-//!   empty vec;
+//!   `Aborted` (the driving loop stopped early, or the job can never
+//!   fit) — instead of a silent empty vec;
 //! * [`Scheduler::stats`] snapshots a [`ServerStats`] block (queue depth,
-//!   resident/reserved tokens, time-to-first-token, preemptions) for the
-//!   serving surface (`Session::serve`, `qlora serve`, `bench_generate`).
+//!   resident tokens, KV blocks in use, shared-block hits, CoW forks,
+//!   swap-outs, time-to-first-token) for the serving surface
+//!   (`Session::serve`, `qlora serve`, `bench_generate`).
 //!
 //! The scheduler stays pure bookkeeping: no runtime types, no clocks of
 //! its own (every time-dependent entry point takes `now: Instant`), so
-//! admission order, cancellation, deadlines and budget accounting are all
-//! unit- and property-testable without artifacts or a PJRT client. The
-//! serving loop in [`Session::serve`](super::Session::serve) drives a
-//! [`DecodeGraph`](super::DecodeGraph) from its decisions.
+//! admission order, cancellation, deadlines, block and budget accounting
+//! are all unit- and property-testable without artifacts or a PJRT
+//! client. The serving loop in [`Session::serve`](super::Session::serve)
+//! drives a [`DecodeGraph`](super::DecodeGraph) from its decisions: it
+//! must free the graph rows named by [`Scheduler::take_swap_outs`]
+//! before reusing them, exactly like [`Retirement`]s from
+//! [`Scheduler::poll`].
 //!
 //! Row operations ([`Scheduler::push`], [`Scheduler::retire`]) return
 //! `Result` instead of indexing unchecked — an out-of-range row or a
@@ -41,7 +57,9 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
+
+use crate::paged::{AppendOutcome, BlockConfig, BlockId, BlockManager};
 
 /// Job identifier: the submission index, which is also the job's slot in
 /// [`Scheduler::take_results`].
@@ -170,8 +188,10 @@ pub struct Admission {
     pub row: usize,
     /// The admitted job.
     pub job: JobId,
-    /// The job's prompt, to be fed to
-    /// [`DecodeGraph::start_row`](super::DecodeGraph::start_row).
+    /// The tokens to prefill via
+    /// [`DecodeGraph::start_row`](super::DecodeGraph::start_row): the
+    /// prompt, plus any output already generated before a swap-out
+    /// (resumed jobs re-prefill their whole history).
     pub prompt: Vec<i32>,
 }
 
@@ -185,6 +205,19 @@ pub struct Retirement {
     pub job: JobId,
     /// Why it was retired (`Cancelled` or `DeadlineExceeded`).
     pub outcome: JobOutcome,
+}
+
+/// One swap-out: the job in `row` was evicted under memory pressure (its
+/// KV blocks released, the job re-queued with its partial output). The
+/// caller must free `row` on its decode graph before the row is reused —
+/// drain [`Scheduler::take_swap_outs`] after every
+/// [`Scheduler::admit`]/[`Scheduler::push`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SwapOut {
+    /// The decode row that was vacated.
+    pub row: usize,
+    /// The job that was swapped out (now queued again).
+    pub job: JobId,
 }
 
 /// Aggregate serving statistics; snapshot via [`Scheduler::stats`].
@@ -208,11 +241,28 @@ pub struct ServerStats {
     pub active_rows: usize,
     /// Sum of `prompt + generated` tokens across resident rows.
     pub resident_tokens: usize,
-    /// Sum of `prompt + max_new_tokens` across resident rows (what budget
-    /// admission charges).
+    /// Sum of `prompt + max_new_tokens` across resident rows — what the
+    /// legacy token-budget mode charges at admission (descriptive only
+    /// under block-granular admission).
     pub reserved_tokens: usize,
-    /// The admission cap on `reserved_tokens` (`usize::MAX` = unbounded).
+    /// The admission cap in token terms: the `with_budget` cap
+    /// (`usize::MAX` = unbounded), or `kv_blocks × kv_block_tokens`
+    /// under block-granular admission.
     pub token_budget: usize,
+    /// Physical KV cache blocks in the pool (0 = token-budget mode).
+    pub kv_blocks: usize,
+    /// Tokens of K/V one block covers (0 = token-budget mode).
+    pub kv_block_tokens: usize,
+    /// KV blocks currently live across all resident rows.
+    pub kv_blocks_in_use: usize,
+    /// Block attachments served by copy-on-write prefix sharing instead
+    /// of a fresh allocation.
+    pub shared_block_hits: u64,
+    /// Copy-on-write forks (first write past a shared prefix).
+    pub cow_forks: u64,
+    /// Rows swapped out (blocks released, job re-queued) under memory
+    /// pressure.
+    pub swap_outs: u64,
     /// Tokens recorded via [`Scheduler::push`].
     pub tokens_generated: u64,
     /// Mean time from submission to a job's first generated token, in
@@ -223,11 +273,24 @@ pub struct ServerStats {
 }
 
 impl ServerStats {
-    /// Generation throughput over `elapsed` (0 until `elapsed` is set).
+    /// Generation throughput over `elapsed`. Guarded: a snapshot taken
+    /// before `elapsed` is filled in, or before any token was generated,
+    /// reports 0.0 — never NaN or infinity.
     pub fn tokens_per_sec(&self) -> f64 {
         let secs = self.elapsed.as_secs_f64();
-        if secs > 0.0 {
-            self.tokens_generated as f64 / secs
+        if secs > 0.0 && self.tokens_generated > 0 {
+            let rate = self.tokens_generated as f64 / secs;
+            if rate.is_finite() { rate } else { 0.0 }
+        } else {
+            0.0
+        }
+    }
+
+    /// Mean time-to-first-token in milliseconds, 0.0 on a fresh snapshot
+    /// (never NaN or infinity — safe to display unconditionally).
+    pub fn mean_ttft_ms(&self) -> f64 {
+        if self.mean_ttft_us.is_finite() && self.mean_ttft_us > 0.0 {
+            self.mean_ttft_us / 1e3
         } else {
             0.0
         }
@@ -235,7 +298,7 @@ impl ServerStats {
 
     /// One-line human summary for CLIs and benches.
     pub fn summary(&self) -> String {
-        format!(
+        let mut line = format!(
             "{} done / {} cancelled / {} deadline-exceeded of {} submitted; \
              {} preemptions; {} tokens ({:.1} tok/s); mean TTFT {:.1} ms",
             self.completed,
@@ -245,8 +308,21 @@ impl ServerStats {
             self.preemptions,
             self.tokens_generated,
             self.tokens_per_sec(),
-            self.mean_ttft_us / 1e3,
-        )
+            self.mean_ttft_ms(),
+        );
+        if self.kv_blocks > 0 {
+            line.push_str(&format!(
+                "; KV {}/{} blocks of {} tokens, {} shared hits, \
+                 {} CoW forks, {} swap-outs",
+                self.kv_blocks_in_use,
+                self.kv_blocks,
+                self.kv_block_tokens,
+                self.shared_block_hits,
+                self.cow_forks,
+                self.swap_outs,
+            ));
+        }
+        line
     }
 }
 
@@ -274,27 +350,46 @@ impl JobMeta {
 struct Queued {
     id: JobId,
     prompt: Vec<i32>,
+    /// tokens generated before a swap-out (empty for fresh submissions);
+    /// re-admission prefills `prompt ++ out` and generation resumes
+    out: Vec<i32>,
 }
 
 struct Active {
     id: JobId,
-    prompt_len: usize,
+    /// the original prompt, kept so a swap-out can re-queue the job
+    prompt: Vec<i32>,
     max_new_tokens: usize,
     out: Vec<i32>,
 }
 
 impl Active {
     fn resident(&self) -> usize {
-        self.prompt_len + self.out.len()
+        self.prompt.len() + self.out.len()
     }
 
     fn reserved(&self) -> usize {
-        self.prompt_len + self.max_new_tokens
+        self.prompt.len() + self.max_new_tokens
+    }
+}
+
+/// What gates admission: a worst-case token budget (legacy) or the KV
+/// block manager (blocks actually allocated, after prefix sharing).
+enum Memory {
+    Tokens { budget: usize },
+    Blocks { mgr: BlockManager },
+}
+
+impl Memory {
+    /// Placeholder swapped in while a `&mut self` method needs to hold
+    /// the real memory and the scheduler's own fields at once.
+    fn taken() -> Memory {
+        Memory::Tokens { budget: usize::MAX }
     }
 }
 
 /// Priority/deadline-aware multiplexer of [`Request`]s onto `capacity`
-/// decode rows under a resident-token budget.
+/// decode rows under a memory cap (KV blocks or a token budget).
 pub struct Scheduler {
     queue: VecDeque<Queued>,
     rows: Vec<Option<Active>>,
@@ -302,8 +397,10 @@ pub struct Scheduler {
     results: Vec<Option<JobResult>>,
     /// lifecycle metadata by job id
     meta: Vec<JobMeta>,
-    /// cap on Σ reserved tokens across resident rows
-    token_budget: usize,
+    /// admission gate: token budget or block manager
+    memory: Memory,
+    /// swap-outs since the last [`Scheduler::take_swap_outs`]
+    swapped: Vec<SwapOut>,
     // --- stats accumulators (terminal outcomes counted incrementally so
     // the per-step `stats()` snapshot never rescans `results`) ---
     n_done: u64,
@@ -329,12 +426,28 @@ impl Scheduler {
     /// admitted when the machine is idle (sole-tenant override) so it can
     /// never deadlock the queue.
     pub fn with_budget(capacity: usize, token_budget: usize) -> Scheduler {
+        Scheduler::with_memory(capacity, Memory::Tokens { budget: token_budget })
+    }
+
+    /// A scheduler over `capacity` rows whose KV caches live in a
+    /// [`BlockManager`] built from `cfg`: admission charges blocks a job
+    /// would actually allocate (after copy-on-write prefix sharing) plus
+    /// `cfg.headroom_blocks` of growth room, and the lowest-priority
+    /// resident row is swapped out under pressure. Errors on a
+    /// degenerate config (zero blocks or zero block size).
+    pub fn with_blocks(capacity: usize, cfg: BlockConfig) -> Result<Scheduler> {
+        let mgr = BlockManager::new(cfg)?;
+        Ok(Scheduler::with_memory(capacity, Memory::Blocks { mgr }))
+    }
+
+    fn with_memory(capacity: usize, memory: Memory) -> Scheduler {
         Scheduler {
             queue: VecDeque::new(),
             rows: (0..capacity.max(1)).map(|_| None).collect(),
             results: Vec::new(),
             meta: Vec::new(),
-            token_budget,
+            memory,
+            swapped: Vec::new(),
             n_done: 0,
             n_cancelled: 0,
             n_deadline: 0,
@@ -371,7 +484,7 @@ impl Scheduler {
             max_new_tokens: req.max_new_tokens,
             waited_rounds: 0,
         });
-        self.queue.push_back(Queued { id, prompt: req.prompt });
+        self.queue.push_back(Queued { id, prompt: req.prompt, out: Vec::new() });
         (id, cancel)
     }
 
@@ -414,7 +527,8 @@ impl Scheduler {
         let mut kept = VecDeque::with_capacity(self.queue.len());
         while let Some(q) = self.queue.pop_front() {
             match self.queued_expiry(q.id, now) {
-                Some(outcome) => self.record_outcome(q.id, outcome, Vec::new()),
+                // a swapped-out job keeps the tokens it generated
+                Some(outcome) => self.record_outcome(q.id, outcome, q.out),
                 None => kept.push_back(q),
             }
         }
@@ -434,6 +548,9 @@ impl Scheduler {
             // only the job's metadata, nothing queue-specific)
             if let Some(outcome) = self.queued_expiry(a.id, now) {
                 let a = self.rows[row].take().expect("checked above");
+                if let Memory::Blocks { mgr } = &mut self.memory {
+                    mgr.release_row(row).expect("active row is attached");
+                }
                 let job = a.id;
                 self.record_outcome(job, outcome, a.out);
                 self.preemptions += 1;
@@ -444,14 +561,35 @@ impl Scheduler {
     }
 
     /// Place queued jobs into free rows in effective-priority order
-    /// (priority class + aging, ties by submission order), charging each
-    /// admission's reserved (`prompt + max_new`) tokens against the
-    /// budget. Admission stops at the first job that does not fit —
-    /// no bypass, so a fitting low-priority job can never overtake a
-    /// non-fitting high-priority one. Returns the placements for
-    /// [`DecodeGraph::start_row`](super::DecodeGraph::start_row).
+    /// (priority class + aging, ties by submission order), gated by the
+    /// memory mode: blocks a job would actually allocate after prefix
+    /// sharing (plus growth headroom, with swap-out of strictly
+    /// lower-priority residents under pressure), or the legacy reserved
+    /// (`prompt + max_new`) token budget. Admission stops at the first
+    /// job that does not fit — no bypass, so a fitting low-priority job
+    /// can never overtake a non-fitting high-priority one. Returns the
+    /// placements for
+    /// [`DecodeGraph::start_row`](super::DecodeGraph::start_row); drain
+    /// [`Scheduler::take_swap_outs`] and free those graph rows *before*
+    /// starting the placements (a swapped-out victim's row may be handed
+    /// right back out).
     pub fn admit(&mut self, now: Instant) -> Vec<Admission> {
         self.sweep_queue(now);
+        let mut memory = std::mem::replace(&mut self.memory, Memory::taken());
+        let placed = self.admit_inner(&mut memory);
+        self.memory = memory;
+        // single aging pass: every job still queued after this round —
+        // skipped for budget, skipped because rows ran out, or swapped
+        // out during the round — waited one more round. (Both previous
+        // aging sites, the nothing-placeable early return and the tail
+        // loop, collapse into this one so they can never drift apart.)
+        for q in &self.queue {
+            self.meta[q.id].waited_rounds += 1;
+        }
+        placed
+    }
+
+    fn admit_inner(&mut self, memory: &mut Memory) -> Vec<Admission> {
         let mut free_rows: VecDeque<usize> = self
             .rows
             .iter()
@@ -459,11 +597,6 @@ impl Scheduler {
             .filter_map(|(r, s)| s.is_none().then_some(r))
             .collect();
         if self.queue.is_empty() || free_rows.is_empty() {
-            // nothing can be placed: skip the sort, but queued jobs
-            // still age one round
-            for q in &self.queue {
-                self.meta[q.id].waited_rounds += 1;
-            }
             return Vec::new();
         }
         // stable order: effective rank desc, then submission order
@@ -471,32 +604,136 @@ impl Scheduler {
             .make_contiguous()
             .sort_by_key(|q| (Reverse(self.meta[q.id].effective_rank()), q.id));
         let mut placed = Vec::new();
-        let mut reserved = self.reserved_tokens();
-        while let Some(q) = self.queue.front() {
-            let Some(&row) = free_rows.front() else { break };
-            let need = q.prompt.len() + self.meta[q.id].max_new_tokens;
-            // sole-tenant override: an oversized job may run alone
-            let fits = reserved == 0
-                || reserved.saturating_add(need) <= self.token_budget;
-            if !fits {
-                break;
+        match memory {
+            Memory::Tokens { budget } => {
+                let mut reserved = self.reserved_tokens();
+                while let Some(q) = self.queue.front() {
+                    let Some(&row) = free_rows.front() else { break };
+                    let need =
+                        q.prompt.len() + self.meta[q.id].max_new_tokens;
+                    // sole-tenant override: an oversized job may run alone
+                    let fits = reserved == 0
+                        || reserved.saturating_add(need) <= *budget;
+                    if !fits {
+                        break;
+                    }
+                    free_rows.pop_front();
+                    let q = self.queue.pop_front().expect("peeked above");
+                    reserved += need;
+                    let history: Vec<i32> = q
+                        .prompt
+                        .iter()
+                        .chain(q.out.iter())
+                        .copied()
+                        .collect();
+                    self.rows[row] = Some(Active {
+                        id: q.id,
+                        prompt: q.prompt,
+                        max_new_tokens: self.meta[q.id].max_new_tokens,
+                        out: q.out,
+                    });
+                    placed.push(Admission { row, job: q.id, prompt: history });
+                }
             }
-            free_rows.pop_front();
-            let q = self.queue.pop_front().expect("peeked above");
-            reserved += need;
-            self.rows[row] = Some(Active {
-                id: q.id,
-                prompt_len: q.prompt.len(),
-                max_new_tokens: self.meta[q.id].max_new_tokens,
-                out: Vec::new(),
-            });
-            placed.push(Admission { row, job: q.id, prompt: q.prompt });
-        }
-        // whoever is still queued waited one more round (drives aging)
-        for q in &self.queue {
-            self.meta[q.id].waited_rounds += 1;
+            Memory::Blocks { mgr } => loop {
+                let Some(q) = self.queue.front() else { break };
+                let Some(&row) = free_rows.front() else { break };
+                let id = q.id;
+                let history: Vec<i32> =
+                    q.prompt.iter().chain(q.out.iter()).copied().collect();
+                // a block table is a chain of distinct physical blocks,
+                // so a history longer than the whole pool can never run
+                if mgr.cfg().blocks_for(history.len()) > mgr.n_blocks() {
+                    let q = self.queue.pop_front().expect("peeked above");
+                    self.record_outcome(id, JobOutcome::Aborted, q.out);
+                    continue;
+                }
+                let need = mgr.probe_attach(&history);
+                // sole tenant: headroom is waived, so an idle pool always
+                // admits (need ≤ blocks_for(len) ≤ n_blocks = free here)
+                let idle = placed.is_empty()
+                    && self.rows.iter().all(Option::is_none);
+                let headroom =
+                    if idle { 0 } else { mgr.cfg().headroom_blocks };
+                if need + headroom <= mgr.free_blocks() {
+                    free_rows.pop_front();
+                    let q = self.queue.pop_front().expect("peeked above");
+                    mgr.attach(row, &history)
+                        .expect("probed: enough free blocks");
+                    self.rows[row] = Some(Active {
+                        id,
+                        prompt: q.prompt,
+                        max_new_tokens: self.meta[id].max_new_tokens,
+                        out: q.out,
+                    });
+                    placed.push(Admission { row, job: id, prompt: history });
+                    continue;
+                }
+                // pressure: swap out a strictly lower-ranked resident
+                // and retry this head. Each victim chain is strictly
+                // decreasing in rank, so this terminates; if no victim
+                // exists the head waits for rows to retire normally.
+                let rank = self.meta[id].effective_rank();
+                match self.pick_victim(Some(rank)) {
+                    Some(victim) => {
+                        self.swap_out_row(mgr, victim);
+                        free_rows.push_back(victim);
+                    }
+                    None => break,
+                }
+            },
         }
         placed
+    }
+
+    /// The resident row to evict under pressure: lowest effective rank,
+    /// ties broken youngest-first (largest job id — oldest jobs have
+    /// waited longest). With `below` set, only rows *strictly* below
+    /// that rank qualify (admission-triggered preemption must not churn
+    /// equals); `None` considers every resident row (a resident row
+    /// needing one more block may then evict itself).
+    fn pick_victim(&self, below: Option<usize>) -> Option<usize> {
+        self.rows
+            .iter()
+            .enumerate()
+            .filter_map(|(r, s)| s.as_ref().map(|a| (r, a.id)))
+            .map(|(r, id)| (r, self.meta[id].effective_rank(), id))
+            .filter(|&(_, rank, _)| below.is_none_or(|b| rank < b))
+            .min_by_key(|&(_, rank, id)| (rank, Reverse(id)))
+            .map(|(r, _, _)| r)
+    }
+
+    /// Evict the job in `row`: release its KV blocks, re-queue it with
+    /// its partial output, and record the vacated row for
+    /// [`Scheduler::take_swap_outs`].
+    fn swap_out_row(&mut self, mgr: &mut BlockManager, row: usize) {
+        let a = self.rows[row].take().expect("victim row is active");
+        mgr.swap_out(row).expect("active row is attached");
+        self.swapped.push(SwapOut { row, job: a.id });
+        self.queue.push_back(Queued {
+            id: a.id,
+            prompt: a.prompt,
+            out: a.out,
+        });
+    }
+
+    /// Swap-outs since the last call — the serving loop must free these
+    /// rows on its decode graph (after [`Scheduler::admit`] but before
+    /// starting that round's placements, and again after each token
+    /// push) exactly like [`Retirement`]s.
+    pub fn take_swap_outs(&mut self) -> Vec<SwapOut> {
+        std::mem::take(&mut self.swapped)
+    }
+
+    /// The physical KV blocks backing `row`, in history order (`None`
+    /// for a free row or in token-budget mode).
+    pub fn row_block_table(&self, row: usize) -> Option<&[BlockId]> {
+        match &self.memory {
+            Memory::Blocks { mgr } => {
+                mgr.row_table(row).map(|t| t.blocks.as_slice())
+            }
+            Memory::Tokens { .. } => None,
+        }
     }
 
     /// Rows currently serving a request, ascending.
@@ -540,8 +777,9 @@ impl Scheduler {
             .sum()
     }
 
-    /// Sum of `prompt + max_new` tokens across resident rows — what
-    /// budget admission charges.
+    /// Sum of `prompt + max_new` tokens across resident rows — what the
+    /// legacy token-budget mode charges at admission (block-granular
+    /// admission ignores it; blocks in use are the real footprint).
     pub fn reserved_tokens(&self) -> usize {
         self.rows
             .iter()
@@ -565,11 +803,42 @@ impl Scheduler {
     /// Record a sampled token for the request in `row`; `now` feeds the
     /// time-to-first-token statistic. Errors (rather than panicking) on a
     /// free or out-of-range row.
-    pub fn push(&mut self, row: usize, token: i32, now: Instant) -> Result<()> {
-        let Some(a) = self.rows.get_mut(row).and_then(Option::as_mut) else {
-            bail!("push into free or out-of-range row {row}");
+    ///
+    /// Returns whether the token was recorded. Under block-granular
+    /// memory a token crossing a block boundary may need a fresh block
+    /// from an exhausted pool; the lowest-priority resident row is then
+    /// swapped out to make room. When that victim is `row` *itself* (it
+    /// is the lowest-priority resident), the push returns `Ok(false)`:
+    /// nothing was recorded, the job is queued again with its prior
+    /// output, and the caller must skip its own graph push for this row
+    /// (then drain [`Scheduler::take_swap_outs`]). Token-budget mode
+    /// always records (`Ok(true)`).
+    pub fn push(&mut self, row: usize, token: i32, now: Instant) -> Result<bool> {
+        let mut memory = std::mem::replace(&mut self.memory, Memory::taken());
+        let recorded = match &mut memory {
+            Memory::Tokens { .. } => {
+                match self.rows.get(row).and_then(Option::as_ref) {
+                    Some(_) => Ok(true),
+                    None => Err(anyhow!(
+                        "push into free or out-of-range row {row}"
+                    )),
+                }
+            }
+            Memory::Blocks { mgr } => self.push_blocks(mgr, row, token),
         };
+        self.memory = memory;
+        if !recorded? {
+            return Ok(false);
+        }
+        let a = self
+            .rows
+            .get_mut(row)
+            .and_then(Option::as_mut)
+            .expect("recorded pushes leave the row resident");
         if a.out.is_empty() {
+            // first token of this job's life: a job resumed after a
+            // swap-out comes back with its prior output, so its TTFT is
+            // never counted twice
             let ttft = now.saturating_duration_since(
                 self.meta[a.id].submitted_at,
             );
@@ -578,12 +847,44 @@ impl Scheduler {
         }
         a.out.push(token);
         self.tokens_generated += 1;
-        Ok(())
+        Ok(true)
+    }
+
+    /// Blocks-mode half of [`Scheduler::push`]: grow `row`'s block table
+    /// by one token, swapping out the lowest-priority resident (possibly
+    /// `row` itself → `Ok(false)`) whenever the pool runs dry.
+    fn push_blocks(
+        &mut self,
+        mgr: &mut BlockManager,
+        row: usize,
+        token: i32,
+    ) -> Result<bool> {
+        loop {
+            if self.rows.get(row).and_then(Option::as_ref).is_none() {
+                bail!("push into free or out-of-range row {row}");
+            }
+            match mgr.append(row, token)? {
+                AppendOutcome::Appended { .. } => return Ok(true),
+                AppendOutcome::NeedBlock => {
+                    // every swap frees a resident row, so this loop runs
+                    // at most `capacity` times before `row` itself is
+                    // the only candidate left and self-swaps
+                    let victim = self
+                        .pick_victim(None)
+                        .expect("row itself is resident");
+                    self.swap_out_row(mgr, victim);
+                    if victim == row {
+                        return Ok(false);
+                    }
+                }
+            }
+        }
     }
 
     /// Finish the request in `row` normally ([`JobOutcome::Done`]),
-    /// freeing the row and recording its tokens; returns the job id.
-    /// A double-retire or out-of-range row is an error, not a panic.
+    /// freeing the row (and its KV blocks) and recording its tokens;
+    /// returns the job id. A double-retire or out-of-range row is an
+    /// error, not a panic.
     pub fn retire(&mut self, row: usize) -> Result<JobId> {
         let Some(slot) = self.rows.get_mut(row) else {
             bail!("retire of out-of-range row {row}");
@@ -591,6 +892,9 @@ impl Scheduler {
         let Some(a) = slot.take() else {
             bail!("retire of already-free row {row}");
         };
+        if let Memory::Blocks { mgr } = &mut self.memory {
+            mgr.release_row(row).expect("active row is attached");
+        }
         let id = a.id;
         self.record_outcome(id, JobOutcome::Done, a.out);
         Ok(id)
@@ -605,7 +909,7 @@ impl Scheduler {
     /// scheduler has no clock). O(capacity), not O(jobs ever submitted):
     /// cheap enough to call after every decode step.
     pub fn stats(&self) -> ServerStats {
-        ServerStats {
+        let mut st = ServerStats {
             submitted: self.results.len() as u64,
             completed: self.n_done,
             cancelled: self.n_cancelled,
@@ -615,7 +919,13 @@ impl Scheduler {
             active_rows: self.rows.iter().flatten().count(),
             resident_tokens: self.resident_tokens(),
             reserved_tokens: self.reserved_tokens(),
-            token_budget: self.token_budget,
+            token_budget: 0,
+            kv_blocks: 0,
+            kv_block_tokens: 0,
+            kv_blocks_in_use: 0,
+            shared_block_hits: 0,
+            cow_forks: 0,
+            swap_outs: 0,
             tokens_generated: self.tokens_generated,
             mean_ttft_us: if self.ttft_count > 0 {
                 self.ttft_total.as_micros() as f64 / self.ttft_count as f64
@@ -623,7 +933,21 @@ impl Scheduler {
                 0.0
             },
             elapsed: Duration::ZERO,
+        };
+        match &self.memory {
+            Memory::Tokens { budget } => st.token_budget = *budget,
+            Memory::Blocks { mgr } => {
+                st.token_budget =
+                    mgr.n_blocks() * mgr.cfg().block_tokens;
+                st.kv_blocks = mgr.n_blocks();
+                st.kv_block_tokens = mgr.cfg().block_tokens;
+                st.kv_blocks_in_use = mgr.blocks_in_use();
+                st.shared_block_hits = mgr.stats.shared_hits;
+                st.cow_forks = mgr.stats.cow_forks;
+                st.swap_outs = mgr.stats.swap_outs;
+            }
         }
+        st
     }
 
     /// Terminal state per job, in submission order. Jobs that never
@@ -631,11 +955,12 @@ impl Scheduler {
     /// [`JobOutcome::Aborted`] with whatever tokens they had — never a
     /// silent empty vec.
     pub fn take_results(mut self) -> Vec<JobResult> {
-        // queued jobs first (no partial tokens), then anything mid-flight
+        // queued jobs first (swapped-out jobs keep their partial
+        // tokens), then anything mid-flight
         while let Some(q) = self.queue.pop_front() {
             self.results[q.id] = Some(JobResult {
                 outcome: JobOutcome::Aborted,
-                tokens: Vec::new(),
+                tokens: q.out,
             });
         }
         for slot in &mut self.rows {
@@ -995,5 +1320,147 @@ mod tests {
         assert_eq!(st.preemptions, 1);
         assert!(st.mean_ttft_us >= 2_000.0, "ttft {:.1}", st.mean_ttft_us);
         assert!(!st.summary().is_empty());
+    }
+
+    #[test]
+    fn fresh_scheduler_stats_are_zero_and_finite() {
+        let s = Scheduler::with_budget(2, 100);
+        let mut st = s.stats();
+        assert_eq!(st.tokens_per_sec(), 0.0, "no elapsed, no tokens");
+        assert_eq!(st.mean_ttft_ms(), 0.0);
+        assert!(st.tokens_per_sec().is_finite());
+        assert!(st.mean_ttft_ms().is_finite());
+        let line = st.summary();
+        assert!(!line.contains("NaN") && !line.contains("inf"), "{line}");
+        // elapsed without tokens, and tokens without elapsed: still 0.0
+        st.elapsed = Duration::from_millis(5);
+        assert_eq!(st.tokens_per_sec(), 0.0);
+        st.elapsed = Duration::ZERO;
+        st.tokens_generated = 10;
+        assert_eq!(st.tokens_per_sec(), 0.0);
+    }
+
+    #[test]
+    fn both_admission_paths_age_queued_jobs_identically() {
+        let now = t0();
+        // path A: a free row exists but admission stops mid-round
+        let mut a = Scheduler::new(1);
+        for p in 0..3 {
+            a.submit(req(&[p], 4), now);
+        }
+        a.admit(now); // places job 0; jobs 1, 2 skipped (rows ran out)
+        // path B: no free row at all when the round starts
+        let mut b = Scheduler::new(1);
+        b.submit(req(&[0], 4), now);
+        b.admit(now);
+        for p in 1..3 {
+            b.submit(req(&[p], 4), now);
+        }
+        b.admit(now); // early return: nothing placeable
+        for id in 1..3usize {
+            assert_eq!(a.meta[id].waited_rounds, 1, "path A job {id}");
+            assert_eq!(
+                a.meta[id].waited_rounds, b.meta[id].waited_rounds,
+                "both paths age job {id} identically"
+            );
+        }
+    }
+
+    #[test]
+    fn shared_prefix_blocks_admit_more_rows_than_token_budget() {
+        let now = t0();
+        // same capacity in both units: 16 tokens vs 4 four-token blocks
+        let prompt = [7i32; 8];
+        let mut tokens = Scheduler::with_budget(4, 16);
+        let mut blocks =
+            Scheduler::with_blocks(4, BlockConfig::for_token_budget(16, 4))
+                .unwrap();
+        for _ in 0..4 {
+            tokens.submit(req(&prompt, 4), now);
+            blocks.submit(req(&prompt, 4), now);
+        }
+        let t = tokens.admit(now).len();
+        let b = blocks.admit(now).len();
+        assert_eq!(t, 1, "worst-case reservation admits one row");
+        assert_eq!(b, 4, "prefix sharing admits the whole batch");
+        assert!(b > t, "the acceptance criterion, at unit scale");
+        let st = blocks.stats();
+        assert_eq!(st.kv_blocks_in_use, 2, "one physical copy of the prompt");
+        assert_eq!(st.shared_block_hits, 6, "3 followers x 2 blocks");
+    }
+
+    #[test]
+    fn admission_swaps_out_lower_priority_rows_under_pressure() {
+        let now = t0();
+        let mut s =
+            Scheduler::with_blocks(2, BlockConfig::new(2, 4)).unwrap();
+        s.submit(req(&[1, 2, 3, 4], 4).priority(Priority::Low), now);
+        let placed = s.admit(now);
+        assert_eq!(placed.len(), 1);
+        let low_row = placed[0].row;
+        assert!(s.push(low_row, 50, now).unwrap());
+        // a high-priority arrival needs 3 of the 4 blocks: the low row
+        // (3 blocks live) is swapped out to make room
+        s.submit(req(&[9; 6], 4).priority(Priority::High), now);
+        let placed = s.admit(now);
+        assert_eq!(placed.len(), 1, "admitted via swap-out");
+        assert_eq!(placed[0].job, 1);
+        assert_eq!(
+            s.take_swap_outs(),
+            vec![SwapOut { row: low_row, job: 0 }]
+        );
+        assert_eq!(s.stats().swap_outs, 1);
+        // the high job finishes; the low job resumes with its partial
+        // output re-prefilled, and completes
+        s.retire(placed[0].row).unwrap();
+        let placed = s.admit(now);
+        assert_eq!(placed.len(), 1);
+        assert_eq!(placed[0].job, 0);
+        assert_eq!(placed[0].prompt, vec![1, 2, 3, 4, 50]);
+        assert!(s.push(placed[0].row, 51, now).unwrap());
+        s.retire(placed[0].row).unwrap();
+        let results = s.take_results();
+        assert_eq!(results[0].outcome, JobOutcome::Done);
+        assert_eq!(results[0].tokens, vec![50, 51], "output survived");
+        assert_eq!(results[1].outcome, JobOutcome::Done);
+    }
+
+    #[test]
+    fn push_past_the_pool_swaps_the_row_out_and_resumes() {
+        let now = t0();
+        let mut s =
+            Scheduler::with_blocks(1, BlockConfig::new(2, 2)).unwrap();
+        s.submit(req(&[1, 2, 3], 8), now);
+        assert_eq!(s.admit(now).len(), 1);
+        assert!(s.push(0, 4, now).unwrap(), "fits in the tail block");
+        assert!(
+            !s.push(0, 5, now).unwrap(),
+            "pool dry and this row is the only victim: it swaps itself"
+        );
+        assert_eq!(s.take_swap_outs(), vec![SwapOut { row: 0, job: 0 }]);
+        assert_eq!(s.job_in(0), None, "row vacated");
+        let placed = s.admit(now);
+        assert_eq!(placed[0].prompt, vec![1, 2, 3, 4], "history resumed");
+        s.retire(placed[0].row).unwrap();
+        let results = s.take_results();
+        assert_eq!(results[0].outcome, JobOutcome::Done);
+        assert_eq!(results[0].tokens, vec![4], "recorded tokens survived");
+    }
+
+    #[test]
+    fn job_longer_than_the_pool_aborts_instead_of_deadlocking() {
+        let now = t0();
+        let mut s =
+            Scheduler::with_blocks(1, BlockConfig::new(2, 2)).unwrap();
+        s.submit(req(&[0; 10], 4), now); // 5 blocks can never fit in 2
+        s.submit(req(&[1, 2], 2), now);
+        let placed = s.admit(now);
+        assert_eq!(placed.len(), 1, "the possible job still runs");
+        assert_eq!(placed[0].job, 1);
+        s.retire(placed[0].row).unwrap();
+        assert!(s.finished());
+        let results = s.take_results();
+        assert_eq!(results[0].outcome, JobOutcome::Aborted);
+        assert_eq!(results[1].outcome, JobOutcome::Done);
     }
 }

@@ -18,9 +18,14 @@
 //! out": each [`GenRequest`] carries its own sampling parameters,
 //! [`Priority`] class, optional deadline, and cancellation handle. A
 //! [`Scheduler`] multiplexes any number of requests over the compiled
-//! batch rows (continuous batching) under a resident-token budget, and
-//! [`Session::serve`] reports a typed [`JobOutcome`] per request plus a
-//! [`ServerStats`] block — see the
+//! batch rows (continuous batching); by default each row's KV cache is
+//! accounted in fixed-size blocks with copy-on-write prefix sharing
+//! (admission charges blocks actually allocated, and the lowest-priority
+//! row is swapped out under pressure — see
+//! [`paged::blocks`](crate::paged::blocks)), with
+//! [`SessionBuilder::token_budget`] selecting the legacy worst-case
+//! token reservation instead. [`Session::serve`] reports a typed
+//! [`JobOutcome`] per request plus a [`ServerStats`] block — see the
 //! [`scheduler`](super::scheduler) module docs for the admission policy.
 
 use std::time::{Duration, Instant};
@@ -29,6 +34,7 @@ use anyhow::{ensure, Result};
 
 use crate::data::batching::{Batch, Batcher};
 use crate::data::tokenizer::{Tokenizer, BOS, EOS, SEP};
+use crate::paged::BlockConfig;
 use crate::runtime::executor::literal_scalar_f32;
 use crate::util::rng::Rng;
 
@@ -48,6 +54,9 @@ pub struct SessionBuilder<'e> {
     seed: u64,
     decode: DecodeMode,
     token_budget: Option<usize>,
+    kv_block_tokens: Option<usize>,
+    kv_blocks: Option<usize>,
+    prefix_sharing: bool,
 }
 
 impl<'e> SessionBuilder<'e> {
@@ -60,6 +69,9 @@ impl<'e> SessionBuilder<'e> {
             seed: 0,
             decode: DecodeMode::Auto,
             token_budget: None,
+            kv_block_tokens: None,
+            kv_blocks: None,
+            prefix_sharing: true,
         }
     }
 
@@ -95,14 +107,39 @@ impl<'e> SessionBuilder<'e> {
         self
     }
 
-    /// Admission cap on the sum of reserved (`prompt + max_new`) tokens
-    /// across resident rows — see
-    /// [`Scheduler::with_budget`](super::Scheduler::with_budget). The
-    /// default (`batch × seq_len`) never constrains beyond the compiled
-    /// row capacity; tighten it to bound serving memory by tokens rather
-    /// than rows.
+    /// Use the **legacy** admission policy: cap the sum of worst-case
+    /// reserved (`prompt + max_new`) tokens across resident rows — see
+    /// [`Scheduler::with_budget`](super::Scheduler::with_budget). This
+    /// disables block-granular KV admission (and with it prefix sharing
+    /// and swap-out) for the session; without it, serving admits by KV
+    /// blocks actually allocated.
     pub fn token_budget(mut self, budget: usize) -> Self {
         self.token_budget = Some(budget);
+        self
+    }
+
+    /// Tokens of K/V per cache block for block-granular admission
+    /// (default 16). Smaller blocks track footprint more precisely and
+    /// share shorter prefixes; larger blocks cut bookkeeping overhead.
+    pub fn kv_block_tokens(mut self, tokens: usize) -> Self {
+        self.kv_block_tokens = Some(tokens);
+        self
+    }
+
+    /// Physical KV blocks in the pool. The default
+    /// (`batch × ⌈seq_len / block_tokens⌉ + 1` headroom) never
+    /// constrains below the compiled row capacity; shrink it to bound
+    /// serving memory by blocks rather than rows.
+    pub fn kv_blocks(mut self, blocks: usize) -> Self {
+        self.kv_blocks = Some(blocks);
+        self
+    }
+
+    /// Enable/disable copy-on-write prefix sharing across rows (default
+    /// on). Greedy outputs are bit-identical either way — sharing only
+    /// changes how many rows fit.
+    pub fn prefix_sharing(mut self, on: bool) -> Self {
+        self.prefix_sharing = on;
         self
     }
 
@@ -112,15 +149,34 @@ impl<'e> SessionBuilder<'e> {
         self.engine.adapter_literals(&self.adapter)?;
         let tok = Tokenizer::new(self.engine.spec.cfg.vocab);
         let cfg = &self.engine.spec.cfg;
-        let token_budget =
-            self.token_budget.unwrap_or(cfg.batch * cfg.seq_len);
+        let block_tokens = self.kv_block_tokens.unwrap_or(16).max(1);
+        let per_row = cfg.seq_len.div_ceil(block_tokens);
+        let mut block_cfg = BlockConfig::new(
+            block_tokens,
+            self.kv_blocks
+                .unwrap_or(cfg.batch * per_row + 1 /* growth headroom */),
+        );
+        ensure!(
+            block_cfg.n_blocks >= per_row,
+            "kv_blocks {} cannot hold even one full row ({} blocks of {} \
+             tokens for seq_len {})",
+            block_cfg.n_blocks,
+            per_row,
+            block_tokens,
+            cfg.seq_len
+        );
+        block_cfg.prefix_sharing = self.prefix_sharing;
+        // K + V bytes per token, f32: what a swap-out migrates per block
+        block_cfg.bytes_per_block =
+            2 * cfg.n_layers * cfg.d_model * 4 * block_tokens;
         Ok(Session {
             engine: self.engine,
             adapter: self.adapter,
             sampler: self.sampler,
             greedy: self.greedy,
             decode: self.decode,
-            token_budget,
+            token_budget: self.token_budget,
+            block_cfg,
             rng: Rng::new(self.seed),
             tok,
             tokens_generated: 0,
@@ -231,9 +287,13 @@ pub struct Session<'e> {
     pub greedy: bool,
     /// Decode-path selection; see [`DecodeMode`].
     pub decode: DecodeMode,
-    /// Resident-token admission budget for [`Session::serve`]; see
+    /// Legacy worst-case token budget for [`Session::serve`]; `None`
+    /// (the default) admits by KV blocks instead — see
     /// [`SessionBuilder::token_budget`].
-    pub token_budget: usize,
+    pub token_budget: Option<usize>,
+    /// Block-granular KV admission config (ignored when `token_budget`
+    /// is set); see [`SessionBuilder::kv_blocks`].
+    pub block_cfg: BlockConfig,
     rng: Rng,
     tok: Tokenizer,
     /// cumulative count of sampled (emitted) tokens — serving metric
@@ -373,17 +433,20 @@ impl<'e> Session<'e> {
     }
 
     /// The request-lifecycle serving loop: multiplex `requests` over the
-    /// compiled batch rows under the session's [`token
-    /// budget`](SessionBuilder::token_budget), honouring priorities,
-    /// deadlines, and cancellation. `on_step` runs after every decode
-    /// step with a [`ServeProgress`] snapshot — cancel handles flipped
-    /// inside it take effect before the next step (the row is freed and
-    /// refilled from the queue within one step).
+    /// compiled batch rows, honouring priorities, deadlines, and
+    /// cancellation, with admission gated by the session's memory policy
+    /// — block-granular KV accounting with copy-on-write prefix sharing
+    /// and swap-out under pressure by default, or the legacy worst-case
+    /// [`token budget`](SessionBuilder::token_budget). `on_step` runs
+    /// after every decode step with a [`ServeProgress`] snapshot —
+    /// cancel handles flipped inside it take effect before the next step
+    /// (the row is freed and refilled from the queue within one step).
     ///
     /// Every request ends in exactly one typed [`JobOutcome`]; partial
-    /// output survives cancellation and deadline expiry. An error from
-    /// the decode graph aborts the whole loop and is returned as the
-    /// `Err` (no report is produced in that case).
+    /// output survives cancellation, deadline expiry, *and* swap-out (a
+    /// swapped-out request resumes by re-prefilling its whole history).
+    /// An error from the decode graph aborts the whole loop and is
+    /// returned as the `Err` (no report is produced in that case).
     pub fn serve_with(
         &mut self,
         requests: Vec<GenRequest>,
@@ -392,8 +455,13 @@ impl<'e> Session<'e> {
         ensure!(!requests.is_empty(), "no requests");
         let mut graph = self.decode_graph()?;
         let seq_len = graph.seq_len();
-        let mut sched =
-            Scheduler::with_budget(graph.capacity(), self.token_budget);
+        let mut sched = match self.token_budget {
+            Some(budget) => Scheduler::with_budget(graph.capacity(), budget),
+            None => Scheduler::with_blocks(
+                graph.capacity(),
+                self.block_cfg.clone(),
+            )?,
+        };
         // (sampler, greedy) per job: a per-request sampler is a complete
         // override, so the session's greedy flag only applies to
         // requests that inherit the session sampler
@@ -426,8 +494,18 @@ impl<'e> Session<'e> {
             for ret in sched.poll(now) {
                 graph.free_row(ret.row);
             }
-            for adm in sched.admit(now) {
+            let placed = sched.admit(now);
+            // swap-outs happen *inside* admit (a higher-priority arrival
+            // preempts resident rows), so vacate those rows before any
+            // admission reuses them
+            for sw in sched.take_swap_outs() {
+                graph.free_row(sw.row);
+            }
+            for adm in placed {
                 graph.start_row(adm.row, &adm.prompt)?;
+                if let Some(t) = sched.row_block_table(adm.row) {
+                    graph.set_block_table(adm.row, t);
+                }
             }
             // retire rows that have exhausted their own budget or the
             // compiled sequence before (not after) stepping them
@@ -444,7 +522,10 @@ impl<'e> Session<'e> {
             let logits = graph.step(&rows)?;
             let now = Instant::now();
             for (&row, row_logits) in rows.iter().zip(logits.iter()) {
-                let id = sched.job_in(row).expect("stepped row is occupied");
+                // an earlier row's push this step may have swapped this
+                // row out to make room; its sampled token is simply lost
+                // (the job re-prefills from its recorded history later)
+                let Some(id) = sched.job_in(row) else { continue };
                 let (sampler, greedy) = &samplers[id];
                 let next = Self::sample_token(
                     *greedy,
@@ -455,11 +536,18 @@ impl<'e> Session<'e> {
                 if next == EOS {
                     sched.retire(row)?;
                     graph.free_row(row);
-                } else {
+                } else if sched.push(row, next, now)? {
                     self.tokens_generated += 1;
-                    sched.push(row, next, now)?;
                     graph.push(row, next)?;
+                    if let Some(t) = sched.row_block_table(row) {
+                        graph.set_block_table(row, t);
+                    }
                 }
+            }
+            // pushes past the pool swap rows out too; vacate them so the
+            // next admission round can re-place those rows
+            for sw in sched.take_swap_outs() {
+                graph.free_row(sw.row);
             }
             step += 1;
             on_step(&ServeProgress { step, stats: sched.stats() });

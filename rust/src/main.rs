@@ -6,8 +6,9 @@
 //!   generate     sample from the serving engine (single, batched, or
 //!                streamed; nucleus p=0.9, T=0.7)
 //!   serve        request-lifecycle serving: per-request priorities and
-//!                deadlines, token-budget admission, typed outcomes, and
-//!                a ServerStats block
+//!                deadlines, block-granular KV admission with prefix
+//!                sharing (or legacy --token-budget), typed outcomes,
+//!                and a ServerStats block
 //!   arena        judged Elo tournament between adapters on one base
 //!   quantize     quantization round-trip report for a datatype
 //!   memory       analytical memory planner (Figure 6 / Table 6)
@@ -61,7 +62,9 @@ fn usage() -> &'static str {
      [--top-p P] [--top-k K] [--temperature T] [--max-new N]\n\
        serve       --artifact <name> [--ckpt ...] [--adapter <name>] \
      --requests \"spec|spec|...\" (spec: [high|normal|low[@<ms>]:]prompt) \
-     [--token-budget N] [--decode ...] [sampling flags as generate]\n\
+     [--kv-block N] [--kv-blocks N] [--no-prefix-sharing] \
+     [--token-budget N (legacy admission)] [--decode ...] \
+     [sampling flags as generate]\n\
        arena       --artifact <name> --adapters \"tuned=ck.tensors[,...]\" \
      [--n-prompts N] [--judge gpt4|human] [--orderings N]\n\
        quantize    [--dtype nf4] [--block 64] [--dq]\n\
@@ -311,6 +314,13 @@ fn run() -> Result<()> {
             if let Some(budget) = args.get("token-budget") {
                 builder = builder.token_budget(budget.parse()?);
             }
+            if let Some(bt) = args.get("kv-block") {
+                builder = builder.kv_block_tokens(bt.parse()?);
+            }
+            if let Some(n) = args.get("kv-blocks") {
+                builder = builder.kv_blocks(n.parse()?);
+            }
+            builder = builder.prefix_sharing(!args.flag("no-prefix-sharing"));
             let mut session = builder.build()?;
             let spec = args.get("requests").ok_or_else(|| {
                 anyhow::anyhow!("--requests \"spec|spec|...\" required \
@@ -330,11 +340,16 @@ fn run() -> Result<()> {
             println!("--- server stats ---");
             println!("{}", s.summary());
             println!(
-                "token budget {}; elapsed {:.1} ms",
-                if s.token_budget == usize::MAX {
-                    "unbounded".to_string()
+                "{}; elapsed {:.1} ms",
+                if s.kv_blocks > 0 {
+                    format!(
+                        "KV pool {} blocks x {} tokens ({} tokens)",
+                        s.kv_blocks, s.kv_block_tokens, s.token_budget
+                    )
+                } else if s.token_budget == usize::MAX {
+                    "token budget unbounded".to_string()
                 } else {
-                    s.token_budget.to_string()
+                    format!("token budget {}", s.token_budget)
                 },
                 s.elapsed.as_secs_f64() * 1e3
             );

@@ -1,0 +1,643 @@
+//! The KV block manager: paged decode caches with copy-on-write prefix
+//! sharing.
+//!
+//! This generalizes the paged-optimizer machinery (paper section 3) to
+//! the *serving* side's capacity bottleneck: per-row KV caches. Instead
+//! of charging every admitted request a dense worst-case
+//! `prompt + max_new_tokens` slab, each row's cache is a **block table**
+//! — an ordered list of fixed-size physical blocks
+//! ([`BlockConfig::block_tokens`] tokens each) drawn from a refcounted
+//! [`BlockPool`]:
+//!
+//! * **Prefix sharing.** A prefix→block map keyed by
+//!   `(parent block, exact chunk tokens)` lets rows whose prompts share
+//!   a block-aligned prefix attach to the *same* physical blocks (the
+//!   map is the flattened radix tree of attached prompts: a chunk can
+//!   only be shared when its parent chunk already is, so lookup walks
+//!   the chain and stops at the first divergence). Keys store the exact
+//!   token content, so a hash collision can never alias two different
+//!   prefixes.
+//! * **Copy-on-write.** Appending to a block with more than one owner
+//!   forks a private copy first; the shared block is never mutated. A
+//!   sole-owner block that is still registered in the prefix map is
+//!   unregistered before its content changes, so the map never points
+//!   at stale content.
+//! * **Swap-out.** Releasing a row under memory pressure frees only the
+//!   blocks nobody else references; the migrated bytes and stall are
+//!   charged through the same [`MigrateModel`] the optimizer pager uses.
+//!
+//! Like the rest of `paged/`, this is the *policy* made explicit: on
+//! this CPU substrate the compiled decode graphs still thread dense
+//! `(batch, layers, seq_len, d_model)` cache literals (that layout is
+//! owned by `python/compile/kernels/decode.py`), so the block manager is
+//! the accounting layer that decides **admission, sharing, and
+//! eviction** — exactly the part of vLLM-style paged attention that
+//! changes serving capacity. Because a row's logits depend only on its
+//! own history (see the cache-discipline invariants in
+//! `engine::decode`), sharing policy cannot change greedy outputs — only
+//! how many rows fit.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, ensure, Result};
+
+use super::pager::MigrateModel;
+use super::pool::{BlockId, BlockPool};
+
+/// Caller-side row identifier (the decode row index in the engine).
+pub type RowId = usize;
+
+/// Sizing and policy knobs for a [`BlockManager`].
+#[derive(Debug, Clone)]
+pub struct BlockConfig {
+    /// Tokens of K/V one block covers.
+    pub block_tokens: usize,
+    /// Physical blocks in the pool.
+    pub n_blocks: usize,
+    /// Attach identical block-aligned prompt prefixes to shared blocks.
+    pub prefix_sharing: bool,
+    /// Free blocks admission keeps aside for in-flight growth (waived
+    /// for a sole tenant so a big job can never deadlock an idle pool).
+    pub headroom_blocks: usize,
+    /// K+V bytes one full block occupies (swap-traffic accounting only;
+    /// 0 disables byte/stall accounting).
+    pub bytes_per_block: usize,
+    /// Cost model for swapped-out bytes (shared with the pager).
+    pub migrate: MigrateModel,
+}
+
+impl BlockConfig {
+    /// A sharing-enabled config with one block of growth headroom and no
+    /// byte accounting.
+    pub fn new(block_tokens: usize, n_blocks: usize) -> BlockConfig {
+        BlockConfig {
+            block_tokens,
+            n_blocks,
+            prefix_sharing: true,
+            headroom_blocks: 1,
+            bytes_per_block: 0,
+            migrate: MigrateModel::default(),
+        }
+    }
+
+    /// Size the pool to cover `budget_tokens` tokens of K/V — the
+    /// apples-to-apples pool for comparing block-granular admission
+    /// against a dense `token_budget` reservation of the same size.
+    pub fn for_token_budget(
+        budget_tokens: usize,
+        block_tokens: usize,
+    ) -> BlockConfig {
+        BlockConfig::new(
+            block_tokens,
+            budget_tokens.div_ceil(block_tokens.max(1)),
+        )
+    }
+
+    /// Blocks needed to cover `tokens` tokens.
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_tokens)
+    }
+}
+
+/// Exact prefix identity of one block: the physical parent block (the
+/// whole prefix before this chunk, by induction) plus this chunk's
+/// tokens. Two rows share a chunk iff they share the parent *object*
+/// and the chunk content — no hash-collision aliasing possible.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct ShareKey {
+    parent: Option<BlockId>,
+    tokens: Vec<i32>,
+}
+
+/// Content + registration state of one live physical block.
+#[derive(Debug, Default, Clone)]
+struct Block {
+    /// tokens written so far (≤ `block_tokens`)
+    tokens: Vec<i32>,
+    /// parent block at creation (prefix chain; `None` for block 0)
+    parent: Option<BlockId>,
+    /// whether `(parent, tokens)` is currently in the share map — always
+    /// unregistered *before* content can change
+    registered: bool,
+}
+
+/// One row's cache view: the ordered physical blocks backing its
+/// history plus the token count they cover.
+#[derive(Debug, Clone, Default)]
+pub struct RowTable {
+    /// Physical block ids, in history order.
+    pub blocks: Vec<BlockId>,
+    /// Tokens covered (the last block may be partially filled).
+    pub len: usize,
+}
+
+/// Counters the serving stats surface ([`ServerStats`]
+/// (crate::engine::ServerStats)) snapshots.
+#[derive(Debug, Default, Clone)]
+pub struct BlockStats {
+    /// Block attachments served by prefix sharing instead of a fresh
+    /// allocation.
+    pub shared_hits: u64,
+    /// Copy-on-write forks (first write past a shared prefix).
+    pub cow_forks: u64,
+    /// Rows swapped out under memory pressure.
+    pub swap_outs: u64,
+    /// Bytes migrated to host by swap-outs.
+    pub swapped_bytes: u64,
+    /// Simulated migration stall from swap-outs, microseconds.
+    pub swap_stall_us: f64,
+}
+
+/// Effect of one [`BlockManager::append`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AppendOutcome {
+    /// Token recorded; flags say which physical work it took.
+    Appended {
+        /// a fresh tail block was allocated
+        new_block: bool,
+        /// a shared block was forked first (copy-on-write)
+        cow_fork: bool,
+    },
+    /// The pool is exhausted: nothing was recorded — free or swap a row
+    /// and retry.
+    NeedBlock,
+}
+
+/// Refcounted block tables with prefix sharing, CoW, and swap
+/// accounting. See the module docs for the model.
+#[derive(Debug)]
+pub struct BlockManager {
+    cfg: BlockConfig,
+    pool: BlockPool,
+    /// per-slot content, indexable by any live [`BlockId`]
+    blocks: Vec<Block>,
+    /// prefix→block map (the flattened radix tree of attached prompts)
+    share: HashMap<ShareKey, BlockId>,
+    rows: HashMap<RowId, RowTable>,
+    /// sharing/CoW/swap counters (allocation totals live in the pool)
+    pub stats: BlockStats,
+}
+
+impl BlockManager {
+    /// A manager over a fresh pool of `cfg.n_blocks` blocks.
+    pub fn new(cfg: BlockConfig) -> Result<BlockManager> {
+        ensure!(cfg.block_tokens >= 1, "block_tokens must be >= 1");
+        ensure!(cfg.n_blocks >= 1, "n_blocks must be >= 1");
+        Ok(BlockManager {
+            pool: BlockPool::new(cfg.n_blocks),
+            blocks: vec![Block::default(); cfg.n_blocks],
+            share: HashMap::new(),
+            rows: HashMap::new(),
+            stats: BlockStats::default(),
+            cfg,
+        })
+    }
+
+    /// The sizing/policy knobs this manager was built with.
+    pub fn cfg(&self) -> &BlockConfig {
+        &self.cfg
+    }
+
+    /// Total physical blocks.
+    pub fn n_blocks(&self) -> usize {
+        self.pool.n_blocks()
+    }
+
+    /// Physical blocks currently live.
+    pub fn blocks_in_use(&self) -> usize {
+        self.pool.in_use()
+    }
+
+    /// Physical blocks currently free.
+    pub fn free_blocks(&self) -> usize {
+        self.pool.free_blocks()
+    }
+
+    /// Blocks ever allocated / ever freed (leak accounting).
+    pub fn totals(&self) -> (u64, u64) {
+        self.pool.totals()
+    }
+
+    /// Rows currently attached.
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// The block table backing `row`, if attached.
+    pub fn row_table(&self, row: RowId) -> Option<&RowTable> {
+        self.rows.get(&row)
+    }
+
+    /// The tokens `row`'s blocks actually hold, concatenated — the
+    /// ground truth the CoW property test compares against each row's
+    /// expected history.
+    pub fn row_tokens(&self, row: RowId) -> Option<Vec<i32>> {
+        let table = self.rows.get(&row)?;
+        let mut out = Vec::with_capacity(table.len);
+        for &id in &table.blocks {
+            out.extend_from_slice(&self.blocks[id as usize].tokens);
+        }
+        Some(out)
+    }
+
+    /// Content of one live block (diagnostics / property tests).
+    pub fn block_content(&self, id: BlockId) -> Option<&[i32]> {
+        (self.pool.refcount(id) > 0)
+            .then(|| self.blocks[id as usize].tokens.as_slice())
+    }
+
+    /// Entries currently in the prefix-sharing map.
+    pub fn shared_entries(&self) -> usize {
+        self.share.len()
+    }
+
+    /// Reference count of one block (0 = free) — how many row tables
+    /// currently include it.
+    pub fn block_refcount(&self, id: BlockId) -> u32 {
+        self.pool.refcount(id)
+    }
+
+    fn key_of(&self, id: BlockId) -> ShareKey {
+        let b = &self.blocks[id as usize];
+        ShareKey { parent: b.parent, tokens: b.tokens.clone() }
+    }
+
+    /// Register `id` under its current `(parent, tokens)` if that key is
+    /// vacant (first writer wins; losing the race just means no reuse).
+    fn try_register(&mut self, id: BlockId) {
+        if !self.cfg.prefix_sharing {
+            return;
+        }
+        let key = self.key_of(id);
+        if !self.share.contains_key(&key) {
+            self.share.insert(key, id);
+            self.blocks[id as usize].registered = true;
+        }
+    }
+
+    /// Remove `id` from the prefix map. Must run *before* its content
+    /// changes (the key is reconstructed from current content).
+    fn unregister(&mut self, id: BlockId) {
+        if self.blocks[id as usize].registered {
+            let key = self.key_of(id);
+            let removed = self.share.remove(&key);
+            debug_assert_eq!(removed, Some(id), "share map points at {id}");
+            self.blocks[id as usize].registered = false;
+        }
+    }
+
+    /// How many *new* physical blocks attaching `history` would need,
+    /// after prefix sharing (read-only; admission probes this before
+    /// committing).
+    pub fn probe_attach(&self, history: &[i32]) -> usize {
+        let chunks = history.chunks(self.cfg.block_tokens);
+        let total = chunks.len();
+        total - self.shared_chain(history).len()
+    }
+
+    /// The longest chain of already-registered blocks covering a prefix
+    /// of `history` (empty when sharing is off).
+    fn shared_chain(&self, history: &[i32]) -> Vec<BlockId> {
+        let mut chain = Vec::new();
+        if !self.cfg.prefix_sharing {
+            return chain;
+        }
+        let mut parent = None;
+        for chunk in history.chunks(self.cfg.block_tokens) {
+            let key = ShareKey { parent, tokens: chunk.to_vec() };
+            match self.share.get(&key) {
+                Some(&id) => {
+                    chain.push(id);
+                    parent = Some(id);
+                }
+                None => break,
+            }
+        }
+        chain
+    }
+
+    /// Attach `row` to block tables covering `history`, sharing every
+    /// already-attached block-aligned prefix chunk and allocating the
+    /// rest. Errors if the row is already attached, the history is
+    /// empty, or the pool cannot cover the non-shared chunks (probe
+    /// first with [`BlockManager::probe_attach`]); on error nothing was
+    /// mutated. Returns the number of blocks served by sharing.
+    pub fn attach(&mut self, row: RowId, history: &[i32]) -> Result<usize> {
+        ensure!(!self.rows.contains_key(&row), "row {row} already attached");
+        ensure!(!history.is_empty(), "empty history for row {row}");
+        let shared = self.shared_chain(history);
+        let total = history.chunks(self.cfg.block_tokens).len();
+        let fresh = total - shared.len();
+        ensure!(
+            fresh <= self.pool.free_blocks(),
+            "pool exhausted: row {row} needs {fresh} new blocks, {} free",
+            self.pool.free_blocks()
+        );
+        // commit: retain the shared chain, then allocate the rest
+        for &id in &shared {
+            self.pool.retain(id).expect("shared chain is live");
+            self.stats.shared_hits += 1;
+        }
+        let mut table = RowTable { blocks: shared, len: history.len() };
+        let mut parent = table.blocks.last().copied();
+        for chunk in history
+            .chunks(self.cfg.block_tokens)
+            .skip(table.blocks.len())
+        {
+            let id = self.pool.alloc().expect("free count checked above");
+            self.blocks[id as usize] = Block {
+                tokens: chunk.to_vec(),
+                parent,
+                registered: false,
+            };
+            self.try_register(id);
+            table.blocks.push(id);
+            parent = Some(id);
+        }
+        self.rows.insert(row, table);
+        Ok(total - fresh)
+    }
+
+    /// Record one generated token for `row`. Allocates a fresh tail
+    /// block at block boundaries and forks a private copy before the
+    /// first write into a shared block (copy-on-write). Returns
+    /// [`AppendOutcome::NeedBlock`] — with nothing recorded — when the
+    /// pool is exhausted; an unattached row is an error.
+    pub fn append(&mut self, row: RowId, token: i32) -> Result<AppendOutcome> {
+        let Some(table) = self.rows.get(&row) else {
+            bail!("append to unattached row {row}");
+        };
+        let pos = table.len % self.cfg.block_tokens;
+        if pos == 0 {
+            // boundary: open a fresh private tail block
+            let Some(id) = self.pool.alloc() else {
+                return Ok(AppendOutcome::NeedBlock);
+            };
+            let parent = table.blocks.last().copied();
+            self.blocks[id as usize] =
+                Block { tokens: vec![token], parent, registered: false };
+            let table = self.rows.get_mut(&row).expect("checked above");
+            table.blocks.push(id);
+            table.len += 1;
+            return Ok(AppendOutcome::Appended {
+                new_block: true,
+                cow_fork: false,
+            });
+        }
+        let tail = *table.blocks.last().expect("len > 0 implies blocks");
+        if self.pool.refcount(tail) > 1 {
+            // copy-on-write: fork a private tail, leave the shared block
+            // untouched for its other owners
+            let Some(id) = self.pool.alloc() else {
+                return Ok(AppendOutcome::NeedBlock);
+            };
+            let mut forked = self.blocks[tail as usize].clone();
+            forked.registered = false;
+            forked.tokens.push(token);
+            self.blocks[id as usize] = forked;
+            self.pool.release(tail).expect("tail was shared");
+            self.stats.cow_forks += 1;
+            let table = self.rows.get_mut(&row).expect("checked above");
+            *table.blocks.last_mut().expect("tail exists") = id;
+            table.len += 1;
+            return Ok(AppendOutcome::Appended {
+                new_block: true,
+                cow_fork: true,
+            });
+        }
+        // sole owner: the map must never point at mutated content
+        self.unregister(tail);
+        self.blocks[tail as usize].tokens.push(token);
+        self.rows.get_mut(&row).expect("checked above").len += 1;
+        Ok(AppendOutcome::Appended { new_block: false, cow_fork: false })
+    }
+
+    /// Detach `row`, releasing its blocks (freed physically once the
+    /// last owner lets go). Returns how many blocks were physically
+    /// freed.
+    pub fn release_row(&mut self, row: RowId) -> Result<usize> {
+        let Some(table) = self.rows.remove(&row) else {
+            bail!("release of unattached row {row}");
+        };
+        let mut freed = 0;
+        // children before parents: a registered child never outlives the
+        // prefix chain its key points into
+        for &id in table.blocks.iter().rev() {
+            if self.pool.release(id).expect("table blocks are live") {
+                self.unregister(id);
+                self.blocks[id as usize] = Block::default();
+                freed += 1;
+            }
+        }
+        Ok(freed)
+    }
+
+    /// Swap `row` out under memory pressure: release its blocks and
+    /// charge the privately-owned bytes (shared blocks stay resident for
+    /// their other owners) through the migration model. Returns the
+    /// blocks physically freed.
+    pub fn swap_out(&mut self, row: RowId) -> Result<usize> {
+        let freed = self.release_row(row)?;
+        let bytes = freed * self.cfg.bytes_per_block;
+        self.stats.swap_outs += 1;
+        self.stats.swapped_bytes += bytes as u64;
+        self.stats.swap_stall_us += self.cfg.migrate.transfer_us(bytes);
+        Ok(freed)
+    }
+
+    /// Structural self-check for the property tests: pool accounting,
+    /// refcounts == table references, chunking shape, and share-map
+    /// consistency.
+    pub fn check_invariants(&self) {
+        self.pool.check_invariants();
+        // every table reference counted exactly once
+        let mut refs: HashMap<BlockId, u32> = HashMap::new();
+        for table in self.rows.values() {
+            assert_eq!(
+                table.blocks.len(),
+                self.cfg.blocks_for(table.len),
+                "table covers its length in blocks"
+            );
+            let mut covered = 0;
+            for (i, &id) in table.blocks.iter().enumerate() {
+                *refs.entry(id).or_insert(0) += 1;
+                let got = self.blocks[id as usize].tokens.len();
+                if i + 1 < table.blocks.len() {
+                    assert_eq!(got, self.cfg.block_tokens, "interior full");
+                }
+                covered += got;
+            }
+            assert_eq!(covered, table.len, "blocks cover the history");
+        }
+        for (id, &n) in &refs {
+            assert_eq!(self.pool.refcount(*id), n, "refcount of block {id}");
+        }
+        assert_eq!(
+            refs.len(),
+            self.pool.in_use(),
+            "every live block is referenced by some row"
+        );
+        for (key, &id) in &self.share {
+            let b = &self.blocks[id as usize];
+            assert!(b.registered, "share entry block {id} marked registered");
+            assert!(self.pool.refcount(id) > 0, "share entry {id} is live");
+            assert_eq!(key.parent, b.parent, "share key parent of {id}");
+            assert_eq!(key.tokens, b.tokens, "share key content of {id}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mgr(block_tokens: usize, n_blocks: usize) -> BlockManager {
+        BlockManager::new(BlockConfig::new(block_tokens, n_blocks)).unwrap()
+    }
+
+    #[test]
+    fn attach_chunks_history_into_blocks() {
+        let mut m = mgr(4, 8);
+        m.attach(0, &[1, 2, 3, 4, 5, 6]).unwrap();
+        let t = m.row_table(0).unwrap();
+        assert_eq!(t.blocks.len(), 2);
+        assert_eq!(t.len, 6);
+        assert_eq!(m.blocks_in_use(), 2);
+        assert_eq!(m.row_tokens(0).unwrap(), vec![1, 2, 3, 4, 5, 6]);
+        m.check_invariants();
+    }
+
+    #[test]
+    fn identical_prompts_share_all_blocks() {
+        let mut m = mgr(4, 8);
+        m.attach(0, &[1, 2, 3, 4, 5, 6]).unwrap();
+        assert_eq!(m.probe_attach(&[1, 2, 3, 4, 5, 6]), 0, "fully shared");
+        m.attach(1, &[1, 2, 3, 4, 5, 6]).unwrap();
+        assert_eq!(m.blocks_in_use(), 2, "no new physical blocks");
+        assert_eq!(m.stats.shared_hits, 2);
+        let (a, b) = (m.row_table(0).unwrap(), m.row_table(1).unwrap());
+        assert_eq!(a.blocks, b.blocks);
+        m.check_invariants();
+    }
+
+    #[test]
+    fn shared_prefix_diverging_suffix() {
+        let mut m = mgr(2, 8);
+        m.attach(0, &[9, 9, 9, 9, 1]).unwrap(); // blocks [99][99][1]
+        m.attach(1, &[9, 9, 9, 9, 2]).unwrap(); // shares [99][99], own [2]
+        assert_eq!(m.blocks_in_use(), 4);
+        assert_eq!(m.stats.shared_hits, 2);
+        assert_eq!(
+            m.row_table(0).unwrap().blocks[..2],
+            m.row_table(1).unwrap().blocks[..2]
+        );
+        m.check_invariants();
+    }
+
+    #[test]
+    fn same_content_different_parent_never_aliases() {
+        let mut m = mgr(2, 8);
+        m.attach(0, &[1, 1, 7, 7]).unwrap();
+        // second block content [7,7] matches, but the parent chain
+        // differs — sharing must not kick in
+        m.attach(1, &[2, 2, 7, 7]).unwrap();
+        assert_eq!(m.stats.shared_hits, 0);
+        assert_eq!(m.blocks_in_use(), 4);
+        m.check_invariants();
+    }
+
+    #[test]
+    fn append_grows_and_allocates_at_boundaries() {
+        let mut m = mgr(2, 4);
+        m.attach(0, &[1]).unwrap();
+        assert_eq!(
+            m.append(0, 2).unwrap(),
+            AppendOutcome::Appended { new_block: false, cow_fork: false }
+        );
+        assert_eq!(
+            m.append(0, 3).unwrap(),
+            AppendOutcome::Appended { new_block: true, cow_fork: false }
+        );
+        assert_eq!(m.row_tokens(0).unwrap(), vec![1, 2, 3]);
+        assert_eq!(m.blocks_in_use(), 2);
+        m.check_invariants();
+    }
+
+    #[test]
+    fn cow_fork_never_mutates_the_shared_block() {
+        let mut m = mgr(4, 8);
+        m.attach(0, &[1, 2, 3]).unwrap(); // partial tail, registered
+        m.attach(1, &[1, 2, 3]).unwrap(); // shares it (refcount 2)
+        let shared = m.row_table(0).unwrap().blocks[0];
+        assert_eq!(m.block_refcount(shared), 2);
+        // row 0 writes past the shared prefix: fork, not mutate
+        m.append(0, 40).unwrap();
+        assert_eq!(m.stats.cow_forks, 1);
+        assert_eq!(m.row_tokens(0).unwrap(), vec![1, 2, 3, 40]);
+        assert_eq!(m.row_tokens(1).unwrap(), vec![1, 2, 3], "untouched");
+        assert_eq!(m.block_content(shared).unwrap(), &[1, 2, 3]);
+        // row 1 now appends into the (sole-owned again) original
+        m.append(1, 41).unwrap();
+        assert_eq!(m.stats.cow_forks, 1, "sole owner appends in place");
+        assert_eq!(m.row_tokens(1).unwrap(), vec![1, 2, 3, 41]);
+        m.check_invariants();
+    }
+
+    #[test]
+    fn release_frees_only_unshared_blocks() {
+        let mut m = mgr(2, 8);
+        m.attach(0, &[5, 5, 1]).unwrap();
+        m.attach(1, &[5, 5, 2]).unwrap();
+        assert_eq!(m.blocks_in_use(), 3);
+        let freed = m.release_row(0).unwrap();
+        assert_eq!(freed, 1, "only row 0's private tail is freed");
+        assert_eq!(m.blocks_in_use(), 2);
+        assert_eq!(m.row_tokens(1).unwrap(), vec![5, 5, 2]);
+        let freed = m.release_row(1).unwrap();
+        assert_eq!(freed, 2);
+        assert_eq!(m.blocks_in_use(), 0);
+        let (alloc, free) = m.totals();
+        assert_eq!(alloc, free, "no leaked blocks after all rows retire");
+        assert_eq!(m.shared_entries(), 0, "share map fully drained");
+        m.check_invariants();
+    }
+
+    #[test]
+    fn pool_exhaustion_is_need_block_not_corruption() {
+        let mut m = mgr(2, 2);
+        m.attach(0, &[1, 2, 3, 4]).unwrap(); // both blocks
+        assert!(m.attach(1, &[9]).is_err(), "attach reports exhaustion");
+        assert_eq!(m.append(0, 5).unwrap(), AppendOutcome::NeedBlock);
+        assert_eq!(m.row_tokens(0).unwrap(), vec![1, 2, 3, 4], "unchanged");
+        m.check_invariants();
+    }
+
+    #[test]
+    fn swap_out_charges_private_bytes_only() {
+        let mut cfg = BlockConfig::new(2, 8);
+        cfg.bytes_per_block = 100;
+        let mut m = BlockManager::new(cfg).unwrap();
+        m.attach(0, &[5, 5, 1]).unwrap();
+        m.attach(1, &[5, 5, 2]).unwrap();
+        let freed = m.swap_out(0).unwrap();
+        assert_eq!(freed, 1);
+        assert_eq!(m.stats.swap_outs, 1);
+        assert_eq!(m.stats.swapped_bytes, 100, "shared blocks stay resident");
+        assert!(m.stats.swap_stall_us > 0.0);
+        m.check_invariants();
+    }
+
+    #[test]
+    fn sharing_off_disables_the_prefix_map() {
+        let mut cfg = BlockConfig::new(2, 8);
+        cfg.prefix_sharing = false;
+        let mut m = BlockManager::new(cfg).unwrap();
+        m.attach(0, &[1, 2, 3]).unwrap();
+        assert_eq!(m.probe_attach(&[1, 2, 3]), 2, "no sharing probed");
+        m.attach(1, &[1, 2, 3]).unwrap();
+        assert_eq!(m.blocks_in_use(), 4);
+        assert_eq!(m.stats.shared_hits, 0);
+        assert_eq!(m.shared_entries(), 0);
+        m.check_invariants();
+    }
+}

@@ -1,4 +1,6 @@
-//! Paged Optimizers (paper section 3), as an explicit simulation.
+//! Paged memory management: the paper's Paged Optimizers (section 3) as
+//! an explicit simulation, generalized into a block-based manager for
+//! decode KV caches.
 //!
 //! The paper uses NVIDIA unified memory: optimizer state lives in pageable
 //! memory that is automatically evicted to CPU RAM when the GPU runs out
@@ -14,11 +16,24 @@
 //!   overhead is ≈0 because paging only triggers on rare spikes
 //!   ("with a batch size of 16, paged optimizers provide the same training
 //!   speed as regular optimizers", section 4).
+//!
+//! The same machinery — fixed-size units, explicit residency, migration
+//! cost accounting — also manages the *serving* side's capacity
+//! bottleneck: per-row decode KV caches. [`blocks`] owns them as
+//! refcounted, fixed-size cache blocks with copy-on-write prefix sharing
+//! and swap-out under pressure, built on the [`pool::BlockPool`]
+//! substrate and the [`pager::MigrateModel`] cost model; the engine's
+//! scheduler admits by blocks actually allocated instead of worst-case
+//! `prompt + max_new_tokens` tokens.
 
+pub mod blocks;
 pub mod optimizer;
 pub mod pager;
 pub mod pool;
 
+pub use blocks::{
+    AppendOutcome, BlockConfig, BlockManager, BlockStats, RowTable,
+};
 pub use optimizer::{PagedOptimizerSim, PagerStats};
-pub use pager::{PageId, Pager, PagerConfig};
-pub use pool::DevicePool;
+pub use pager::{MigrateModel, PageId, Pager, PagerConfig};
+pub use pool::{BlockId, BlockPool, DevicePool};

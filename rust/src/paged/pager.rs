@@ -30,6 +30,47 @@ impl Default for PagerConfig {
     }
 }
 
+impl PagerConfig {
+    /// The host↔device transfer model implied by this config (shared
+    /// with the KV block manager's swap accounting).
+    pub fn migrate(&self) -> MigrateModel {
+        MigrateModel {
+            bandwidth: self.bandwidth,
+            fixed_us: self.fault_fixed_us,
+        }
+    }
+}
+
+/// PCIe-like host↔device migration cost model: a fixed per-fault driver
+/// cost plus bandwidth-limited transfer time. Extracted from the pager so
+/// every subsystem that migrates state (optimizer pages, swapped KV
+/// blocks) charges latency the same way.
+#[derive(Debug, Clone)]
+pub struct MigrateModel {
+    /// simulated link bandwidth, bytes/sec
+    pub bandwidth: f64,
+    /// fixed per-fault cost in microseconds (driver + TLB shootdown)
+    pub fixed_us: f64,
+}
+
+impl Default for MigrateModel {
+    fn default() -> Self {
+        PagerConfig::default().migrate()
+    }
+}
+
+impl MigrateModel {
+    /// Bandwidth-limited transfer time for `bytes`, in microseconds.
+    pub fn transfer_us(&self, bytes: usize) -> f64 {
+        bytes as f64 / self.bandwidth * 1e6
+    }
+
+    /// One page fault moving `bytes`: fixed cost plus the transfer.
+    pub fn fault_us(&self, bytes: usize) -> f64 {
+        self.fixed_us + self.transfer_us(bytes)
+    }
+}
+
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum Residency {
     Device,
@@ -129,8 +170,7 @@ impl Pager {
         self.resident_bytes += page;
         self.peak_resident = self.peak_resident.max(self.resident_bytes);
         self.stats.migrated_bytes += page as u64;
-        self.stats.stall_us += self.cfg.fault_fixed_us
-            + page as f64 / self.cfg.bandwidth * 1e6;
+        self.stats.stall_us += self.cfg.migrate().fault_us(page);
     }
 
     fn evict_lru(&mut self) -> bool {
@@ -148,7 +188,7 @@ impl Pager {
                 self.stats.evictions += 1;
                 self.stats.migrated_bytes += self.cfg.page_bytes as u64;
                 self.stats.stall_us +=
-                    self.cfg.page_bytes as f64 / self.cfg.bandwidth * 1e6;
+                    self.cfg.migrate().transfer_us(self.cfg.page_bytes);
                 true
             }
             None => false,

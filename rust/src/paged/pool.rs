@@ -1,9 +1,126 @@
-//! A fixed-capacity device memory pool with named allocations.
-//! Models "GPU memory": allocations either fit or OOM (unless their pages
-//! are managed by the `Pager`).
+//! Fixed-capacity device memory pools.
+//!
+//! Two primitives model "GPU memory" at different granularities:
+//!
+//! * [`DevicePool`] — named byte allocations that either fit or OOM,
+//!   like a `cudaMalloc` arena (used by the paged-optimizer simulation).
+//! * [`BlockPool`] — a pool of `n_blocks` equal-size, **refcounted**
+//!   slots. This is the physical substrate of the KV block manager
+//!   (`paged::blocks`): prefix sharing retains a block once per
+//!   attached row, and a block is recycled the instant its last
+//!   reference drops, so `allocated == freed` after every row retires.
 
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
+
+/// Index of one physical cache block inside a [`BlockPool`].
+pub type BlockId = u32;
+
+/// A fixed pool of refcounted, equal-size block slots. Pure accounting:
+/// the pool tracks which slots are live and how many owners each has,
+/// never what they contain (that is `paged::blocks`' job).
+#[derive(Debug)]
+pub struct BlockPool {
+    /// per-slot reference count (0 = free)
+    refcount: Vec<u32>,
+    /// stack of free slot ids
+    free: Vec<BlockId>,
+    /// lifetime counters: leak detection is `allocated == freed` once
+    /// every owner has released
+    allocated_total: u64,
+    freed_total: u64,
+}
+
+impl BlockPool {
+    /// A pool of `n_blocks` free slots.
+    pub fn new(n_blocks: usize) -> BlockPool {
+        BlockPool {
+            refcount: vec![0; n_blocks],
+            // pop order is ascending ids — deterministic, test-friendly
+            free: (0..n_blocks as BlockId).rev().collect(),
+            allocated_total: 0,
+            freed_total: 0,
+        }
+    }
+
+    /// Total slots in the pool.
+    pub fn n_blocks(&self) -> usize {
+        self.refcount.len()
+    }
+
+    /// Slots currently live (refcount > 0).
+    pub fn in_use(&self) -> usize {
+        self.refcount.len() - self.free.len()
+    }
+
+    /// Slots currently free.
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Blocks ever allocated / ever recycled (leak accounting).
+    pub fn totals(&self) -> (u64, u64) {
+        (self.allocated_total, self.freed_total)
+    }
+
+    /// Current reference count of `id` (0 = free or out of range).
+    pub fn refcount(&self, id: BlockId) -> u32 {
+        self.refcount.get(id as usize).copied().unwrap_or(0)
+    }
+
+    /// Claim a free slot with refcount 1, or `None` when the pool is
+    /// exhausted (the caller decides whether that means swap or OOM).
+    pub fn alloc(&mut self) -> Option<BlockId> {
+        let id = self.free.pop()?;
+        self.refcount[id as usize] = 1;
+        self.allocated_total += 1;
+        Some(id)
+    }
+
+    /// Add one reference to a live block (prefix sharing).
+    pub fn retain(&mut self, id: BlockId) -> Result<()> {
+        match self.refcount.get_mut(id as usize) {
+            Some(rc) if *rc > 0 => {
+                *rc += 1;
+                Ok(())
+            }
+            _ => bail!("retain of free or out-of-range block {id}"),
+        }
+    }
+
+    /// Drop one reference; returns `true` when this was the last one and
+    /// the slot went back on the free list.
+    pub fn release(&mut self, id: BlockId) -> Result<bool> {
+        match self.refcount.get_mut(id as usize) {
+            Some(rc) if *rc > 0 => {
+                *rc -= 1;
+                if *rc == 0 {
+                    self.free.push(id);
+                    self.freed_total += 1;
+                    Ok(true)
+                } else {
+                    Ok(false)
+                }
+            }
+            _ => bail!("release of free or out-of-range block {id}"),
+        }
+    }
+
+    /// Accounting self-check (cheap; property tests call it every step).
+    pub fn check_invariants(&self) {
+        let live = self.refcount.iter().filter(|&&rc| rc > 0).count();
+        assert_eq!(
+            live + self.free.len(),
+            self.refcount.len(),
+            "every slot is live xor free"
+        );
+        assert_eq!(
+            self.allocated_total - self.freed_total,
+            live as u64,
+            "allocated - freed == live blocks"
+        );
+    }
+}
 
 #[derive(Debug)]
 pub struct DevicePool {
@@ -84,5 +201,35 @@ mod tests {
         assert!(p.fits(6));
         assert!(!p.fits(7));
         assert_eq!(p.used(), 4);
+    }
+
+    #[test]
+    fn block_pool_alloc_retain_release() {
+        let mut p = BlockPool::new(2);
+        let a = p.alloc().unwrap();
+        let b = p.alloc().unwrap();
+        assert_ne!(a, b);
+        assert_eq!(p.free_blocks(), 0);
+        assert!(p.alloc().is_none(), "pool exhausted");
+        p.retain(a).unwrap();
+        assert_eq!(p.refcount(a), 2);
+        assert!(!p.release(a).unwrap(), "still one owner left");
+        assert!(p.release(a).unwrap(), "last owner frees the slot");
+        assert_eq!(p.free_blocks(), 1);
+        assert!(p.release(a).is_err(), "double release is an error");
+        assert!(p.retain(a).is_err(), "retain of a free slot is an error");
+        p.release(b).unwrap();
+        assert_eq!(p.totals(), (2, 2), "allocated == freed when all retired");
+        p.check_invariants();
+    }
+
+    #[test]
+    fn block_pool_recycles_freed_slots() {
+        let mut p = BlockPool::new(1);
+        let a = p.alloc().unwrap();
+        p.release(a).unwrap();
+        let b = p.alloc().unwrap();
+        assert_eq!(a, b, "single slot is recycled");
+        p.check_invariants();
     }
 }

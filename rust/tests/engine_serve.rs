@@ -198,6 +198,53 @@ fn tight_token_budget_serializes_but_preserves_outputs() {
 }
 
 #[test]
+fn prefix_sharing_on_and_off_produce_identical_greedy_outputs() {
+    let Some((rt, manifest)) = env() else { return };
+    let Some(eng) = engine(&rt, &manifest) else { return };
+    let sampler = Sampler { max_new_tokens: 6, ..Sampler::default() };
+    // the shared-prefix workload: one "system prompt" repeated across
+    // every request, distinct suffixes — sharing collapses the common
+    // prefix blocks but must never change a single output token
+    let prompts = ["rev shared a", "rev shared b", "rev shared c"];
+    let mut texts = Vec::new();
+    for sharing in [true, false] {
+        let mut s = eng
+            .session()
+            .sampler(sampler.clone())
+            .greedy(true)
+            .kv_block_tokens(4)
+            .prefix_sharing(sharing)
+            .build()
+            .unwrap();
+        let report = s
+            .serve(prompts.iter().map(|p| GenRequest::new(*p)).collect())
+            .unwrap();
+        for out in &report.outputs {
+            assert_eq!(out.outcome, JobOutcome::Done);
+        }
+        if sharing {
+            assert!(
+                report.stats.shared_block_hits > 0,
+                "shared-prefix workload must actually share blocks"
+            );
+        } else {
+            assert_eq!(report.stats.shared_block_hits, 0);
+        }
+        texts.push(
+            report
+                .outputs
+                .into_iter()
+                .map(|o| o.text)
+                .collect::<Vec<_>>(),
+        );
+    }
+    assert_eq!(
+        texts[0], texts[1],
+        "prefix sharing changed greedy outputs"
+    );
+}
+
+#[test]
 fn forcing_decode_modes_through_serve_agree() {
     let Some((rt, manifest)) = env() else { return };
     let Some(eng) = engine(&rt, &manifest) else { return };

@@ -1,0 +1,86 @@
+#!/usr/bin/env python3
+"""Compare two `util::bench` JSON files and flag throughput regressions.
+
+Usage:
+    python3 scripts/bench_compare.py BASELINE.json CURRENT.json \
+        [--threshold 0.25] [--warn-only]
+
+Both files are the output of a bench binary's `--json` flag (or `make
+bench-quant` / `make bench-generate`): `{"results": [{name, mean_ns,
+...}, ...], "mode": "full"|"smoke", ...}`. Results are matched by name;
+a benchmark regresses when its mean time grows by more than THRESHOLD
+(default 25%) over the baseline. Exit code 1 when anything regressed
+(0 with --warn-only).
+
+Baselines committed before a machine could run the benches carry
+`"placeholder": true` and compare as vacuously green — the first real
+`make bench-quant` / `make bench-generate` run replaces them.
+"""
+
+import argparse
+import json
+import sys
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except FileNotFoundError:
+        print(f"bench_compare: {path} not found")
+        return None
+    except json.JSONDecodeError as e:
+        print(f"bench_compare: {path} is not valid JSON: {e}")
+        return None
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline")
+    ap.add_argument("current")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="fractional slowdown that counts as a regression")
+    ap.add_argument("--warn-only", action="store_true",
+                    help="report regressions but always exit 0")
+    args = ap.parse_args()
+
+    base = load(args.baseline)
+    cur = load(args.current)
+    if base is None or cur is None:
+        # a missing side is a setup problem, not a perf regression
+        return 0
+    if base.get("placeholder"):
+        print(f"bench_compare: {args.baseline} is a placeholder baseline "
+              "(no toolchain has run the bench yet); nothing to compare — "
+              "run the bench on a capable machine to record one.")
+        return 0
+    if base.get("mode") != cur.get("mode"):
+        print(f"bench_compare: mode mismatch ({base.get('mode')!r} baseline "
+              f"vs {cur.get('mode')!r} current); timings are not "
+              "comparable across modes — skipping.")
+        return 0
+
+    by_name = {r["name"]: r for r in base.get("results", [])}
+    regressions = []
+    compared = 0
+    for r in cur.get("results", []):
+        b = by_name.get(r["name"])
+        if b is None or not b.get("mean_ns") or not r.get("mean_ns"):
+            continue
+        compared += 1
+        ratio = r["mean_ns"] / b["mean_ns"]
+        marker = ""
+        if ratio > 1.0 + args.threshold:
+            marker = "  <-- REGRESSION"
+            regressions.append((r["name"], ratio))
+        print(f"{r['name']:<56} {ratio:6.2f}x baseline{marker}")
+    print(f"\nbench_compare: {compared} benchmarks compared, "
+          f"{len(regressions)} regressed (threshold "
+          f"{args.threshold:.0%} slowdown)")
+    if regressions and not args.warn_only:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
