@@ -3,8 +3,8 @@
 
 ARTIFACTS ?= artifacts
 
-.PHONY: artifacts artifacts-large test test-python test-rust bench-quant \
-        bench-generate bench-compare
+.PHONY: artifacts artifacts-large test test-python test-rust lint \
+        bench-quant bench-generate bench-compare
 
 # Lower every model config to HLO text + init tensors + manifest.
 artifacts:
@@ -21,6 +21,14 @@ test-python:
 
 test-rust:
 	cd rust && cargo test -q
+
+# Project-invariant static analysis over rust/ (stdlib Python only, no
+# toolchain needed): hot-path panic freedom, float ordering, oracle
+# purity, cancellation memory ordering, lossy casts, scoped threads,
+# Result-returning public APIs. Rules and waiver syntax: ARCHITECTURE.md.
+lint:
+	python3 scripts/pallas_lint.py --self-test
+	python3 scripts/pallas_lint.py
 
 # Quant-kernel perf trajectory: fused-vs-scalar throughput + speedups,
 # persisted machine-readably at the repo root (tracked from PR 3 onward).

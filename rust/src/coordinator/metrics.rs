@@ -8,23 +8,34 @@ use anyhow::Result;
 
 use crate::paged::optimizer::PagerStats;
 
+/// One held-out evaluation snapshot.
 #[derive(Debug, Clone)]
 pub struct EvalPoint {
+    /// training step the eval ran at
     pub step: usize,
+    /// held-out loss
     pub loss: f32,
+    /// held-out token accuracy in [0, 1]
     pub accuracy: f32,
 }
 
+/// Per-run record of training losses, step times, and eval points.
 #[derive(Debug, Clone)]
 pub struct TrainingLog {
+    /// run name (used in report headers)
     pub name: String,
+    /// training loss at each optimizer step
     pub losses: Vec<f32>,
+    /// wall time of each optimizer step
     pub step_times: Vec<Duration>,
+    /// periodic held-out evaluations
     pub evals: Vec<EvalPoint>,
+    /// final paged-optimizer counters, when the pager ran
     pub pager_stats: Option<PagerStats>,
 }
 
 impl TrainingLog {
+    /// An empty log for a run called `name`.
     pub fn new(name: &str) -> TrainingLog {
         TrainingLog {
             name: name.to_string(),
@@ -35,16 +46,19 @@ impl TrainingLog {
         }
     }
 
+    /// Append one optimizer step's loss and wall time.
     pub fn record_step(&mut self, step: usize, loss: f32, dt: Duration) {
         debug_assert_eq!(step, self.losses.len());
         self.losses.push(loss);
         self.step_times.push(dt);
     }
 
+    /// Append one held-out evaluation.
     pub fn record_eval(&mut self, step: usize, loss: f32, accuracy: f32) {
         self.evals.push(EvalPoint { step, loss, accuracy });
     }
 
+    /// Loss of the last recorded step (NaN when no steps ran).
     pub fn final_loss(&self) -> f32 {
         *self.losses.last().unwrap_or(&f32::NAN)
     }
@@ -59,6 +73,7 @@ impl TrainingLog {
         tail.iter().sum::<f32>() / tail.len() as f32
     }
 
+    /// Mean wall time per optimizer step.
     pub fn mean_step_time(&self) -> Duration {
         if self.step_times.is_empty() {
             return Duration::ZERO;
@@ -66,6 +81,7 @@ impl TrainingLog {
         self.step_times.iter().sum::<Duration>() / self.step_times.len() as u32
     }
 
+    /// Highest held-out accuracy seen across evals.
     pub fn best_eval_accuracy(&self) -> Option<f32> {
         self.evals
             .iter()

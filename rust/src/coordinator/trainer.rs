@@ -30,10 +30,14 @@ use crate::tensorio::Tensor;
 
 use super::metrics::TrainingLog;
 
+/// Knobs for one training run.
 #[derive(Debug, Clone)]
 pub struct TrainOptions {
+    /// optimizer steps to run
     pub steps: usize,
+    /// evaluate every N steps (0 disables periodic eval)
     pub eval_every: usize,
+    /// data-order and eval seed
     pub seed: u64,
     /// attach the paged-optimizer simulator (paper section 3)
     pub paged: bool,
@@ -53,6 +57,8 @@ impl Default for TrainOptions {
     }
 }
 
+/// Drives the train/eval executables of one artifact: owns the mutable
+/// training state and steps it on-device.
 pub struct Trainer<'e> {
     engine: &'e Engine,
     train_exe: std::sync::Arc<Executable>,
@@ -80,10 +86,12 @@ impl<'e> Trainer<'e> {
         Ok(Trainer { engine, train_exe, eval_exe, state, pager: None })
     }
 
+    /// The engine whose artifact this trainer is training.
     pub fn engine(&self) -> &'e Engine {
         self.engine
     }
 
+    /// The artifact spec being trained.
     pub fn spec(&self) -> &ArtifactSpec {
         &self.engine.spec
     }

@@ -16,23 +16,32 @@ use super::tokenizer::{Tokenizer, PAD};
 pub struct Batch {
     /// row-major (batch, seq_len)
     pub tokens: Vec<i32>,
+    /// loss mask, same shape as `tokens` (0 on pad and — unless `train_on_source` — on the instruction span)
     pub mask: Vec<f32>,
+    /// number of rows
     pub batch: usize,
+    /// padded row length
     pub seq_len: usize,
     /// unpadded lengths (diagnostics: group-by-length quality)
     pub lens: Vec<usize>,
 }
 
+/// Tokenizes a dataset once and serves shuffled fixed-shape epochs.
 pub struct Batcher {
+    /// the tokenizer used for every example
     pub tokenizer: Tokenizer,
+    /// rows per batch
     pub batch: usize,
+    /// fixed padded length (the AOT graph's static shape)
     pub seq_len: usize,
+    /// whether the loss also covers the instruction span
     pub train_on_source: bool,
     /// encoded (ids, mask) pairs sorted by length
     encoded: Vec<(Vec<i32>, Vec<f32>)>,
 }
 
 impl Batcher {
+    /// Tokenize and length-sort `dataset` for group-by-length batching.
     pub fn new(
         dataset: &Dataset,
         tokenizer: Tokenizer,
@@ -57,6 +66,7 @@ impl Batcher {
         Batcher { tokenizer, batch, seq_len, train_on_source, encoded }
     }
 
+    /// Full batches available per epoch (the ragged tail is dropped).
     pub fn n_batches(&self) -> usize {
         self.encoded.len() / self.batch
     }

@@ -12,15 +12,20 @@ use super::synthetic::Task;
 /// One training example (possibly a flattened multi-turn conversation).
 #[derive(Debug, Clone)]
 pub struct Example {
+    /// the prompt / user side
     pub instruction: String,
+    /// the target / assistant side
     pub response: String,
     /// number of conversation turns flattened into this example
     pub turns: usize,
 }
 
+/// A named collection of training examples.
 #[derive(Debug, Clone)]
 pub struct Dataset {
+    /// corpus name (e.g. `"oasst1"`, `"oasst1-holdout"`)
     pub kind: String,
+    /// the examples, in generation order until shuffled
     pub examples: Vec<Example>,
 }
 
@@ -47,7 +52,9 @@ impl Dataset {
 /// A candidate reply with a (crowd-sourced) rank score.
 #[derive(Debug, Clone)]
 pub struct RankedReply {
+    /// the candidate reply text
     pub text: String,
+    /// crowd rank score; higher is preferred
     pub score: f64,
     /// whether this candidate is actually correct for the prompt
     pub correct: bool,
@@ -56,13 +63,16 @@ pub struct RankedReply {
 /// One level of the conversation: a user turn + ranked assistant replies.
 #[derive(Debug, Clone)]
 pub struct ConversationLevel {
+    /// the user turn at this depth
     pub user: String,
+    /// candidate assistant replies, scored
     pub replies: Vec<RankedReply>,
 }
 
 /// A linear-in-depth conversation tree with ranked branches per level.
 #[derive(Debug, Clone)]
 pub struct ConversationTree {
+    /// turns from root to leaf, each with its ranked candidates
     pub levels: Vec<ConversationLevel>,
 }
 
@@ -111,7 +121,7 @@ impl ConversationTree {
             let top = level
                 .replies
                 .iter()
-                .max_by(|a, b| a.score.partial_cmp(&b.score).unwrap())
+                .max_by(|a, b| a.score.total_cmp(&b.score))
                 .expect("non-empty replies");
             if i + 1 == self.levels.len() {
                 let instruction = if context.is_empty() {
@@ -176,7 +186,7 @@ mod tests {
             let top = tree.levels[0]
                 .replies
                 .iter()
-                .max_by(|a, b| a.score.partial_cmp(&b.score).unwrap())
+                .max_by(|a, b| a.score.total_cmp(&b.score))
                 .unwrap();
             assert!(top.correct);
         }

@@ -16,17 +16,26 @@ use super::dataset::{ConversationTree, Dataset, Example};
 /// The eight dataset stand-ins (paper Table 5 rows).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum CorpusKind {
+    /// crowd-ranked conversation trees (highest quality)
     Oasst1,
+    /// helpful/harmless chat pairs
     HhRlhf,
+    /// GPT-distilled single-turn instructions
     Alpaca,
+    /// model-generated instructions (noisiest)
     SelfInstruct,
+    /// large distilled instruction set
     UnnaturalInstructions,
+    /// benchmark-shaped task mixture
     FlanV2,
+    /// open-source chat mixture
     Chip2,
+    /// small corpus of long-output examples
     Longform,
 }
 
 impl CorpusKind {
+    /// All eight corpora, Table 5 order.
     pub fn all() -> [CorpusKind; 8] {
         [
             CorpusKind::Oasst1,
@@ -40,6 +49,7 @@ impl CorpusKind {
         ]
     }
 
+    /// Paper-style lowercase corpus name.
     pub fn name(self) -> &'static str {
         match self {
             CorpusKind::Oasst1 => "oasst1",
@@ -86,13 +96,21 @@ impl CorpusKind {
 /// One synthetic task instance: instruction + correct response.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Task {
+    /// echo the word
     Copy,
+    /// reverse the word
     Reverse,
+    /// sort the word's letters
     SortLetters,
+    /// uppercase the word
     Upper,
+    /// last character of the word
     LastChar,
+    /// small-integer addition
     Add,
+    /// repeat the word n times
     Repeat,
+    /// fixed-table fact lookup (fake world knowledge)
     Lookup,
 }
 
@@ -117,6 +135,7 @@ fn rand_word(rng: &mut Rng, len: usize) -> String {
 }
 
 impl Task {
+    /// One `(instruction, correct response)` instance; `long` doubles word length.
     pub fn generate(self, rng: &mut Rng, long: bool) -> (String, String) {
         let wlen = if long { 8 + rng.below(8) } else { 3 + rng.below(5) };
         match self {
@@ -258,6 +277,7 @@ pub enum EvalSuite {
     VicunaProxy,
 }
 
+/// Held-out eval examples drawn from the suite's task mixture.
 pub fn eval_set(suite: EvalSuite, size: usize, seed: u64) -> Dataset {
     use Task::*;
     let (tasks, weights): (Vec<Task>, Vec<f64>) = match suite {

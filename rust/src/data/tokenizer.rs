@@ -5,12 +5,18 @@
 //!   4..=259 raw bytes. Model vocabs < 260 (e.g. the tiny configs with
 //!   vocab=256) restrict text to ASCII via `fold_ascii`.
 
+/// padding token id
 pub const PAD: i32 = 0;
+/// beginning-of-sequence token id
 pub const BOS: i32 = 1;
+/// end-of-sequence token id
 pub const EOS: i32 = 2;
+/// instruction/response separator token id
 pub const SEP: i32 = 3;
+/// first raw-byte token id (byte `b` encodes near `BYTE_BASE + b`)
 pub const BYTE_BASE: i32 = 4;
 
+/// Byte-level tokenizer bounded by the model's vocab size.
 #[derive(Debug, Clone)]
 pub struct Tokenizer {
     /// model vocab size; byte ids are folded into [BYTE_BASE, vocab)
@@ -18,6 +24,7 @@ pub struct Tokenizer {
 }
 
 impl Tokenizer {
+    /// A tokenizer for a model with `vocab` ids (must exceed the specials).
     pub fn new(vocab: usize) -> Tokenizer {
         assert!(vocab > BYTE_BASE as usize + 16, "vocab too small");
         Tokenizer { vocab }

@@ -13,22 +13,31 @@ pub use tournament::{EloSummary, Tournament};
 /// Match outcome from A's perspective.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Outcome {
+    /// system `a` won
     WinA,
+    /// system `b` won
     WinB,
+    /// judged too close to call
     Tie,
 }
 
 /// One judged comparison between systems `a` and `b`.
 #[derive(Debug, Clone, Copy)]
 pub struct MatchRecord {
+    /// index of the first (order matters: shown-first) system
     pub a: usize,
+    /// index of the second system
     pub b: usize,
+    /// the judgment, from `a`'s perspective
     pub outcome: Outcome,
 }
 
+/// Rating-update parameters.
 #[derive(Debug, Clone, Copy)]
 pub struct EloConfig {
+    /// K-factor: rating points at stake per match
     pub k: f64,
+    /// starting rating for every system
     pub initial: f64,
 }
 

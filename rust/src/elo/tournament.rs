@@ -7,25 +7,36 @@ use crate::util::stats;
 
 use super::{run_sequence, EloConfig, MatchRecord};
 
+/// Aggregated rating of one system across orderings.
 #[derive(Debug, Clone)]
 pub struct EloSummary {
+    /// system index (roster order)
     pub system: usize,
+    /// mean Elo over all orderings
     pub mean: f64,
+    /// half-width of the 95% confidence interval
     pub ci95: f64,
+    /// 1-based rank by mean (1 = best)
     pub rank: usize,
 }
 
+/// A match set to be rated over many random orderings.
 pub struct Tournament {
+    /// number of systems in the roster
     pub n_systems: usize,
+    /// every judged comparison collected so far
     pub matches: Vec<MatchRecord>,
+    /// rating-update parameters
     pub cfg: EloConfig,
 }
 
 impl Tournament {
+    /// An empty tournament with the paper's default config.
     pub fn new(n_systems: usize) -> Tournament {
         Tournament { n_systems, matches: Vec::new(), cfg: EloConfig::default() }
     }
 
+    /// Record one judged match.
     pub fn add(&mut self, m: MatchRecord) {
         debug_assert!(m.a < self.n_systems && m.b < self.n_systems);
         self.matches.push(m);
@@ -58,7 +69,7 @@ impl Tournament {
             .collect();
         // ranks by mean, descending
         let mut idx: Vec<usize> = (0..out.len()).collect();
-        idx.sort_by(|&i, &j| out[j].mean.partial_cmp(&out[i].mean).unwrap());
+        idx.sort_by(|&i, &j| out[j].mean.total_cmp(&out[i].mean));
         for (rank, &i) in idx.iter().enumerate() {
             out[i].rank = rank + 1;
         }

@@ -44,7 +44,7 @@
 use std::rc::Rc;
 use std::sync::Arc;
 
-use anyhow::{anyhow, ensure, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::data::tokenizer::PAD;
 use crate::runtime::executor::{literal_from_tensor, literal_to_f32, Executable};
@@ -141,9 +141,11 @@ struct Row {
 
 fn check_start(rows: &mut [Row], row: usize, prompt: &[i32],
                seq_len: usize) -> Result<()> {
-    ensure!(row < rows.len(), "row {row} out of range (capacity {})",
-            rows.len());
-    ensure!(!rows[row].live, "row {row} is still live (free it first)");
+    let capacity = rows.len();
+    let Some(slot) = rows.get_mut(row) else {
+        bail!("row {row} out of range (capacity {capacity})");
+    };
+    ensure!(!slot.live, "row {row} is still live (free it first)");
     ensure!(!prompt.is_empty(), "empty prompt for row {row}");
     ensure!(
         prompt.len() < seq_len,
@@ -151,19 +153,22 @@ fn check_start(rows: &mut [Row], row: usize, prompt: &[i32],
         prompt.len(),
         seq_len
     );
-    rows[row] =
+    *slot =
         Row { history: prompt.to_vec(), cached: 0, blocks: Vec::new(), live: true };
     Ok(())
 }
 
 fn check_push(rows: &mut [Row], row: usize, token: i32,
               seq_len: usize) -> Result<()> {
-    ensure!(row < rows.len() && rows[row].live, "row {row} is not live");
+    let slot = match rows.get_mut(row) {
+        Some(r) if r.live => r,
+        _ => bail!("row {row} is not live"),
+    };
     ensure!(
-        rows[row].history.len() < seq_len,
+        slot.history.len() < seq_len,
         "row {row} is full ({seq_len} tokens)"
     );
-    rows[row].history.push(token);
+    slot.history.push(token);
     Ok(())
 }
 
@@ -180,7 +185,7 @@ fn free_row_common(rows: &mut [Row], row: usize) -> bool {
 fn check_step_rows(rows: &[Row], selected: &[usize]) -> Result<()> {
     ensure!(!selected.is_empty(), "step called with no rows");
     for &r in selected {
-        ensure!(r < rows.len() && rows[r].live, "row {r} is not live");
+        ensure!(rows.get(r).is_some_and(|x| x.live), "row {r} is not live");
     }
     Ok(())
 }
@@ -245,7 +250,9 @@ impl DecodeGraph for FullDecode<'_> {
         check_step_rows(&self.rows, rows)?;
         let mut tokens = vec![PAD; self.batch * self.seq_len];
         for &r in rows {
+            // pallas-lint: allow(no-hot-path-panic) — check_step_rows verified r < capacity and live
             let h = &self.rows[r].history;
+            // pallas-lint: allow(no-hot-path-panic) — history.len() < seq_len is the check_push invariant, so the slice is in range
             tokens[r * self.seq_len..r * self.seq_len + h.len()]
                 .copy_from_slice(h);
         }
@@ -258,12 +265,16 @@ impl DecodeGraph for FullDecode<'_> {
         inputs.extend(frozen.iter());
         inputs.push(&tok);
         let out = self.exe.run(&inputs)?;
-        let logits = literal_to_f32(&out[0])?;
+        let logits = literal_to_f32(
+            out.first().ok_or_else(|| anyhow!("fwd graph returned no outputs"))?,
+        )?;
         Ok(rows
             .iter()
             .map(|&r| {
+                // pallas-lint: allow(no-hot-path-panic) — check_step_rows verified r < capacity and live; live rows have non-empty history
                 let pos = self.rows[r].history.len() - 1;
                 let off = (r * self.seq_len + pos) * self.vocab;
+                // pallas-lint: allow(no-hot-path-panic) — off + vocab ≤ batch·seq_len·vocab because r < batch and pos < seq_len
                 logits[off..off + self.vocab].to_vec()
             })
             .collect())
@@ -378,9 +389,16 @@ impl<'e> CachedDecode<'e> {
                 return Err(e);
             }
         };
-        let v_new = out.pop().expect("v cache output");
-        let k_new = out.pop().expect("k cache output");
-        let logits = out.pop().expect("logits output");
+        let mut it = out.drain(..);
+        let (Some(logits), Some(k_new), Some(v_new)) =
+            (it.next(), it.next(), it.next())
+        else {
+            // unreachable: len == 3 matched above; restore the caches
+            // anyway so a bug here can't strand the decode state
+            drop(it);
+            self.caches = Some((kc, vc));
+            bail!("decode graph outputs vanished (len == 3 checked above)");
+        };
         self.caches = Some((k_new, v_new));
         Ok(logits)
     }
@@ -442,6 +460,7 @@ impl DecodeGraph for CachedDecode<'_> {
         let (pre, inc): (Vec<usize>, Vec<usize>) = rows
             .iter()
             .copied()
+            // pallas-lint: allow(no-hot-path-panic) — check_step_rows verified r < capacity and live
             .partition(|&r| needs_prefill(&self.rows[r]));
 
         let mut per_row: Vec<Option<Vec<f32>>> = vec![None; self.batch];
@@ -450,9 +469,12 @@ impl DecodeGraph for CachedDecode<'_> {
             let mut tokens = vec![PAD; self.batch * self.seq_len];
             let mut mask = vec![0f32; self.batch];
             for &r in &pre {
+                // pallas-lint: allow(no-hot-path-panic) — check_step_rows verified r < capacity and live
                 let h = &self.rows[r].history;
+                // pallas-lint: allow(no-hot-path-panic) — history.len() < seq_len is the check_push invariant, so the slice is in range
                 tokens[r * self.seq_len..r * self.seq_len + h.len()]
                     .copy_from_slice(h);
+                // pallas-lint: allow(no-hot-path-panic) — mask is batch-sized and r < batch
                 mask[r] = 1.0;
             }
             let tok = literal_from_tensor(&Tensor::i32(
@@ -464,9 +486,12 @@ impl DecodeGraph for CachedDecode<'_> {
             let logits_lit = self.run_with_caches(&exe, kc, vc, [&tok, &m])?;
             let logits = literal_to_f32(&logits_lit)?;
             for &r in &pre {
+                // pallas-lint: allow(no-hot-path-panic) — check_step_rows verified r < capacity and live
                 let len = self.rows[r].history.len();
+                // pallas-lint: allow(no-hot-path-panic) — same bounds as the line above
                 self.rows[r].cached = len;
                 let off = (r * self.seq_len + len - 1) * self.vocab;
+                // pallas-lint: allow(no-hot-path-panic) — off + vocab ≤ batch·seq_len·vocab because r < batch and len ≤ seq_len; per_row is batch-sized
                 per_row[r] = Some(logits[off..off + self.vocab].to_vec());
             }
         }
@@ -477,8 +502,11 @@ impl DecodeGraph for CachedDecode<'_> {
             // final step before its attention window can reach it
             let mut pos = vec![(self.seq_len - 1) as i32; self.batch];
             for &r in &inc {
+                // pallas-lint: allow(no-hot-path-panic) — check_step_rows verified r < capacity and live
                 let h = &self.rows[r].history;
+                // pallas-lint: allow(no-hot-path-panic) — live rows have non-empty history: check_start rejects empty prompts; token is batch-sized
                 token[r] = *h.last().expect("live row has history");
+                // pallas-lint: allow(no-hot-path-panic) — pos is batch-sized and r < batch
                 pos[r] = (h.len() - 1) as i32;
             }
             let t = literal_from_tensor(&Tensor::i32(
@@ -490,14 +518,17 @@ impl DecodeGraph for CachedDecode<'_> {
             let logits_lit = self.run_with_caches(&exe, kc, vc, [&t, &p])?;
             let logits = literal_to_f32(&logits_lit)?;
             for &r in &inc {
+                // pallas-lint: allow(no-hot-path-panic) — check_step_rows verified r < capacity and live
                 self.rows[r].cached = self.rows[r].history.len();
                 let off = r * self.vocab;
+                // pallas-lint: allow(no-hot-path-panic) — off + vocab ≤ batch·vocab because r < batch; per_row is batch-sized
                 per_row[r] = Some(logits[off..off + self.vocab].to_vec());
             }
         }
 
         rows.iter()
             .map(|&r| {
+                // pallas-lint: allow(no-hot-path-panic) — per_row is batch-sized and check_step_rows verified r < capacity == batch
                 per_row[r]
                     .take()
                     .ok_or_else(|| anyhow!("row {r} produced no logits"))

@@ -106,6 +106,7 @@ impl Sampler {
         let weights: Vec<f64> = probs.iter().map(|(_, p)| *p).collect();
         probs.truncate(Self::nucleus_cutoff(&weights, self.top_p));
         let weights: Vec<f64> = probs.iter().map(|(_, p)| *p).collect();
+        // pallas-lint: allow(no-hot-path-panic) — categorical returns an index < weights.len() == probs.len(), and nucleus_cutoff keeps ≥ 1 entry
         probs[rng.categorical(&weights)].0 as i32
     }
 

@@ -496,6 +496,7 @@ impl Scheduler {
             JobOutcome::DeadlineExceeded => self.n_deadline += 1,
             JobOutcome::Aborted => {}
         }
+        // pallas-lint: allow(no-hot-path-panic) — ids are indices minted by submit; results grows in lockstep
         self.results[id] = Some(JobResult { outcome, tokens });
     }
 
@@ -503,6 +504,7 @@ impl Scheduler {
     /// its deadline), and with which outcome. Shared by the queued sweep
     /// and the in-flight poll so the two can never diverge.
     fn queued_expiry(&self, id: JobId, now: Instant) -> Option<JobOutcome> {
+        // pallas-lint: allow(no-hot-path-panic) — ids are indices minted by submit; meta grows in lockstep
         let m = &self.meta[id];
         if m.cancel.is_cancelled() {
             Some(JobOutcome::Cancelled)
@@ -543,19 +545,23 @@ impl Scheduler {
         self.sweep_queue(now);
         let mut retired = Vec::new();
         for row in 0..self.rows.len() {
+            // pallas-lint: allow(no-hot-path-panic) — row ranges over 0..rows.len()
             let Some(a) = self.rows[row].as_ref() else { continue };
             // same expiry rules as for queued jobs (the helper reads
             // only the job's metadata, nothing queue-specific)
-            if let Some(outcome) = self.queued_expiry(a.id, now) {
-                let a = self.rows[row].take().expect("checked above");
-                if let Memory::Blocks { mgr } = &mut self.memory {
-                    mgr.release_row(row).expect("active row is attached");
-                }
-                let job = a.id;
-                self.record_outcome(job, outcome, a.out);
-                self.preemptions += 1;
-                retired.push(Retirement { row, job, outcome });
+            let Some(outcome) = self.queued_expiry(a.id, now) else {
+                continue;
+            };
+            // pallas-lint: allow(no-hot-path-panic) — resident: checked two lines up
+            let Some(a) = self.rows[row].take() else { continue };
+            if let Memory::Blocks { mgr } = &mut self.memory {
+                // pallas-lint: allow(no-hot-path-panic) — resident rows are attached at admission and detached only on retire/swap/poll
+                mgr.release_row(row).expect("active row is attached");
             }
+            let job = a.id;
+            self.record_outcome(job, outcome, a.out);
+            self.preemptions += 1;
+            retired.push(Retirement { row, job, outcome });
         }
         retired
     }
@@ -584,6 +590,7 @@ impl Scheduler {
         // aging sites, the nothing-placeable early return and the tail
         // loop, collapse into this one so they can never drift apart.)
         for q in &self.queue {
+            // pallas-lint: allow(no-hot-path-panic) — ids are indices minted by submit; meta grows in lockstep
             self.meta[q.id].waited_rounds += 1;
         }
         placed
@@ -602,6 +609,7 @@ impl Scheduler {
         // stable order: effective rank desc, then submission order
         self.queue
             .make_contiguous()
+            // pallas-lint: allow(no-hot-path-panic) — ids are indices minted by submit; meta grows in lockstep
             .sort_by_key(|q| (Reverse(self.meta[q.id].effective_rank()), q.id));
         let mut placed = Vec::new();
         match memory {
@@ -610,6 +618,7 @@ impl Scheduler {
                 while let Some(q) = self.queue.front() {
                     let Some(&row) = free_rows.front() else { break };
                     let need =
+                        // pallas-lint: allow(no-hot-path-panic) — ids are indices minted by submit; meta grows in lockstep
                         q.prompt.len() + self.meta[q.id].max_new_tokens;
                     // sole-tenant override: an oversized job may run alone
                     let fits = reserved == 0
@@ -618,7 +627,7 @@ impl Scheduler {
                         break;
                     }
                     free_rows.pop_front();
-                    let q = self.queue.pop_front().expect("peeked above");
+                    let Some(q) = self.queue.pop_front() else { break };
                     reserved += need;
                     let history: Vec<i32> = q
                         .prompt
@@ -626,9 +635,11 @@ impl Scheduler {
                         .chain(q.out.iter())
                         .copied()
                         .collect();
+                    // pallas-lint: allow(no-hot-path-panic) — row came off free_rows, built from rows' own indices
                     self.rows[row] = Some(Active {
                         id: q.id,
                         prompt: q.prompt,
+                        // pallas-lint: allow(no-hot-path-panic) — ids are indices minted by submit; meta grows in lockstep
                         max_new_tokens: self.meta[q.id].max_new_tokens,
                         out: q.out,
                     });
@@ -644,7 +655,7 @@ impl Scheduler {
                 // a block table is a chain of distinct physical blocks,
                 // so a history longer than the whole pool can never run
                 if mgr.cfg().blocks_for(history.len()) > mgr.n_blocks() {
-                    let q = self.queue.pop_front().expect("peeked above");
+                    let Some(q) = self.queue.pop_front() else { break };
                     self.record_outcome(id, JobOutcome::Aborted, q.out);
                     continue;
                 }
@@ -657,12 +668,15 @@ impl Scheduler {
                     if idle { 0 } else { mgr.cfg().headroom_blocks };
                 if need + headroom <= mgr.free_blocks() {
                     free_rows.pop_front();
-                    let q = self.queue.pop_front().expect("peeked above");
+                    let Some(q) = self.queue.pop_front() else { break };
                     mgr.attach(row, &history)
+                        // pallas-lint: allow(no-hot-path-panic) — probe_attach just verified need ≤ free_blocks, and rows are detached before their row id is reused
                         .expect("probed: enough free blocks");
+                    // pallas-lint: allow(no-hot-path-panic) — row came off free_rows, built from rows' own indices
                     self.rows[row] = Some(Active {
                         id,
                         prompt: q.prompt,
+                        // pallas-lint: allow(no-hot-path-panic) — ids are indices minted by submit; meta grows in lockstep
                         max_new_tokens: self.meta[id].max_new_tokens,
                         out: q.out,
                     });
@@ -673,6 +687,7 @@ impl Scheduler {
                 // and retry this head. Each victim chain is strictly
                 // decreasing in rank, so this terminates; if no victim
                 // exists the head waits for rows to retire normally.
+                // pallas-lint: allow(no-hot-path-panic) — ids are indices minted by submit; meta grows in lockstep
                 let rank = self.meta[id].effective_rank();
                 match self.pick_victim(Some(rank)) {
                     Some(victim) => {
@@ -697,6 +712,7 @@ impl Scheduler {
             .iter()
             .enumerate()
             .filter_map(|(r, s)| s.as_ref().map(|a| (r, a.id)))
+            // pallas-lint: allow(no-hot-path-panic) — ids are indices minted by submit; meta grows in lockstep
             .map(|(r, id)| (r, self.meta[id].effective_rank(), id))
             .filter(|&(_, rank, _)| below.is_none_or(|b| rank < b))
             .min_by_key(|&(_, rank, id)| (rank, Reverse(id)))
@@ -707,7 +723,9 @@ impl Scheduler {
     /// its partial output, and record the vacated row for
     /// [`Scheduler::take_swap_outs`].
     fn swap_out_row(&mut self, mgr: &mut BlockManager, row: usize) {
-        let a = self.rows[row].take().expect("victim row is active");
+        // pallas-lint: allow(no-hot-path-panic) — pick_victim only yields resident rows; nothing retires between pick and swap
+        let Some(a) = self.rows[row].take() else { return };
+        // pallas-lint: allow(no-hot-path-panic) — resident rows are attached at admission and detached only on retire/swap/poll
         mgr.swap_out(row).expect("active row is attached");
         self.swapped.push(SwapOut { row, job: a.id });
         self.queue.push_back(Queued {
@@ -830,16 +848,15 @@ impl Scheduler {
         if !recorded? {
             return Ok(false);
         }
-        let a = self
-            .rows
-            .get_mut(row)
-            .and_then(Option::as_mut)
-            .expect("recorded pushes leave the row resident");
+        let Some(a) = self.rows.get_mut(row).and_then(Option::as_mut) else {
+            bail!("row {row} freed mid-push despite a recorded token");
+        };
         if a.out.is_empty() {
             // first token of this job's life: a job resumed after a
             // swap-out comes back with its prior output, so its TTFT is
             // never counted twice
             let ttft = now.saturating_duration_since(
+                // pallas-lint: allow(no-hot-path-panic) — ids are indices minted by submit; meta grows in lockstep
                 self.meta[a.id].submitted_at,
             );
             self.ttft_total += ttft;
@@ -871,6 +888,7 @@ impl Scheduler {
                     // the only candidate left and self-swaps
                     let victim = self
                         .pick_victim(None)
+                        // pallas-lint: allow(no-hot-path-panic) — row was checked resident at loop top, so pick_victim(None) always has a candidate
                         .expect("row itself is resident");
                     self.swap_out_row(mgr, victim);
                     if victim == row {
@@ -893,6 +911,7 @@ impl Scheduler {
             bail!("retire of already-free row {row}");
         };
         if let Memory::Blocks { mgr } = &mut self.memory {
+            // pallas-lint: allow(no-hot-path-panic) — resident rows are attached at admission and detached only on retire/swap/poll
             mgr.release_row(row).expect("active row is attached");
         }
         let id = a.id;
@@ -958,6 +977,7 @@ impl Scheduler {
         // queued jobs first (swapped-out jobs keep their partial
         // tokens), then anything mid-flight
         while let Some(q) = self.queue.pop_front() {
+            // pallas-lint: allow(no-hot-path-panic) — ids are indices minted by submit; results grows in lockstep
             self.results[q.id] = Some(JobResult {
                 outcome: JobOutcome::Aborted,
                 tokens: q.out,
@@ -965,6 +985,7 @@ impl Scheduler {
         }
         for slot in &mut self.rows {
             if let Some(a) = slot.take() {
+                // pallas-lint: allow(no-hot-path-panic) — ids are indices minted by submit; results grows in lockstep
                 self.results[a.id] = Some(JobResult {
                     outcome: JobOutcome::Aborted,
                     tokens: a.out,
@@ -973,7 +994,15 @@ impl Scheduler {
         }
         self.results
             .into_iter()
-            .map(|r| r.expect("every job has a terminal outcome"))
+            // every job has a terminal outcome by this point (the two
+            // sweeps above aborted anything still pending); the default
+            // is an unreachable backstop, not a panic
+            .map(|r| {
+                r.unwrap_or(JobResult {
+                    outcome: JobOutcome::Aborted,
+                    tokens: Vec::new(),
+                })
+            })
             .collect()
     }
 }

@@ -25,9 +25,11 @@ use crate::util::rng::Rng;
 pub struct ArenaReport {
     /// adapter names, index-aligned with `summaries[i].system`
     pub adapters: Vec<String>,
+    /// Elo mean ± CI per adapter, from the same aggregation as Table 1
     pub summaries: Vec<EloSummary>,
     /// mean reference-match score in [0, 1] per adapter
     pub mean_score: Vec<f64>,
+    /// prompts each adapter completed
     pub n_prompts: usize,
 }
 

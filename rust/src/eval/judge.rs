@@ -23,14 +23,19 @@ use super::systems::System;
 /// Elo's logistic scale: 400 / ln 10.
 const ELO_SCALE: f64 = 173.717792761;
 
+/// Which annotator population a [`Judge`] models.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum JudgeKind {
+    /// the GPT-4 judge (order- and self-biased, self-consistent)
     Gpt4,
+    /// Mechanical-Turk annotators (noisier, own latent ranking)
     Human,
 }
 
+/// A biased, noisy pairwise judge (the generative model of section 5.2).
 #[derive(Debug, Clone)]
 pub struct Judge {
+    /// which annotator population this judge models
     pub kind: JudgeKind,
     /// extra per-annotator Gaussian noise on top of the logistic
     /// comparison noise (humans are less self-consistent)
@@ -52,6 +57,7 @@ fn logistic(rng: &mut Rng, scale: f64) -> f64 {
 }
 
 impl Judge {
+    /// The GPT-4 judge with the paper's documented biases.
     pub fn gpt4() -> Judge {
         Judge {
             kind: JudgeKind::Gpt4,
@@ -73,6 +79,7 @@ impl Judge {
         }
     }
 
+    /// Latent quality of `sys` as this judge perceives it on the chosen benchmark.
     pub fn quality(&self, sys: &System, vicuna: bool) -> f64 {
         let mut q = if !vicuna {
             sys.oa_quality

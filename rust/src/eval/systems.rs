@@ -8,11 +8,14 @@
 //! tournament machinery downstream (judging, Elo, CIs, agreement stats) is
 //! real computation over sampled matches.
 
+/// One tournament participant and its latent benchmark qualities.
 #[derive(Debug, Clone)]
 pub struct System {
+    /// display name as the paper's tables spell it
     pub name: &'static str,
     /// parameters in billions (None for API systems)
     pub params_b: Option<f64>,
+    /// serving precision in bits (None for API systems)
     pub bits: Option<u32>,
     /// serving memory in GB (None for API systems)
     pub mem_gb: Option<f64>,

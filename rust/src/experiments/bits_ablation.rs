@@ -15,14 +15,21 @@ use crate::util::rng::Rng;
 
 use super::{render_table, Ctx};
 
+/// One NFk bit-width's measured error and projected quality.
 pub struct BitsRow {
+    /// NFk codebook bit width (k)
     pub bits: u32,
+    /// measured round-trip quantization RMSE
     pub rmse: f64,
+    /// projected MMLU penalty before adapter finetuning
     pub penalty_raw: f64,
+    /// projected MMLU penalty after adapter recovery
     pub penalty_finetuned: f64,
+    /// weights + quantization constants at 65B scale, gigabytes
     pub gb_65b: f64,
 }
 
+/// Sweep NFk bit widths over synthetic LLM weights.
 pub fn compute(seed: u64) -> Result<Vec<BitsRow>> {
     let mut rng = Rng::new(seed);
     let w = synthetic_llm_weights(&mut rng, 64 * 1024, 0.01, 5.0);
@@ -59,6 +66,7 @@ pub fn compute(seed: u64) -> Result<Vec<BitsRow>> {
     Ok(rows)
 }
 
+/// Render the bit-width ablation table.
 pub fn run(ctx: &Ctx) -> Result<String> {
     let rows = compute(ctx.seed)?;
     let table: Vec<Vec<String>> = rows

@@ -11,6 +11,7 @@ use crate::util::stats;
 use super::train_util::{default_steps, train_seeds};
 use super::{render_table, Ctx};
 
+/// LoRA-placement sweep roster: (label, artifact name).
 pub fn placements() -> Vec<(&'static str, &'static str)> {
     vec![
         ("key+query (LoRA default)", "tiny_scope_qk"),
@@ -22,11 +23,15 @@ pub fn placements() -> Vec<(&'static str, &'static str)> {
     ]
 }
 
+/// Accuracy across seeds for one LoRA placement.
 pub struct PlacementResult {
+    /// placement label
     pub label: &'static str,
+    /// held-out accuracy per seed
     pub accs: Vec<f64>,
 }
 
+/// Train every placement over `seeds` and collect accuracies.
 pub fn compute(ctx: &Ctx, seeds: &[u64]) -> Result<Vec<PlacementResult>> {
     let steps = default_steps(ctx);
     let mut out = Vec::new();
@@ -41,6 +46,7 @@ pub fn compute(ctx: &Ctx, seeds: &[u64]) -> Result<Vec<PlacementResult>> {
     Ok(out)
 }
 
+/// Render the Figure 2 placement table.
 pub fn run(ctx: &Ctx) -> Result<String> {
     let seeds: Vec<u64> = if ctx.fast { vec![1] } else { vec![1, 2, 3] };
     let results = compute(ctx, &seeds)?;

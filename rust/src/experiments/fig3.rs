@@ -15,8 +15,10 @@ use crate::quant::codebook::DType;
 
 use super::{render_table, Ctx};
 
+/// Model sizes (billions of parameters) on the figure's x-axis.
 pub const SIZES_B: [f64; 6] = [0.125, 0.35, 1.3, 6.7, 13.0, 65.0];
 
+/// Zero-shot accuracy (%) at each size for one datatype.
 pub fn series(dtype: DType, double_quant: bool, seed: u64) -> Vec<f64> {
     SIZES_B
         .iter()
@@ -24,6 +26,7 @@ pub fn series(dtype: DType, double_quant: bool, seed: u64) -> Vec<f64> {
         .collect()
 }
 
+/// Run the experiment and render its report table.
 pub fn run(ctx: &Ctx) -> Result<String> {
     let variants: [(&str, DType, bool); 4] = [
         ("Int4", DType::Int4, false),

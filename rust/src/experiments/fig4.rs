@@ -10,6 +10,7 @@ use crate::util::stats;
 use super::train_util::{default_steps, train_seeds};
 use super::{render_table, Ctx};
 
+/// The rank sweep: `(r, artifact name)` pairs.
 pub fn sweep() -> Vec<(usize, &'static str)> {
     vec![
         (1, "tiny_r1"),
@@ -21,6 +22,7 @@ pub fn sweep() -> Vec<(usize, &'static str)> {
     ]
 }
 
+/// Train every rank over `seeds`; returns `(r, accuracies %)` rows.
 pub fn compute(ctx: &Ctx, seeds: &[u64]) -> Result<Vec<(usize, Vec<f64>)>> {
     let steps = default_steps(ctx);
     let mut out = Vec::new();
@@ -32,6 +34,7 @@ pub fn compute(ctx: &Ctx, seeds: &[u64]) -> Result<Vec<(usize, Vec<f64>)>> {
     Ok(out)
 }
 
+/// Run the experiment and render its report table.
 pub fn run(ctx: &Ctx) -> Result<String> {
     let seeds: Vec<u64> = if ctx.fast { vec![1] } else { vec![1, 2] };
     let results = compute(ctx, &seeds)?;

@@ -12,6 +12,7 @@ use crate::memory::{
 
 use super::{render_table, Ctx};
 
+/// Run the experiment and render its report table.
 pub fn run(_ctx: &Ctx) -> Result<String> {
     const MB: f64 = 1e6;
     let mut rows = Vec::new();

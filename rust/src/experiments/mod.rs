@@ -33,7 +33,9 @@ use crate::runtime::client::Runtime;
 /// experiments can stack per-artifact `engine::Engine`s over one PJRT
 /// client (and its executable cache).
 pub struct Ctx {
+    /// PJRT runtime, present when artifacts are available
     pub rt: Option<Rc<Runtime>>,
+    /// parsed artifact manifest, present alongside `rt`
     pub manifest: Option<Manifest>,
     /// global seed
     pub seed: u64,
@@ -42,10 +44,12 @@ pub struct Ctx {
 }
 
 impl Ctx {
+    /// A context for experiments that need no runtime or artifacts.
     pub fn analytic(seed: u64) -> Ctx {
         Ctx { rt: None, manifest: None, seed, fast: false }
     }
 
+    /// The runtime + manifest, or a run-`make artifacts` error for analytic contexts.
     pub fn runtime(&self) -> anyhow::Result<(&Rc<Runtime>, &Manifest)> {
         match (&self.rt, &self.manifest) {
             (Some(r), Some(m)) => Ok((r, m)),
@@ -90,10 +94,12 @@ pub fn render_table(title: &str, headers: &[&str], rows: &[Vec<String>]) -> Stri
     out
 }
 
+/// Format with one decimal place (table cells).
 pub fn fmt1(x: f64) -> String {
     format!("{x:.1}")
 }
 
+/// Format with two decimal places (table cells).
 pub fn fmt2(x: f64) -> String {
     format!("{x:.2}")
 }

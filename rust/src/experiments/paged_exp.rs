@@ -10,14 +10,21 @@ use crate::util::rng::Rng;
 
 use super::{render_table, Ctx};
 
+/// Outcome of one paging scenario.
 pub struct ScenarioResult {
+    /// scenario label
     pub label: String,
+    /// whether the run would OOM without paging
     pub would_oom: bool,
+    /// page faults taken with paging on
     pub faults: u64,
+    /// mean migration stall per step, microseconds
     pub stall_per_step_us: f64,
+    /// steps whose activation spike forced evictions
     pub spike_steps: u64,
 }
 
+/// Simulate one workload against a device budget.
 pub fn scenario(
     label: &str,
     device_mb: usize,
@@ -50,6 +57,7 @@ pub fn scenario(
     }
 }
 
+/// Render the paged-optimizer scenario table.
 pub fn run(ctx: &Ctx) -> Result<String> {
     let steps = if ctx.fast { 100 } else { 400 };
     let scenarios = vec![

@@ -7,6 +7,7 @@ use anyhow::{bail, Result};
 
 use super::Ctx;
 
+/// An experiment entry point: context in, rendered report out.
 pub type ExpFn = fn(&Ctx) -> Result<String>;
 
 /// (id, needs_artifacts, description, function)
@@ -46,6 +47,7 @@ pub fn registry() -> Vec<(&'static str, bool, &'static str, ExpFn)> {
     ]
 }
 
+/// Run one experiment by id and archive its output under `results_dir`.
 pub fn run_one(id: &str, ctx: &Ctx, results_dir: &Path) -> Result<String> {
     let reg = registry();
     let Some((_, _, _, f)) = reg.iter().find(|(n, ..)| *n == id) else {

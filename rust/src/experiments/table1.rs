@@ -45,6 +45,7 @@ pub fn play_matches(
     out
 }
 
+/// Run the experiment and render its report table.
 pub fn run(ctx: &Ctx) -> Result<String> {
     let systems = roster();
     let judge = Judge::gpt4();
@@ -55,7 +56,7 @@ pub fn run(ctx: &Ctx) -> Result<String> {
         t.add(m);
     }
     let mut res = t.run(orderings, ctx.seed ^ 0xE10);
-    res.sort_by(|a, b| b.mean.partial_cmp(&a.mean).unwrap());
+    res.sort_by(|a, b| b.mean.total_cmp(&a.mean));
     let paper: &[(&str, f64)] = &[
         ("GPT-4", 1348.0),
         ("Guanaco-65B", 1022.0),

@@ -11,6 +11,7 @@ use crate::util::stats;
 use super::train_util::{default_steps, train_seeds};
 use super::{render_table, Ctx};
 
+/// Train the source-masking ablation; returns `(setting, accuracies %)` rows.
 pub fn compute(ctx: &Ctx, seeds: &[u64]) -> Result<Vec<(String, Vec<f64>)>> {
     let steps = default_steps(ctx);
     let datasets = [
@@ -41,6 +42,7 @@ pub fn compute(ctx: &Ctx, seeds: &[u64]) -> Result<Vec<(String, Vec<f64>)>> {
     Ok(out)
 }
 
+/// Run the experiment and render its report table.
 pub fn run(ctx: &Ctx) -> Result<String> {
     let seeds: Vec<u64> = if ctx.fast { vec![1] } else { vec![1, 2] };
     let results = compute(ctx, &seeds)?;

@@ -43,6 +43,7 @@ fn cell(ctx: &Ctx, kind: CorpusKind, size: usize, epochs: usize) -> Result<f64> 
     Ok(acc as f64 * 100.0)
 }
 
+/// Run the experiment and render its report table.
 pub fn run(ctx: &Ctx) -> Result<String> {
     let corpora = [CorpusKind::Chip2, CorpusKind::UnnaturalInstructions,
                    CorpusKind::FlanV2];

@@ -52,7 +52,7 @@ pub fn induced_ordering(m: &[Vec<f64>]) -> (Vec<usize>, bool) {
     let mean_net: Vec<f64> = (0..n)
         .map(|i| m[i].iter().sum::<f64>() / (n - 1) as f64)
         .collect();
-    idx.sort_by(|&a, &b| mean_net[b].partial_cmp(&mean_net[a]).unwrap());
+    idx.sort_by(|&a, &b| mean_net[b].total_cmp(&mean_net[a]));
     // transitive iff every pair in the sorted order has non-negative net
     let mut transitive = true;
     for i in 0..n {
@@ -65,6 +65,7 @@ pub fn induced_ordering(m: &[Vec<f64>]) -> (Vec<usize>, bool) {
     (idx, transitive)
 }
 
+/// Run the experiment and render its report table.
 pub fn run(ctx: &Ctx) -> Result<String> {
     let prompts = if ctx.fast { 30 } else { 80 };
     let (names, m) = pairwise_matrix(prompts, ctx.seed);

@@ -33,12 +33,17 @@ fn zoo() -> Vec<(&'static str, usize, f64, f64)> {
     ]
 }
 
+/// One data type's measured error and projected perplexity.
 pub struct Row {
+    /// 4-bit data-type label
     pub dtype: String,
+    /// round-trip RMSE averaged over the model zoo
     pub mean_rmse: f64,
+    /// projected mean perplexity (two-anchor calibration)
     pub mean_ppl: f64,
 }
 
+/// Measure quantization error per data type over the synthetic zoo.
 pub fn compute(seed: u64) -> Result<Vec<Row>> {
     let variants: [(&str, DType, Option<usize>); 4] = [
         ("Int4", DType::Int4, None),
@@ -74,6 +79,7 @@ pub fn compute(seed: u64) -> Result<Vec<Row>> {
     Ok(rows)
 }
 
+/// Render the Table 2 data-type comparison.
 pub fn run(ctx: &Ctx) -> Result<String> {
     let rows = compute(ctx.seed)?;
     let paper = [34.34, 31.07, 29.48, 27.41];

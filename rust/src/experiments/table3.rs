@@ -16,14 +16,21 @@ use crate::util::stats;
 use super::train_util::{default_steps, train_seeds};
 use super::{render_table, Ctx};
 
+/// Accuracy statistics for one finetuning method.
 pub struct MethodResult {
+    /// method label
     pub method: &'static str,
+    /// artifact the method trains
     pub artifact: &'static str,
+    /// mean held-out accuracy across seeds
     pub acc_mean: f64,
+    /// accuracy standard deviation across seeds
     pub acc_std: f64,
+    /// mean final training loss
     pub loss: f64,
 }
 
+/// Method roster: (label, artifact name).
 pub fn methods() -> Vec<(&'static str, &'static str)> {
     vec![
         ("BF16 full finetune", "tiny_fullft"),
@@ -35,6 +42,7 @@ pub fn methods() -> Vec<(&'static str, &'static str)> {
     ]
 }
 
+/// Train every method over `seeds` and collect statistics.
 pub fn compute(ctx: &Ctx, seeds: &[u64]) -> Result<Vec<MethodResult>> {
     let steps = default_steps(ctx);
     let mut out = Vec::new();
@@ -55,6 +63,7 @@ pub fn compute(ctx: &Ctx, seeds: &[u64]) -> Result<Vec<MethodResult>> {
     Ok(out)
 }
 
+/// Render the Table 3 method comparison.
 pub fn run(ctx: &Ctx) -> Result<String> {
     let seeds: Vec<u64> = if ctx.fast { vec![1] } else { vec![1, 2, 3] };
     let results = compute(ctx, &seeds)?;

@@ -15,11 +15,13 @@ use crate::util::stats;
 
 use super::{fmt1, render_table, Ctx};
 
+/// One table cell: projected MMLU for a size × dataset × datatype setting.
 pub fn cell(size: &str, dataset: &str, dtype: Option<DType>, dq: bool,
             seed: u64) -> f64 {
     mmlu(size, dataset, dtype, dq, seed)
 }
 
+/// Run the experiment and render its report table.
 pub fn run(ctx: &Ctx) -> Result<String> {
     let variants: [(&str, Option<DType>, bool); 3] = [
         ("BFloat16", None, false),

@@ -16,6 +16,7 @@ use crate::quant::codebook::DType;
 
 use super::{fmt1, render_table, Ctx};
 
+/// Run the experiment and render its report table.
 pub fn run(ctx: &Ctx) -> Result<String> {
     let mut rows = Vec::new();
     let mut base_row = vec!["LLaMA no tuning".to_string()];

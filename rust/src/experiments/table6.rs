@@ -18,11 +18,17 @@ use super::{render_table, Ctx};
 /// Extended Table 6 roster: dataset × size variants with latent quality
 /// calibrated from the paper's mean relative scores.
 pub struct Entry {
+    /// dataset / variant label
     pub label: &'static str,
+    /// model size label (e.g. "7B")
     pub params: &'static str,
+    /// finetuning precision in bits
     pub bits: u32,
+    /// weights footprint, gigabytes
     pub mem_gb: f64,
+    /// latent Elo-scale quality
     pub quality: f64,
+    /// paper-reported mean relative score, percent
     pub paper_mean: f64,
 }
 
@@ -33,6 +39,7 @@ fn q_of_pct(pct: f64) -> f64 {
     (score - 7.0) * 150.0 + 1000.0
 }
 
+/// The extended Table 6 roster.
 pub fn entries() -> Vec<Entry> {
     let gb = |spec, four: bool| {
         let s = if four {
@@ -126,6 +133,7 @@ pub fn score_system(
     (stats::mean(&all), stats::ci95_halfwidth(&all), o1, o2)
 }
 
+/// Render the Table 6 benchmark comparison.
 pub fn run(ctx: &Ctx) -> Result<String> {
     let judge = Judge::gpt4();
     let prompts = if ctx.fast { 20 } else { 80 };

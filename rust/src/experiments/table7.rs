@@ -14,13 +14,19 @@ use crate::util::stats;
 use super::table1::play_matches;
 use super::{render_table, Ctx};
 
+/// One evaluation setting: judge x prompt set.
 pub struct Setting {
+    /// setting label
     pub label: &'static str,
+    /// judge model producing the match outcomes
     pub judge: Judge,
+    /// Vicuna prompts when true, OpenAssistant when false
     pub vicuna: bool,
+    /// number of evaluation prompts
     pub prompts: usize,
 }
 
+/// The three paper settings (Vicuna/Human, Vicuna/GPT-4, OA/GPT-4).
 pub fn settings() -> Vec<Setting> {
     vec![
         Setting { label: "Vicuna/Human", judge: Judge::human(), vicuna: true,
@@ -32,6 +38,7 @@ pub fn settings() -> Vec<Setting> {
     ]
 }
 
+/// Render the Table 7 Elo tournament comparison.
 pub fn run(ctx: &Ctx) -> Result<String> {
     let systems = roster();
     let orderings = if ctx.fast { 300 } else { 10_000 };

@@ -16,6 +16,7 @@ use crate::util::stats;
 
 use super::{fmt1, render_table, Ctx};
 
+/// CrowS-Pairs bias categories, paper row order.
 pub const CATEGORIES: [&str; 9] = [
     "Gender", "Religion", "Race/Color", "Sexual orientation", "Age",
     "Nationality", "Disability", "Physical appearance",
@@ -48,6 +49,7 @@ pub fn probe(latent: &[f64; 9], n: usize, seed: u64) -> [f64; 9] {
     out
 }
 
+/// Run the experiment and render its report table.
 pub fn run(ctx: &Ctx) -> Result<String> {
     let n = if ctx.fast { 150 } else { 1000 };
     let mut cols = Vec::new();

@@ -16,12 +16,18 @@ use crate::runtime::client::Runtime;
 
 use super::Ctx;
 
+/// Summary of one real training run.
 #[derive(Debug, Clone)]
 pub struct RunResult {
+    /// smoothed final training loss
     pub final_loss: f32,
+    /// held-out loss at the end of training
     pub eval_loss: f32,
+    /// held-out token accuracy at the end of training
     pub eval_acc: f32,
+    /// optimizer steps run
     pub steps: usize,
+    /// mean wall time per step, milliseconds
     pub mean_step_ms: f64,
 }
 

@@ -8,31 +8,42 @@
 /// LLaMA-family model shapes (Touvron et al. 2023).
 #[derive(Debug, Clone, Copy)]
 pub struct ModelSpec {
+    /// display name (`"7B"` … `"65B"`)
     pub name: &'static str,
+    /// residual-stream width
     pub d_model: usize,
+    /// transformer block count
     pub n_layers: usize,
+    /// attention head count
     pub n_heads: usize,
+    /// feed-forward hidden width
     pub d_ff: usize,
+    /// vocabulary size
     pub vocab: usize,
 }
 
+/// LLaMA 7B shapes.
 pub const LLAMA_7B: ModelSpec = ModelSpec {
     name: "7B", d_model: 4096, n_layers: 32, n_heads: 32, d_ff: 11008,
     vocab: 32000,
 };
+/// LLaMA 13B shapes.
 pub const LLAMA_13B: ModelSpec = ModelSpec {
     name: "13B", d_model: 5120, n_layers: 40, n_heads: 40, d_ff: 13824,
     vocab: 32000,
 };
+/// LLaMA 33B shapes.
 pub const LLAMA_33B: ModelSpec = ModelSpec {
     name: "33B", d_model: 6656, n_layers: 60, n_heads: 52, d_ff: 17920,
     vocab: 32000,
 };
+/// LLaMA 65B shapes.
 pub const LLAMA_65B: ModelSpec = ModelSpec {
     name: "65B", d_model: 8192, n_layers: 80, n_heads: 64, d_ff: 22016,
     vocab: 32000,
 };
 
+/// The four LLaMA sizes the paper finetunes, smallest first.
 pub fn llama_family() -> [ModelSpec; 4] {
     [LLAMA_7B, LLAMA_13B, LLAMA_33B, LLAMA_65B]
 }
@@ -50,6 +61,7 @@ impl ModelSpec {
             + self.d_model * (2 * self.n_layers + 1)
     }
 
+    /// All parameters (linears + embeddings/head/norms).
     pub fn total_params(&self) -> usize {
         self.linear_params() + self.other_params()
     }
@@ -77,10 +89,15 @@ pub enum Strategy {
 /// Byte-level breakdown of one finetuning configuration.
 #[derive(Debug, Clone)]
 pub struct Footprint {
+    /// frozen base weights at the strategy's precision
     pub base_weights: usize,
+    /// absmax/codebook overhead of quantization (0 for 16-bit)
     pub quant_constants: usize,
+    /// LoRA adapter parameters (16-bit)
     pub lora_weights: usize,
+    /// gradient storage for whatever is trainable
     pub gradients: usize,
+    /// Adam moment vectors (32-bit, trainable params only)
     pub optimizer: usize,
     /// activation/input gradients for batch 1, seq 512, with gradient
     /// checkpointing (Figure 6's setting)
@@ -88,6 +105,7 @@ pub struct Footprint {
 }
 
 impl Footprint {
+    /// Sum of every component in bytes.
     pub fn total(&self) -> usize {
         self.base_weights
             + self.quant_constants

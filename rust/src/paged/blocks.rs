@@ -235,6 +235,7 @@ impl BlockManager {
         let table = self.rows.get(&row)?;
         let mut out = Vec::with_capacity(table.len);
         for &id in &table.blocks {
+            // pallas-lint: allow(no-hot-path-panic) — blocks is n_blocks-sized; a live id (refcount > 0) is always in range
             out.extend_from_slice(&self.blocks[id as usize].tokens);
         }
         Some(out)
@@ -243,6 +244,7 @@ impl BlockManager {
     /// Content of one live block (diagnostics / property tests).
     pub fn block_content(&self, id: BlockId) -> Option<&[i32]> {
         (self.pool.refcount(id) > 0)
+            // pallas-lint: allow(no-hot-path-panic) — blocks is n_blocks-sized; a live id (refcount > 0) is always in range
             .then(|| self.blocks[id as usize].tokens.as_slice())
     }
 
@@ -258,6 +260,7 @@ impl BlockManager {
     }
 
     fn key_of(&self, id: BlockId) -> ShareKey {
+        // pallas-lint: allow(no-hot-path-panic) — blocks is n_blocks-sized; a live id (refcount > 0) is always in range
         let b = &self.blocks[id as usize];
         ShareKey { parent: b.parent, tokens: b.tokens.clone() }
     }
@@ -271,6 +274,7 @@ impl BlockManager {
         let key = self.key_of(id);
         if !self.share.contains_key(&key) {
             self.share.insert(key, id);
+            // pallas-lint: allow(no-hot-path-panic) — blocks is n_blocks-sized; a live id (refcount > 0) is always in range
             self.blocks[id as usize].registered = true;
         }
     }
@@ -278,10 +282,12 @@ impl BlockManager {
     /// Remove `id` from the prefix map. Must run *before* its content
     /// changes (the key is reconstructed from current content).
     fn unregister(&mut self, id: BlockId) {
+        // pallas-lint: allow(no-hot-path-panic) — blocks is n_blocks-sized; a live id (refcount > 0) is always in range
         if self.blocks[id as usize].registered {
             let key = self.key_of(id);
             let removed = self.share.remove(&key);
             debug_assert_eq!(removed, Some(id), "share map points at {id}");
+            // pallas-lint: allow(no-hot-path-panic) — blocks is n_blocks-sized; a live id (refcount > 0) is always in range
             self.blocks[id as usize].registered = false;
         }
     }
@@ -335,6 +341,7 @@ impl BlockManager {
         );
         // commit: retain the shared chain, then allocate the rest
         for &id in &shared {
+            // pallas-lint: allow(no-hot-path-panic) — shared_chain only returns registered blocks, and registered blocks are live
             self.pool.retain(id).expect("shared chain is live");
             self.stats.shared_hits += 1;
         }
@@ -344,7 +351,9 @@ impl BlockManager {
             .chunks(self.cfg.block_tokens)
             .skip(table.blocks.len())
         {
+            // pallas-lint: allow(no-hot-path-panic) — the ensure! above reserved `fresh` free blocks and nothing frees between it and this loop
             let id = self.pool.alloc().expect("free count checked above");
+            // pallas-lint: allow(no-hot-path-panic) — alloc() mints ids < n_blocks
             self.blocks[id as usize] = Block {
                 tokens: chunk.to_vec(),
                 parent,
@@ -374,8 +383,10 @@ impl BlockManager {
                 return Ok(AppendOutcome::NeedBlock);
             };
             let parent = table.blocks.last().copied();
+            // pallas-lint: allow(no-hot-path-panic) — alloc() mints ids < n_blocks
             self.blocks[id as usize] =
                 Block { tokens: vec![token], parent, registered: false };
+            // pallas-lint: allow(no-hot-path-panic) — row presence checked at fn entry and nothing removes it in between
             let table = self.rows.get_mut(&row).expect("checked above");
             table.blocks.push(id);
             table.len += 1;
@@ -384,6 +395,7 @@ impl BlockManager {
                 cow_fork: false,
             });
         }
+        // pallas-lint: allow(no-hot-path-panic) — pos != 0 means the table already covers ≥ 1 token, so it has a tail block
         let tail = *table.blocks.last().expect("len > 0 implies blocks");
         if self.pool.refcount(tail) > 1 {
             // copy-on-write: fork a private tail, leave the shared block
@@ -391,13 +403,18 @@ impl BlockManager {
             let Some(id) = self.pool.alloc() else {
                 return Ok(AppendOutcome::NeedBlock);
             };
+            // pallas-lint: allow(no-hot-path-panic) — blocks is n_blocks-sized; a live id (refcount > 0) is always in range
             let mut forked = self.blocks[tail as usize].clone();
             forked.registered = false;
             forked.tokens.push(token);
+            // pallas-lint: allow(no-hot-path-panic) — alloc() mints ids < n_blocks
             self.blocks[id as usize] = forked;
+            // pallas-lint: allow(no-hot-path-panic) — refcount > 1 checked above, so this release cannot fail or free the slot
             self.pool.release(tail).expect("tail was shared");
             self.stats.cow_forks += 1;
+            // pallas-lint: allow(no-hot-path-panic) — row presence checked at fn entry and nothing removes it in between
             let table = self.rows.get_mut(&row).expect("checked above");
+            // pallas-lint: allow(no-hot-path-panic) — same table had a tail block at fn entry and only grew
             *table.blocks.last_mut().expect("tail exists") = id;
             table.len += 1;
             return Ok(AppendOutcome::Appended {
@@ -407,7 +424,9 @@ impl BlockManager {
         }
         // sole owner: the map must never point at mutated content
         self.unregister(tail);
+        // pallas-lint: allow(no-hot-path-panic) — blocks is n_blocks-sized; a live id (refcount > 0) is always in range
         self.blocks[tail as usize].tokens.push(token);
+        // pallas-lint: allow(no-hot-path-panic) — row presence checked at fn entry and nothing removes it in between
         self.rows.get_mut(&row).expect("checked above").len += 1;
         Ok(AppendOutcome::Appended { new_block: false, cow_fork: false })
     }
@@ -423,8 +442,10 @@ impl BlockManager {
         // children before parents: a registered child never outlives the
         // prefix chain its key points into
         for &id in table.blocks.iter().rev() {
+            // pallas-lint: allow(no-hot-path-panic) — every id in a row table holds one reference, so it is live until this release
             if self.pool.release(id).expect("table blocks are live") {
                 self.unregister(id);
+                // pallas-lint: allow(no-hot-path-panic) — blocks is n_blocks-sized; a live id (refcount > 0) is always in range
                 self.blocks[id as usize] = Block::default();
                 freed += 1;
             }
@@ -461,6 +482,7 @@ impl BlockManager {
             let mut covered = 0;
             for (i, &id) in table.blocks.iter().enumerate() {
                 *refs.entry(id).or_insert(0) += 1;
+                // pallas-lint: allow(no-hot-path-panic) — blocks is n_blocks-sized; a live id (refcount > 0) is always in range
                 let got = self.blocks[id as usize].tokens.len();
                 if i + 1 < table.blocks.len() {
                     assert_eq!(got, self.cfg.block_tokens, "interior full");
@@ -478,6 +500,7 @@ impl BlockManager {
             "every live block is referenced by some row"
         );
         for (key, &id) in &self.share {
+            // pallas-lint: allow(no-hot-path-panic) — blocks is n_blocks-sized; a live id (refcount > 0) is always in range
             let b = &self.blocks[id as usize];
             assert!(b.registered, "share entry block {id} marked registered");
             assert!(self.pool.refcount(id) > 0, "share entry {id} is live");

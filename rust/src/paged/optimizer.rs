@@ -6,17 +6,27 @@
 
 use super::pager::{Pager, PagerConfig};
 
+/// Counters from one paged-optimizer simulation.
 #[derive(Debug, Clone, Default)]
 pub struct PagerStats {
+    /// optimizer steps simulated
     pub steps: u64,
+    /// page faults taken by optimizer-state touches
     pub faults: u64,
+    /// pages evicted to fit the device budget
     pub evictions: u64,
+    /// bytes migrated host<->device
     pub migrated_bytes: u64,
+    /// total simulated migration stall, microseconds
     pub stall_us: f64,
+    /// high-water mark of resident pageable bytes
     pub peak_resident: usize,
+    /// steps whose activation spike forced evictions
     pub spike_steps: u64,
 }
 
+/// Simulates paged Adam state (paper section 3) under a device budget:
+/// the model is pinned, optimizer moments are pageable.
 #[derive(Debug)]
 pub struct PagedOptimizerSim {
     pager: Pager,
@@ -27,6 +37,7 @@ pub struct PagedOptimizerSim {
     opt_state_bytes: usize,
     /// per-token activation-gradient bytes under checkpointing
     act_bytes_per_token: usize,
+    /// counters accumulated so far
     pub stats: PagerStats,
 }
 

@@ -5,8 +5,10 @@
 
 use std::collections::HashMap;
 
+/// Identifier of one simulated page.
 pub type PageId = u64;
 
+/// Parameters of the simulated paging hardware.
 #[derive(Debug, Clone)]
 pub struct PagerConfig {
     /// page size in bytes (CUDA UM uses 2 MiB large pages on modern GPUs)
@@ -84,26 +86,35 @@ struct PageEntry {
     last_touch: u64,
 }
 
+/// Counters accumulated by a [`Pager`].
 #[derive(Debug, Default, Clone)]
 pub struct FaultStats {
+    /// page faults (touches of non-resident pages)
     pub faults: u64,
+    /// pages evicted under memory pressure
     pub evictions: u64,
+    /// bytes migrated host<->device
     pub migrated_bytes: u64,
+    /// total simulated migration stall, microseconds
     pub stall_us: f64,
 }
 
 /// Page table for one pageable region.
 #[derive(Debug)]
 pub struct Pager {
+    /// the hardware model this pager simulates
     pub cfg: PagerConfig,
     pages: HashMap<PageId, PageEntry>,
     resident_bytes: usize,
+    /// high-water mark of resident bytes
     pub peak_resident: usize,
     clock: u64,
+    /// counters accumulated so far
     pub stats: FaultStats,
 }
 
 impl Pager {
+    /// A pager with no pages tracked yet.
     pub fn new(cfg: PagerConfig) -> Pager {
         Pager {
             cfg,
@@ -129,6 +140,7 @@ impl Pager {
         ids
     }
 
+    /// Bytes currently resident on the simulated device.
     pub fn resident_bytes(&self) -> usize {
         self.resident_bytes
     }

@@ -37,6 +37,7 @@ impl BlockPool {
         BlockPool {
             refcount: vec![0; n_blocks],
             // pop order is ascending ids — deterministic, test-friendly
+            // pallas-lint: allow(no-lossy-as) — pool sizes are bounded by device memory, far below u32::MAX
             free: (0..n_blocks as BlockId).rev().collect(),
             allocated_total: 0,
             freed_total: 0,
@@ -72,6 +73,7 @@ impl BlockPool {
     /// exhausted (the caller decides whether that means swap or OOM).
     pub fn alloc(&mut self) -> Option<BlockId> {
         let id = self.free.pop()?;
+        // pallas-lint: allow(no-hot-path-panic) — ids on the free list were minted from 0..n_blocks
         self.refcount[id as usize] = 1;
         self.allocated_total += 1;
         Some(id)
@@ -123,13 +125,16 @@ impl BlockPool {
 }
 
 #[derive(Debug)]
+/// Named pinned allocations against a fixed device byte budget.
 pub struct DevicePool {
+    /// total device bytes
     pub capacity: usize,
     used: usize,
     allocs: BTreeMap<String, usize>,
 }
 
 impl DevicePool {
+    /// An empty pool of `capacity` bytes.
     pub fn new(capacity: usize) -> DevicePool {
         DevicePool { capacity, used: 0, allocs: BTreeMap::new() }
     }
@@ -152,6 +157,7 @@ impl DevicePool {
         Ok(())
     }
 
+    /// Release a named allocation.
     pub fn free(&mut self, name: &str) -> Result<()> {
         match self.allocs.remove(name) {
             Some(b) => {
@@ -162,10 +168,12 @@ impl DevicePool {
         }
     }
 
+    /// Bytes currently allocated.
     pub fn used(&self) -> usize {
         self.used
     }
 
+    /// Bytes still available.
     pub fn free_bytes(&self) -> usize {
         self.capacity - self.used
     }

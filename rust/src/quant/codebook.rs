@@ -198,13 +198,13 @@ fn fp_values(ebits: u32, mbits: u32) -> Vec<f32> {
             mags.push(v);
         }
     }
-    mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    mags.sort_by(|a, b| a.total_cmp(b));
     mags.dedup();
     let mx = *mags.last().unwrap();
     let vals: Vec<f64> = mags.iter().map(|m| m / mx).collect();
     let mut all: Vec<f64> =
         vals.iter().map(|v| -v).chain(vals.iter().copied()).collect();
-    all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    all.sort_by(|a, b| a.total_cmp(b));
     all.dedup();
     all.into_iter().map(|v| v as f32).collect()
 }
@@ -241,7 +241,7 @@ pub fn derive_nfk(bits: u32) -> Vec<f32> {
     let mut vals: Vec<f64> = neg;
     vals.push(0.0);
     vals.extend(pos);
-    vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    vals.sort_by(|a, b| a.total_cmp(b));
     let mx = vals.iter().fold(0f64, |a, &v| a.max(v.abs()));
     vals.into_iter().map(|v| (v / mx) as f32).collect()
 }
@@ -361,7 +361,7 @@ mod tests {
                 .min_by(|(_, a), (_, b)| {
                     let da = (x - **a).abs();
                     let db = (x - **b).abs();
-                    da.partial_cmp(&db).unwrap().then(std::cmp::Ordering::Greater)
+                    da.total_cmp(&db).then(std::cmp::Ordering::Greater)
                 })
                 .unwrap()
                 .0;

@@ -10,10 +10,14 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::util::json::Value;
 
+/// Name, dtype, and shape of one tensor in an artifact signature.
 #[derive(Debug, Clone)]
 pub struct TensorSpec {
+    /// HLO parameter name
     pub name: String,
+    /// dtype name as the manifest spells it (`"f32"`, `"u8"`, …)
     pub dtype: String,
+    /// dimension sizes, outermost first; empty = scalar
     pub shape: Vec<usize>,
 }
 
@@ -31,6 +35,7 @@ impl TensorSpec {
         })
     }
 
+    /// Element count implied by the shape (1 for scalars).
     pub fn elems(&self) -> usize {
         self.shape.iter().product::<usize>().max(1)
     }
@@ -57,19 +62,33 @@ impl TensorSpec {
 /// Model configuration mirrored from `python/compile/configs.py`.
 #[derive(Debug, Clone)]
 pub struct ModelCfg {
+    /// config name (doubles as the artifact name)
     pub name: String,
+    /// vocabulary size
     pub vocab: usize,
+    /// residual-stream width
     pub d_model: usize,
+    /// transformer block count
     pub n_layers: usize,
+    /// attention head count
     pub n_heads: usize,
+    /// feed-forward hidden width
     pub d_ff: usize,
+    /// compiled sequence length
     pub seq_len: usize,
+    /// compiled batch size
     pub batch: usize,
+    /// base-weight quantization scheme (`"nf4"`, `"fp4"`, `"int4"`, `"none"`)
     pub quant: String,
+    /// whether quantization constants are themselves quantized
     pub double_quant: bool,
+    /// whether LoRA adapters are attached
     pub lora: bool,
+    /// LoRA rank
     pub lora_r: usize,
+    /// which linears carry adapters (`"all"`, `"attn"`, …)
     pub lora_scope: String,
+    /// training learning rate baked into the train graph
     pub lr: f64,
 }
 
@@ -93,6 +112,7 @@ impl ModelCfg {
         })
     }
 
+    /// Total parameter count implied by the shapes.
     pub fn n_params(&self) -> usize {
         let (d, f, v) = (self.d_model, self.d_ff, self.vocab);
         v * d + self.n_layers * (4 * d * d + 3 * d * f + 2 * d) + d
@@ -102,10 +122,15 @@ impl ModelCfg {
 /// One AOT-compiled model configuration.
 #[derive(Debug, Clone)]
 pub struct ArtifactSpec {
+    /// artifact name (the manifest key)
     pub name: String,
+    /// the model configuration this artifact was lowered from
     pub cfg: ModelCfg,
+    /// one optimizer step: state ++ frozen ++ data → state' ++ loss
     pub train_hlo: PathBuf,
+    /// loss + accuracy over a batch, no state update
     pub eval_hlo: PathBuf,
+    /// logits-only forward (generation artifacts only)
     pub fwd_hlo: Option<PathBuf>,
     /// Full-sequence forward that also fills the KV cache (generation
     /// artifacts only; `None` on train-only configs).
@@ -115,20 +140,30 @@ pub struct ArtifactSpec {
     /// Key/value cache signatures (shape `[batch, layers, seq, d_model]`);
     /// empty when the artifact has no cached decode graphs.
     pub cache_sig: Vec<TensorSpec>,
+    /// `.tensors` file with initial state ++ frozen values, in HLO order
     pub init: PathBuf,
+    /// number of mutable state tensors (trainable params + opt state)
     pub n_state: usize,
+    /// number of trainable parameter tensors within the state
     pub n_trainable: usize,
+    /// number of frozen tensors (quantized base + codebooks)
     pub n_frozen: usize,
+    /// signatures of the mutable state tensors
     pub state_sig: Vec<TensorSpec>,
+    /// signatures of the frozen tensors
     pub frozen_sig: Vec<TensorSpec>,
+    /// signatures of the per-batch data tensors
     pub data_sig: Vec<TensorSpec>,
 }
 
 /// The parsed `manifest.json`.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// directory the manifest was loaded from
     pub dir: PathBuf,
+    /// every artifact the manifest lists
     pub artifacts: Vec<ArtifactSpec>,
+    /// the full parsed JSON (for fields this struct does not model)
     pub raw: Value,
 }
 
@@ -140,6 +175,7 @@ impl Manifest {
             .unwrap_or_else(|_| PathBuf::from("artifacts"))
     }
 
+    /// Parse `dir/manifest.json` and resolve artifact paths against `dir`.
     pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path).with_context(|| {
@@ -188,6 +224,7 @@ impl Manifest {
         Ok(Manifest { dir: dir.to_path_buf(), artifacts, raw })
     }
 
+    /// Look up an artifact by name, with a helpful error listing what exists.
     pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
         self.artifacts
             .iter()

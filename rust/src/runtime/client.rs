@@ -14,7 +14,9 @@ use anyhow::{Context, Result};
 
 use super::executor::Executable;
 
+/// PJRT client plus a compile cache keyed by HLO path.
 pub struct Runtime {
+    /// the underlying PJRT client (CPU in this container)
     pub client: xla::PjRtClient,
     cache: Mutex<HashMap<PathBuf, std::sync::Arc<Executable>>>,
 }
@@ -27,6 +29,7 @@ impl Runtime {
         Ok(Runtime { client, cache: Mutex::new(HashMap::new()) })
     }
 
+    /// PJRT platform name (e.g. `"cpu"`).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }

@@ -9,10 +9,12 @@ use crate::tensorio::{Dt, Tensor};
 /// A compiled PJRT executable plus run statistics.
 pub struct Executable {
     exe: xla::PjRtLoadedExecutable,
+    /// number of completed `run` calls (perf accounting)
     pub runs: std::sync::atomic::AtomicU64,
 }
 
 impl Executable {
+    /// Wrap a loaded executable with zeroed run statistics.
     pub fn new(exe: xla::PjRtLoadedExecutable) -> Executable {
         Executable { exe, runs: std::sync::atomic::AtomicU64::new(0) }
     }

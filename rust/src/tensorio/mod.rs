@@ -14,17 +14,22 @@ use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use crate::util::json::Value;
 
+/// File magic for the `.tensors` format (`QLT1`).
 pub const MAGIC: &[u8; 4] = b"QLT1";
 
 /// Supported dtypes across the AOT boundary.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Dt {
+    /// 32-bit IEEE float
     F32,
+    /// raw bytes (packed NF4 payloads, codebooks as bytes)
     U8,
+    /// 32-bit signed integer (token ids)
     I32,
 }
 
 impl Dt {
+    /// Canonical lowercase name used in `.tensors` headers.
     pub fn name(self) -> &'static str {
         match self {
             Dt::F32 => "f32",
@@ -33,6 +38,7 @@ impl Dt {
         }
     }
 
+    /// Parse a header dtype name.
     pub fn from_name(s: &str) -> Result<Dt> {
         Ok(match s {
             "f32" => Dt::F32,
@@ -42,6 +48,7 @@ impl Dt {
         })
     }
 
+    /// Bytes per element.
     pub fn size(self) -> usize {
         match self {
             Dt::U8 => 1,
@@ -53,19 +60,25 @@ impl Dt {
 /// A named host tensor (raw little-endian bytes + shape + dtype).
 #[derive(Debug, Clone)]
 pub struct Tensor {
+    /// tensor name (HLO parameter name for init files)
     pub name: String,
+    /// element type
     pub dtype: Dt,
+    /// dimension sizes, outermost first; empty = scalar
     pub shape: Vec<usize>,
+    /// raw little-endian element bytes
     pub data: Vec<u8>,
 }
 
 impl Tensor {
+    /// Element count implied by the shape (1 for scalars).
     pub fn elems(&self) -> usize {
         self.shape.iter().product::<usize>().max(
             if self.shape.is_empty() { 1 } else { 0 },
         )
     }
 
+    /// Build an f32 tensor from host values.
     pub fn f32(name: &str, shape: Vec<usize>, vals: &[f32]) -> Tensor {
         let mut data = Vec::with_capacity(vals.len() * 4);
         for v in vals {
@@ -74,6 +87,7 @@ impl Tensor {
         Tensor { name: name.into(), dtype: Dt::F32, shape, data }
     }
 
+    /// Build an i32 tensor from host values.
     pub fn i32(name: &str, shape: Vec<usize>, vals: &[i32]) -> Tensor {
         let mut data = Vec::with_capacity(vals.len() * 4);
         for v in vals {
@@ -82,10 +96,12 @@ impl Tensor {
         Tensor { name: name.into(), dtype: Dt::I32, shape, data }
     }
 
+    /// Build a u8 tensor that takes ownership of the bytes.
     pub fn u8(name: &str, shape: Vec<usize>, vals: Vec<u8>) -> Tensor {
         Tensor { name: name.into(), dtype: Dt::U8, shape, data: vals }
     }
 
+    /// Decode the payload as f32 values (errors on dtype mismatch).
     pub fn to_f32(&self) -> Result<Vec<f32>> {
         ensure!(self.dtype == Dt::F32, "{} is not f32", self.name);
         Ok(self
@@ -95,6 +111,7 @@ impl Tensor {
             .collect())
     }
 
+    /// Decode the payload as i32 values (errors on dtype mismatch).
     pub fn to_i32(&self) -> Result<Vec<i32>> {
         ensure!(self.dtype == Dt::I32, "{} is not i32", self.name);
         Ok(self
@@ -128,7 +145,9 @@ fn write_tensors_file(path: &Path, tensors: &[Tensor]) -> Result<fs::File> {
     let mut f = fs::File::create(path)
         .with_context(|| format!("create {path:?}"))?;
     f.write_all(MAGIC)?;
-    f.write_all(&(header.len() as u32).to_le_bytes())?;
+    let header_len = u32::try_from(header.len())
+        .with_context(|| format!("header too large: {} bytes", header.len()))?;
+    f.write_all(&header_len.to_le_bytes())?;
     f.write_all(header.as_bytes())?;
     for t in tensors {
         f.write_all(&t.data)?;

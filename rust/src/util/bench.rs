@@ -14,17 +14,24 @@ use crate::util::json::Value;
 /// One benchmark measurement summary.
 #[derive(Debug, Clone)]
 pub struct Summary {
+    /// benchmark label (also the JSON match key for `bench_compare.py`)
     pub name: String,
+    /// timed iterations (after warmup)
     pub iters: usize,
+    /// mean wall time per iteration
     pub mean_ns: f64,
+    /// median wall time per iteration
     pub median_ns: f64,
+    /// 95th-percentile wall time per iteration
     pub p95_ns: f64,
+    /// standard deviation of per-iteration wall time
     pub std_ns: f64,
     /// items/sec if `throughput_items` was set
     pub throughput: Option<f64>,
 }
 
 impl Summary {
+    /// Print one human-readable result line (name, timings, throughput).
     pub fn print(&self) {
         let tp = match self.throughput {
             Some(t) => format!("  {:>12}/s", human_count(t)),
@@ -42,6 +49,7 @@ impl Summary {
     }
 }
 
+/// Format nanoseconds with an adaptive unit (ns / µs / ms / s).
 pub fn human_ns(ns: f64) -> String {
     if ns < 1_000.0 {
         format!("{ns:.0} ns")
@@ -54,6 +62,7 @@ pub fn human_ns(ns: f64) -> String {
     }
 }
 
+/// Format a count with an adaptive suffix (k / M / G).
 pub fn human_count(x: f64) -> String {
     if x >= 1e9 {
         format!("{:.2}G", x / 1e9)
@@ -72,6 +81,7 @@ pub struct Bencher {
     budget: Duration,
     min_iters: usize,
     max_iters: usize,
+    /// summaries in registration order, as written by [`Bencher::write_json`]
     pub results: Vec<Summary>,
 }
 
@@ -90,6 +100,7 @@ impl Default for Bencher {
 }
 
 impl Bencher {
+    /// A bencher with the default (or `QLORA_BENCH_FAST`) time budgets.
     pub fn new() -> Self {
         Self::default()
     }

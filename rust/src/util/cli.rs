@@ -6,9 +6,12 @@ use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
 
+/// Parsed command line: positionals plus `--key value` flags.
 #[derive(Debug, Default, Clone)]
 pub struct Args {
+    /// non-flag arguments, in order (plus everything after a `--`)
     pub positional: Vec<String>,
+    /// flag values keyed by name (bare `--flag` stores `"true"`)
     pub flags: BTreeMap<String, String>,
 }
 
@@ -43,22 +46,27 @@ impl Args {
         Ok(out)
     }
 
+    /// Parse the process arguments (skipping argv[0]).
     pub fn from_env() -> Result<Args> {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// The value of `--key`, if present.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(|s| s.as_str())
     }
 
+    /// The value of `--key`, or `default` when absent.
     pub fn get_or(&self, key: &str, default: &str) -> String {
         self.get(key).unwrap_or(default).to_string()
     }
 
+    /// Whether boolean `--key` was given (accepts `true` / `1` / `yes`).
     pub fn flag(&self, key: &str) -> bool {
         matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
     }
 
+    /// `--key` parsed as `usize`, or `default` when absent.
     pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
         match self.get(key) {
             None => Ok(default),
@@ -69,6 +77,7 @@ impl Args {
         }
     }
 
+    /// `--key` parsed as `f64`, or `default` when absent.
     pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
         match self.get(key) {
             None => Ok(default),
@@ -79,6 +88,7 @@ impl Args {
         }
     }
 
+    /// `--key` parsed as `u64`, or `default` when absent.
     pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
         match self.get(key) {
             None => Ok(default),

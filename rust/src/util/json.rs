@@ -13,15 +13,22 @@ use anyhow::{anyhow, bail, Result};
 /// A JSON value. Objects use `BTreeMap` for deterministic iteration.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Value {
+    /// JSON `null`
     Null,
+    /// JSON boolean
     Bool(bool),
+    /// JSON number (always `f64`, like JavaScript)
     Num(f64),
+    /// JSON string
     Str(String),
+    /// JSON array
     Arr(Vec<Value>),
+    /// JSON object (sorted keys)
     Obj(BTreeMap<String, Value>),
 }
 
 impl Value {
+    /// Parse a complete JSON document (rejects trailing input).
     pub fn parse(s: &str) -> Result<Value> {
         let mut p = Parser { b: s.as_bytes(), i: 0 };
         p.ws();
@@ -35,6 +42,7 @@ impl Value {
 
     // -- typed accessors ----------------------------------------------------
 
+    /// Required object member; errors on non-objects and missing keys.
     pub fn get(&self, key: &str) -> Result<&Value> {
         match self {
             Value::Obj(m) => m
@@ -44,6 +52,7 @@ impl Value {
         }
     }
 
+    /// Optional object member (`None` on non-objects too).
     pub fn opt(&self, key: &str) -> Option<&Value> {
         match self {
             Value::Obj(m) => m.get(key),
@@ -51,6 +60,7 @@ impl Value {
         }
     }
 
+    /// This value as a string, or a typed error.
     pub fn str(&self) -> Result<&str> {
         match self {
             Value::Str(s) => Ok(s),
@@ -58,6 +68,7 @@ impl Value {
         }
     }
 
+    /// This value as a number, or a typed error.
     pub fn num(&self) -> Result<f64> {
         match self {
             Value::Num(n) => Ok(*n),
@@ -65,10 +76,12 @@ impl Value {
         }
     }
 
+    /// This value truncated to `i64`, or a typed error.
     pub fn int(&self) -> Result<i64> {
         Ok(self.num()? as i64)
     }
 
+    /// This value as a non-negative `usize`, or a typed error.
     pub fn usize(&self) -> Result<usize> {
         let n = self.num()?;
         if n < 0.0 {
@@ -77,6 +90,7 @@ impl Value {
         Ok(n as usize)
     }
 
+    /// This value as a bool, or a typed error.
     pub fn boolean(&self) -> Result<bool> {
         match self {
             Value::Bool(b) => Ok(*b),
@@ -84,6 +98,7 @@ impl Value {
         }
     }
 
+    /// This value as an array slice, or a typed error.
     pub fn arr(&self) -> Result<&[Value]> {
         match self {
             Value::Arr(a) => Ok(a),
@@ -91,6 +106,7 @@ impl Value {
         }
     }
 
+    /// This value as an object map, or a typed error.
     pub fn obj(&self) -> Result<&BTreeMap<String, Value>> {
         match self {
             Value::Obj(m) => Ok(m),
@@ -100,24 +116,30 @@ impl Value {
 
     // -- construction helpers ------------------------------------------------
 
+    /// Build an object from `(key, value)` pairs.
     pub fn object(pairs: Vec<(&str, Value)>) -> Value {
         Value::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Build an array from an iterator of values.
     pub fn array<I: IntoIterator<Item = Value>>(items: I) -> Value {
         Value::Arr(items.into_iter().collect())
     }
 
+    /// Shorthand string constructor.
     pub fn s(v: impl Into<String>) -> Value {
         Value::Str(v.into())
     }
 
+    /// Shorthand number constructor.
     pub fn n(v: f64) -> Value {
         Value::Num(v)
     }
 
     // -- writer ---------------------------------------------------------------
 
+    /// Serialize to compact JSON text (round-trips through [`Value::parse`]).
+    #[allow(clippy::inherent_to_string)]
     pub fn to_string(&self) -> String {
         let mut out = String::new();
         self.write(&mut out);

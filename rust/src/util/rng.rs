@@ -20,6 +20,7 @@ fn splitmix64(state: &mut u64) -> u64 {
 }
 
 impl Rng {
+    /// Seed a generator; equal seeds yield identical streams.
     pub fn new(seed: u64) -> Self {
         let mut sm = seed;
         let s = [
@@ -36,6 +37,7 @@ impl Rng {
         Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
     }
 
+    /// Next raw 64-bit output of the xoshiro256** core.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;

@@ -28,7 +28,7 @@ pub fn median(xs: &[f64]) -> f64 {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
     let n = v.len();
     if n % 2 == 1 {
         v[n / 2]
@@ -41,7 +41,7 @@ pub fn median(xs: &[f64]) -> f64 {
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     assert!(!xs.is_empty());
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
     let rank = (p / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -95,7 +95,7 @@ pub fn kendall_tau(a: &[f64], b: &[f64]) -> f64 {
 fn ranks(xs: &[f64]) -> Vec<f64> {
     let n = xs.len();
     let mut idx: Vec<usize> = (0..n).collect();
-    idx.sort_by(|&i, &j| xs[i].partial_cmp(&xs[j]).unwrap());
+    idx.sort_by(|&i, &j| xs[i].total_cmp(&xs[j]));
     let mut r = vec![0.0; n];
     let mut i = 0;
     while i < n {
@@ -260,6 +260,20 @@ mod tests {
         assert!((std_dev(&xs) - 1.2909944).abs() < 1e-6);
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 100.0), 4.0);
+    }
+
+    #[test]
+    fn nan_inputs_never_panic() {
+        // regression: these sorts used partial_cmp().unwrap(), which
+        // panics the moment a NaN reaches a comparison (the PR 6 sampler
+        // bug class). total_cmp orders NaN after +inf, so NaN-bearing
+        // input degrades gracefully instead of killing the serve loop.
+        let xs = [2.0, f64::NAN, 1.0];
+        assert_eq!(median(&xs), 2.0, "NaN sorts last; median is finite");
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert!(percentile(&xs, 100.0).is_nan());
+        // spearman ranks NaN as the largest value; must not panic
+        let _ = spearman(&xs, &[1.0, 2.0, 3.0]);
     }
 
     #[test]

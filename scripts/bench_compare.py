@@ -10,7 +10,7 @@ bench-quant` / `make bench-generate`): `{"results": [{name, mean_ns,
 ...}, ...], "mode": "full"|"smoke", ...}`. Results are matched by name;
 a benchmark regresses when its mean time grows by more than THRESHOLD
 (default 25%) over the baseline. Exit code 1 when anything regressed
-(0 with --warn-only).
+(0 with --warn-only), 2 when either input is missing or unreadable.
 
 Baselines committed before a machine could run the benches carry
 `"placeholder": true` and compare as vacuously green — the first real
@@ -26,11 +26,12 @@ def load(path):
     try:
         with open(path) as f:
             return json.load(f)
-    except FileNotFoundError:
-        print(f"bench_compare: {path} not found")
+    except OSError as e:
+        print(f"bench_compare: cannot read {path}: {e}", file=sys.stderr)
         return None
     except json.JSONDecodeError as e:
-        print(f"bench_compare: {path} is not valid JSON: {e}")
+        print(f"bench_compare: {path} is not valid JSON: {e}",
+              file=sys.stderr)
         return None
 
 
@@ -47,8 +48,11 @@ def main():
     base = load(args.baseline)
     cur = load(args.current)
     if base is None or cur is None:
-        # a missing side is a setup problem, not a perf regression
-        return 0
+        # a missing or unreadable side is a broken comparison, not a
+        # clean one — exit distinctly so CI can't report vacuous green
+        print("bench_compare: refusing to compare without both inputs",
+              file=sys.stderr)
+        return 2
     if base.get("placeholder"):
         print(f"bench_compare: {args.baseline} is a placeholder baseline "
               "(no toolchain has run the bench yet); nothing to compare — "
@@ -60,11 +64,11 @@ def main():
               "comparable across modes — skipping.")
         return 0
 
-    by_name = {r["name"]: r for r in base.get("results", [])}
+    by_name = {r["name"]: r for r in base.get("results", []) if "name" in r}
     regressions = []
     compared = 0
     for r in cur.get("results", []):
-        b = by_name.get(r["name"])
+        b = by_name.get(r.get("name"))
         if b is None or not b.get("mean_ns") or not r.get("mean_ns"):
             continue
         compared += 1

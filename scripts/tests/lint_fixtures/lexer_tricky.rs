@@ -1,0 +1,15 @@
+// pallas-lint-fixture: path = rust/src/engine/scheduler.rs
+// pallas-lint-expect: clean
+
+// a comment mentioning .unwrap() and partial_cmp and rows[row]
+/* block comment: panic!("x") /* nested: thread::spawn */ still comment */
+fn describe(b: &[u8]) -> String {
+    let s = "calls .unwrap() and .expect(\"x\") and panic!";
+    let r = r#"raw: partial_cmp and rows[i] and "quoted" stuff"#;
+    let raw2 = r"thread::spawn inside a plain raw string";
+    let bytes = b"byte string with .unwrap() and arr[0]";
+    let quote = '\'';
+    let newline = '\n';
+    let lt: &'static str = "partial_cmp in a string after a lifetime";
+    format!("{s}{r}{raw2}{quote}{newline}{lt}{}", String::from_utf8_lossy(bytes))
+}

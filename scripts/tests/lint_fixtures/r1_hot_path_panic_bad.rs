@@ -1,0 +1,10 @@
+// pallas-lint-fixture: path = rust/src/engine/scheduler.rs
+// pallas-lint-expect: no-hot-path-panic @ 6; no-hot-path-panic @ 7
+// pallas-lint-expect: no-hot-path-panic @ 8; no-hot-path-panic @ 9
+
+fn poll(rows: &mut [Option<u32>], row: usize) -> u32 {
+    let v = rows[row].take().unwrap();
+    let w = v.checked_add(1).expect("no overflow");
+    if w == 0 { unreachable!("w > 0") }
+    todo!("rest of poll")
+}

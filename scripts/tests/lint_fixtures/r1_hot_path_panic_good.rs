@@ -1,0 +1,16 @@
+// pallas-lint-fixture: path = rust/src/engine/scheduler.rs
+// pallas-lint-expect: clean
+
+fn poll(rows: &mut [Option<u32>], row: usize) -> Option<u32> {
+    // pallas-lint: allow(no-hot-path-panic) — row < rows.len(): admit bounds-checks row ids
+    let v = rows[row].take();
+    v
+}
+
+fn tail(xs: &[u32]) -> u32 {
+    *xs.last().expect("non-empty by admission") // pallas-lint: allow(no-hot-path-panic) — admit rejects empty prompts
+}
+
+fn safe(rows: &[u32], row: usize) -> Option<u32> {
+    rows.get(row).copied()
+}

@@ -1,0 +1,7 @@
+// pallas-lint-fixture: path = rust/src/util/stats.rs
+// pallas-lint-expect: clean
+
+fn mean(xs: &[f64]) -> f64 {
+    let first = xs.first().unwrap();
+    first + xs[0]
+}

@@ -1,0 +1,13 @@
+// pallas-lint-fixture: path = rust/src/util/stats.rs
+// pallas-lint-expect: no-float-partial-cmp @ 5; no-float-partial-cmp @ 11
+
+fn sort(xs: &mut Vec<f64>) {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}
+
+#[cfg(test)]
+mod tests {
+    fn in_test_still_fires(a: f64, b: f64) -> bool {
+        a.partial_cmp(&b).is_some()
+    }
+}

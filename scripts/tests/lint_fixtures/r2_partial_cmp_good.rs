@@ -1,0 +1,6 @@
+// pallas-lint-fixture: path = rust/src/util/stats.rs
+// pallas-lint-expect: clean
+
+fn sort(xs: &mut [f64]) {
+    xs.sort_by(|a, b| a.total_cmp(b));
+}

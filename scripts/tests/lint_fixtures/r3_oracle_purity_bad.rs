@@ -1,0 +1,8 @@
+// pallas-lint-fixture: path = rust/src/quant/tensor.rs
+// pallas-lint-expect: oracle-purity @ 6
+
+pub fn quantize_scalar(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend(quantize_fused(xs));
+    out
+}

@@ -1,0 +1,10 @@
+// pallas-lint-fixture: path = rust/src/quant/tensor.rs
+// pallas-lint-expect: clean
+
+pub fn quantize_scalar(xs: &[f32]) -> Vec<u8> {
+    xs.iter().map(|&x| (x * 15.0).round() as u8).collect()
+}
+
+pub fn quantize(xs: &[f32]) -> Vec<u8> {
+    quantize_fused(xs)
+}

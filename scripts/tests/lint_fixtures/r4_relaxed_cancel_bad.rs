@@ -1,0 +1,6 @@
+// pallas-lint-fixture: path = rust/src/runtime/client.rs
+// pallas-lint-expect: no-relaxed-cancel @ 5
+
+pub fn cancel(flag: &std::sync::atomic::AtomicBool) {
+    flag.store(true, Ordering::Relaxed);
+}

@@ -1,0 +1,6 @@
+// pallas-lint-fixture: path = rust/src/runtime/executor.rs
+// pallas-lint-expect: clean
+
+pub fn bump(counter: &std::sync::atomic::AtomicU64) {
+    counter.fetch_add(1, Ordering::Relaxed);
+}

@@ -1,0 +1,6 @@
+// pallas-lint-fixture: path = rust/src/tensorio/mod.rs
+// pallas-lint-expect: no-lossy-as @ 5
+
+pub fn header_len(header: &[u8]) -> u32 {
+    header.len() as u32
+}

@@ -1,0 +1,10 @@
+// pallas-lint-fixture: path = rust/src/paged/pool.rs
+// pallas-lint-expect: clean
+
+pub fn widen(id: u32, bytes: u32) -> (usize, u64) {
+    (id as usize, bytes as u64)
+}
+
+pub fn narrow(len: usize) -> Option<u32> {
+    u32::try_from(len).ok()
+}

@@ -1,0 +1,6 @@
+// pallas-lint-fixture: path = rust/src/util/bench.rs
+// pallas-lint-expect: scoped-threads-only @ 5
+
+pub fn run() {
+    std::thread::spawn(|| {});
+}

@@ -1,0 +1,16 @@
+// pallas-lint-fixture: path = rust/src/quant/kernels.rs
+// pallas-lint-expect: clean
+
+pub fn run() {
+    std::thread::scope(|s| {
+        s.spawn(|| {});
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn spawn_in_test_is_fine() {
+        std::thread::spawn(|| {}).join().unwrap();
+    }
+}

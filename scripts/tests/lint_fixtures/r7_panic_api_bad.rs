@@ -1,0 +1,8 @@
+// pallas-lint-fixture: path = rust/src/engine/mod.rs
+// pallas-lint-expect: result-not-panic-api @ 7
+
+pub struct Registry;
+
+pub fn load(name: &str) -> u32 {
+    name.parse().unwrap()
+}

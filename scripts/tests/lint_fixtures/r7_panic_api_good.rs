@@ -1,0 +1,18 @@
+// pallas-lint-fixture: path = rust/src/engine/mod.rs
+// pallas-lint-expect: clean
+
+pub fn load(name: &str) -> Result<u32, std::num::ParseIntError> {
+    name.parse()
+}
+
+fn private_helper(name: &str) -> u32 {
+    name.parse().unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_in_tests_is_fine() {
+        assert_eq!(super::load("3").unwrap(), 3);
+    }
+}

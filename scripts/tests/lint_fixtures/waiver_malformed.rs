@@ -1,0 +1,8 @@
+// pallas-lint-fixture: path = rust/src/engine/scheduler.rs
+// pallas-lint-expect: waiver-syntax @ 5; waiver-syntax @ 6; no-hot-path-panic @ 7
+
+fn bad(rows: &[u32]) -> u32 {
+    // pallas-lint: allow(no-hot-path-panic)
+    // pallas-lint: allow(not-a-rule) — reason text
+    rows[0]
+}

@@ -1,0 +1,7 @@
+// pallas-lint-fixture: path = rust/src/engine/sampler.rs
+// pallas-lint-expect: clean
+
+fn pick(xs: &[(f32, usize)]) -> usize {
+    // pallas-lint: allow(no-hot-path-panic, no-float-partial-cmp) — xs non-empty by construction; NaN filtered upstream
+    xs.iter().max_by(|a, b| a.0.partial_cmp(&b.0).unwrap()).unwrap().1
+}

@@ -1,0 +1,6 @@
+// pallas-lint-fixture: path = rust/src/engine/scheduler.rs
+// pallas-lint-expect: unused-waiver @ 5
+
+fn ok() -> u32 {
+    1 + 1 // pallas-lint: allow(no-hot-path-panic) — nothing to waive here
+}
