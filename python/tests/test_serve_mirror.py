@@ -1,0 +1,1037 @@
+"""Python mirror of the Rust serving wire format (`rust/src/serve/`).
+
+The build container has no Rust toolchain (see
+`.claude/skills/verify/SKILL.md`), so this line-for-line port is the
+*runnable* verification of the network boundary — the same pattern as
+`test_blocks_mirror.py` for the KV block manager:
+
+  * `serve/json.rs` — the untrusted-input JSON parser and the
+    deterministic sorted-key writer, cross-checked here against
+    Python's `json` module on a shared random corpus;
+  * `serve/http.rs` — the request-reader state machine (buffer until
+    the blank line, split the head, drain `Content-Length` bytes),
+    `parse_head`, and the response/chunked-transfer wire formats;
+  * `serve/server.rs` — `decode_generate` plus the response encoders
+    (`generate_body`, `token_line`, `done_line`, `stats_body`).
+
+Two documented divergences from Python's `json` are pinned below:
+lone UTF-16 surrogates are rejected (Python accepts them), and numbers
+overflowing f64 such as `1e999` are rejected (Python yields `inf`).
+Python also accepts the non-JSON literals `NaN`/`Infinity`; the mirror,
+like the Rust parser, does not.
+"""
+
+import json
+import math
+import random
+import re
+from decimal import Decimal
+
+import pytest
+
+# ---------------------------------------------------------------------------
+# serve/json.rs mirror: errors
+
+MAX_DEPTH = 64
+MAX_INPUT_BYTES = 1 << 20
+
+
+class JsonError(Exception):
+    kind = None
+
+
+class JsonParseError(JsonError):
+    kind = "parse_error"
+
+    def __init__(self, offset, msg):
+        super().__init__(f"invalid JSON at byte {offset}: {msg}")
+        self.offset = offset
+        self.msg = msg
+
+
+class JsonTypeError(JsonError):
+    kind = "type_error"
+
+    def __init__(self, field, expected, found):
+        super().__init__(f"field `{field}` must be {expected}, got {found}")
+        self.field = field
+
+
+class JsonMissingField(JsonError):
+    kind = "missing_field"
+
+    def __init__(self, field):
+        super().__init__(f"missing required field `{field}`")
+        self.field = field
+
+
+# ---------------------------------------------------------------------------
+# serve/json.rs mirror: parser (JSON numbers always parse to float, as
+# the Rust side always parses to f64)
+
+
+class Parser:
+    def __init__(self, b, max_depth):
+        self.b = b
+        self.pos = 0
+        self.max_depth = max_depth
+
+    def err(self, msg):
+        return JsonParseError(self.pos, msg)
+
+    def peek(self):
+        return self.b[self.pos] if self.pos < len(self.b) else None
+
+    def bump(self):
+        c = self.peek()
+        if c is not None:
+            self.pos += 1
+        return c
+
+    def skip_ws(self):
+        while self.peek() in (0x20, 0x09, 0x0A, 0x0D):
+            self.pos += 1
+
+    def value(self, depth):
+        self.skip_ws()
+        c = self.peek()
+        if c is None:
+            raise self.err("unexpected end of input")
+        if c == ord("n"):
+            return self.lit("null", None)
+        if c == ord("t"):
+            return self.lit("true", True)
+        if c == ord("f"):
+            return self.lit("false", False)
+        if c == ord('"'):
+            return self.string()
+        if c == ord("["):
+            return self.array(depth)
+        if c == ord("{"):
+            return self.object(depth)
+        if c == ord("-") or 0x30 <= c <= 0x39:
+            return self.number()
+        raise self.err(f"unexpected byte 0x{c:02x}")
+
+    def lit(self, word, v):
+        wb = word.encode()
+        if self.b[self.pos:self.pos + len(wb)] == wb:
+            self.pos += len(wb)
+            return v
+        raise self.err(f"expected `{word}`")
+
+    def digits(self):
+        c = self.peek()
+        if c is None or not 0x30 <= c <= 0x39:
+            raise self.err("expected a digit")
+        while self.peek() is not None and 0x30 <= self.peek() <= 0x39:
+            self.pos += 1
+
+    def number(self):
+        start = self.pos
+        if self.peek() == ord("-"):
+            self.pos += 1
+        # integer part: a leading zero takes no more digits (JSON bans
+        # 0123), any other digit takes a run
+        if self.peek() == ord("0"):
+            self.pos += 1
+        else:
+            self.digits()
+        if self.peek() == ord("."):
+            self.pos += 1
+            self.digits()
+        if self.peek() in (ord("e"), ord("E")):
+            self.pos += 1
+            if self.peek() in (ord("+"), ord("-")):
+                self.pos += 1
+            self.digits()
+        text = self.b[start:self.pos].decode("utf-8", "replace")
+        try:
+            n = float(text)
+        except ValueError:
+            raise self.err(f"bad number `{text}`")
+        if not math.isfinite(n):
+            raise self.err(f"number `{text}` does not fit an f64")
+        return n
+
+    def hex4(self):
+        v = 0
+        for _ in range(4):
+            c = self.bump()
+            if c is None:
+                raise self.err("truncated \\u escape")
+            ch = chr(c)
+            if ch not in "0123456789abcdefABCDEF":
+                raise self.err("bad hex digit in \\u escape")
+            v = (v << 4) | int(ch, 16)
+        return v
+
+    def string(self):
+        if self.bump() != ord('"'):
+            raise self.err("expected a string")
+        buf = bytearray()
+        while True:
+            c = self.bump()
+            if c is None:
+                raise self.err("unterminated string")
+            if c == ord('"'):
+                break
+            if c == ord("\\"):
+                e = self.bump()
+                if e is None:
+                    raise self.err("unterminated escape")
+                simple = {
+                    ord('"'): b'"', ord("\\"): b"\\", ord("/"): b"/",
+                    ord("b"): b"\x08", ord("f"): b"\x0c",
+                    ord("n"): b"\n", ord("r"): b"\r", ord("t"): b"\t",
+                }
+                if e in simple:
+                    buf.extend(simple[e])
+                elif e == ord("u"):
+                    buf.extend(self.unicode_escape().encode("utf-8"))
+                else:
+                    raise self.err(f"invalid escape `\\{chr(e)}`")
+            elif 0x00 <= c <= 0x1F:
+                raise self.err("raw control character in string")
+            else:
+                buf.append(c)
+        try:
+            return buf.decode("utf-8")
+        except UnicodeDecodeError:
+            raise self.err("invalid UTF-8 in string")
+
+    def unicode_escape(self):
+        # decodes one \uXXXX escape (the \u already consumed), pairing
+        # surrogates; a lone surrogate is an error, not a replacement
+        hi = self.hex4()
+        if 0xD800 <= hi <= 0xDBFF:
+            if self.bump() != ord("\\") or self.bump() != ord("u"):
+                raise self.err("lone high surrogate in \\u escape")
+            lo = self.hex4()
+            if not 0xDC00 <= lo <= 0xDFFF:
+                raise self.err("invalid low surrogate in \\u escape")
+            cp = 0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+        elif 0xDC00 <= hi <= 0xDFFF:
+            raise self.err("lone low surrogate in \\u escape")
+        else:
+            cp = hi
+        return chr(cp)
+
+    def check_depth(self, depth):
+        # containers at nesting depth max_depth are rejected, so at
+        # most max_depth arrays/objects ever sit on the recursion stack
+        if depth >= self.max_depth:
+            raise self.err(
+                f"nesting exceeds the depth limit of {self.max_depth}")
+
+    def array(self, depth):
+        self.check_depth(depth)
+        self.pos += 1  # consume '['
+        items = []
+        self.skip_ws()
+        if self.peek() == ord("]"):
+            self.pos += 1
+            return items
+        while True:
+            items.append(self.value(depth + 1))
+            self.skip_ws()
+            c = self.bump()
+            if c == ord(","):
+                continue
+            if c == ord("]"):
+                return items
+            raise self.err("expected `,` or `]` in array")
+
+    def object(self, depth):
+        self.check_depth(depth)
+        self.pos += 1  # consume '{'
+        obj = {}
+        self.skip_ws()
+        if self.peek() == ord("}"):
+            self.pos += 1
+            return obj
+        while True:
+            self.skip_ws()
+            key = self.string()
+            self.skip_ws()
+            if self.bump() != ord(":"):
+                raise self.err("expected `:` after object key")
+            # duplicate keys: last one wins, as in Python's json
+            obj[key] = self.value(depth + 1)
+            self.skip_ws()
+            c = self.bump()
+            if c == ord(","):
+                continue
+            if c == ord("}"):
+                return obj
+            raise self.err("expected `,` or `}` in object")
+
+
+def parse(data, max_depth=MAX_DEPTH, max_bytes=MAX_INPUT_BYTES):
+    if isinstance(data, str):
+        data = data.encode("utf-8")
+    if len(data) > max_bytes:
+        raise JsonParseError(
+            0, f"input of {len(data)} bytes exceeds the {max_bytes} "
+               "byte limit")
+    p = Parser(data, max_depth)
+    v = p.value(0)
+    p.skip_ws()
+    if p.pos < len(p.b):
+        raise p.err("trailing data after the document")
+    return v
+
+
+# ---------------------------------------------------------------------------
+# serve/json.rs mirror: writer (compact, sorted keys, UTF-8 raw)
+
+
+def write_num(n):
+    if not math.isfinite(n):
+        return "null"
+    # integral values print without a fraction (and -0 keeps its sign);
+    # everything else uses shortest-roundtrip digits, expanded without
+    # exponent notation exactly as Rust's `{}` float Display does
+    if n == math.trunc(n) and abs(n) <= 9.007199254740992e15:
+        if n == 0.0 and math.copysign(1.0, n) < 0.0:
+            return "-0"
+        return str(int(n))
+    return format(Decimal(repr(n)), "f")
+
+
+def write_escaped(s):
+    out = ['"']
+    for ch in s:
+        if ch == '"':
+            out.append('\\"')
+        elif ch == "\\":
+            out.append("\\\\")
+        elif ch == "\b":
+            out.append("\\b")
+        elif ch == "\f":
+            out.append("\\f")
+        elif ch == "\n":
+            out.append("\\n")
+        elif ch == "\r":
+            out.append("\\r")
+        elif ch == "\t":
+            out.append("\\t")
+        elif ord(ch) < 0x20:
+            out.append(f"\\u{ord(ch):04x}")
+        else:
+            out.append(ch)
+    out.append('"')
+    return "".join(out)
+
+
+def write(v):
+    if v is None:
+        return "null"
+    if v is True:
+        return "true"
+    if v is False:
+        return "false"
+    if isinstance(v, (int, float)):
+        return write_num(float(v))
+    if isinstance(v, str):
+        return write_escaped(v)
+    if isinstance(v, list):
+        return "[" + ",".join(write(x) for x in v) + "]"
+    if isinstance(v, dict):
+        return "{" + ",".join(
+            write_escaped(k) + ":" + write(v[k]) for k in sorted(v)) + "}"
+    raise ValueError(f"not a JSON value: {v!r}")
+
+
+# ---------------------------------------------------------------------------
+# serve/json.rs mirror: typed field extraction
+
+
+def type_name(v):
+    if v is None:
+        return "null"
+    if isinstance(v, bool):
+        return "bool"
+    if isinstance(v, (int, float)):
+        return "number"
+    if isinstance(v, str):
+        return "string"
+    if isinstance(v, list):
+        return "array"
+    return "object"
+
+
+def _get(doc, field):
+    return doc.get(field) if isinstance(doc, dict) else None
+
+
+def req_str(doc, field):
+    v = _get(doc, field)
+    if v is None:
+        raise JsonMissingField(field)
+    if not isinstance(v, str):
+        raise JsonTypeError(field, "a string", type_name(v))
+    return v
+
+
+def opt_str(doc, field):
+    v = _get(doc, field)
+    if v is None:
+        return None
+    if not isinstance(v, str):
+        raise JsonTypeError(field, "a string", type_name(v))
+    return v
+
+
+def opt_u64(doc, field):
+    # rejects negatives, fractions, and magnitudes past 2^53
+    v = _get(doc, field)
+    if v is None:
+        return None
+    if isinstance(v, bool) or not isinstance(v, (int, float)):
+        raise JsonTypeError(field, "a non-negative integer", type_name(v))
+    n = float(v)
+    if n < 0.0 or n != math.trunc(n) or n > 9.007199254740992e15:
+        raise JsonTypeError(field, "a non-negative integer", type_name(v))
+    return int(n)
+
+
+def opt_bool(doc, field):
+    v = _get(doc, field)
+    if v is None:
+        return None
+    if not isinstance(v, bool):
+        raise JsonTypeError(field, "a bool", type_name(v))
+    return v
+
+
+# ---------------------------------------------------------------------------
+# serve/http.rs mirror
+
+
+MAX_HEAD_BYTES = 16 * 1024
+MAX_BODY_BYTES = 1 << 20
+
+
+class HttpErr(Exception):
+    status = None
+
+
+class Closed(HttpErr):
+    pass
+
+
+class BadRequest(HttpErr):
+    status = 400
+
+
+class PayloadTooLarge(HttpErr):
+    status = 413
+
+
+def header(req, name):
+    for k, v in req["headers"]:
+        if k.lower() == name.lower():
+            return v
+    return None
+
+
+def parse_head(head):
+    lines = head.split("\r\n")
+    request_line = lines[0]
+    parts = request_line.split(" ")
+    if len(parts) != 3 or not parts[0] or not parts[1]:
+        raise BadRequest(f"malformed request line `{request_line}`")
+    method, path, version = parts
+    if version == "HTTP/1.1":
+        keep_alive = True
+    elif version == "HTTP/1.0":
+        keep_alive = False
+    else:
+        raise BadRequest(f"unsupported protocol version `{version}`")
+    headers = []
+    for line in lines[1:]:
+        if ":" not in line:
+            raise BadRequest(f"malformed header line `{line}`")
+        name, value = line.split(":", 1)
+        if not name or " " in name or "\t" in name:
+            raise BadRequest(f"malformed header name `{name}`")
+        headers.append((name, value.strip()))
+    req = {"method": method, "path": path, "headers": headers,
+           "body": b"", "keep_alive": keep_alive}
+    c = header(req, "connection")
+    if c is not None:
+        if c.lower() == "close":
+            req["keep_alive"] = False
+        elif c.lower() == "keep-alive":
+            req["keep_alive"] = True
+    return req
+
+
+class RequestReader:
+    """The next_request state machine over an in-memory byte stream
+    (buffer until the blank line, split the head, drain Content-Length
+    bytes; carry pipelined remainder over to the next call)."""
+
+    def __init__(self, data, max_body=MAX_BODY_BYTES):
+        self.src = data
+        self.src_pos = 0
+        self.buf = bytearray()
+        self.max_body = max_body
+
+    def fill(self):
+        chunk = self.src[self.src_pos:self.src_pos + 4096]
+        self.src_pos += len(chunk)
+        self.buf.extend(chunk)
+        return len(chunk)
+
+    def next_request(self):
+        while True:
+            head_end = self.buf.find(b"\r\n\r\n")
+            if head_end >= 0:
+                break
+            if len(self.buf) > MAX_HEAD_BYTES:
+                raise BadRequest(
+                    f"request head exceeds {MAX_HEAD_BYTES} bytes")
+            if self.fill() == 0:
+                if not self.buf:
+                    raise Closed("connection closed")
+                raise BadRequest("connection closed mid-request")
+        head_bytes = bytes(self.buf[:head_end])
+        del self.buf[:head_end + 4]
+        try:
+            head = head_bytes.decode("utf-8")
+        except UnicodeDecodeError:
+            raise BadRequest("request head is not UTF-8")
+        req = parse_head(head)
+        # chunked uploads are out of scope for this API
+        if header(req, "transfer-encoding") is not None:
+            raise BadRequest("chunked request bodies are not supported")
+        cl = header(req, "content-length")
+        if cl is None:
+            body_len = 0
+        else:
+            t = cl.strip()
+            if re.fullmatch(r"\+?[0-9]+", t) is None:
+                raise BadRequest(f"invalid Content-Length `{cl}`")
+            body_len = int(t)
+        if body_len > self.max_body:
+            raise PayloadTooLarge(
+                f"body of {body_len} bytes exceeds the "
+                f"{self.max_body} byte limit")
+        while len(self.buf) < body_len:
+            if self.fill() == 0:
+                raise BadRequest("connection closed mid-body")
+        req["body"] = bytes(self.buf[:body_len])
+        del self.buf[:body_len]
+        return req
+
+
+def status_text(status):
+    return {
+        200: "OK", 400: "Bad Request", 404: "Not Found",
+        405: "Method Not Allowed", 413: "Payload Too Large",
+        500: "Internal Server Error", 503: "Service Unavailable",
+    }.get(status, "Unknown")
+
+
+def write_response(status, content_type, body, keep_alive):
+    head = (f"HTTP/1.1 {status} {status_text(status)}\r\n"
+            f"Content-Type: {content_type}\r\n"
+            f"Content-Length: {len(body)}\r\n"
+            f"Connection: {'keep-alive' if keep_alive else 'close'}\r\n"
+            "\r\n")
+    return head.encode() + body
+
+
+def error_body(kind, message):
+    return write({"error": {"kind": kind, "message": message}}).encode()
+
+
+def chunked_response(status, content_type, keep_alive, chunks):
+    head = (f"HTTP/1.1 {status} {status_text(status)}\r\n"
+            f"Content-Type: {content_type}\r\n"
+            "Transfer-Encoding: chunked\r\n"
+            f"Connection: {'keep-alive' if keep_alive else 'close'}\r\n"
+            "\r\n").encode()
+    out = bytearray(head)
+    for c in chunks:
+        if not c:
+            continue  # a zero-length chunk would terminate the stream
+        out.extend(b"%x\r\n" % len(c))
+        out.extend(c)
+        out.extend(b"\r\n")
+    out.extend(b"0\r\n\r\n")
+    return bytes(out)
+
+
+# ---------------------------------------------------------------------------
+# serve/server.rs mirror: request decode + response encode
+
+
+OUTCOMES = ("done", "cancelled", "deadline_exceeded", "aborted")
+
+
+def decode_generate(body):
+    doc = parse(body)
+    prompt = req_str(doc, "prompt")
+    adapter = opt_str(doc, "adapter")
+    p = opt_str(doc, "priority")
+    if p is None:
+        priority = "normal"
+    elif p in ("low", "normal", "high"):
+        priority = p
+    else:
+        raise JsonTypeError(
+            "priority", 'one of "low"/"normal"/"high"', "string")
+    return {
+        "prompt": prompt,
+        "adapter": adapter,
+        "priority": priority,
+        "deadline_ms": opt_u64(doc, "deadline_ms"),
+        "max_new_tokens": opt_u64(doc, "max_new_tokens"),
+        "stream": opt_bool(doc, "stream") or False,
+    }
+
+
+def generate_body(outcome, text):
+    return write({"outcome": outcome, "text": text})
+
+
+def token_line(text):
+    return write({"token": text}) + "\n"
+
+
+def done_line(outcome, text):
+    return write({"done": True, "outcome": outcome, "text": text}) + "\n"
+
+
+def stats_body(st):
+    budget = st["token_budget"]
+    return {
+        "submitted": float(st["submitted"]),
+        "completed": float(st["completed"]),
+        "cancelled": float(st["cancelled"]),
+        "deadline_exceeded": float(st["deadline_exceeded"]),
+        "preemptions": float(st["preemptions"]),
+        "queue_depth": float(st["queue_depth"]),
+        "active_rows": float(st["active_rows"]),
+        "resident_tokens": float(st["resident_tokens"]),
+        "reserved_tokens": float(st["reserved_tokens"]),
+        "token_budget": None if budget is None else float(budget),
+        "tokens_generated": float(st["tokens_generated"]),
+        "mean_ttft_ms": float(st["mean_ttft_ms"]),
+        "tokens_per_sec": float(st["tokens_per_sec"]),
+        "blocks": {
+            "kv_blocks": float(st["kv_blocks"]),
+            "kv_block_tokens": float(st["kv_block_tokens"]),
+            "kv_blocks_in_use": float(st["kv_blocks_in_use"]),
+            "shared_block_hits": float(st["shared_block_hits"]),
+            "cow_forks": float(st["cow_forks"]),
+            "swap_outs": float(st["swap_outs"]),
+        },
+    }
+
+
+# ---------------------------------------------------------------------------
+# corpus generators (the same pools as rust/tests/prop_json.rs)
+
+
+STRING_POOL = ["a", "z", "0", " ", '"', "\\", "/", "\n", "\r", "\t",
+               "\b", "\f", "\x00", "\x1f", "é", "ß", "中", " ", "😀"]
+
+
+def gen_string(rng):
+    return "".join(rng.choice(STRING_POOL)
+                   for _ in range(rng.randrange(12)))
+
+
+def gen_num(rng):
+    k = rng.randrange(5)
+    if k == 0:
+        return float(rng.randrange(-1_000_000, 1_000_001))
+    if k == 1:
+        return rng.randrange(-2000, 2001) / 64.0
+    if k == 2:
+        return 10.0 ** rng.randrange(-300, 300)
+    if k == 3:
+        return -0.0
+    return 9.007199254740992e15 * rng.choice([1.0, -1.0])
+
+
+def gen_value(rng, depth=0):
+    scalar = depth >= 5 or rng.random() < 0.4
+    k = rng.randrange(4) if scalar else 4 + rng.randrange(2)
+    if k == 0:
+        return None
+    if k == 1:
+        return rng.random() < 0.5
+    if k == 2:
+        return gen_num(rng)
+    if k == 3:
+        return gen_string(rng)
+    if k == 4:
+        return [gen_value(rng, depth + 1)
+                for _ in range(rng.randrange(5))]
+    return {gen_string(rng): gen_value(rng, depth + 1)
+            for _ in range(rng.randrange(5))}
+
+
+def canon(x):
+    """Type-strict comparison key: floats and ints compare as the same
+    number (the mirror always parses to float, json.loads keeps ints),
+    bools stay distinct from 1/0. The sign of zero is NOT compared:
+    Python's json parses `-0` down its integer path to int 0, losing
+    the sign (pinned in test_negative_zero_keeps_sign_and_writes_bare).
+    """
+    if x is None or isinstance(x, bool):
+        return ("lit", x)
+    if isinstance(x, (int, float)):
+        f = float(x)
+        sign = 1.0 if f == 0.0 else math.copysign(1.0, f)
+        return ("num", repr(abs(f)), sign)
+    if isinstance(x, str):
+        return ("str", x)
+    if isinstance(x, list):
+        return ("arr", tuple(canon(i) for i in x))
+    return ("obj", tuple(sorted((k, canon(v)) for k, v in x.items())))
+
+
+DUMPS = dict(sort_keys=True, separators=(",", ":"), ensure_ascii=False)
+
+
+# ---------------------------------------------------------------------------
+# tests: parser vs Python's json on a shared corpus
+
+
+def test_parser_agrees_with_json_loads_on_random_docs():
+    rng = random.Random(0x5EED)
+    for _ in range(300):
+        doc = write(gen_value(rng))
+        assert canon(parse(doc)) == canon(json.loads(doc)), doc
+
+
+def test_writer_is_a_parse_fixed_point():
+    rng = random.Random(0x5EED + 1)
+    for _ in range(300):
+        first = write(gen_value(rng))
+        assert write(parse(first)) == first
+
+
+def test_writer_matches_json_dumps_on_exponent_free_values():
+    # json.dumps uses repr() for floats, which switches to exponent
+    # notation outside [1e-4, 1e16) — inside it, and for ints, the two
+    # writers must agree byte for byte
+    rng = random.Random(0x5EED + 2)
+    for _ in range(300):
+        v = gen_value(rng)
+
+        def clamp(x):
+            if isinstance(x, bool) or not isinstance(x, float):
+                if isinstance(x, list):
+                    return [clamp(i) for i in x]
+                if isinstance(x, dict):
+                    return {k: clamp(val) for k, val in x.items()}
+                return x
+            if x != math.trunc(x) and 1e-4 <= abs(x) < 1e15:
+                return x
+            return int(abs(x) % 10**6) * (1 if x >= 0 else -1)
+
+        v = clamp(v)
+        assert write(v) == json.dumps(v, **DUMPS)
+
+
+def test_parse_raises_only_json_errors_on_mutated_docs():
+    rng = random.Random(0x5EED + 3)
+    for _ in range(300):
+        b = bytearray(write(gen_value(rng)).encode("utf-8"))
+        for _ in range(1 + rng.randrange(6)):
+            k = rng.randrange(3)
+            if k == 0 and b:
+                b[rng.randrange(len(b))] = rng.randrange(256)
+            elif k == 1:
+                del b[rng.randrange(len(b) + 1):]
+            else:
+                b.insert(rng.randrange(len(b) + 1), rng.randrange(256))
+        try:
+            parse(bytes(b))
+        except JsonError:
+            pass  # typed rejection is the contract; anything else raises
+
+
+def test_whitespace_and_sorted_keys():
+    v = parse(b'{"b": [1, 2, {"x": null}], "a": "y"}')
+    assert write(v) == '{"a":"y","b":[1,2,{"x":null}]}'
+    assert canon(v) == canon(json.loads('{"b":[1,2,{"x":null}],"a":"y"}'))
+
+
+def test_duplicate_keys_last_wins_like_python():
+    doc = '{"k":1,"k":2}'
+    assert parse(doc)["k"] == 2.0
+    assert json.loads(doc)["k"] == 2
+    assert write(parse(doc)) == '{"k":2}'
+
+
+def test_escapes_decode_and_reencode():
+    # byte-for-byte the rust unit test `escapes_decode_and_reencode`
+    v = parse(r'"a\n\t\"\\\/\b\fAé"')
+    assert v == 'a\n\t"\\/\b\fAé'
+    assert write(v) == '"a\\n\\t\\"\\\\/\\b\\fAé"'
+    assert write(v) == json.dumps(v, **DUMPS)
+
+
+def test_surrogate_pairs_combine_lone_surrogates_pinned_divergence():
+    assert parse(r'"😀"') == "😀" == json.loads(r'"😀"')
+    for doc in [r'"\ud800"', r'"\udc00"', r'"\ud800x"', r'"\ud800\ud800"']:
+        with pytest.raises(JsonParseError):
+            parse(doc)
+        json.loads(doc)  # Python accepts the lone surrogate — pinned
+
+
+def test_overflow_and_nonfinite_pinned_divergences():
+    for doc in ["1e999", "-1e999", "1e99999999"]:
+        with pytest.raises(JsonParseError):
+            parse(doc)
+        assert math.isinf(json.loads(doc))  # Python yields inf — pinned
+    # Python's json accepts the non-JSON literals NaN/Infinity; the
+    # serving parser does not
+    for doc in ["NaN", "Infinity", "-Infinity"]:
+        with pytest.raises(JsonParseError):
+            parse(doc)
+        json.loads(doc)
+    assert parse("1.7976931348623157e308") == 1.7976931348623157e308
+
+
+def test_negative_zero_keeps_sign_and_writes_bare():
+    for doc in ["-0", "-0.0", "-0e5"]:
+        v = parse(doc)
+        assert v == 0.0 and math.copysign(1.0, v) < 0.0
+        assert write(v) == "-0"
+    # pinned divergences: json.dumps(-0.0) spells it "-0.0", and
+    # json.loads("-0") takes the integer path and loses the sign
+    assert json.dumps(-0.0) == "-0.0"
+    assert json.loads("-0") == 0 and isinstance(json.loads("-0"), int)
+    assert write(0.0) == "0"
+
+
+def test_number_grammar_edges_match_python():
+    for bad in ["01", ".5", "1.", "1e", "+1", "--1", "1e+"]:
+        with pytest.raises(JsonParseError):
+            parse(bad)
+        with pytest.raises(json.JSONDecodeError):
+            json.loads(bad)
+    assert parse("1e3") == 1000.0 == json.loads("1e3")
+
+
+def test_strictness_matches_python():
+    for bad in ['[1,]', '{"a":1,}', "[1 2]", "'x'", '{"a" 1}', "1 2",
+                '"\x01"']:
+        with pytest.raises(JsonParseError):
+            parse(bad)
+        with pytest.raises(json.JSONDecodeError):
+            json.loads(bad)
+
+
+def test_depth_limit():
+    ok = "[" * MAX_DEPTH + "1" + "]" * MAX_DEPTH
+    assert parse(ok) is not None
+    with pytest.raises(JsonParseError):
+        parse("[" * (MAX_DEPTH + 1) + "1" + "]" * (MAX_DEPTH + 1))
+    assert parse("[[[[1]]]]", max_depth=4) == [[[[1.0]]]]
+    with pytest.raises(JsonParseError):
+        parse("[[[[[1]]]]]", max_depth=4)
+    # scalars inside the deepest admitted container are fine
+    assert parse('[[1,true,"x"]]', max_depth=2) == [[1.0, True, "x"]]
+
+
+def test_size_limit():
+    with pytest.raises(JsonParseError):
+        parse(b" " * 32, max_bytes=16)
+    assert parse(b"1", max_bytes=16) == 1.0
+
+
+def test_typed_extraction():
+    doc = parse(b'{"s":"x","n":5,"b":true,"z":null,"f":1.5,"neg":-1,'
+                b'"big":100000000000000000}')
+    assert req_str(doc, "s") == "x"
+    with pytest.raises(JsonMissingField):
+        req_str(doc, "missing")
+    with pytest.raises(JsonMissingField):
+        req_str(doc, "z")  # null counts as missing
+    with pytest.raises(JsonTypeError):
+        req_str(doc, "n")
+    assert opt_str(doc, "missing") is None
+    assert opt_u64(doc, "n") == 5
+    assert opt_u64(doc, "missing") is None
+    for bad in ["f", "neg", "big", "s", "b"]:
+        with pytest.raises(JsonTypeError):
+            opt_u64(doc, bad)
+    assert opt_u64(parse(b'{"n":9007199254740992}'), "n") == 2**53
+    # 2^53 + 1 rounds to exactly 2^53 in an f64, so it sits on the
+    # accepted side of the limit (mirrors the Rust behaviour)
+    assert opt_u64(parse(b'{"n":9007199254740993}'), "n") == 2**53
+    assert opt_bool(doc, "b") is True
+    with pytest.raises(JsonTypeError):
+        opt_bool(doc, "n")
+
+
+# ---------------------------------------------------------------------------
+# tests: HTTP state machine
+
+
+def test_http_parses_post_with_body():
+    raw = (b"POST /v1/generate HTTP/1.1\r\nHost: x\r\n"
+           b"Content-Length: 4\r\n\r\nabcd")
+    req = RequestReader(raw).next_request()
+    assert req["method"] == "POST"
+    assert req["path"] == "/v1/generate"
+    assert req["body"] == b"abcd"
+    assert req["keep_alive"]
+    assert header(req, "HOST") == "x"
+
+
+def test_http_keep_alive_rules():
+    rd = RequestReader(b"GET / HTTP/1.1\r\nConnection: close\r\n\r\n")
+    assert not rd.next_request()["keep_alive"]
+    assert not RequestReader(
+        b"GET / HTTP/1.0\r\n\r\n").next_request()["keep_alive"]
+    assert RequestReader(
+        b"GET / HTTP/1.0\r\nConnection: Keep-Alive\r\n\r\n"
+    ).next_request()["keep_alive"]
+
+
+def test_http_pipelined_requests_both_parse():
+    rd = RequestReader(b"GET /healthz HTTP/1.1\r\n\r\n"
+                       b"GET /v1/stats HTTP/1.1\r\n\r\n")
+    assert rd.next_request()["path"] == "/healthz"
+    assert rd.next_request()["path"] == "/v1/stats"
+    with pytest.raises(Closed):
+        rd.next_request()
+
+
+def test_http_malformed_heads_are_400():
+    for raw in [b"GARBAGE\r\n\r\n",
+                b"GET /\r\n\r\n",
+                b"GET / HTTP/2.0\r\n\r\n",
+                b"GET / HTTP/1.1\r\nno-colon\r\n\r\n",
+                b"GET / HTTP/1.1\r\nbad name: x\r\n\r\n",
+                b"GET / HTTP/1.1 extra\r\n\r\n",
+                b"POST / HTTP/1.1\r\nContent-Length: zz\r\n\r\n",
+                b"POST / HTTP/1.1\r\nContent-Length: -1\r\n\r\n",
+                b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n"]:
+        with pytest.raises(BadRequest):
+            RequestReader(raw).next_request()
+
+
+def test_http_oversized_body_is_413():
+    raw = b"POST / HTTP/1.1\r\nContent-Length: 100\r\n\r\n"
+    with pytest.raises(PayloadTooLarge) as e:
+        RequestReader(raw, max_body=10).next_request()
+    assert e.value.status == 413
+
+
+def test_http_truncated_requests_fail_cleanly():
+    with pytest.raises(BadRequest):
+        RequestReader(b"GET / HT").next_request()
+    with pytest.raises(BadRequest):
+        RequestReader(
+            b"POST / HTTP/1.1\r\nContent-Length: 9\r\n\r\nabc"
+        ).next_request()
+    with pytest.raises(Closed):
+        RequestReader(b"").next_request()
+
+
+def test_http_fixed_response_wire_format():
+    text = write_response(200, "application/json", b"{}", True).decode()
+    assert text.startswith("HTTP/1.1 200 OK\r\n")
+    assert "Content-Length: 2\r\n" in text
+    assert "Connection: keep-alive\r\n" in text
+    assert text.endswith("\r\n\r\n{}")
+
+
+def test_http_error_body_contract():
+    assert (error_body("parse_error", "broken").decode()
+            == '{"error":{"kind":"parse_error","message":"broken"}}')
+    assert status_text(503) == "Service Unavailable"
+    assert status_text(418) == "Unknown"
+
+
+def test_http_chunked_stream_wire_format():
+    # byte-for-byte the Rust unit test `chunked_stream_wire_format`
+    raw = chunked_response(200, "application/jsonl", False,
+                           [b"hello ", b"", b"world"])
+    text = raw.decode()
+    assert "Transfer-Encoding: chunked\r\n" in text
+    body = text.split("\r\n\r\n", 1)[1]
+    assert body == "6\r\nhello \r\n5\r\nworld\r\n0\r\n\r\n"
+
+
+# ---------------------------------------------------------------------------
+# tests: /v1/generate decode + response encoders
+
+
+def test_decode_generate_full_and_minimal():
+    full = decode_generate(
+        b'{"prompt":"hi","adapter":"base","priority":"high",'
+        b'"deadline_ms":250,"max_new_tokens":8,"stream":true}')
+    assert full == {"prompt": "hi", "adapter": "base", "priority": "high",
+                    "deadline_ms": 250, "max_new_tokens": 8,
+                    "stream": True}
+    minimal = decode_generate(b'{"prompt":"p"}')
+    assert minimal["priority"] == "normal"
+    assert minimal["adapter"] is None
+    assert minimal["stream"] is False
+
+
+def test_decode_generate_rejects_bad_bodies():
+    cases = [(b"{", "parse_error"),
+             (b"{}", "missing_field"),
+             (b'{"prompt":7}', "type_error"),
+             (b'{"prompt":"p","priority":"urgent"}', "type_error"),
+             (b'{"prompt":"p","max_new_tokens":-1}', "type_error"),
+             (b'{"prompt":"p","stream":1}', "type_error"),
+             (b'{"prompt":null}', "missing_field")]
+    for body, kind in cases:
+        with pytest.raises(JsonError) as e:
+            decode_generate(body)
+        assert e.value.kind == kind, body
+
+
+def test_response_encoders_are_deterministic():
+    # byte-for-byte the Rust unit test `response_encoders_are_deterministic`
+    assert generate_body("done", "ab") == '{"outcome":"done","text":"ab"}'
+    assert token_line("x") == '{"token":"x"}\n'
+    assert (done_line("cancelled", "part")
+            == '{"done":true,"outcome":"cancelled","text":"part"}\n')
+    assert set(OUTCOMES) == {"done", "cancelled", "deadline_exceeded",
+                             "aborted"}
+
+
+def test_streamed_tokens_concatenate_to_done_text():
+    tokens = ["he", "l", "lo", " 😀"]
+    lines = [token_line(t) for t in tokens]
+    lines.append(done_line("done", "".join(tokens)))
+    parsed = [parse(line) for line in lines]
+    concat = "".join(p["token"] for p in parsed[:-1])
+    assert concat == parsed[-1]["text"]
+    # each line is also plain JSON to any standard client
+    for line in lines:
+        assert canon(json.loads(line)) == canon(parse(line))
+
+
+def test_stats_body_shape_and_roundtrip():
+    st = dict(submitted=3, completed=2, cancelled=1, deadline_exceeded=0,
+              preemptions=4, queue_depth=1, active_rows=2,
+              resident_tokens=37, reserved_tokens=64, token_budget=None,
+              tokens_generated=21, mean_ttft_ms=1.5, tokens_per_sec=88.0,
+              kv_blocks=8, kv_block_tokens=16, kv_blocks_in_use=5,
+              shared_block_hits=2, cow_forks=1, swap_outs=0)
+    body = write(stats_body(st))
+    v = parse(body)
+    assert v["submitted"] == 3.0
+    assert v["token_budget"] is None  # unbounded budget encodes as null
+    assert v["blocks"]["kv_blocks"] == 8.0
+    assert canon(json.loads(body)) == canon(v)
+    # a bounded budget is a number
+    st["token_budget"] = 512
+    assert parse(write(stats_body(st)))["token_budget"] == 512.0

@@ -7,9 +7,12 @@
 //! the shared-prefix capacity comparison (N requests opening with one
 //! system prompt: block-granular admission with copy-on-write prefix
 //! sharing vs the dense worst-case token reservation — peak concurrent
-//! rows and tokens/sec), plus the adapter hot-swap overhead (must be
-//! tiny next to a forward). Uses the repo's mini-criterion harness
-//! (`util::bench`); requires `make artifacts`.
+//! rows and tokens/sec), the adapter hot-swap overhead (must be
+//! tiny next to a forward), and a loopback-TCP load generator against
+//! the `serve-http` front end (closed-loop clients plus fixed-rate
+//! open arrivals, streamed responses: P50/P99 TTFT and end-to-end
+//! tokens/sec, HTTP + scheduling overhead included). Uses the repo's
+//! mini-criterion harness (`util::bench`); requires `make artifacts`.
 //!
 //! Flags (after `--`):
 //!   --smoke        short budgets (CI bit-rot check)
@@ -17,14 +20,72 @@
 //!                  `make bench-generate` writes BENCH_generate.json at
 //!                  the repo root)
 
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
 use std::path::PathBuf;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
 
 use qlora::engine::{
     DecodeMode, Engine, GenRequest, Priority, Sampler, BASE_ADAPTER,
 };
 use qlora::runtime::artifact::Manifest;
+use qlora::serve::{HttpServer, ServerConfig};
 use qlora::util::bench::Bencher;
 use qlora::util::json::Value;
+use qlora::util::stats::percentile;
+
+/// One streamed `POST /v1/generate` over a fresh connection; returns
+/// (TTFT in ms, token lines received). TTFT is wall time from the last
+/// request byte to the first `"token"` line byte — the number a
+/// streaming client actually experiences, HTTP and scheduling included.
+fn timed_stream_request(addr: SocketAddr, prompt: &str) -> (f64, usize) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    let _ = stream.set_nodelay(true);
+    stream
+        .set_read_timeout(Some(Duration::from_secs(60)))
+        .expect("read timeout");
+    let body = format!(r#"{{"prompt":"{prompt}","stream":true}}"#);
+    let head = format!(
+        "POST /v1/generate HTTP/1.1\r\nHost: bench\r\n\
+         Content-Length: {}\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes()).expect("write head");
+    stream.write_all(body.as_bytes()).expect("write body");
+    let start = Instant::now();
+    let mut buf = Vec::new();
+    let mut ttft = None;
+    let mut tmp = [0u8; 4096];
+    loop {
+        match stream.read(&mut tmp) {
+            Ok(0) => break, // server closes after the done line
+            Ok(n) => {
+                buf.extend_from_slice(&tmp[..n]);
+                if ttft.is_none()
+                    && buf.windows(7).any(|w| w == b"\"token\"")
+                {
+                    ttft = Some(start.elapsed());
+                }
+            }
+            Err(e) => panic!("load-gen read failed: {e}"),
+        }
+    }
+    // one line per token; chunk framing never splits a line, so a
+    // substring count is exact
+    let tokens = buf.windows(8).filter(|w| w == b"\"token\":").count();
+    (ttft.unwrap_or_else(|| start.elapsed()).as_secs_f64() * 1e3, tokens)
+}
+
+fn post_shutdown(addr: SocketAddr) {
+    let Ok(mut stream) = TcpStream::connect(addr) else { return };
+    let _ = stream.write_all(
+        b"POST /v1/shutdown HTTP/1.1\r\nHost: bench\r\n\
+          Content-Length: 0\r\n\r\n",
+    );
+    let mut sink = Vec::new();
+    let _ = stream.read_to_end(&mut sink);
+}
 
 fn main() {
     let mut smoke = false;
@@ -282,6 +343,102 @@ fn main() {
         session.set_adapter(BASE_ADAPTER).unwrap();
     });
 
+    // ----------------------------------------------------------------
+    // HTTP load generator: the serve-http front end on a loopback
+    // socket, driven by a closed-loop client pool (next request fires
+    // when the previous finishes — the classic saturation probe) mixed
+    // with fixed-rate open arrivals (fire on a clock no matter how far
+    // behind the server is — the latency-under-load probe). Streamed
+    // responses, so TTFT is measured where a client sees it.
+    // ----------------------------------------------------------------
+    b.group("HTTP serving: closed + open loopback load (streamed)");
+    let closed_clients = 4usize;
+    let per_client = if smoke { 3 } else { 12 };
+    let open_reqs = if smoke { 3 } else { 12 };
+    let open_gap = Duration::from_millis(15);
+    let sampler = Sampler {
+        max_new_tokens: if smoke { 4 } else { 8 },
+        ..Sampler::default()
+    };
+    let mut session = engine
+        .session()
+        .sampler(sampler)
+        .greedy(true)
+        .build()
+        .expect("session");
+    let server = HttpServer::bind(ServerConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers: closed_clients + 2,
+        ..ServerConfig::default()
+    })
+    .expect("bind loopback");
+    let addr = server.local_addr().expect("local addr");
+    let samples: Mutex<Vec<(f64, usize)>> = Mutex::new(Vec::new());
+    let t0 = Instant::now();
+    let http_report = std::thread::scope(|scope| {
+        let samples = &samples;
+        scope.spawn(move || {
+            std::thread::scope(|load| {
+                for c in 0..closed_clients {
+                    load.spawn(move || {
+                        for i in 0..per_client {
+                            let r = timed_stream_request(
+                                addr,
+                                &format!("rev closed{c}x{i}"),
+                            );
+                            samples.lock().unwrap().push(r);
+                        }
+                    });
+                }
+                load.spawn(move || {
+                    std::thread::scope(|open| {
+                        for i in 0..open_reqs {
+                            open.spawn(move || {
+                                let r = timed_stream_request(
+                                    addr,
+                                    &format!("up open{i}"),
+                                );
+                                samples.lock().unwrap().push(r);
+                            });
+                            std::thread::sleep(open_gap);
+                        }
+                    });
+                });
+            });
+            // every client is done: drain and stop the server
+            post_shutdown(addr);
+        });
+        server.run(&mut session).expect("server run")
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let data = samples.into_inner().unwrap();
+    let ttfts: Vec<f64> = data.iter().map(|r| r.0).collect();
+    let total_tokens: usize = data.iter().map(|r| r.1).sum();
+    let (ttft_p50, ttft_p99) =
+        (percentile(&ttfts, 50.0), percentile(&ttfts, 99.0));
+    let http_tps = total_tokens as f64 / wall;
+    println!(
+        "{:<44} {} requests ({} closed-loop, {} open), {} tok",
+        "loopback load mix",
+        data.len(),
+        closed_clients * per_client,
+        open_reqs,
+        total_tokens
+    );
+    println!(
+        "{:<44} p50 {ttft_p50:.2} ms   p99 {ttft_p99:.2} ms",
+        "TTFT (request sent → first token line)"
+    );
+    println!(
+        "{:<44} {:.0} tok/s end to end over {:.2} s",
+        "streamed throughput", http_tps, wall
+    );
+    println!(
+        "{:<44} {}",
+        "server-side stats",
+        http_report.stats.summary()
+    );
+
     if let Some(path) = json_path {
         let meta = [
             ("bench", Value::s("bench_generate")),
@@ -291,6 +448,10 @@ fn main() {
             ("peak_rows_blocks", Value::n(peaks[1].1 as f64)),
             ("peak_rows_noshare", Value::n(peaks[2].1 as f64)),
             ("shared_block_hits", Value::n(peaks[1].2 as f64)),
+            ("http_requests", Value::n(data.len() as f64)),
+            ("http_ttft_p50_ms", Value::n(ttft_p50)),
+            ("http_ttft_p99_ms", Value::n(ttft_p99)),
+            ("http_tokens_per_sec", Value::n(http_tps)),
         ];
         b.write_json(&path, &meta).unwrap();
         println!("\nwrote {}", path.display());

@@ -87,8 +87,8 @@ pub use scheduler::{
     ServerStats, SwapOut,
 };
 pub use session::{
-    GenRequest, ServeOutput, ServeProgress, ServeReport, Session,
-    SessionBuilder, TokenStream,
+    GenRequest, ServeDriver, ServeEvent, ServeOutput, ServeProgress,
+    ServeReport, Session, SessionBuilder, SourcePoll, TokenStream,
 };
 
 /// Name under which the artifact's init-time (untrained) adapter tensors

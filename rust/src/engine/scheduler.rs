@@ -401,6 +401,9 @@ pub struct Scheduler {
     memory: Memory,
     /// swap-outs since the last [`Scheduler::take_swap_outs`]
     swapped: Vec<SwapOut>,
+    /// jobs that reached a terminal outcome since the last
+    /// [`Scheduler::drain_finished`]
+    newly_finished: Vec<JobId>,
     // --- stats accumulators (terminal outcomes counted incrementally so
     // the per-step `stats()` snapshot never rescans `results`) ---
     n_done: u64,
@@ -448,6 +451,7 @@ impl Scheduler {
             meta: Vec::new(),
             memory,
             swapped: Vec::new(),
+            newly_finished: Vec::new(),
             n_done: 0,
             n_cancelled: 0,
             n_deadline: 0,
@@ -498,6 +502,25 @@ impl Scheduler {
         }
         // pallas-lint: allow(no-hot-path-panic) — ids are indices minted by submit; results grows in lockstep
         self.results[id] = Some(JobResult { outcome, tokens });
+        self.newly_finished.push(id);
+    }
+
+    /// Jobs that reached a terminal outcome since the last call, with a
+    /// clone of their result — the per-job completion feed for
+    /// incremental drivers (the HTTP server answers each request as its
+    /// job finishes, without waiting for
+    /// [`Scheduler::take_results`]). Drains the internal queue;
+    /// `take_results` is unaffected.
+    pub fn drain_finished(&mut self) -> Vec<(JobId, JobResult)> {
+        std::mem::take(&mut self.newly_finished)
+            .into_iter()
+            .filter_map(|id| {
+                self.results
+                    .get(id)
+                    .and_then(|r| r.clone())
+                    .map(|r| (id, r))
+            })
+            .collect()
     }
 
     /// Whether job `id` should be terminated early (cancelled or past

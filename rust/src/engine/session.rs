@@ -275,6 +275,76 @@ pub struct ServeProgress {
     pub stats: ServerStats,
 }
 
+/// One batch of work pulled from a [`ServeDriver`] by
+/// [`Session::serve_loop`].
+#[derive(Debug, Default)]
+pub struct SourcePoll {
+    /// New requests, each tagged with a caller-chosen id; every
+    /// subsequent [`ServeEvent`] for that request carries the tag, so
+    /// drivers never depend on scheduler job-id assignment.
+    pub requests: Vec<(u64, GenRequest)>,
+    /// `false` once the source will never produce another request: the
+    /// loop drains in-flight work and returns.
+    pub open: bool,
+}
+
+/// One lifecycle event from [`Session::serve_loop`], keyed by the
+/// driver's own request tag.
+#[derive(Debug, Clone)]
+pub enum ServeEvent {
+    /// The request was rejected before submission (e.g. a prompt longer
+    /// than the compiled sequence); no further events for this tag.
+    Rejected {
+        /// the driver's tag for the rejected request
+        tag: u64,
+        /// why it was rejected
+        error: String,
+    },
+    /// One token was recorded for this request (skipped tokens lost to
+    /// a swap-out are re-generated after resume, so each recorded token
+    /// is reported exactly once and the concatenation of `text` pieces
+    /// equals the final completion).
+    Token {
+        /// the driver's tag for the request
+        tag: u64,
+        /// the decoded fragment for this one token
+        text: String,
+    },
+    /// The request reached a terminal outcome.
+    Finished {
+        /// the driver's tag for the request
+        tag: u64,
+        /// how it ended
+        outcome: JobOutcome,
+        /// full decoded completion (partial for non-`Done` outcomes)
+        text: String,
+    },
+    /// One decode step completed — the per-step stats snapshot, for
+    /// dashboards and concurrent `/v1/stats` publication.
+    Step {
+        /// decode steps executed so far (1 on the first event)
+        step: usize,
+        /// scheduler statistics at this step
+        stats: ServerStats,
+    },
+}
+
+/// The pluggable half of [`Session::serve_loop`]: where new requests
+/// come from and where lifecycle events go. One object carries both
+/// sides so a driver can share state between them without interior
+/// mutability.
+pub trait ServeDriver {
+    /// Pull new work. `idle` is true when the scheduler has nothing
+    /// queued or running: the driver may block (e.g. on a condvar)
+    /// until work arrives or the source closes. When `idle` is false it
+    /// must return promptly — an empty batch is fine.
+    fn poll(&mut self, idle: bool) -> SourcePoll;
+
+    /// Receive one lifecycle event. Called from the decode thread
+    /// between steps; keep it cheap (hand slow work to channels).
+    fn on_event(&mut self, ev: ServeEvent);
+}
+
 /// One serving session: a named adapter + sampling state over a shared
 /// engine. Cheap to construct; create one per request stream.
 pub struct Session<'e> {
@@ -564,6 +634,178 @@ impl<'e> Session<'e> {
             })
             .collect();
         Ok(ServeReport { outputs, stats })
+    }
+
+    /// The open-ended twin of [`Session::serve_with`]: requests arrive
+    /// *while the loop runs*, pulled from `driver` between decode steps
+    /// (the scheduling loop the HTTP front end in [`crate::serve`]
+    /// drives). Admission, deadlines, cancellation, swap-out, and
+    /// per-step ordering are identical to `serve_with`; the differences
+    /// are the incremental source (tagged requests, so the driver never
+    /// depends on job-id assignment), per-token/per-completion
+    /// [`ServeEvent`]s, and per-request rejection (an over-long prompt
+    /// is a `Rejected` event, not a loop-level error). Returns the
+    /// terminal report over everything submitted, in submission order.
+    pub fn serve_loop(
+        &mut self,
+        driver: &mut dyn ServeDriver,
+    ) -> Result<ServeReport> {
+        let mut graph = self.decode_graph()?;
+        let seq_len = graph.seq_len();
+        let mut sched = match self.token_budget {
+            Some(budget) => Scheduler::with_budget(graph.capacity(), budget),
+            None => Scheduler::with_blocks(
+                graph.capacity(),
+                self.block_cfg.clone(),
+            )?,
+        };
+        // (sampler, greedy) and driver tag per job id; ids are minted
+        // sequentially by submit, so plain Vecs stay in lockstep
+        let mut samplers: Vec<(Sampler, bool)> = Vec::new();
+        let mut tags: Vec<u64> = Vec::new();
+        let mut open = true;
+        let started = Instant::now();
+        let mut step = 0usize;
+        loop {
+            if open {
+                let poll = driver.poll(sched.finished());
+                let now = Instant::now();
+                for (tag, req) in poll.requests {
+                    let prompt = match self.encode_prompt(&req.prompt) {
+                        Ok(p) => p,
+                        Err(e) => {
+                            driver.on_event(ServeEvent::Rejected {
+                                tag,
+                                error: e.to_string(),
+                            });
+                            continue;
+                        }
+                    };
+                    let (sampler, greedy) = match req.sampler {
+                        Some(s) => (s, false),
+                        None => (self.sampler.clone(), self.greedy),
+                    };
+                    let max_new =
+                        sampler.max_new_tokens.min(seq_len - prompt.len());
+                    let mut r =
+                        Request::new(prompt, max_new).priority(req.priority);
+                    if let Some(d) = req.deadline {
+                        r = r.deadline(d);
+                    }
+                    sched.submit_with_handle(
+                        r,
+                        req.cancel.unwrap_or_default(),
+                        now,
+                    );
+                    samplers.push((sampler, greedy));
+                    tags.push(tag);
+                }
+                open = poll.open;
+            }
+            if sched.finished() {
+                if open {
+                    continue; // poll() blocks when idle — no busy wait
+                }
+                break;
+            }
+            // --- one decode step, ordered exactly as in serve_with ---
+            let now = Instant::now();
+            for ret in sched.poll(now) {
+                graph.free_row(ret.row);
+            }
+            let placed = sched.admit(now);
+            for sw in sched.take_swap_outs() {
+                graph.free_row(sw.row);
+            }
+            for adm in placed {
+                graph.start_row(adm.row, &adm.prompt)?;
+                if let Some(t) = sched.row_block_table(adm.row) {
+                    graph.set_block_table(adm.row, t);
+                }
+            }
+            for row in sched.active_rows() {
+                if sched.budget_exhausted(row, seq_len) {
+                    sched.retire(row)?;
+                    graph.free_row(row);
+                }
+            }
+            let rows = sched.active_rows();
+            if rows.is_empty() {
+                // freed rows refill on the next iteration; deliver any
+                // terminal outcomes recorded by the poll/sweep above,
+                // and publish the stats they changed — a cancellation
+                // that empties the batch must show up without waiting
+                // for the next decode step
+                Self::emit_finished(&mut sched, &tags, &self.tok, driver);
+                driver.on_event(ServeEvent::Step {
+                    step,
+                    stats: sched.stats(),
+                });
+                continue;
+            }
+            let logits = graph.step(&rows)?;
+            let now = Instant::now();
+            for (&row, row_logits) in rows.iter().zip(logits.iter()) {
+                let Some(id) = sched.job_in(row) else { continue };
+                let Some((sampler, greedy)) = samplers.get(id) else {
+                    continue;
+                };
+                let next = Self::sample_token(
+                    *greedy,
+                    sampler,
+                    &mut self.rng,
+                    row_logits,
+                );
+                if next == EOS {
+                    sched.retire(row)?;
+                    graph.free_row(row);
+                } else if sched.push(row, next, now)? {
+                    self.tokens_generated += 1;
+                    graph.push(row, next)?;
+                    if let Some(t) = sched.row_block_table(row) {
+                        graph.set_block_table(row, t);
+                    }
+                    driver.on_event(ServeEvent::Token {
+                        tag: tags.get(id).copied().unwrap_or(u64::MAX),
+                        text: self.tok.decode(&[next]),
+                    });
+                }
+            }
+            for sw in sched.take_swap_outs() {
+                graph.free_row(sw.row);
+            }
+            Self::emit_finished(&mut sched, &tags, &self.tok, driver);
+            step += 1;
+            driver.on_event(ServeEvent::Step { step, stats: sched.stats() });
+        }
+        let mut stats = sched.stats();
+        stats.elapsed = started.elapsed();
+        let outputs = sched
+            .take_results()
+            .into_iter()
+            .map(|r| ServeOutput {
+                outcome: r.outcome,
+                text: self.tok.decode(&r.tokens),
+            })
+            .collect();
+        Ok(ServeReport { outputs, stats })
+    }
+
+    /// Deliver a `Finished` event for every job that reached a terminal
+    /// outcome since the last drain.
+    fn emit_finished(
+        sched: &mut Scheduler,
+        tags: &[u64],
+        tok: &Tokenizer,
+        driver: &mut dyn ServeDriver,
+    ) {
+        for (id, r) in sched.drain_finished() {
+            driver.on_event(ServeEvent::Finished {
+                tag: tags.get(id).copied().unwrap_or(u64::MAX),
+                outcome: r.outcome,
+                text: tok.decode(&r.tokens),
+            });
+        }
     }
 
     /// (loss, token accuracy) on one batch under this session's adapter —

@@ -48,6 +48,7 @@ pub mod memory;
 pub mod paged;
 pub mod quant;
 pub mod runtime;
+pub mod serve;
 pub mod tensorio;
 pub mod util;
 

@@ -9,6 +9,9 @@
 //!                deadlines, block-granular KV admission with prefix
 //!                sharing (or legacy --token-budget), typed outcomes,
 //!                and a ServerStats block
+//!   serve-http   the same lifecycle pipeline behind an HTTP/1.1 API:
+//!                POST /v1/generate (complete or streamed), GET
+//!                /v1/stats, GET /healthz, POST /v1/shutdown
 //!   arena        judged Elo tournament between adapters on one base
 //!   quantize     quantization round-trip report for a datatype
 //!   memory       analytical memory planner (Figure 6 / Table 6)
@@ -40,6 +43,7 @@ use qlora::quant::codebook::DType;
 use qlora::quant::error::{quant_error, synthetic_llm_weights};
 use qlora::runtime::artifact::Manifest;
 use qlora::runtime::client::Runtime;
+use qlora::serve::{HttpServer, ServerConfig};
 use qlora::util::cli::Args;
 
 fn main() {
@@ -65,6 +69,9 @@ fn usage() -> &'static str {
      [--kv-block N] [--kv-blocks N] [--no-prefix-sharing] \
      [--token-budget N (legacy admission)] [--decode ...] \
      [sampling flags as generate]\n\
+       serve-http  --artifact <name> [--ckpt ...] [--adapter <name>] \
+     [--addr 127.0.0.1:8080] [--workers 4] [--max-body-kb 1024] \
+     [session flags as serve]\n\
        arena       --artifact <name> --adapters \"tuned=ck.tensors[,...]\" \
      [--n-prompts N] [--judge gpt4|human] [--orderings N]\n\
        quantize    [--dtype nf4] [--block 64] [--dq]\n\
@@ -353,6 +360,56 @@ fn run() -> Result<()> {
                 },
                 s.elapsed.as_secs_f64() * 1e3
             );
+        }
+        "serve-http" => {
+            let engine = engine_from_args(&args, &artifacts_dir)?;
+            let adapter = args.get_or(
+                "adapter",
+                if args.get("ckpt").is_some() { "ckpt" } else { BASE_ADAPTER },
+            );
+            let decode = match args.get_or("decode", "auto").as_str() {
+                "auto" => DecodeMode::Auto,
+                "cached" => DecodeMode::Cached,
+                "full" => DecodeMode::Full,
+                other => bail!("--decode must be auto|cached|full, \
+                                got {other:?}"),
+            };
+            let mut builder = engine
+                .session()
+                .adapter(&adapter)
+                .sampler(Sampler::from_args(&args, 32)?)
+                .greedy(args.flag("greedy"))
+                .seed(args.u64_or("seed", 0)?)
+                .decode(decode);
+            if let Some(budget) = args.get("token-budget") {
+                builder = builder.token_budget(budget.parse()?);
+            }
+            if let Some(bt) = args.get("kv-block") {
+                builder = builder.kv_block_tokens(bt.parse()?);
+            }
+            if let Some(n) = args.get("kv-blocks") {
+                builder = builder.kv_blocks(n.parse()?);
+            }
+            builder = builder.prefix_sharing(!args.flag("no-prefix-sharing"));
+            let mut session = builder.build()?;
+            let cfg = ServerConfig {
+                addr: args.get_or("addr", "127.0.0.1:8080"),
+                workers: args.usize_or("workers", 4)?,
+                max_body_bytes: args.usize_or("max-body-kb", 1024)? << 10,
+            };
+            let server = HttpServer::bind(cfg)?;
+            println!(
+                "serving adapter {adapter:?} on http://{}",
+                server.local_addr()?
+            );
+            println!("  POST /v1/generate   {{\"prompt\": \"...\", \
+                      \"stream\": true, \"priority\": \"high\", ...}}");
+            println!("  GET  /v1/stats      scheduler + KV-block stats");
+            println!("  GET  /healthz       liveness");
+            println!("  POST /v1/shutdown   drain and stop");
+            let report = server.run(&mut session)?;
+            println!("--- server stats ---");
+            println!("{}", report.stats.summary());
         }
         "arena" => {
             let engine = engine_from_args(&args, &artifacts_dir)?;

@@ -1,0 +1,512 @@
+//! Minimal HTTP/1.1 over raw [`std::io`] streams — just enough protocol
+//! for the serving endpoints, hand-rolled because the offline registry
+//! has no hyper/axum (the same zero-dependency stance as
+//! [`crate::util::cli`] and [`crate::util::bench`]).
+//!
+//! Requests: method + path + headers + `Content-Length` body, with
+//! keep-alive (HTTP/1.1 default, `Connection: close` honoured) and hard
+//! limits on head and body size. Responses: fixed-length bodies
+//! ([`write_response`]) or chunked transfer encoding ([`ChunkedWriter`])
+//! for token streaming. Error mapping lives here so every failure mode
+//! has exactly one status: malformed syntax → 400, oversized body →
+//! 413; the router in [`super::server`] adds 404/405.
+//!
+//! The parser state machine (buffer until `\r\n\r\n`, split head,
+//! drain `Content-Length` bytes) is mirrored line-for-line by
+//! `python/tests/test_serve_mirror.py`.
+
+use std::io::{self, Read, Write};
+
+use super::json::JsonValue;
+
+/// Largest request head (request line + headers) accepted, in bytes.
+pub const MAX_HEAD_BYTES: usize = 16 * 1024;
+/// Default largest request body accepted, in bytes.
+pub const MAX_BODY_BYTES: usize = 1 << 20;
+
+/// One parsed HTTP request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HttpRequest {
+    /// Request method, as sent (`GET`, `POST`, ...).
+    pub method: String,
+    /// Request target, as sent (path plus any query string).
+    pub path: String,
+    /// Headers in arrival order; names matched case-insensitively.
+    pub headers: Vec<(String, String)>,
+    /// The `Content-Length` body (empty when the header is absent).
+    pub body: Vec<u8>,
+    /// Whether the connection should stay open after the response.
+    pub keep_alive: bool,
+}
+
+impl HttpRequest {
+    /// First header with this name (case-insensitive), trimmed.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// Why a request could not be read. [`HttpError::status`] maps the
+/// protocol-level cases onto response codes.
+#[derive(Debug)]
+pub enum HttpError {
+    /// Peer closed the connection cleanly between requests (the normal
+    /// end of a keep-alive session — not an error to report).
+    Closed,
+    /// The socket read timed out with no complete request buffered;
+    /// the caller may poll a shutdown flag and retry.
+    TimedOut,
+    /// Malformed request syntax (→ 400).
+    BadRequest(String),
+    /// `Content-Length` exceeds the body limit (→ 413).
+    PayloadTooLarge(String),
+    /// Transport failure mid-request.
+    Io(io::Error),
+}
+
+impl HttpError {
+    /// The response status for protocol-level errors (400/413); `None`
+    /// for `Closed`/`TimedOut`/`Io`, where no response can or should be
+    /// written.
+    pub fn status(&self) -> Option<u16> {
+        match self {
+            HttpError::BadRequest(_) => Some(400),
+            HttpError::PayloadTooLarge(_) => Some(413),
+            _ => None,
+        }
+    }
+
+    /// Human-readable detail for the error body.
+    pub fn message(&self) -> String {
+        match self {
+            HttpError::Closed => "connection closed".to_string(),
+            HttpError::TimedOut => "read timed out".to_string(),
+            HttpError::BadRequest(m) => m.clone(),
+            HttpError::PayloadTooLarge(m) => m.clone(),
+            HttpError::Io(e) => e.to_string(),
+        }
+    }
+}
+
+/// Incremental request reader over one connection. Keeps a carry-over
+/// buffer so pipelined bytes after one request's body are not lost for
+/// the next ([`RequestReader::next_request`] is called once per
+/// keep-alive round).
+pub struct RequestReader<R: Read> {
+    inner: R,
+    buf: Vec<u8>,
+    max_body: usize,
+}
+
+impl<R: Read> RequestReader<R> {
+    /// A reader enforcing `max_body` bytes per request body.
+    pub fn new(inner: R, max_body: usize) -> RequestReader<R> {
+        RequestReader { inner, buf: Vec::new(), max_body }
+    }
+
+    /// Pull more bytes from the transport into the carry-over buffer.
+    /// Returns the byte count (0 = EOF).
+    fn fill(&mut self) -> Result<usize, HttpError> {
+        let mut tmp = [0u8; 4096];
+        loop {
+            match self.inner.read(&mut tmp) {
+                Ok(n) => {
+                    self.buf.extend_from_slice(
+                        tmp.get(..n).unwrap_or_default(),
+                    );
+                    return Ok(n);
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        io::ErrorKind::WouldBlock
+                            | io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    return Err(HttpError::TimedOut)
+                }
+                Err(e) => return Err(HttpError::Io(e)),
+            }
+        }
+    }
+
+    /// Read one full request (head + body). Blocks until the peer sends
+    /// one, the read times out, or the connection ends.
+    pub fn next_request(&mut self) -> Result<HttpRequest, HttpError> {
+        // 1. accumulate until the blank line ending the head
+        let head_end = loop {
+            if let Some(i) =
+                self.buf.windows(4).position(|w| w == b"\r\n\r\n")
+            {
+                break i;
+            }
+            if self.buf.len() > MAX_HEAD_BYTES {
+                return Err(HttpError::BadRequest(format!(
+                    "request head exceeds {MAX_HEAD_BYTES} bytes"
+                )));
+            }
+            if self.fill()? == 0 {
+                return if self.buf.is_empty() {
+                    Err(HttpError::Closed)
+                } else {
+                    Err(HttpError::BadRequest(
+                        "connection closed mid-request".to_string(),
+                    ))
+                };
+            }
+        };
+        // 2. split the head off the carry-over buffer
+        let rest = self.buf.split_off(head_end + 4);
+        let mut head_bytes = std::mem::replace(&mut self.buf, rest);
+        head_bytes.truncate(head_end);
+        let head = String::from_utf8(head_bytes).map_err(|_| {
+            HttpError::BadRequest("request head is not UTF-8".to_string())
+        })?;
+        let mut req = parse_head(&head)?;
+        // 3. body: exactly Content-Length bytes (chunked uploads are out
+        // of scope for this API)
+        if req.header("transfer-encoding").is_some() {
+            return Err(HttpError::BadRequest(
+                "chunked request bodies are not supported".to_string(),
+            ));
+        }
+        let body_len = match req.header("content-length") {
+            None => 0,
+            Some(v) => v.trim().parse::<usize>().map_err(|_| {
+                HttpError::BadRequest(format!(
+                    "invalid Content-Length `{v}`"
+                ))
+            })?,
+        };
+        if body_len > self.max_body {
+            return Err(HttpError::PayloadTooLarge(format!(
+                "body of {body_len} bytes exceeds the {} byte limit",
+                self.max_body
+            )));
+        }
+        while self.buf.len() < body_len {
+            if self.fill()? == 0 {
+                return Err(HttpError::BadRequest(
+                    "connection closed mid-body".to_string(),
+                ));
+            }
+        }
+        let rest = self.buf.split_off(body_len);
+        req.body = std::mem::replace(&mut self.buf, rest);
+        Ok(req)
+    }
+}
+
+/// Parse the request head (everything before the blank line).
+/// Split out (and pub) so the mirror test and fuzz corpus can hit the
+/// state machine without a socket.
+pub fn parse_head(head: &str) -> Result<HttpRequest, HttpError> {
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or_default();
+    let mut parts = request_line.split(' ');
+    let (method, path, version) =
+        match (parts.next(), parts.next(), parts.next(), parts.next()) {
+            (Some(m), Some(p), Some(v), None)
+                if !m.is_empty() && !p.is_empty() =>
+            {
+                (m, p, v)
+            }
+            _ => {
+                return Err(HttpError::BadRequest(format!(
+                    "malformed request line `{request_line}`"
+                )))
+            }
+        };
+    let keep_alive_default = match version {
+        "HTTP/1.1" => true,
+        "HTTP/1.0" => false,
+        _ => {
+            return Err(HttpError::BadRequest(format!(
+                "unsupported protocol version `{version}`"
+            )))
+        }
+    };
+    let mut headers = Vec::new();
+    for line in lines {
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(HttpError::BadRequest(format!(
+                "malformed header line `{line}`"
+            )));
+        };
+        if name.is_empty() || name.contains(' ') || name.contains('\t') {
+            return Err(HttpError::BadRequest(format!(
+                "malformed header name `{name}`"
+            )));
+        }
+        headers.push((name.to_string(), value.trim().to_string()));
+    }
+    let mut req = HttpRequest {
+        method: method.to_string(),
+        path: path.to_string(),
+        headers,
+        body: Vec::new(),
+        keep_alive: keep_alive_default,
+    };
+    if let Some(c) = req.header("connection") {
+        if c.eq_ignore_ascii_case("close") {
+            req.keep_alive = false;
+        } else if c.eq_ignore_ascii_case("keep-alive") {
+            req.keep_alive = true;
+        }
+    }
+    Ok(req)
+}
+
+/// Reason phrase for the statuses this server emits.
+pub fn status_text(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Write one fixed-length response.
+pub fn write_response<W: Write>(
+    w: &mut W,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+    keep_alive: bool,
+) -> io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n\
+         Connection: {}\r\n\r\n",
+        status,
+        status_text(status),
+        content_type,
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    );
+    w.write_all(head.as_bytes())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// The JSON error contract: every non-2xx response body is
+/// `{"error":{"kind":...,"message":...}}`.
+pub fn error_body(kind: &str, message: &str) -> Vec<u8> {
+    JsonValue::object([(
+        "error",
+        JsonValue::object([
+            ("kind", JsonValue::s(kind)),
+            ("message", JsonValue::s(message)),
+        ]),
+    )])
+    .to_string()
+    .into_bytes()
+}
+
+/// Write one error response under the JSON error contract.
+pub fn write_error<W: Write>(
+    w: &mut W,
+    status: u16,
+    kind: &str,
+    message: &str,
+    keep_alive: bool,
+) -> io::Result<()> {
+    write_response(
+        w,
+        status,
+        "application/json",
+        &error_body(kind, message),
+        keep_alive,
+    )
+}
+
+/// Chunked-transfer response writer for token streaming. `begin` sends
+/// the header, [`ChunkedWriter::chunk`] one chunk per call (each flushed
+/// immediately — a dead peer surfaces as an `Err` here, which the server
+/// routes into the request's cancel handle), and
+/// [`ChunkedWriter::finish`] the terminating chunk.
+pub struct ChunkedWriter<'w, W: Write> {
+    w: &'w mut W,
+}
+
+impl<'w, W: Write> ChunkedWriter<'w, W> {
+    /// Send the response head announcing chunked transfer encoding.
+    pub fn begin(
+        w: &'w mut W,
+        status: u16,
+        content_type: &str,
+        keep_alive: bool,
+    ) -> io::Result<ChunkedWriter<'w, W>> {
+        let head = format!(
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\n\
+             Transfer-Encoding: chunked\r\nConnection: {}\r\n\r\n",
+            status,
+            status_text(status),
+            content_type,
+            if keep_alive { "keep-alive" } else { "close" },
+        );
+        w.write_all(head.as_bytes())?;
+        w.flush()?;
+        Ok(ChunkedWriter { w })
+    }
+
+    /// Send one chunk. Empty payloads are skipped (a zero-length chunk
+    /// would terminate the stream).
+    pub fn chunk(&mut self, data: &[u8]) -> io::Result<()> {
+        if data.is_empty() {
+            return Ok(());
+        }
+        write!(self.w, "{:x}\r\n", data.len())?;
+        self.w.write_all(data)?;
+        self.w.write_all(b"\r\n")?;
+        self.w.flush()
+    }
+
+    /// Send the terminating zero-length chunk.
+    pub fn finish(self) -> io::Result<()> {
+        self.w.write_all(b"0\r\n\r\n")?;
+        self.w.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn read_one(raw: &[u8]) -> Result<HttpRequest, HttpError> {
+        RequestReader::new(raw, MAX_BODY_BYTES).next_request()
+    }
+
+    #[test]
+    fn parses_post_with_body() {
+        let raw = b"POST /v1/generate HTTP/1.1\r\nHost: x\r\n\
+                    Content-Length: 4\r\n\r\nabcd";
+        let req = read_one(raw).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/generate");
+        assert_eq!(req.body, b"abcd");
+        assert!(req.keep_alive);
+        assert_eq!(req.header("HOST"), Some("x"));
+    }
+
+    #[test]
+    fn keep_alive_rules() {
+        let close = read_one(
+            b"GET / HTTP/1.1\r\nConnection: close\r\n\r\n",
+        )
+        .unwrap();
+        assert!(!close.keep_alive);
+        let old = read_one(b"GET / HTTP/1.0\r\n\r\n").unwrap();
+        assert!(!old.keep_alive);
+        let revived = read_one(
+            b"GET / HTTP/1.0\r\nConnection: Keep-Alive\r\n\r\n",
+        )
+        .unwrap();
+        assert!(revived.keep_alive);
+    }
+
+    #[test]
+    fn pipelined_requests_both_parse() {
+        let raw: &[u8] = b"GET /healthz HTTP/1.1\r\n\r\n\
+                           GET /v1/stats HTTP/1.1\r\n\r\n";
+        let mut rd = RequestReader::new(raw, MAX_BODY_BYTES);
+        assert_eq!(rd.next_request().unwrap().path, "/healthz");
+        assert_eq!(rd.next_request().unwrap().path, "/v1/stats");
+        assert!(matches!(rd.next_request(), Err(HttpError::Closed)));
+    }
+
+    #[test]
+    fn malformed_heads_are_400() {
+        for raw in [
+            b"GARBAGE\r\n\r\n".as_slice(),
+            b"GET /\r\n\r\n".as_slice(),
+            b"GET / HTTP/2.0\r\n\r\n".as_slice(),
+            b"GET / HTTP/1.1\r\nno-colon\r\n\r\n".as_slice(),
+            b"GET / HTTP/1.1\r\nbad name: x\r\n\r\n".as_slice(),
+            b"GET / HTTP/1.1 extra\r\n\r\n".as_slice(),
+            b"POST / HTTP/1.1\r\nContent-Length: zz\r\n\r\n".as_slice(),
+        ] {
+            let err = read_one(raw).unwrap_err();
+            assert_eq!(err.status(), Some(400), "{err:?}");
+        }
+    }
+
+    #[test]
+    fn oversized_body_is_413() {
+        let raw = b"POST / HTTP/1.1\r\nContent-Length: 100\r\n\r\n";
+        let err = RequestReader::new(raw.as_slice(), 10)
+            .next_request()
+            .unwrap_err();
+        assert_eq!(err.status(), Some(413));
+    }
+
+    #[test]
+    fn truncated_requests_fail_cleanly() {
+        assert!(matches!(
+            read_one(b"GET / HT"),
+            Err(HttpError::BadRequest(_))
+        ));
+        assert!(matches!(
+            read_one(b"POST / HTTP/1.1\r\nContent-Length: 9\r\n\r\nabc"),
+            Err(HttpError::BadRequest(_))
+        ));
+        assert!(matches!(read_one(b""), Err(HttpError::Closed)));
+    }
+
+    #[test]
+    fn fixed_response_wire_format() {
+        let mut out = Vec::new();
+        write_response(&mut out, 200, "application/json", b"{}", true)
+            .unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(text.contains("Content-Length: 2\r\n"));
+        assert!(text.contains("Connection: keep-alive\r\n"));
+        assert!(text.ends_with("\r\n\r\n{}"));
+    }
+
+    #[test]
+    fn error_body_contract() {
+        let body = error_body("parse_error", "broken");
+        assert_eq!(
+            String::from_utf8(body).unwrap(),
+            r#"{"error":{"kind":"parse_error","message":"broken"}}"#
+        );
+        let mut out = Vec::new();
+        write_error(&mut out, 404, "not_found", "no such route", false)
+            .unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 404 Not Found\r\n"));
+        assert!(text.contains(r#""kind":"not_found""#));
+    }
+
+    #[test]
+    fn chunked_stream_wire_format() {
+        let mut out = Vec::new();
+        {
+            let mut cw = ChunkedWriter::begin(
+                &mut out,
+                200,
+                "application/jsonl",
+                false,
+            )
+            .unwrap();
+            cw.chunk(b"hello ").unwrap();
+            cw.chunk(b"").unwrap(); // skipped, not a terminator
+            cw.chunk(b"world").unwrap();
+            cw.finish().unwrap();
+        }
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("Transfer-Encoding: chunked\r\n"));
+        let body = text.split("\r\n\r\n").nth(1).unwrap();
+        assert_eq!(body, "6\r\nhello \r\n5\r\nworld\r\n0\r\n\r\n");
+    }
+}

@@ -1,0 +1,782 @@
+//! Zero-dependency JSON for the network boundary.
+//!
+//! This is the *untrusted-input* JSON layer: everything arriving over a
+//! socket goes through [`parse`], which is depth- and size-limited and
+//! returns a typed [`JsonError`] instead of panicking on any input
+//! (`rust/tests/prop_json.rs` fuzzes that property over mutated byte
+//! soups). The crate's other JSON module, [`crate::util::json`], stays
+//! the *trusted* layer for build-time artifacts (manifests, bench
+//! output) where an `anyhow` error with context is the right shape.
+//!
+//! Semantics (mirrored line-for-line by
+//! `python/tests/test_serve_mirror.py` against Python's `json`):
+//!
+//! * objects are [`BTreeMap`]s — writing is deterministic with sorted
+//!   keys, matching `json.dumps(..., sort_keys=True)`;
+//! * duplicate keys keep the last value (as Python does);
+//! * `\uXXXX` escapes decode surrogate pairs; *lone* surrogates are a
+//!   [`JsonError::ParseError`] (Python's `json` accepts them — the
+//!   mirror test pins this documented divergence);
+//! * numbers overflowing f64 (`1e999`) are a `ParseError` (Python
+//!   yields `inf` — second pinned divergence); `-0` round-trips with
+//!   its sign;
+//! * the writer emits UTF-8 directly (`ensure_ascii=False`) and uses
+//!   the two-char escapes `\" \\ \b \f \n \r \t`, with `\u00xx` for the
+//!   remaining control characters.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Maximum nesting depth [`parse`] accepts (arrays + objects combined).
+pub const MAX_DEPTH: usize = 64;
+/// Maximum input size in bytes [`parse`] accepts (1 MiB).
+pub const MAX_INPUT_BYTES: usize = 1 << 20;
+
+/// A parsed JSON document (numbers are f64, like JavaScript's).
+#[derive(Debug, Clone, PartialEq)]
+pub enum JsonValue {
+    /// `null`
+    Null,
+    /// `true` / `false`
+    Bool(bool),
+    /// any JSON number (always finite: the parser rejects overflow)
+    Num(f64),
+    /// a string (always valid UTF-8)
+    Str(String),
+    /// an array
+    Arr(Vec<JsonValue>),
+    /// an object; `BTreeMap` makes writing deterministic (sorted keys)
+    Obj(BTreeMap<String, JsonValue>),
+}
+
+/// Typed error from parsing or field extraction — the wire maps these
+/// onto HTTP 400 bodies (see [`super::http`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum JsonError {
+    /// The input is not valid JSON (or exceeds the depth/size limits).
+    ParseError {
+        /// byte offset where parsing stopped
+        offset: usize,
+        /// what went wrong
+        msg: String,
+    },
+    /// A field exists but has the wrong type.
+    TypeError {
+        /// the offending field name
+        field: String,
+        /// what the caller required
+        expected: &'static str,
+        /// the JSON type actually present
+        found: &'static str,
+    },
+    /// A required field is absent (or `null`).
+    MissingField {
+        /// the absent field name
+        field: String,
+    },
+}
+
+impl JsonError {
+    /// Stable machine-readable kind, used in HTTP error bodies.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            JsonError::ParseError { .. } => "parse_error",
+            JsonError::TypeError { .. } => "type_error",
+            JsonError::MissingField { .. } => "missing_field",
+        }
+    }
+}
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JsonError::ParseError { offset, msg } => {
+                write!(f, "invalid JSON at byte {offset}: {msg}")
+            }
+            JsonError::TypeError { field, expected, found } => {
+                write!(f, "field `{field}` must be {expected}, got {found}")
+            }
+            JsonError::MissingField { field } => {
+                write!(f, "missing required field `{field}`")
+            }
+        }
+    }
+}
+
+impl std::error::Error for JsonError {}
+
+impl JsonValue {
+    /// The JSON type name ("null" / "bool" / "number" / ...).
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            JsonValue::Null => "null",
+            JsonValue::Bool(_) => "bool",
+            JsonValue::Num(_) => "number",
+            JsonValue::Str(_) => "string",
+            JsonValue::Arr(_) => "array",
+            JsonValue::Obj(_) => "object",
+        }
+    }
+
+    /// Object field lookup (`None` for non-objects and absent keys).
+    pub fn get(&self, key: &str) -> Option<&JsonValue> {
+        match self {
+            JsonValue::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    /// The string payload, if this is a string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            JsonValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// The numeric payload, if this is a number.
+    pub fn as_num(&self) -> Option<f64> {
+        match self {
+            JsonValue::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    /// The boolean payload, if this is a bool.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            JsonValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// The elements, if this is an array.
+    pub fn as_arr(&self) -> Option<&[JsonValue]> {
+        match self {
+            JsonValue::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+
+    /// The key/value map, if this is an object.
+    pub fn as_obj(&self) -> Option<&BTreeMap<String, JsonValue>> {
+        match self {
+            JsonValue::Obj(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    fn field(&self, field: &str) -> Result<&JsonValue, JsonError> {
+        match self.get(field) {
+            Some(JsonValue::Null) | None => {
+                Err(JsonError::MissingField { field: field.to_string() })
+            }
+            Some(v) => Ok(v),
+        }
+    }
+
+    fn type_err(
+        field: &str,
+        expected: &'static str,
+        found: &JsonValue,
+    ) -> JsonError {
+        JsonError::TypeError {
+            field: field.to_string(),
+            expected,
+            found: found.type_name(),
+        }
+    }
+
+    /// Required string field (`null` counts as missing).
+    pub fn req_str(&self, field: &str) -> Result<&str, JsonError> {
+        let v = self.field(field)?;
+        v.as_str().ok_or_else(|| Self::type_err(field, "a string", v))
+    }
+
+    /// Optional string field (`null` and absent both read as `None`).
+    pub fn opt_str(&self, field: &str) -> Result<Option<&str>, JsonError> {
+        match self.get(field) {
+            None | Some(JsonValue::Null) => Ok(None),
+            Some(v) => Ok(Some(
+                v.as_str()
+                    .ok_or_else(|| Self::type_err(field, "a string", v))?,
+            )),
+        }
+    }
+
+    /// Optional non-negative integer field. Rejects negatives,
+    /// fractions, and magnitudes past 2^53 (not exactly representable).
+    pub fn opt_u64(&self, field: &str) -> Result<Option<u64>, JsonError> {
+        match self.get(field) {
+            None | Some(JsonValue::Null) => Ok(None),
+            Some(v) => {
+                let err =
+                    || Self::type_err(field, "a non-negative integer", v);
+                let n = v.as_num().ok_or_else(err)?;
+                if n < 0.0 || n != n.trunc() || n > 9.007199254740992e15 {
+                    return Err(err());
+                }
+                Ok(Some(n as u64))
+            }
+        }
+    }
+
+    /// Optional boolean field (`null` and absent both read as `None`).
+    pub fn opt_bool(&self, field: &str) -> Result<Option<bool>, JsonError> {
+        match self.get(field) {
+            None | Some(JsonValue::Null) => Ok(None),
+            Some(v) => Ok(Some(
+                v.as_bool()
+                    .ok_or_else(|| Self::type_err(field, "a bool", v))?,
+            )),
+        }
+    }
+
+    /// Build an object from key/value pairs (later duplicates win).
+    pub fn object<K: Into<String>>(
+        pairs: impl IntoIterator<Item = (K, JsonValue)>,
+    ) -> JsonValue {
+        JsonValue::Obj(
+            pairs.into_iter().map(|(k, v)| (k.into(), v)).collect(),
+        )
+    }
+
+    /// Build an array.
+    pub fn array(items: impl IntoIterator<Item = JsonValue>) -> JsonValue {
+        JsonValue::Arr(items.into_iter().collect())
+    }
+
+    /// String value constructor.
+    pub fn s(v: impl Into<String>) -> JsonValue {
+        JsonValue::Str(v.into())
+    }
+
+    /// Number value constructor.
+    pub fn n(v: f64) -> JsonValue {
+        JsonValue::Num(v)
+    }
+
+    /// Bool value constructor.
+    pub fn b(v: bool) -> JsonValue {
+        JsonValue::Bool(v)
+    }
+}
+
+// ---------------------------------------------------------------- writer
+
+impl fmt::Display for JsonValue {
+    /// Compact deterministic encoding: sorted object keys, no
+    /// whitespace, UTF-8 emitted raw — byte-identical to Python's
+    /// `json.dumps(v, sort_keys=True, separators=(",", ":"),
+    /// ensure_ascii=False)` on the shared corpus (the mirror test's
+    /// cross-check). Non-finite numbers (only constructible by hand —
+    /// the parser rejects them) encode as `null`.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JsonValue::Null => f.write_str("null"),
+            JsonValue::Bool(true) => f.write_str("true"),
+            JsonValue::Bool(false) => f.write_str("false"),
+            JsonValue::Num(n) => write_num(*n, f),
+            JsonValue::Str(s) => write_escaped(s, f),
+            JsonValue::Arr(items) => {
+                f.write_str("[")?;
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write!(f, "{v}")?;
+                }
+                f.write_str("]")
+            }
+            JsonValue::Obj(map) => {
+                f.write_str("{")?;
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write_escaped(k, f)?;
+                    f.write_str(":")?;
+                    write!(f, "{v}")?;
+                }
+                f.write_str("}")
+            }
+        }
+    }
+}
+
+fn write_num(n: f64, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+    if !n.is_finite() {
+        return f.write_str("null");
+    }
+    // integral values print without a fraction (and -0 keeps its sign,
+    // so it round-trips bit-exactly); everything else uses Rust's
+    // shortest-roundtrip float formatting
+    if n == n.trunc() && n.abs() <= 9.007199254740992e15 {
+        write!(f, "{n:.0}")
+    } else {
+        write!(f, "{n}")
+    }
+}
+
+fn write_escaped(s: &str, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+    f.write_str("\"")?;
+    for ch in s.chars() {
+        match ch {
+            '"' => f.write_str("\\\"")?,
+            '\\' => f.write_str("\\\\")?,
+            '\u{8}' => f.write_str("\\b")?,
+            '\u{c}' => f.write_str("\\f")?,
+            '\n' => f.write_str("\\n")?,
+            '\r' => f.write_str("\\r")?,
+            '\t' => f.write_str("\\t")?,
+            c if (c as u32) < 0x20 => write!(f, "\\u{:04x}", c as u32)?,
+            c => write!(f, "{c}")?,
+        }
+    }
+    f.write_str("\"")
+}
+
+// ---------------------------------------------------------------- parser
+
+/// Parse a complete JSON document under the default limits
+/// ([`MAX_DEPTH`], [`MAX_INPUT_BYTES`]). Trailing non-whitespace is an
+/// error. Never panics, for any byte sequence.
+pub fn parse(input: &[u8]) -> Result<JsonValue, JsonError> {
+    parse_with_limits(input, MAX_DEPTH, MAX_INPUT_BYTES)
+}
+
+/// [`parse`] with explicit depth / size limits (for tests and callers
+/// with tighter budgets).
+pub fn parse_with_limits(
+    input: &[u8],
+    max_depth: usize,
+    max_bytes: usize,
+) -> Result<JsonValue, JsonError> {
+    if input.len() > max_bytes {
+        return Err(JsonError::ParseError {
+            offset: 0,
+            msg: format!(
+                "input of {} bytes exceeds the {} byte limit",
+                input.len(),
+                max_bytes
+            ),
+        });
+    }
+    let mut p = Parser { b: input, pos: 0, max_depth };
+    let v = p.value(0)?;
+    p.skip_ws();
+    if p.pos < p.b.len() {
+        return Err(p.err("trailing data after the document"));
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    pos: usize,
+    max_depth: usize,
+}
+
+impl Parser<'_> {
+    fn err(&self, msg: impl Into<String>) -> JsonError {
+        JsonError::ParseError { offset: self.pos, msg: msg.into() }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let c = self.peek();
+        if c.is_some() {
+            self.pos += 1;
+        }
+        c
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn value(&mut self, depth: usize) -> Result<JsonValue, JsonError> {
+        self.skip_ws();
+        match self.peek() {
+            None => Err(self.err("unexpected end of input")),
+            Some(b'n') => self.lit("null", JsonValue::Null),
+            Some(b't') => self.lit("true", JsonValue::Bool(true)),
+            Some(b'f') => self.lit("false", JsonValue::Bool(false)),
+            Some(b'"') => Ok(JsonValue::Str(self.string()?)),
+            Some(b'[') => self.array(depth),
+            Some(b'{') => self.object(depth),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            Some(c) => Err(self.err(format!("unexpected byte 0x{c:02x}"))),
+        }
+    }
+
+    fn lit(
+        &mut self,
+        word: &'static str,
+        v: JsonValue,
+    ) -> Result<JsonValue, JsonError> {
+        if self.b.get(self.pos..self.pos + word.len())
+            == Some(word.as_bytes())
+        {
+            self.pos += word.len();
+            Ok(v)
+        } else {
+            Err(self.err(format!("expected `{word}`")))
+        }
+    }
+
+    fn digits(&mut self) -> Result<(), JsonError> {
+        if !matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            return Err(self.err("expected a digit"));
+        }
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.pos += 1;
+        }
+        Ok(())
+    }
+
+    fn number(&mut self) -> Result<JsonValue, JsonError> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        // integer part: a leading zero takes no more digits (JSON bans
+        // 0123), any other digit takes a run
+        match self.peek() {
+            Some(b'0') => self.pos += 1,
+            _ => self.digits()?,
+        }
+        if self.peek() == Some(b'.') {
+            self.pos += 1;
+            self.digits()?;
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.pos += 1;
+            }
+            self.digits()?;
+        }
+        let text = self
+            .b
+            .get(start..self.pos)
+            .and_then(|s| std::str::from_utf8(s).ok())
+            .unwrap_or_default();
+        let n: f64 = match text.parse() {
+            Ok(n) => n,
+            Err(_) => return Err(self.err(format!("bad number `{text}`"))),
+        };
+        if !n.is_finite() {
+            // Python's json parses this as inf; a serving boundary has
+            // no use for a non-finite number, so reject it cleanly
+            return Err(
+                self.err(format!("number `{text}` does not fit an f64"))
+            );
+        }
+        Ok(JsonValue::Num(n))
+    }
+
+    fn hex4(&mut self) -> Result<u16, JsonError> {
+        let mut v: u16 = 0;
+        for _ in 0..4 {
+            let Some(c) = self.bump() else {
+                return Err(self.err("truncated \\u escape"));
+            };
+            let d = match c {
+                b'0'..=b'9' => c - b'0',
+                b'a'..=b'f' => c - b'a' + 10,
+                b'A'..=b'F' => c - b'A' + 10,
+                _ => return Err(self.err("bad hex digit in \\u escape")),
+            };
+            v = (v << 4) | u16::from(d);
+        }
+        Ok(v)
+    }
+
+    fn string(&mut self) -> Result<String, JsonError> {
+        if self.bump() != Some(b'"') {
+            return Err(self.err("expected a string"));
+        }
+        let mut buf: Vec<u8> = Vec::new();
+        loop {
+            let Some(c) = self.bump() else {
+                return Err(self.err("unterminated string"));
+            };
+            match c {
+                b'"' => break,
+                b'\\' => {
+                    let Some(e) = self.bump() else {
+                        return Err(self.err("unterminated escape"));
+                    };
+                    match e {
+                        b'"' => buf.push(b'"'),
+                        b'\\' => buf.push(b'\\'),
+                        b'/' => buf.push(b'/'),
+                        b'b' => buf.push(0x08),
+                        b'f' => buf.push(0x0c),
+                        b'n' => buf.push(b'\n'),
+                        b'r' => buf.push(b'\r'),
+                        b't' => buf.push(b'\t'),
+                        b'u' => {
+                            let ch = self.unicode_escape()?;
+                            let mut tmp = [0u8; 4];
+                            buf.extend_from_slice(
+                                ch.encode_utf8(&mut tmp).as_bytes(),
+                            );
+                        }
+                        _ => {
+                            return Err(self.err(format!(
+                                "invalid escape `\\{}`",
+                                e as char
+                            )))
+                        }
+                    }
+                }
+                0x00..=0x1f => {
+                    return Err(
+                        self.err("raw control character in string")
+                    )
+                }
+                _ => buf.push(c),
+            }
+        }
+        String::from_utf8(buf).map_err(|_| self.err("invalid UTF-8 in string"))
+    }
+
+    /// Decode one `\uXXXX` escape (the `\u` already consumed), pairing
+    /// surrogates; a lone surrogate is an error, not a replacement char.
+    fn unicode_escape(&mut self) -> Result<char, JsonError> {
+        let hi = self.hex4()?;
+        let cp: u32 = if (0xD800..=0xDBFF).contains(&hi) {
+            if self.bump() != Some(b'\\') || self.bump() != Some(b'u') {
+                return Err(self.err("lone high surrogate in \\u escape"));
+            }
+            let lo = self.hex4()?;
+            if !(0xDC00..=0xDFFF).contains(&lo) {
+                return Err(self.err("invalid low surrogate in \\u escape"));
+            }
+            0x10000
+                + ((u32::from(hi) - 0xD800) << 10)
+                + (u32::from(lo) - 0xDC00)
+        } else if (0xDC00..=0xDFFF).contains(&hi) {
+            return Err(self.err("lone low surrogate in \\u escape"));
+        } else {
+            u32::from(hi)
+        };
+        char::from_u32(cp)
+            .ok_or_else(|| self.err("invalid code point in \\u escape"))
+    }
+
+    /// Containers at nesting depth `max_depth` are rejected, so at most
+    /// `max_depth` arrays/objects ever sit on the recursion stack
+    /// (scalars inside the deepest container are fine).
+    fn check_depth(&self, depth: usize) -> Result<(), JsonError> {
+        if depth >= self.max_depth {
+            return Err(self.err(format!(
+                "nesting exceeds the depth limit of {}",
+                self.max_depth
+            )));
+        }
+        Ok(())
+    }
+
+    fn array(&mut self, depth: usize) -> Result<JsonValue, JsonError> {
+        self.check_depth(depth)?;
+        self.pos += 1; // consume '['
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(JsonValue::Arr(items));
+        }
+        loop {
+            items.push(self.value(depth + 1)?);
+            self.skip_ws();
+            match self.bump() {
+                Some(b',') => {}
+                Some(b']') => return Ok(JsonValue::Arr(items)),
+                _ => return Err(self.err("expected `,` or `]` in array")),
+            }
+        }
+    }
+
+    fn object(&mut self, depth: usize) -> Result<JsonValue, JsonError> {
+        self.check_depth(depth)?;
+        self.pos += 1; // consume '{'
+        let mut map = BTreeMap::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(JsonValue::Obj(map));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            if self.bump() != Some(b':') {
+                return Err(self.err("expected `:` after object key"));
+            }
+            // duplicate keys: last one wins, as in Python's json
+            map.insert(key, self.value(depth + 1)?);
+            self.skip_ws();
+            match self.bump() {
+                Some(b',') => {}
+                Some(b'}') => return Ok(JsonValue::Obj(map)),
+                _ => return Err(self.err("expected `,` or `}` in object")),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(s: &str) -> JsonValue {
+        parse(s.as_bytes()).unwrap()
+    }
+
+    #[test]
+    fn scalars_roundtrip() {
+        for doc in ["null", "true", "false", "0", "-1", "3.5", "\"hi\""] {
+            assert_eq!(p(doc).to_string(), doc);
+        }
+    }
+
+    #[test]
+    fn nested_roundtrip_sorted_keys() {
+        let v = p(r#"{"b": [1, 2, {"x": null}], "a": "y"}"#);
+        assert_eq!(v.to_string(), r#"{"a":"y","b":[1,2,{"x":null}]}"#);
+    }
+
+    #[test]
+    fn duplicate_keys_last_wins() {
+        assert_eq!(p(r#"{"k":1,"k":2}"#).to_string(), r#"{"k":2}"#);
+    }
+
+    #[test]
+    fn escapes_decode_and_reencode() {
+        let v = p(r#""a\n\t\"\\\/\b\fAé""#);
+        assert_eq!(v.as_str(), Some("a\n\t\"\\/\u{8}\u{c}Aé"));
+        assert_eq!(v.to_string(), "\"a\\n\\t\\\"\\\\/\\b\\fAé\"");
+    }
+
+    #[test]
+    fn surrogate_pairs_combine() {
+        assert_eq!(p(r#""😀""#).as_str(), Some("😀"));
+    }
+
+    #[test]
+    fn lone_surrogates_rejected() {
+        for doc in [r#""\ud83d""#, r#""\ud83dx""#, r#""\udc00""#] {
+            assert!(matches!(
+                parse(doc.as_bytes()),
+                Err(JsonError::ParseError { .. })
+            ));
+        }
+    }
+
+    #[test]
+    fn number_edges() {
+        assert!(matches!(
+            parse(b"1e999"),
+            Err(JsonError::ParseError { .. })
+        ));
+        // -0 keeps its sign bit across a round trip
+        let v = p("-0");
+        assert_eq!(v.to_string(), "-0");
+        assert!(matches!(v, JsonValue::Num(n) if n == 0.0
+            && n.is_sign_negative()));
+        // leading zeros and bare fractions are not JSON
+        for bad in ["01", ".5", "1.", "1e", "+1", "--1", "1e+"] {
+            assert!(parse(bad.as_bytes()).is_err(), "{bad}");
+        }
+        assert_eq!(p("1e3"), JsonValue::Num(1000.0));
+    }
+
+    #[test]
+    fn depth_limit_enforced() {
+        let deep_ok = "[".repeat(MAX_DEPTH) + &"]".repeat(MAX_DEPTH);
+        assert!(parse(deep_ok.as_bytes()).is_ok());
+        let deep_bad =
+            "[".repeat(MAX_DEPTH + 1) + &"]".repeat(MAX_DEPTH + 1);
+        assert!(parse(deep_bad.as_bytes()).is_err());
+    }
+
+    #[test]
+    fn size_limit_enforced() {
+        let big = format!("\"{}\"", "x".repeat(MAX_INPUT_BYTES));
+        assert!(parse(big.as_bytes()).is_err());
+    }
+
+    #[test]
+    fn trailing_garbage_rejected() {
+        assert!(parse(b"1 2").is_err());
+        assert!(parse(b"{} x").is_err());
+        assert!(parse(b"1 \n ").is_ok());
+    }
+
+    #[test]
+    fn invalid_utf8_rejected() {
+        assert!(parse(b"\"\xff\"").is_err());
+        assert!(parse(b"\xff").is_err());
+    }
+
+    #[test]
+    fn typed_extraction() {
+        let v = p(r#"{"s":"x","n":3,"b":true,"z":null,"f":1.5,"neg":-1}"#);
+        assert_eq!(v.req_str("s").unwrap(), "x");
+        assert_eq!(v.opt_u64("n").unwrap(), Some(3));
+        assert_eq!(v.opt_bool("b").unwrap(), Some(true));
+        // null reads as absent for optionals, missing for requireds
+        assert_eq!(v.opt_str("z").unwrap(), None);
+        assert!(matches!(
+            v.req_str("z"),
+            Err(JsonError::MissingField { .. })
+        ));
+        assert!(matches!(
+            v.req_str("gone"),
+            Err(JsonError::MissingField { .. })
+        ));
+        assert!(matches!(
+            v.req_str("n"),
+            Err(JsonError::TypeError { expected: "a string", .. })
+        ));
+        // non-integers and negatives are type errors for u64 fields
+        assert!(v.opt_u64("f").is_err());
+        assert!(v.opt_u64("neg").is_err());
+        assert!(v.opt_u64("s").is_err());
+        assert_eq!(v.opt_u64("gone").unwrap(), None);
+    }
+
+    #[test]
+    fn error_kinds_and_display() {
+        let e = parse(b"[").unwrap_err();
+        assert_eq!(e.kind(), "parse_error");
+        assert!(e.to_string().contains("invalid JSON"));
+        let v = p(r#"{"a":1}"#);
+        assert_eq!(v.req_str("a").unwrap_err().kind(), "type_error");
+        assert_eq!(v.req_str("b").unwrap_err().kind(), "missing_field");
+    }
+
+    #[test]
+    fn constructors_build_documents() {
+        let v = JsonValue::object([
+            ("b", JsonValue::n(2.0)),
+            ("a", JsonValue::array([JsonValue::b(true), JsonValue::Null])),
+            ("s", JsonValue::s("hé")),
+        ]);
+        assert_eq!(v.to_string(), r#"{"a":[true,null],"b":2,"s":"hé"}"#);
+    }
+
+    #[test]
+    fn non_finite_writes_null() {
+        assert_eq!(JsonValue::n(f64::NAN).to_string(), "null");
+        assert_eq!(JsonValue::n(f64::INFINITY).to_string(), "null");
+    }
+}

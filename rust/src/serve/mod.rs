@@ -1,0 +1,34 @@
+//! Network serving: the HTTP front end over the request-lifecycle
+//! scheduler.
+//!
+//! Three layers, bottom-up (`ARCHITECTURE.md` has the full diagram):
+//!
+//! * [`json`] — a zero-dependency, panic-free JSON value/parser/writer
+//!   for **untrusted** input: depth- and size-limited, typed
+//!   [`json::JsonError`]s (`ParseError` / `TypeError` /
+//!   `MissingField`), deterministic sorted-key output. The trusted
+//!   build-time twin stays in [`crate::util::json`].
+//! * [`http`] — minimal HTTP/1.1 request parsing (method / path /
+//!   headers / `Content-Length` body, keep-alive) and responses (fixed
+//!   length or chunked transfer for streaming), with the 400/404/405/
+//!   413 error mapping and the `{"error":{"kind","message"}}` body
+//!   contract.
+//! * [`server`] — the endpoints (`POST /v1/generate`, `GET /v1/stats`,
+//!   `GET /healthz`, `POST /v1/shutdown`) over a scoped worker pool,
+//!   bridged to the single-threaded decode loop through
+//!   [`crate::engine::ServeDriver`]; client disconnects cancel their
+//!   in-flight jobs.
+//!
+//! Everything here is plain `std` — no hyper, no serde — per the
+//! repo's offline-registry stance.
+
+pub mod http;
+pub mod json;
+pub mod server;
+
+pub use http::{ChunkedWriter, HttpError, HttpRequest, RequestReader};
+pub use json::{JsonError, JsonValue};
+pub use server::{
+    decode_generate, done_line, generate_body, outcome_str, stats_body,
+    token_line, GenerateRequest, HttpServer, ServerConfig, StatsCell,
+};

@@ -1,0 +1,820 @@
+//! The HTTP serving front end: a [`TcpListener`] + scoped worker pool
+//! in front of [`Session::serve_loop`].
+//!
+//! Threading model: the PJRT runtime is single-threaded (`Engine` holds
+//! an `Rc<Runtime>`), so the decode loop stays on the thread that calls
+//! [`HttpServer::run`]. Worker threads own the sockets: they parse
+//! requests, push jobs into a condvar-guarded inbox, and block on a
+//! per-job channel for events. The decode thread drains the inbox
+//! between steps (via [`crate::engine::ServeDriver`]) and routes
+//! per-token / per-completion events back to the owning worker. A
+//! client disconnect surfaces as a write error on the worker, which
+//! flips the job's [`CancelHandle`]; the scheduler frees the row within
+//! one step.
+//!
+//! Endpoints (`ARCHITECTURE.md` has the full table and flow diagram):
+//!
+//! | route              | method | body                                    |
+//! |--------------------|--------|-----------------------------------------|
+//! | `/v1/generate`     | POST   | prompt [, adapter, priority, deadline_ms, max_new_tokens, stream] |
+//! | `/v1/stats`        | GET    | scheduler + KV-block statistics          |
+//! | `/healthz`         | GET    | liveness                                 |
+//! | `/v1/shutdown`     | POST   | drain in-flight work and stop            |
+//!
+//! Request decoding ([`decode_generate`]) and response encoding
+//! ([`stats_body`], [`outcome_str`]) are pure functions, mirrored
+//! line-for-line by `python/tests/test_serve_mirror.py`.
+
+use std::collections::{HashMap, VecDeque};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::{Condvar, Mutex, MutexGuard};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::engine::{
+    CancelHandle, GenRequest, JobOutcome, Priority, Sampler, ServeDriver,
+    ServeEvent, ServeReport, ServerStats, Session, SourcePoll,
+};
+
+use super::http::{
+    self, ChunkedWriter, HttpError, HttpRequest, RequestReader,
+};
+use super::json::{JsonError, JsonValue};
+
+/// Configuration for [`HttpServer::bind`].
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Bind address (`127.0.0.1:0` picks an ephemeral port — read it
+    /// back via [`HttpServer::local_addr`]).
+    pub addr: String,
+    /// Connection-handling worker threads.
+    pub workers: usize,
+    /// Per-request body size limit in bytes.
+    pub max_body_bytes: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        ServerConfig {
+            addr: "127.0.0.1:8080".to_string(),
+            workers: 4,
+            max_body_bytes: http::MAX_BODY_BYTES,
+        }
+    }
+}
+
+/// A decoded `POST /v1/generate` body (the wire-format half of the
+/// request; conversion to a [`GenRequest`] happens against the serving
+/// session's defaults).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GenerateRequest {
+    /// The prompt to complete (required).
+    pub prompt: String,
+    /// Adapter the client expects to be served (optional; requests for
+    /// any other adapter than the session's are rejected — the decode
+    /// graph pins its adapter at construction).
+    pub adapter: Option<String>,
+    /// Admission class (optional, default `Normal`).
+    pub priority: Priority,
+    /// Deadline in milliseconds from submission (optional).
+    pub deadline_ms: Option<u64>,
+    /// Cap on generated tokens (optional; the session default applies).
+    pub max_new_tokens: Option<usize>,
+    /// Stream tokens as chunked JSON lines instead of one body.
+    pub stream: bool,
+}
+
+/// Decode and validate a `POST /v1/generate` body. Pure: this is the
+/// request-decode half mirrored by the Python wire-format suite.
+pub fn decode_generate(body: &[u8]) -> Result<GenerateRequest, JsonError> {
+    let doc = super::json::parse(body)?;
+    let prompt = doc.req_str("prompt")?.to_string();
+    let adapter = doc.opt_str("adapter")?.map(str::to_string);
+    let priority = match doc.opt_str("priority")? {
+        None => Priority::Normal,
+        Some("low") => Priority::Low,
+        Some("normal") => Priority::Normal,
+        Some("high") => Priority::High,
+        Some(_) => {
+            return Err(JsonError::TypeError {
+                field: "priority".to_string(),
+                expected: "one of \"low\"/\"normal\"/\"high\"",
+                found: "string",
+            })
+        }
+    };
+    let deadline_ms = doc.opt_u64("deadline_ms")?;
+    let max_new_tokens = doc.opt_u64("max_new_tokens")?.map(|v| v as usize);
+    let stream = doc.opt_bool("stream")?.unwrap_or(false);
+    Ok(GenerateRequest {
+        prompt,
+        adapter,
+        priority,
+        deadline_ms,
+        max_new_tokens,
+        stream,
+    })
+}
+
+/// Wire name of a [`JobOutcome`]. Pure; mirrored.
+pub fn outcome_str(outcome: JobOutcome) -> &'static str {
+    match outcome {
+        JobOutcome::Done => "done",
+        JobOutcome::Cancelled => "cancelled",
+        JobOutcome::DeadlineExceeded => "deadline_exceeded",
+        JobOutcome::Aborted => "aborted",
+    }
+}
+
+/// The non-streamed `/v1/generate` response body. Pure; mirrored.
+pub fn generate_body(outcome: JobOutcome, text: &str) -> JsonValue {
+    JsonValue::object([
+        ("outcome", JsonValue::s(outcome_str(outcome))),
+        ("text", JsonValue::s(text)),
+    ])
+}
+
+/// One streamed token line (the chunked response is JSON lines: token
+/// lines then a final `done` line). Pure; mirrored.
+pub fn token_line(text: &str) -> String {
+    let mut line =
+        JsonValue::object([("token", JsonValue::s(text))]).to_string();
+    line.push('\n');
+    line
+}
+
+/// The final streamed line: the terminal outcome plus the full text
+/// (the concatenation of all `token` fields equals `text`). Pure;
+/// mirrored.
+pub fn done_line(outcome: JobOutcome, text: &str) -> String {
+    let mut line = JsonValue::object([
+        ("done", JsonValue::b(true)),
+        ("outcome", JsonValue::s(outcome_str(outcome))),
+        ("text", JsonValue::s(text)),
+    ])
+    .to_string();
+    line.push('\n');
+    line
+}
+
+/// The `GET /v1/stats` body: scheduler statistics with the KV-block
+/// counters nested under `"blocks"`. Pure; mirrored.
+pub fn stats_body(st: &ServerStats) -> JsonValue {
+    let budget = if st.token_budget == usize::MAX {
+        JsonValue::Null // unbounded legacy budget
+    } else {
+        JsonValue::n(st.token_budget as f64)
+    };
+    JsonValue::object([
+        ("submitted", JsonValue::n(st.submitted as f64)),
+        ("completed", JsonValue::n(st.completed as f64)),
+        ("cancelled", JsonValue::n(st.cancelled as f64)),
+        ("deadline_exceeded", JsonValue::n(st.deadline_exceeded as f64)),
+        ("preemptions", JsonValue::n(st.preemptions as f64)),
+        ("queue_depth", JsonValue::n(st.queue_depth as f64)),
+        ("active_rows", JsonValue::n(st.active_rows as f64)),
+        ("resident_tokens", JsonValue::n(st.resident_tokens as f64)),
+        ("reserved_tokens", JsonValue::n(st.reserved_tokens as f64)),
+        ("token_budget", budget),
+        ("tokens_generated", JsonValue::n(st.tokens_generated as f64)),
+        ("mean_ttft_ms", JsonValue::n(st.mean_ttft_ms())),
+        ("tokens_per_sec", JsonValue::n(st.tokens_per_sec())),
+        (
+            "blocks",
+            JsonValue::object([
+                ("kv_blocks", JsonValue::n(st.kv_blocks as f64)),
+                (
+                    "kv_block_tokens",
+                    JsonValue::n(st.kv_block_tokens as f64),
+                ),
+                (
+                    "kv_blocks_in_use",
+                    JsonValue::n(st.kv_blocks_in_use as f64),
+                ),
+                (
+                    "shared_block_hits",
+                    JsonValue::n(st.shared_block_hits as f64),
+                ),
+                ("cow_forks", JsonValue::n(st.cow_forks as f64)),
+                ("swap_outs", JsonValue::n(st.swap_outs as f64)),
+            ]),
+        ),
+    ])
+}
+
+/// Concurrently readable [`ServerStats`] snapshot cell: the decode
+/// thread publishes a clone after every step, `/v1/stats` workers read
+/// whole snapshots under the same lock — no torn reads, ever (the
+/// previous stats path handed `ServerStats` to a same-thread callback
+/// only; field-by-field publication to atomics would tear).
+#[derive(Debug, Default)]
+pub struct StatsCell {
+    inner: Mutex<ServerStats>,
+}
+
+impl StatsCell {
+    /// An empty cell (all-zero stats until the first publish).
+    pub fn new() -> StatsCell {
+        StatsCell::default()
+    }
+
+    /// Replace the snapshot (decode thread, once per step).
+    pub fn publish(&self, stats: ServerStats) {
+        *lock(&self.inner) = stats;
+    }
+
+    /// Clone the latest snapshot (any thread).
+    pub fn snapshot(&self) -> ServerStats {
+        lock(&self.inner).clone()
+    }
+}
+
+/// Lock a mutex, recovering the data on poisoning (a panicked worker
+/// must not wedge every other connection).
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// One queued generation job: the request plus the channel its events
+/// flow back through.
+struct Job {
+    tag: u64,
+    req: GenRequest,
+    sink: mpsc::Sender<JobEvent>,
+}
+
+/// Events a connection worker receives for its job.
+enum JobEvent {
+    Rejected(String),
+    Token(String),
+    Finished { outcome: JobOutcome, text: String },
+}
+
+struct Inbox {
+    jobs: VecDeque<Job>,
+    closed: bool,
+}
+
+/// State shared between the decode thread and the connection workers.
+struct Shared {
+    inbox: Mutex<Inbox>,
+    inbox_cv: Condvar,
+    stats: StatsCell,
+    shutdown: AtomicBool,
+    next_tag: AtomicU64,
+    /// session defaults, captured at startup so workers can build
+    /// per-request samplers without touching the (!Send) session
+    default_sampler: Sampler,
+    greedy: bool,
+    adapter: String,
+}
+
+/// The inbox-draining [`ServeDriver`] run on the decode thread.
+struct EngineDriver<'s> {
+    shared: &'s Shared,
+    sinks: HashMap<u64, mpsc::Sender<JobEvent>>,
+}
+
+impl ServeDriver for EngineDriver<'_> {
+    fn poll(&mut self, idle: bool) -> SourcePoll {
+        let mut inbox = lock(&self.shared.inbox);
+        if idle {
+            // nothing queued or running: sleep until a worker submits
+            // or the server shuts down (with a timeout backstop so a
+            // missed notify can never hang the loop)
+            while inbox.jobs.is_empty() && !inbox.closed {
+                inbox = match self
+                    .shared
+                    .inbox_cv
+                    .wait_timeout(inbox, Duration::from_millis(50))
+                {
+                    Ok((guard, _timed_out)) => guard,
+                    Err(poisoned) => poisoned.into_inner().0,
+                };
+            }
+        }
+        let mut requests = Vec::new();
+        while let Some(job) = inbox.jobs.pop_front() {
+            self.sinks.insert(job.tag, job.sink);
+            requests.push((job.tag, job.req));
+        }
+        SourcePoll { requests, open: !inbox.closed }
+    }
+
+    fn on_event(&mut self, ev: ServeEvent) {
+        match ev {
+            ServeEvent::Rejected { tag, error } => {
+                if let Some(sink) = self.sinks.remove(&tag) {
+                    let _ = sink.send(JobEvent::Rejected(error));
+                }
+            }
+            ServeEvent::Token { tag, text } => {
+                if let Some(sink) = self.sinks.get(&tag) {
+                    let _ = sink.send(JobEvent::Token(text));
+                }
+            }
+            ServeEvent::Finished { tag, outcome, text } => {
+                if let Some(sink) = self.sinks.remove(&tag) {
+                    let _ = sink.send(JobEvent::Finished { outcome, text });
+                }
+            }
+            ServeEvent::Step { stats, .. } => {
+                self.shared.stats.publish(stats);
+            }
+        }
+    }
+}
+
+/// A bound-but-not-yet-serving HTTP server. Binding is split from
+/// running so callers (tests, the bench load generator) can read the
+/// ephemeral port before the decode loop takes over the thread.
+pub struct HttpServer {
+    listener: TcpListener,
+    cfg: ServerConfig,
+}
+
+impl HttpServer {
+    /// Bind the listener (non-blocking accept; workers poll it).
+    pub fn bind(cfg: ServerConfig) -> Result<HttpServer> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding {}", cfg.addr))?;
+        listener
+            .set_nonblocking(true)
+            .context("setting the listener non-blocking")?;
+        Ok(HttpServer { listener, cfg })
+    }
+
+    /// The bound address (the real port when `addr` ended in `:0`).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Serve until `POST /v1/shutdown`: workers accept connections on
+    /// scoped threads while the calling thread runs the decode loop
+    /// (the runtime is single-threaded, so the engine never leaves this
+    /// thread). Returns the terminal [`ServeReport`] over every request
+    /// served.
+    pub fn run(self, session: &mut Session<'_>) -> Result<ServeReport> {
+        let shared = Shared {
+            inbox: Mutex::new(Inbox { jobs: VecDeque::new(), closed: false }),
+            inbox_cv: Condvar::new(),
+            stats: StatsCell::new(),
+            shutdown: AtomicBool::new(false),
+            next_tag: AtomicU64::new(0),
+            default_sampler: session.sampler.clone(),
+            greedy: session.greedy,
+            adapter: session.adapter().to_string(),
+        };
+        let listener = &self.listener;
+        let cfg = &self.cfg;
+        std::thread::scope(|scope| {
+            for _ in 0..cfg.workers.max(1) {
+                let shared = &shared;
+                scope.spawn(move || worker_loop(listener, shared, cfg));
+            }
+            let mut driver =
+                EngineDriver { shared: &shared, sinks: HashMap::new() };
+            let report = session.serve_loop(&mut driver);
+            // wake and release every worker, whatever ended the loop
+            shared.shutdown.store(true, Ordering::SeqCst);
+            lock(&shared.inbox).closed = true;
+            shared.inbox_cv.notify_all();
+            report
+        })
+    }
+}
+
+/// Accept loop: poll the shared non-blocking listener until shutdown.
+fn worker_loop(listener: &TcpListener, shared: &Shared, cfg: &ServerConfig) {
+    while !shared.shutdown.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => handle_connection(stream, shared, cfg),
+            // no pending connection (or a transient accept error):
+            // sleep briefly and re-check the shutdown flag
+            Err(_) => std::thread::sleep(Duration::from_millis(10)),
+        }
+    }
+}
+
+/// Serve one connection through its keep-alive lifetime.
+fn handle_connection(stream: TcpStream, shared: &Shared, cfg: &ServerConfig) {
+    // short read timeout: a worker parked on an idle keep-alive
+    // connection re-checks the shutdown flag every 100 ms
+    if stream.set_read_timeout(Some(Duration::from_millis(100))).is_err() {
+        return;
+    }
+    let _ = stream.set_nodelay(true);
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = RequestReader::new(read_half, cfg.max_body_bytes);
+    let mut stream = stream;
+    loop {
+        match reader.next_request() {
+            Err(HttpError::TimedOut) => {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+            }
+            Err(HttpError::Closed) | Err(HttpError::Io(_)) => return,
+            Err(e) => {
+                if let Some(status) = e.status() {
+                    let kind = match status {
+                        413 => "payload_too_large",
+                        _ => "bad_request",
+                    };
+                    let _ = http::write_error(
+                        &mut stream,
+                        status,
+                        kind,
+                        &e.message(),
+                        false,
+                    );
+                }
+                return;
+            }
+            Ok(req) => {
+                let keep = req.keep_alive
+                    && !shared.shutdown.load(Ordering::SeqCst);
+                if !route(&mut stream, &req, keep, shared) || !keep {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// Dispatch one request; returns false when the connection must close.
+fn route(
+    stream: &mut TcpStream,
+    req: &HttpRequest,
+    keep: bool,
+    shared: &Shared,
+) -> bool {
+    // strip any query string before routing
+    let path = req.path.split('?').next().unwrap_or_default();
+    let known = matches!(
+        path,
+        "/healthz" | "/v1/stats" | "/v1/generate" | "/v1/shutdown"
+    );
+    match (req.method.as_str(), path) {
+        ("GET", "/healthz") => {
+            let body = JsonValue::object([("status", JsonValue::s("ok"))]);
+            respond_json(stream, 200, &body, keep)
+        }
+        ("GET", "/v1/stats") => {
+            let body = stats_body(&shared.stats.snapshot());
+            respond_json(stream, 200, &body, keep)
+        }
+        ("POST", "/v1/shutdown") => {
+            shared.shutdown.store(true, Ordering::SeqCst);
+            lock(&shared.inbox).closed = true;
+            shared.inbox_cv.notify_all();
+            let body =
+                JsonValue::object([("shutting_down", JsonValue::b(true))]);
+            respond_json(stream, 200, &body, false);
+            false
+        }
+        ("POST", "/v1/generate") => handle_generate(stream, req, keep, shared),
+        _ if known => {
+            let _ = http::write_error(
+                stream,
+                405,
+                "method_not_allowed",
+                &format!("{} is not supported on {}", req.method, path),
+                keep,
+            );
+            true
+        }
+        _ => {
+            let _ = http::write_error(
+                stream,
+                404,
+                "not_found",
+                &format!("no such route `{path}`"),
+                keep,
+            );
+            true
+        }
+    }
+}
+
+fn respond_json(
+    stream: &mut TcpStream,
+    status: u16,
+    body: &JsonValue,
+    keep: bool,
+) -> bool {
+    http::write_response(
+        stream,
+        status,
+        "application/json",
+        body.to_string().as_bytes(),
+        keep,
+    )
+    .is_ok()
+}
+
+/// `POST /v1/generate`: decode, submit to the decode thread, then relay
+/// events — one JSON body, or chunked JSON lines when streaming.
+fn handle_generate(
+    stream: &mut TcpStream,
+    req: &HttpRequest,
+    keep: bool,
+    shared: &Shared,
+) -> bool {
+    let spec = match decode_generate(&req.body) {
+        Ok(spec) => spec,
+        Err(e) => {
+            let _ = http::write_error(
+                stream,
+                400,
+                e.kind(),
+                &e.to_string(),
+                keep,
+            );
+            return true;
+        }
+    };
+    // the decode graph pins its adapter literals at construction, so a
+    // request for any other adapter cannot be served by this session
+    if let Some(name) = &spec.adapter {
+        if *name != shared.adapter {
+            let _ = http::write_error(
+                stream,
+                400,
+                "unknown_adapter",
+                &format!(
+                    "this server serves adapter `{}`, not `{name}`",
+                    shared.adapter
+                ),
+                keep,
+            );
+            return true;
+        }
+    }
+    // build the GenRequest against the session defaults captured at
+    // startup; a greedy session stays exactly greedy under a
+    // max_new_tokens override (temperature 0.0 is argmax decoding)
+    let mut gen = GenRequest::new(spec.prompt.clone())
+        .priority(spec.priority);
+    if let Some(ms) = spec.deadline_ms {
+        gen = gen.deadline(Duration::from_millis(ms));
+    }
+    if let Some(max_new) = spec.max_new_tokens {
+        let mut sampler = shared.default_sampler.clone();
+        sampler.max_new_tokens = max_new;
+        if shared.greedy {
+            sampler.temperature = 0.0;
+        }
+        gen = gen.sampler(sampler);
+    }
+    let (gen, cancel) = gen.cancellable();
+    let (tx, rx) = mpsc::channel();
+    let tag = shared.next_tag.fetch_add(1, Ordering::SeqCst);
+    {
+        let mut inbox = lock(&shared.inbox);
+        if inbox.closed {
+            drop(inbox);
+            let _ = http::write_error(
+                stream,
+                503,
+                "shutting_down",
+                "the server is draining and accepts no new work",
+                false,
+            );
+            return false;
+        }
+        inbox.jobs.push_back(Job { tag, req: gen, sink: tx });
+    }
+    shared.inbox_cv.notify_all();
+    if spec.stream {
+        stream_events(stream, &rx, &cancel)
+    } else {
+        collect_events(stream, &rx, keep)
+    }
+}
+
+/// Non-streamed relay: wait for the terminal event, answer in one body.
+fn collect_events(
+    stream: &mut TcpStream,
+    rx: &mpsc::Receiver<JobEvent>,
+    keep: bool,
+) -> bool {
+    loop {
+        match rx.recv() {
+            Ok(JobEvent::Token(_)) => {}
+            Ok(JobEvent::Finished { outcome, text }) => {
+                return respond_json(
+                    stream,
+                    200,
+                    &generate_body(outcome, &text),
+                    keep,
+                );
+            }
+            Ok(JobEvent::Rejected(error)) => {
+                let _ = http::write_error(
+                    stream,
+                    400,
+                    "invalid_request",
+                    &error,
+                    keep,
+                );
+                return true;
+            }
+            // the decode loop died (its error surfaces from run())
+            Err(_) => {
+                let _ = http::write_error(
+                    stream,
+                    500,
+                    "engine_stopped",
+                    "the decode loop stopped before this job finished",
+                    false,
+                );
+                return false;
+            }
+        }
+    }
+}
+
+/// Streamed relay: one chunked JSON line per token, a final `done`
+/// line, and — the disconnect→cancel path — any write failure flips the
+/// job's [`CancelHandle`] so the scheduler frees the row within a step.
+fn stream_events(
+    stream: &mut TcpStream,
+    rx: &mpsc::Receiver<JobEvent>,
+    cancel: &CancelHandle,
+) -> bool {
+    let mut writer = match ChunkedWriter::begin(
+        stream,
+        200,
+        "application/jsonl",
+        false,
+    ) {
+        Ok(w) => w,
+        Err(_) => {
+            cancel.cancel();
+            return false;
+        }
+    };
+    loop {
+        match rx.recv() {
+            Ok(JobEvent::Token(text)) => {
+                if writer.chunk(token_line(&text).as_bytes()).is_err() {
+                    // client went away mid-stream: cancel the job and
+                    // drain remaining events so nothing leaks
+                    cancel.cancel();
+                    while rx.recv().is_ok() {}
+                    return false;
+                }
+            }
+            Ok(JobEvent::Finished { outcome, text }) => {
+                let ok = writer
+                    .chunk(done_line(outcome, &text).as_bytes())
+                    .is_ok()
+                    && writer.finish().is_ok();
+                if !ok {
+                    cancel.cancel();
+                }
+                return false; // streamed responses always close
+            }
+            Ok(JobEvent::Rejected(error)) => {
+                let _ = writer.chunk(
+                    format!(
+                        "{}\n",
+                        JsonValue::object([(
+                            "error",
+                            JsonValue::object([
+                                ("kind", JsonValue::s("invalid_request")),
+                                ("message", JsonValue::s(error)),
+                            ]),
+                        )])
+                    )
+                    .as_bytes(),
+                );
+                let _ = writer.finish();
+                return false;
+            }
+            Err(_) => {
+                cancel.cancel();
+                let _ = writer.finish();
+                return false;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decode_generate_full_and_minimal() {
+        let full = decode_generate(
+            br#"{"prompt":"hi","adapter":"base","priority":"high",
+                 "deadline_ms":250,"max_new_tokens":8,"stream":true}"#,
+        )
+        .unwrap();
+        assert_eq!(full.prompt, "hi");
+        assert_eq!(full.adapter.as_deref(), Some("base"));
+        assert_eq!(full.priority, Priority::High);
+        assert_eq!(full.deadline_ms, Some(250));
+        assert_eq!(full.max_new_tokens, Some(8));
+        assert!(full.stream);
+        let min = decode_generate(br#"{"prompt":"p"}"#).unwrap();
+        assert_eq!(min.priority, Priority::Normal);
+        assert_eq!(min.adapter, None);
+        assert!(!min.stream);
+    }
+
+    #[test]
+    fn decode_generate_rejects_bad_bodies() {
+        assert_eq!(decode_generate(b"{").unwrap_err().kind(), "parse_error");
+        assert_eq!(
+            decode_generate(b"{}").unwrap_err().kind(),
+            "missing_field"
+        );
+        assert_eq!(
+            decode_generate(br#"{"prompt":7}"#).unwrap_err().kind(),
+            "type_error"
+        );
+        assert_eq!(
+            decode_generate(br#"{"prompt":"p","priority":"urgent"}"#)
+                .unwrap_err()
+                .kind(),
+            "type_error"
+        );
+        assert_eq!(
+            decode_generate(br#"{"prompt":"p","max_new_tokens":-1}"#)
+                .unwrap_err()
+                .kind(),
+            "type_error"
+        );
+    }
+
+    #[test]
+    fn response_encoders_are_deterministic() {
+        assert_eq!(
+            generate_body(JobOutcome::Done, "ab").to_string(),
+            r#"{"outcome":"done","text":"ab"}"#
+        );
+        assert_eq!(token_line("x"), "{\"token\":\"x\"}\n");
+        assert_eq!(
+            done_line(JobOutcome::Cancelled, "part"),
+            "{\"done\":true,\"outcome\":\"cancelled\",\"text\":\"part\"}\n"
+        );
+    }
+
+    #[test]
+    fn stats_body_shape() {
+        let mut st = ServerStats { submitted: 3, ..Default::default() };
+        st.kv_blocks = 8;
+        st.token_budget = usize::MAX;
+        let v = stats_body(&st);
+        assert_eq!(v.get("submitted").and_then(JsonValue::as_num), Some(3.0));
+        assert_eq!(v.get("token_budget"), Some(&JsonValue::Null));
+        let blocks = v.get("blocks").unwrap();
+        assert_eq!(
+            blocks.get("kv_blocks").and_then(JsonValue::as_num),
+            Some(8.0)
+        );
+        // the body round-trips through the serve parser
+        let back =
+            super::super::json::parse(v.to_string().as_bytes()).unwrap();
+        assert_eq!(back, v);
+    }
+
+    #[test]
+    fn stats_cell_is_concurrently_readable() {
+        // the satellite-task regression test: readers poll whole
+        // snapshots while a producer publishes — no torn reads, and
+        // the monotone counters never run backwards
+        let cell = StatsCell::new();
+        let rounds = 2000u64;
+        std::thread::scope(|scope| {
+            let producer = &cell;
+            scope.spawn(move || {
+                for i in 1..=rounds {
+                    producer.publish(ServerStats {
+                        submitted: i,
+                        completed: i,
+                        tokens_generated: i * 7,
+                        ..Default::default()
+                    });
+                }
+            });
+            let mut last = 0u64;
+            for _ in 0..rounds {
+                let snap = cell.snapshot();
+                // a torn read would break the submitted == completed
+                // invariant the producer maintains
+                assert_eq!(snap.submitted, snap.completed);
+                assert_eq!(snap.tokens_generated, snap.submitted * 7);
+                assert!(snap.submitted >= last, "counter ran backwards");
+                last = snap.submitted;
+            }
+        });
+        assert_eq!(cell.snapshot().submitted, rounds);
+    }
+}

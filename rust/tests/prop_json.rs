@@ -1,0 +1,186 @@
+//! Property tests for the untrusted-input JSON layer
+//! (`serve::json`) — no artifacts, no runtime, pure parsing.
+//! `python/tests/test_serve_mirror.py` re-runs the same semantics
+//! against Python's `json` module, per the repo's cross-language
+//! verification discipline.
+//!
+//! Properties:
+//!
+//! 1. **canonical round-trip**: for any generated document,
+//!    `write(parse(write(v))) == write(v)` — the sorted-key compact
+//!    writer is a fixed point of parse∘write;
+//! 2. **parse never panics**: on truncations and random byte
+//!    mutations of valid documents, and on raw byte soup, `parse`
+//!    returns `Ok`/`Err` — it never unwinds (the prop runner would
+//!    surface any panic as a failing case);
+//! 3. **edge cases pinned**: `1e999` (overflows f64) is rejected,
+//!    `-0` keeps its sign through a round-trip, lone UTF-16
+//!    surrogates are rejected while proper pairs decode, and the
+//!    nesting depth limit admits exactly `max_depth` containers.
+
+use qlora::serve::json::{
+    parse, parse_with_limits, JsonValue, MAX_DEPTH,
+};
+use qlora::util::prop::{check, default_cases};
+use qlora::util::rng::Rng;
+
+/// Characters worth stressing in strings: quoting, escapes, raw
+/// controls (as already-decoded chars), multi-byte UTF-8, and an
+/// astral char (a surrogate pair on the wire in Python).
+const STRING_POOL: &[char] = &[
+    'a', 'z', '0', ' ', '"', '\\', '/', '\n', '\r', '\t',
+    '\u{0008}', '\u{000c}', '\u{0000}', '\u{001f}', 'é', 'ß', '中',
+    '\u{2028}', '😀',
+];
+
+fn gen_string(rng: &mut Rng) -> String {
+    (0..rng.below(12))
+        .map(|_| STRING_POOL[rng.below(STRING_POOL.len())])
+        .collect()
+}
+
+/// Numbers drawn from pools that round-trip exactly through the
+/// writer's decimal output: integers, dyadic fractions, powers of
+/// ten, and the signed zeros.
+fn gen_num(rng: &mut Rng) -> f64 {
+    match rng.below(5) {
+        0 => rng.below(2_000_001) as f64 - 1_000_000.0,
+        1 => (rng.below(4001) as f64 - 2000.0) / 64.0,
+        2 => 10f64.powi(rng.below(600) as i32 - 300),
+        3 => -0.0,
+        _ => 9.007_199_254_740_992e15 * if rng.bool(0.5) { 1.0 } else { -1.0 },
+    }
+}
+
+fn gen_value(rng: &mut Rng, depth: usize) -> JsonValue {
+    let scalar = depth >= 5 || rng.bool(0.4);
+    match if scalar { rng.below(4) } else { 4 + rng.below(2) } {
+        0 => JsonValue::Null,
+        1 => JsonValue::b(rng.bool(0.5)),
+        2 => JsonValue::n(gen_num(rng)),
+        3 => JsonValue::s(gen_string(rng)),
+        4 => JsonValue::array(
+            (0..rng.below(5)).map(|_| gen_value(rng, depth + 1)),
+        ),
+        _ => JsonValue::object(
+            (0..rng.below(5))
+                .map(|_| (gen_string(rng), gen_value(rng, depth + 1))),
+        ),
+    }
+}
+
+#[test]
+fn write_then_parse_is_a_fixed_point() {
+    check("json canonical round-trip", default_cases(), |rng| {
+        let v = gen_value(rng, 0);
+        let first = v.to_string();
+        let reparsed = parse(first.as_bytes())
+            .unwrap_or_else(|e| panic!("own output rejected: {e}\n{first}"));
+        let second = reparsed.to_string();
+        assert_eq!(first, second, "writer is not a parse fixed point");
+    });
+}
+
+#[test]
+fn parse_never_panics_on_mutated_documents() {
+    check("json mutation fuzz", default_cases(), |rng| {
+        let mut bytes = gen_value(rng, 0).to_string().into_bytes();
+        for _ in 0..1 + rng.below(6) {
+            match rng.below(3) {
+                0 if !bytes.is_empty() => {
+                    let i = rng.below(bytes.len());
+                    bytes[i] = rng.below(256) as u8;
+                }
+                1 => bytes.truncate(rng.below(bytes.len() + 1)),
+                _ => {
+                    let i = rng.below(bytes.len() + 1);
+                    bytes.insert(i, rng.below(256) as u8);
+                }
+            }
+        }
+        // must return, never unwind; the result itself is unspecified
+        let _ = parse(&bytes);
+    });
+}
+
+#[test]
+fn parse_never_panics_on_byte_soup() {
+    check("json byte-soup fuzz", default_cases(), |rng| {
+        let bytes: Vec<u8> =
+            (0..rng.below(64)).map(|_| rng.below(256) as u8).collect();
+        let _ = parse(&bytes);
+        // a biased soup of structural bytes digs deeper into the
+        // parser than uniform noise does
+        let structural = b"[]{}\",:\\u0 .-e1tfn";
+        let biased: Vec<u8> = (0..rng.below(64))
+            .map(|_| structural[rng.below(structural.len())])
+            .collect();
+        let _ = parse(&biased);
+    });
+}
+
+#[test]
+fn overflowing_exponent_is_rejected() {
+    // pinned divergence from Python's json, which parses 1e999 as inf
+    for doc in ["1e999", "-1e999", "[1e999]", "1e99999999"] {
+        assert!(parse(doc.as_bytes()).is_err(), "{doc} must be rejected");
+    }
+    // ...but the largest finite double is fine
+    assert!(parse(b"1.7976931348623157e308").is_ok());
+}
+
+#[test]
+fn negative_zero_keeps_its_sign() {
+    for doc in ["-0", "-0.0", "-0e5"] {
+        let v = parse(doc.as_bytes()).unwrap();
+        let n = v.as_num().unwrap();
+        assert_eq!(n, 0.0);
+        assert!(n.is_sign_negative(), "{doc} lost its sign");
+        assert_eq!(v.to_string(), "-0", "{doc} must write back as -0");
+    }
+    assert_eq!(parse(b"0").unwrap().to_string(), "0");
+}
+
+#[test]
+fn lone_surrogates_are_rejected_and_pairs_decode() {
+    // pinned divergence from Python's json, which produces an
+    // unpaired UTF-16 code unit for these
+    for doc in
+        [r#""\ud800""#, r#""\udc00""#, r#""\ud800x""#, r#""\ud800\ud800""#]
+    {
+        assert!(parse(doc.as_bytes()).is_err(), "{doc} must be rejected");
+    }
+    let v = parse(br#""😀""#).unwrap();
+    assert_eq!(v.as_str(), Some("😀"));
+}
+
+#[test]
+fn depth_limit_admits_exactly_max_depth_containers() {
+    let nested = |n: usize| {
+        let mut s = String::new();
+        for _ in 0..n {
+            s.push('[');
+        }
+        s.push('1');
+        for _ in 0..n {
+            s.push(']');
+        }
+        s.into_bytes()
+    };
+    assert!(parse(&nested(MAX_DEPTH)).is_ok());
+    assert!(parse(&nested(MAX_DEPTH + 1)).is_err());
+    // the same boundary under a custom limit, with objects mixed in
+    assert!(parse_with_limits(&nested(4), 4, 1 << 20).is_ok());
+    assert!(parse_with_limits(&nested(5), 4, 1 << 20).is_err());
+    assert!(parse_with_limits(br#"{"a":[{"b":1}]}"#, 3, 1 << 20).is_ok());
+    assert!(parse_with_limits(br#"{"a":[{"b":[]}]}"#, 3, 1 << 20).is_err());
+    // scalars inside the deepest admitted container are fine
+    assert!(parse_with_limits(b"[[1,true,\"x\"]]", 2, 1 << 20).is_ok());
+}
+
+#[test]
+fn size_limit_is_enforced() {
+    let doc = vec![b' '; 32];
+    assert!(parse_with_limits(&doc, MAX_DEPTH, 16).is_err());
+    assert!(parse_with_limits(b"1", MAX_DEPTH, 16).is_ok());
+}

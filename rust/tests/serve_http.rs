@@ -1,0 +1,383 @@
+//! End-to-end HTTP serving over real artifacts and a real loopback
+//! TCP socket: bit-identity between `POST /v1/generate`, its streamed
+//! variant, and `Session::serve`; the structured-JSON error contract;
+//! live `/v1/stats` polling; and the disconnect→cancel path. Each test
+//! skips with a message when artifacts are not built (the wire-format
+//! functions themselves are covered without artifacts by the
+//! `serve::server` unit tests and `python/tests/test_serve_mirror.py`).
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::rc::Rc;
+use std::time::{Duration, Instant};
+
+use qlora::engine::{Engine, GenRequest, JobOutcome, Sampler};
+use qlora::runtime::artifact::Manifest;
+use qlora::runtime::client::Runtime;
+use qlora::serve::json::{parse, JsonValue};
+use qlora::serve::{HttpServer, ServerConfig};
+
+// PjRtClient is single-threaded (Rc internally), so each test builds
+// its own runtime; executable compilation is cached per-runtime only.
+fn env() -> Option<(Rc<Runtime>, Manifest)> {
+    let dir = Manifest::default_dir();
+    let Ok(manifest) = Manifest::load(&dir) else {
+        eprintln!(
+            "skipped: artifacts not built in {dir:?} — run `make artifacts` \
+             to exercise the HTTP serving tests"
+        );
+        return None;
+    };
+    let rt = match Runtime::cpu() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipped: PJRT CPU runtime unavailable: {e:#}");
+            return None;
+        }
+    };
+    Some((Rc::new(rt), manifest))
+}
+
+fn engine(rt: &Rc<Runtime>, manifest: &Manifest) -> Option<Engine> {
+    match Engine::new(rt.clone(), manifest, "e2e") {
+        Ok(eng) => Some(eng),
+        Err(e) => {
+            eprintln!("skipped: artifact \"e2e\" unavailable: {e:#}");
+            None
+        }
+    }
+}
+
+// ------------------------------------------------------- tiny client
+
+/// One `Connection: close` request; returns (status, headers, body).
+/// The server closes after every such exchange, so reading to EOF is
+/// the framing.
+fn request(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+) -> (u16, String, Vec<u8>) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .expect("read timeout");
+    let mut head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: test\r\nConnection: close\r\n"
+    );
+    if let Some(b) = body {
+        head.push_str(&format!("Content-Length: {}\r\n", b.len()));
+    }
+    head.push_str("\r\n");
+    stream.write_all(head.as_bytes()).expect("write head");
+    if let Some(b) = body {
+        stream.write_all(b.as_bytes()).expect("write body");
+    }
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw).expect("read response");
+    split_response(&raw)
+}
+
+fn split_response(raw: &[u8]) -> (u16, String, Vec<u8>) {
+    let split = raw
+        .windows(4)
+        .position(|w| w == b"\r\n\r\n")
+        .expect("response has a head/body split");
+    let head = String::from_utf8(raw[..split].to_vec()).expect("utf-8 head");
+    let status: u16 = head
+        .split_whitespace()
+        .nth(1)
+        .expect("status code")
+        .parse()
+        .expect("numeric status");
+    let mut body = raw[split + 4..].to_vec();
+    if head.to_ascii_lowercase().contains("transfer-encoding: chunked") {
+        body = dechunk(&body);
+    }
+    (status, head, body)
+}
+
+/// Reassemble a chunked body (sizes are hex, no extensions used here).
+fn dechunk(mut b: &[u8]) -> Vec<u8> {
+    let mut out = Vec::new();
+    loop {
+        let eol = b
+            .windows(2)
+            .position(|w| w == b"\r\n")
+            .expect("chunk size line");
+        let size_str =
+            std::str::from_utf8(&b[..eol]).expect("utf-8 chunk size");
+        let size =
+            usize::from_str_radix(size_str.trim(), 16).expect("hex size");
+        if size == 0 {
+            return out;
+        }
+        out.extend_from_slice(&b[eol + 2..eol + 2 + size]);
+        b = &b[eol + 2 + size + 2..]; // skip the chunk's trailing CRLF
+    }
+}
+
+fn json_body(body: &[u8]) -> JsonValue {
+    parse(body).unwrap_or_else(|e| {
+        panic!(
+            "response body is not valid JSON: {e}\n{}",
+            String::from_utf8_lossy(body)
+        )
+    })
+}
+
+fn error_kind(body: &[u8]) -> String {
+    json_body(body)
+        .get("error")
+        .and_then(|e| e.get("kind"))
+        .and_then(JsonValue::as_str)
+        .expect("structured error body")
+        .to_string()
+}
+
+/// Poll `/v1/stats` until `pred` holds or the deadline passes; returns
+/// the last snapshot either way.
+fn poll_stats(
+    addr: SocketAddr,
+    deadline: Duration,
+    pred: impl Fn(&JsonValue) -> bool,
+) -> JsonValue {
+    let start = Instant::now();
+    loop {
+        let (status, _, body) = request(addr, "GET", "/v1/stats", None);
+        assert_eq!(status, 200, "stats must stay readable while serving");
+        let v = json_body(&body);
+        if pred(&v) || start.elapsed() > deadline {
+            return v;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+fn counter(v: &JsonValue, field: &str) -> f64 {
+    v.get(field).and_then(JsonValue::as_num).unwrap_or(-1.0)
+}
+
+// ------------------------------------------------------------- tests
+
+#[test]
+fn http_generate_matches_serve_and_streaming_concatenates() {
+    let Some((rt, manifest)) = env() else { return };
+    let Some(eng) = engine(&rt, &manifest) else { return };
+    let sampler = Sampler { max_new_tokens: 8, ..Sampler::default() };
+    let prompts = ["copy ab", "rev abcd", "up hi"];
+
+    // ground truth straight through the engine, same settings
+    let mut reference = eng
+        .session()
+        .sampler(sampler.clone())
+        .greedy(true)
+        .build()
+        .unwrap();
+    let expected: Vec<String> = reference
+        .serve(prompts.iter().map(|p| GenRequest::new(*p)).collect())
+        .unwrap()
+        .outputs
+        .into_iter()
+        .map(|o| o.text)
+        .collect();
+    drop(reference);
+
+    let mut session = eng
+        .session()
+        .sampler(sampler)
+        .greedy(true)
+        .build()
+        .unwrap();
+    let server = HttpServer::bind(ServerConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 2,
+        ..ServerConfig::default()
+    })
+    .unwrap();
+    let addr = server.local_addr().unwrap();
+
+    let report = std::thread::scope(|scope| {
+        scope.spawn(|| {
+            let (status, _, body) = request(addr, "GET", "/healthz", None);
+            assert_eq!(status, 200);
+            assert_eq!(json_body(&body).to_string(), r#"{"status":"ok"}"#);
+
+            for (prompt, expect) in prompts.iter().zip(&expected) {
+                // non-streamed: one JSON body, bit-identical text
+                let body = format!(r#"{{"prompt":{}}}"#, JsonValue::s(*prompt));
+                let (status, _, resp) =
+                    request(addr, "POST", "/v1/generate", Some(&body));
+                assert_eq!(status, 200, "{}", String::from_utf8_lossy(&resp));
+                let v = json_body(&resp);
+                assert_eq!(v.get("outcome").and_then(JsonValue::as_str),
+                           Some("done"));
+                assert_eq!(
+                    v.get("text").and_then(JsonValue::as_str),
+                    Some(expect.as_str()),
+                    "HTTP generate diverged from Session::serve for {prompt:?}"
+                );
+
+                // streamed: chunked JSON lines; the token fields
+                // concatenate to the done line's text, which matches too
+                let body = format!(
+                    r#"{{"prompt":{},"stream":true}}"#,
+                    JsonValue::s(*prompt)
+                );
+                let (status, head, resp) =
+                    request(addr, "POST", "/v1/generate", Some(&body));
+                assert_eq!(status, 200);
+                assert!(
+                    head.to_ascii_lowercase()
+                        .contains("transfer-encoding: chunked"),
+                    "streamed responses use chunked transfer"
+                );
+                let text = String::from_utf8(resp).unwrap();
+                let lines: Vec<JsonValue> = text
+                    .lines()
+                    .map(|l| json_body(l.as_bytes()))
+                    .collect();
+                let (done, tokens) = lines.split_last().expect("a done line");
+                assert_eq!(done.get("done"), Some(&JsonValue::Bool(true)));
+                assert_eq!(done.get("outcome").and_then(JsonValue::as_str),
+                           Some("done"));
+                let concat: String = tokens
+                    .iter()
+                    .map(|l| {
+                        l.get("token")
+                            .and_then(JsonValue::as_str)
+                            .expect("token line")
+                    })
+                    .collect();
+                assert_eq!(
+                    done.get("text").and_then(JsonValue::as_str),
+                    Some(concat.as_str()),
+                    "streamed tokens must concatenate to the final text"
+                );
+                assert_eq!(&concat, expect, "streamed != serve for {prompt:?}");
+            }
+
+            // the error contract, all on live connections:
+            // malformed JSON → 400 with a structured parse_error body
+            let (status, _, resp) =
+                request(addr, "POST", "/v1/generate", Some("{"));
+            assert_eq!(status, 400);
+            assert_eq!(error_kind(&resp), "parse_error");
+            // missing prompt
+            let (status, _, resp) =
+                request(addr, "POST", "/v1/generate", Some("{}"));
+            assert_eq!(status, 400);
+            assert_eq!(error_kind(&resp), "missing_field");
+            // adapter this session does not serve
+            let (status, _, resp) = request(
+                addr,
+                "POST",
+                "/v1/generate",
+                Some(r#"{"prompt":"p","adapter":"no-such-adapter"}"#),
+            );
+            assert_eq!(status, 400);
+            assert_eq!(error_kind(&resp), "unknown_adapter");
+            // wrong method / unknown route
+            let (status, _, resp) =
+                request(addr, "GET", "/v1/generate", None);
+            assert_eq!(status, 405);
+            assert_eq!(error_kind(&resp), "method_not_allowed");
+            let (status, _, resp) = request(addr, "GET", "/nope", None);
+            assert_eq!(status, 404);
+            assert_eq!(error_kind(&resp), "not_found");
+
+            // stats catch up to all six completed generations
+            let want = (2 * prompts.len()) as f64;
+            let st = poll_stats(addr, Duration::from_secs(10), |v| {
+                counter(v, "completed") == want
+            });
+            assert_eq!(counter(&st, "submitted"), want);
+            assert_eq!(counter(&st, "completed"), want);
+
+            let (status, _, body) =
+                request(addr, "POST", "/v1/shutdown", None);
+            assert_eq!(status, 200);
+            assert_eq!(
+                json_body(&body).to_string(),
+                r#"{"shutting_down":true}"#
+            );
+        });
+        server.run(&mut session).unwrap()
+    });
+
+    assert_eq!(report.outputs.len(), 2 * prompts.len());
+    for out in &report.outputs {
+        assert_eq!(out.outcome, JobOutcome::Done);
+    }
+    assert_eq!(report.stats.completed, 2 * prompts.len() as u64);
+}
+
+#[test]
+fn mid_stream_disconnect_cancels_the_job() {
+    let Some((rt, manifest)) = env() else { return };
+    let Some(eng) = engine(&rt, &manifest) else { return };
+    // plenty of decode steps so the disconnect lands well before the
+    // generation could finish on its own
+    let sampler = Sampler { max_new_tokens: 64, ..Sampler::default() };
+    let mut session = eng
+        .session()
+        .sampler(sampler)
+        .greedy(true)
+        .build()
+        .unwrap();
+    let server = HttpServer::bind(ServerConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 2,
+        ..ServerConfig::default()
+    })
+    .unwrap();
+    let addr = server.local_addr().unwrap();
+
+    let report = std::thread::scope(|scope| {
+        scope.spawn(|| {
+            // open a streamed generation and hang up immediately: the
+            // worker's next chunk write fails, which must flip the
+            // job's cancel handle
+            {
+                let mut stream = TcpStream::connect(addr).expect("connect");
+                let body = r#"{"prompt":"copy abcdefgh","stream":true}"#;
+                let head = format!(
+                    "POST /v1/generate HTTP/1.1\r\nHost: t\r\n\
+                     Content-Length: {}\r\n\r\n",
+                    body.len()
+                );
+                stream.write_all(head.as_bytes()).expect("write");
+                stream.write_all(body.as_bytes()).expect("write");
+                // dropped here: FIN now, RST on the server's next write
+            }
+            // stats stay readable throughout, and the cancellation
+            // shows up in them — the row was freed, not leaked
+            let st = poll_stats(addr, Duration::from_secs(30), |v| {
+                counter(v, "cancelled") >= 1.0
+            });
+            assert!(
+                counter(&st, "cancelled") >= 1.0,
+                "disconnect never cancelled the job: {st}"
+            );
+            assert_eq!(
+                counter(&st, "active_rows"),
+                0.0,
+                "cancelled row must be freed"
+            );
+
+            let (status, _, _) = request(addr, "POST", "/v1/shutdown", None);
+            assert_eq!(status, 200);
+        });
+        server.run(&mut session).unwrap()
+    });
+
+    assert!(
+        report
+            .outputs
+            .iter()
+            .any(|o| o.outcome == JobOutcome::Cancelled),
+        "the disconnected job must end Cancelled in the report"
+    );
+    assert_eq!(report.stats.cancelled, 1);
+}

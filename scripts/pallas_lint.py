@@ -405,7 +405,16 @@ HOT_PATH_FILES = {
     "rust/src/engine/decode.rs",
     "rust/src/paged/blocks.rs",
     "rust/src/paged/pool.rs",
+    # the network boundary parses untrusted bytes: a panic here is a
+    # remote denial-of-service, so it gets the line-by-line treatment
+    "rust/src/serve/json.rs",
+    "rust/src/serve/http.rs",
 }
+
+# pub fns under these prefixes form the serving API surface checked by
+# result-not-panic-api (minus the HOT_PATH_FILES, which no-hot-path-panic
+# already covers line by line)
+API_SURFACE_PREFIXES = ("rust/src/engine/", "rust/src/serve/")
 
 ACCOUNTING_PREFIXES = ("rust/src/tensorio/", "rust/src/paged/")
 ACCOUNTING_FILES = {"rust/src/engine/scheduler.rs"}
@@ -584,12 +593,12 @@ def rule_scoped_threads_only(ctx):
 
 
 def rule_result_not_panic_api(ctx):
-    """(7) result-not-panic-api: `pub fn`s in engine/ are the serving
-    API surface; they must surface errors as `Result`, not panics.
-    The four hot-path files are already covered line-by-line by
+    """(7) result-not-panic-api: `pub fn`s in engine/ and serve/ are the
+    serving API surface; they must surface errors as `Result`, not
+    panics. The hot-path files are already covered line-by-line by
     no-hot-path-panic and are exempt here to avoid double findings."""
     if (
-        not ctx.path.startswith("rust/src/engine/")
+        not ctx.path.startswith(API_SURFACE_PREFIXES)
         or ctx.path in HOT_PATH_FILES
     ):
         return []

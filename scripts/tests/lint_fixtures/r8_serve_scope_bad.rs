@@ -1,0 +1,8 @@
+// pallas-lint-fixture: path = rust/src/serve/json.rs
+// pallas-lint-expect: no-hot-path-panic @ 6; no-hot-path-panic @ 7
+
+// serve/json.rs parses untrusted bytes, so it is in the hot-path scope
+fn first_byte(input: &[u8]) -> u8 {
+    let b = input[0];
+    b.checked_add(1).unwrap()
+}

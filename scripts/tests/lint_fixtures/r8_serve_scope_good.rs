@@ -1,0 +1,11 @@
+// pallas-lint-fixture: path = rust/src/serve/server.rs
+// pallas-lint-expect: result-not-panic-api @ 6
+
+// serve/server.rs is API surface, not in the line-by-line hot-path set
+pub fn decode(body: &[u8]) -> String {
+    String::from_utf8(body.to_vec()).unwrap()
+}
+
+fn private_helper(body: &[u8]) -> Option<&u8> {
+    body.first()
+}
