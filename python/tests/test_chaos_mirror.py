@@ -1,0 +1,347 @@
+"""Python mirror of the Rust chaos property suite
+(`rust/tests/prop_chaos.rs`) — the robustness plane of the serving
+stack: deterministic fault injection (`rust/src/util/faults.rs`),
+request deadlines and cancellation, the decode-step watchdog, and the
+shutdown drain, all layered over the KV block manager.
+
+The build container has no Rust toolchain (see
+`.claude/skills/verify/SKILL.md`), so this line-for-line port is the
+*runnable* verification: the same four invariants the Rust suite
+asserts are re-derived here, seed-for-seed across >= 300 random fault
+schedules, against an independent implementation.
+
+Invariants mirrored (numbering matches `prop_chaos.rs`):
+  1. every submitted request reaches exactly one terminal outcome —
+     no silent drops, no double completions;
+  2. the serve loop never deadlocks or livelocks (hard step bound;
+     fault caps guarantee injected pressure dries up);
+  3. the block-pool structural invariants hold after every step — no
+     leaked, double-freed, or miscounted KV block;
+  4. the drain completes: once arrivals stop, the scheduler reaches
+     `finished()` with a result for everything admitted.
+
+The block manager and admission core are the ones already mirrored in
+`test_blocks_mirror.py`; this file adds the chaos machinery on top
+(fault lanes, expiry sweep, watchdog) exactly as the Rust scheduler
+grew it.
+"""
+
+import random
+
+import pytest
+from test_blocks_mirror import BlockManager, Scheduler, blocks_for
+
+# ---------------------------------------------------------------------------
+# Fault plane mirror (util/faults.rs) — one seeded lane per site; a lane
+# draws independently of every other RNG in the system, fires with
+# probability p, and stops for good once its cap is spent
+
+
+class FaultLane:
+    def __init__(self, seed, p, cap=None):
+        self.rng = random.Random(seed)
+        self.p = p
+        self.cap = cap
+        self.fired = 0
+
+    def fire(self):
+        if self.cap is not None and self.fired >= self.cap:
+            return False
+        if self.rng.random() >= self.p:
+            return False
+        self.fired += 1
+        return True
+
+
+class FaultyBlockManager(BlockManager):
+    """`BlockManager` with the `block-alloc` fault site: an armed lane
+    can turn any allocating append into `need_block`, indistinguishable
+    from genuine pool exhaustion (which is the point — the caller's
+    swap-out path must absorb both identically)."""
+
+    def __init__(self, *args, alloc_faults=None, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.alloc_faults = alloc_faults
+
+    def append(self, row, token):
+        # the lane is consulted only where the Rust code would reach an
+        # alloc site: a fresh block boundary or a CoW fork of a shared
+        # tail
+        pos = self.row_len[row] % self.bt
+        allocating = pos == 0 or self.pool.refcounts[self.rows[row][-1]] > 1
+        if allocating and self.alloc_faults and self.alloc_faults.fire():
+            return "need_block"
+        return super().append(row, token)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler mirror extension (engine/scheduler.rs) — deadlines,
+# cancellation, the decode-step watchdog, and typed early outcomes, on
+# top of the blocks-mode admission core from test_blocks_mirror
+
+
+class ChaosScheduler(Scheduler):
+    def __init__(self, capacity, block_cfg, watchdog=None):
+        super().__init__(capacity, block_cfg=dict(block_cfg))
+        self.watchdog = watchdog  # ms of no progress before TimedOut
+        self.timed_out_jobs = 0
+
+    # replace the manager with the fault-site-aware one, same config
+    def arm_faults(self, alloc_faults):
+        assert self.mgr.blocks_in_use() == 0, "arm before serving"
+        self.mgr = FaultyBlockManager(
+            self.mgr.bt, self.mgr.n_blocks(), sharing=self.mgr.sharing,
+            headroom=self.mgr.headroom, alloc_faults=alloc_faults)
+
+    def submit(self, prompt, max_new, now, priority="normal",
+               deadline_ms=None):
+        jid = super().submit(prompt, max_new, priority=priority)
+        self.meta[jid].update(
+            deadline=None if deadline_ms is None else now + deadline_ms,
+            cancelled=False, last_progress=now)
+        return jid
+
+    def cancel(self, jid):
+        self.meta[jid]["cancelled"] = True
+
+    def _expiry(self, jid, now):
+        """Mirror of `Scheduler::queued_expiry`: shared by the queued
+        sweep and the in-flight poll so the two can never diverge."""
+        m = self.meta[jid]
+        if m["cancelled"]:
+            return "cancelled"
+        if m["deadline"] is not None and now >= m["deadline"]:
+            return "deadline_exceeded"
+        return None
+
+    def _sweep_queue(self, now):
+        kept = []
+        for q in self.queue:
+            outcome = self._expiry(q["id"], now)
+            if outcome is None:
+                kept.append(q)
+            else:
+                # a swapped-out job keeps the tokens it generated
+                self.results[q["id"]] = (outcome, q["out"])
+        self.queue = kept
+
+    def poll(self, now):
+        self._sweep_queue(now)
+        for row, a in enumerate(self.rows):
+            if a is None:
+                continue
+            outcome = self._expiry(a["id"], now)
+            if outcome is None and self.watchdog is not None:
+                # the resident-only watchdog: no recorded token for the
+                # whole window retires the row rather than stalling the
+                # batch behind a hung step
+                if now - self.meta[a["id"]]["last_progress"] >= self.watchdog:
+                    outcome = "timed_out"
+            if outcome is None:
+                continue
+            self.rows[row] = None
+            self.mgr.release_row(row)
+            if outcome == "timed_out":
+                self.timed_out_jobs += 1
+            self.results[a["id"]] = (outcome, a["out"])
+
+    def admit(self, now):
+        self._sweep_queue(now)
+        placed = super().admit()
+        # admission is forward progress: a job that queued for longer
+        # than the watchdog window must not be retired on arrival
+        for _, jid, _ in placed:
+            self.meta[jid]["last_progress"] = now
+        return placed
+
+    def push(self, row, token, now):
+        recorded = super().push(row, token)
+        if recorded:
+            self.meta[self.rows[row]["id"]]["last_progress"] = now
+        return recorded
+
+
+# ---------------------------------------------------------------------------
+# The chaos schedule driver — `run_chaos_case` in prop_chaos.rs,
+# seed-for-seed
+
+
+def run_chaos_case(seed):
+    rng = random.Random(0xC4A05_0000 + seed)
+    capacity = rng.randint(1, 4)
+    seq_len = rng.randint(8, 23)
+    bt = rng.randint(2, 5)
+    per_row = blocks_for(seq_len, bt)
+    # roomy enough that nothing aborts for sheer size — pressure comes
+    # from co-residents and the injected allocation failures
+    n_blocks = per_row * (capacity + 1)
+    n_jobs = rng.randint(1, 10)
+
+    # every schedule arms block-alloc (capped so it dries up); the lane
+    # seed is drawn from the case RNG, so schedules differ in *where*
+    # faults land, not just in how the jobs look
+    lane = FaultLane(rng.randrange(2 ** 32), 0.6 * rng.random(),
+                     cap=rng.randrange(24))
+    watchdog = rng.randrange(2) == 0
+    sched = ChaosScheduler(
+        capacity, dict(block_tokens=bt, n_blocks=n_blocks),
+        watchdog=rng.randint(30, 79) if watchdog else None)
+    sched.arm_faults(lane)
+
+    # arrivals trickle in until the shutdown drain closes the stream;
+    # requests scheduled to arrive later are never submitted (the HTTP
+    # layer sheds those with a draining 503 before they reach us)
+    drain_at = rng.randint(4, 23)
+    specs = []
+    for _ in range(n_jobs):
+        prompt_len = rng.randint(1, seq_len // 2)
+        specs.append(dict(
+            arrive_at=rng.randrange(24),
+            cancel_at=rng.randrange(40) if rng.randrange(4) == 0 else None,
+            deadline=rng.randrange(4) == 0,
+            # from this step on the job's row is never pushed — a hung
+            # decode step; only assigned when the watchdog is armed
+            stall_at=(rng.randrange(30)
+                      if watchdog and rng.randrange(5) == 0 else None),
+            prompt_len=prompt_len,
+            max_new=rng.randrange(seq_len - prompt_len + 1),
+            jid=None))
+
+    now = 0.0
+    step = 0
+    spec_of_job = []
+    while True:
+        no_more_arrivals = step >= drain_at or all(
+            s["jid"] is not None or s["arrive_at"] < step for s in specs)
+        if no_more_arrivals and sched.finished():
+            break  # the drain completed (invariant 4)
+        # invariant 2: no deadlock/livelock under any schedule
+        assert step < 10_000, f"chaos case {seed}: drain never completed"
+        now += rng.randint(1, 4)
+
+        if step < drain_at:
+            for i, spec in enumerate(specs):
+                if spec["arrive_at"] == step and spec["jid"] is None:
+                    jid = sched.submit(
+                        [0] * spec["prompt_len"], spec["max_new"], now,
+                        priority=rng.choice(["low", "normal", "high"]),
+                        deadline_ms=(rng.randint(10, 89)
+                                     if spec["deadline"] else None))
+                    assert jid == len(spec_of_job)
+                    spec_of_job.append(i)
+                    spec["jid"] = jid
+        for spec in specs:
+            if spec["jid"] is not None and spec["cancel_at"] == step:
+                sched.cancel(spec["jid"])
+
+        # --- the serve loop, verbatim ---
+        sched.poll(now)
+        sched.admit(now)
+        sched.swapped.clear()
+        for row in range(len(sched.rows)):
+            if sched.rows[row] and sched.budget_exhausted(row, seq_len):
+                sched.retire(row)
+        for row in range(len(sched.rows)):
+            a = sched.rows[row]
+            if a is None:
+                continue  # swapped out by an earlier push this step
+            spec = specs[spec_of_job[a["id"]]]
+            if spec["stall_at"] is not None and step >= spec["stall_at"]:
+                # a hung decode step: record nothing for this row, ever
+                # again — the armed watchdog must retire it
+                pass
+            elif rng.randrange(8) == 0:
+                sched.retire(row)  # "EOS"
+            else:
+                # stamp every token with its job id (invariant 1)
+                sched.push(row, 1000 + a["id"], now)
+        sched.swapped.clear()
+        # invariant 3: block-pool consistency after every single step
+        assert sched.mgr.blocks_in_use() <= sched.mgr.n_blocks()
+        sched.mgr.check_invariants()
+        step += 1
+
+    submitted = [s for s in specs if s["jid"] is not None]
+    # invariant 1: exactly one terminal outcome per submitted request
+    assert len(sched.results) == len(submitted), (
+        f"chaos case {seed}: outcome count mismatch")
+    assert all(r is not None for r in sched.results), (
+        f"chaos case {seed}: a submitted job never reached an outcome")
+    for jid, (outcome, tokens) in enumerate(sched.results):
+        assert all(t == 1000 + jid for t in tokens), (
+            f"chaos case {seed}: job {jid} holds foreign tokens {tokens}")
+        spec = specs[spec_of_job[jid]]
+        assert len(tokens) <= spec["max_new"], (
+            f"chaos case {seed}: job {jid} overran max_new")
+        assert outcome != "aborted", (
+            f"chaos case {seed}: faults must degrade, never abort")
+        # a job nobody interfered with ends done; a stalled job is
+        # either done (it finished before its hang began) or retired
+        # timed_out by the watchdog — never stuck, never anything else
+        if spec["cancel_at"] is None and not spec["deadline"]:
+            if spec["stall_at"] is None:
+                assert outcome == "done", (
+                    f"chaos case {seed}: undisturbed job {jid} "
+                    f"ended {outcome}")
+            else:
+                assert outcome in ("done", "timed_out"), (
+                    f"chaos case {seed}: stalled job {jid} ended {outcome}")
+    return sched
+
+
+# >= 300 distinct seeded schedules, matching the Rust suite's count
+@pytest.mark.parametrize("seed", range(300))
+def test_chaos_schedules_preserve_serving_invariants(seed):
+    run_chaos_case(seed)
+
+
+def test_chaos_sampling_exercises_every_early_outcome():
+    """The 300 schedules must actually hit the interesting paths —
+    cancellation, deadline expiry, watchdog retirement, and at least
+    one injected allocation fault — or the suite is vacuous."""
+    outcomes = set()
+    any_fault_fired = False
+    for seed in range(300):
+        sched = run_chaos_case(seed)
+        outcomes.update(o for o, _ in sched.results)
+        any_fault_fired |= sched.mgr.alloc_faults.fired > 0
+    assert {"done", "cancelled", "deadline_exceeded",
+            "timed_out"} <= outcomes, f"sampling too narrow: {outcomes}"
+    assert any_fault_fired, "no schedule ever fired the block-alloc lane"
+
+
+def test_watchdog_drains_a_fully_stalled_schedule():
+    # the pathological schedule: every step stalls (nothing is ever
+    # pushed); without the watchdog this would spin at the step bound,
+    # with it every job is retired timed_out and the drain completes
+    sched = ChaosScheduler(2, dict(block_tokens=4, n_blocks=16), watchdog=40)
+    now = 0.0
+    for _ in range(4):
+        sched.submit([0, 0, 0], 8, now)
+    steps = 0
+    while not sched.finished():
+        assert steps < 1_000, "watchdog never drained the stall"
+        now += 10
+        sched.poll(now)
+        sched.admit(now)
+        sched.swapped.clear()
+        sched.mgr.check_invariants()
+        steps += 1
+    assert len(sched.results) == 4
+    for outcome, tokens in sched.results:
+        assert outcome == "timed_out"
+        assert tokens == []
+    assert sched.timed_out_jobs == 4
+
+
+def test_fault_lane_is_deterministic_and_capped():
+    # two lanes with the same seed fire on exactly the same draws...
+    a = FaultLane(1234, 0.5, cap=None)
+    b = FaultLane(1234, 0.5, cap=None)
+    assert [a.fire() for _ in range(200)] == [b.fire() for _ in range(200)]
+    assert a.fired > 0
+    # ...and a cap stops a lane for good, even at p = 1
+    capped = FaultLane(7, 1.0, cap=3)
+    fires = [capped.fire() for _ in range(10)]
+    assert fires == [True] * 3 + [False] * 7
+    assert capped.fired == 3

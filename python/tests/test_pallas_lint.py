@@ -62,7 +62,7 @@ def test_bad_file_fails_with_finding(tmp_path):
     assert data["findings"][0]["line"] == 2
 
 
-def test_list_rules_names_all_seven():
+def test_list_rules_names_all_eight():
     p = run_lint("--list-rules")
     assert p.returncode == 0
     for rule in [
@@ -73,10 +73,22 @@ def test_list_rules_names_all_seven():
         "no-lossy-as",
         "scoped-threads-only",
         "result-not-panic-api",
+        "no-unbounded-send",
         "unused-waiver",
         "waiver-syntax",
     ]:
         assert rule in p.stdout, f"{rule} missing from --list-rules"
+
+
+def test_unbounded_send_flagged_in_serving_stack_only(mod):
+    src = "pub fn f() { let (_t, _r) = mpsc::channel::<i32>(); }\n"
+    in_serve = mod.lint_text("rust/src/serve/server.rs", src)
+    assert [f.rule for f in in_serve] == ["no-unbounded-send"]
+    bounded = src.replace("mpsc::channel::<i32>()",
+                          "mpsc::sync_channel::<i32>(8)")
+    assert mod.lint_text("rust/src/serve/server.rs", bounded) == []
+    # the serving stack is the scope: quant/ code is untouched
+    assert mod.lint_text("rust/src/quant/kernels.rs", src) == []
 
 
 # ---- direct-import unit coverage ----------------------------------------

@@ -530,7 +530,8 @@ class RequestReader:
 def status_text(status):
     return {
         200: "OK", 400: "Bad Request", 404: "Not Found",
-        405: "Method Not Allowed", 413: "Payload Too Large",
+        405: "Method Not Allowed", 408: "Request Timeout",
+        413: "Payload Too Large", 429: "Too Many Requests",
         500: "Internal Server Error", 503: "Service Unavailable",
     }.get(status, "Unknown")
 
@@ -546,6 +547,17 @@ def write_response(status, content_type, body, keep_alive):
 
 def error_body(kind, message):
     return write({"error": {"kind": kind, "message": message}}).encode()
+
+
+def write_error_after(status, kind, message, retry_after_secs, keep_alive):
+    body = error_body(kind, message)
+    head = (f"HTTP/1.1 {status} {status_text(status)}\r\n"
+            "Content-Type: application/json\r\n"
+            f"Content-Length: {len(body)}\r\n"
+            f"Retry-After: {retry_after_secs}\r\n"
+            f"Connection: {'keep-alive' if keep_alive else 'close'}\r\n"
+            "\r\n")
+    return head.encode() + body
 
 
 def chunked_response(status, content_type, keep_alive, chunks):
@@ -569,7 +581,8 @@ def chunked_response(status, content_type, keep_alive, chunks):
 # serve/server.rs mirror: request decode + response encode
 
 
-OUTCOMES = ("done", "cancelled", "deadline_exceeded", "aborted")
+OUTCOMES = ("done", "cancelled", "deadline_exceeded", "timed_out",
+            "aborted")
 
 
 def decode_generate(body):
@@ -613,6 +626,9 @@ def stats_body(st):
         "completed": float(st["completed"]),
         "cancelled": float(st["cancelled"]),
         "deadline_exceeded": float(st["deadline_exceeded"]),
+        "timed_out_jobs": float(st["timed_out_jobs"]),
+        "shed_requests": float(st["shed_requests"]),
+        "worker_restarts": float(st["worker_restarts"]),
         "preemptions": float(st["preemptions"]),
         "queue_depth": float(st["queue_depth"]),
         "active_rows": float(st["active_rows"]),
@@ -631,6 +647,19 @@ def stats_body(st):
             "swap_outs": float(st["swap_outs"]),
         },
     }
+
+
+def should_shed(pending, st, max_queue):
+    """Mirror of `serve::server::should_shed` (the load-shedding
+    decision): queue watermark first, then resident-token saturation —
+    the latter only when a backlog actually exists, so a lone request
+    against a full batch is still accepted and simply queues."""
+    backlog = pending + st["queue_depth"]
+    if backlog >= max(max_queue, 1):
+        return True
+    budget = st["token_budget"]  # None mirrors usize::MAX (unbounded)
+    bounded = budget is not None and budget > 0
+    return bounded and st["resident_tokens"] >= budget and backlog > 0
 
 
 # ---------------------------------------------------------------------------
@@ -956,6 +985,20 @@ def test_http_error_body_contract():
     assert status_text(418) == "Unknown"
 
 
+def test_http_retry_after_wire_format():
+    # byte-for-byte the Rust unit test `retry_after_wire_format`
+    text = write_error_after(429, "overloaded", "try later", 2, True).decode()
+    assert text.startswith("HTTP/1.1 429 Too Many Requests\r\n")
+    assert "Retry-After: 2\r\n" in text
+    assert "Connection: keep-alive\r\n" in text
+    assert '"kind":"overloaded"' in text
+    text = write_error_after(
+        503, "draining", "shutting down", 1, False).decode()
+    assert text.startswith("HTTP/1.1 503 Service Unavailable\r\n")
+    assert "Retry-After: 1\r\n" in text
+    assert '"kind":"draining"' in text
+
+
 def test_http_chunked_stream_wire_format():
     # byte-for-byte the Rust unit test `chunked_stream_wire_format`
     raw = chunked_response(200, "application/jsonl", False,
@@ -1004,7 +1047,7 @@ def test_response_encoders_are_deterministic():
     assert (done_line("cancelled", "part")
             == '{"done":true,"outcome":"cancelled","text":"part"}\n')
     assert set(OUTCOMES) == {"done", "cancelled", "deadline_exceeded",
-                             "aborted"}
+                             "timed_out", "aborted"}
 
 
 def test_streamed_tokens_concatenate_to_done_text():
@@ -1021,6 +1064,7 @@ def test_streamed_tokens_concatenate_to_done_text():
 
 def test_stats_body_shape_and_roundtrip():
     st = dict(submitted=3, completed=2, cancelled=1, deadline_exceeded=0,
+              timed_out_jobs=4, shed_requests=2, worker_restarts=1,
               preemptions=4, queue_depth=1, active_rows=2,
               resident_tokens=37, reserved_tokens=64, token_budget=None,
               tokens_generated=21, mean_ttft_ms=1.5, tokens_per_sec=88.0,
@@ -1031,7 +1075,28 @@ def test_stats_body_shape_and_roundtrip():
     assert v["submitted"] == 3.0
     assert v["token_budget"] is None  # unbounded budget encodes as null
     assert v["blocks"]["kv_blocks"] == 8.0
+    assert v["shed_requests"] == 2.0
+    assert v["worker_restarts"] == 1.0
+    assert v["timed_out_jobs"] == 4.0
     assert canon(json.loads(body)) == canon(v)
     # a bounded budget is a number
     st["token_budget"] = 512
     assert parse(write(stats_body(st)))["token_budget"] == 512.0
+
+
+def test_should_shed_watermarks():
+    # mirror of the Rust unit test `should_shed_watermarks`
+    st = dict(queue_depth=0, resident_tokens=0, token_budget=None)
+    # below the queue watermark: admit
+    assert not should_shed(0, st, 4)
+    assert not should_shed(3, st, 4)
+    # at the watermark (pending + queued): shed
+    assert should_shed(4, st, 4)
+    st["queue_depth"] = 2
+    assert should_shed(2, st, 4)
+    # resident-token pressure only sheds when a backlog exists
+    st = dict(queue_depth=0, resident_tokens=100, token_budget=100)
+    assert not should_shed(0, st, 4), "saturated but idle: admit"
+    assert should_shed(1, st, 4), "saturated with backlog: shed"
+    st["resident_tokens"] = 99
+    assert not should_shed(1, st, 4)

@@ -60,6 +60,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Result};
 
 use crate::paged::{AppendOutcome, BlockConfig, BlockId, BlockManager};
+use crate::util::faults::Faults;
 
 /// Job identifier: the submission index, which is also the job's slot in
 /// [`Scheduler::take_results`].
@@ -166,6 +167,11 @@ pub enum JobOutcome {
     Cancelled,
     /// Its deadline passed before completion (queued or in flight).
     DeadlineExceeded,
+    /// Retired by the decode-step watchdog: the job made no forward
+    /// progress for the whole watchdog window (see
+    /// [`Scheduler::set_watchdog`]), so it was evicted rather than
+    /// allowed to stall the batch.
+    TimedOut,
     /// The driving loop stopped before the job terminated.
     Aborted,
 }
@@ -203,7 +209,8 @@ pub struct Retirement {
     pub row: usize,
     /// The job that was retired.
     pub job: JobId,
-    /// Why it was retired (`Cancelled` or `DeadlineExceeded`).
+    /// Why it was retired (`Cancelled`, `DeadlineExceeded`, or
+    /// `TimedOut` from the decode-step watchdog).
     pub outcome: JobOutcome,
 }
 
@@ -233,7 +240,19 @@ pub struct ServerStats {
     pub cancelled: u64,
     /// Jobs that hit their deadline (queued or in flight).
     pub deadline_exceeded: u64,
-    /// In-flight retirements (cancel/deadline) — rows vacated mid-decode.
+    /// Jobs retired by the decode-step watchdog
+    /// ([`JobOutcome::TimedOut`]): no forward progress for the whole
+    /// watchdog window.
+    pub timed_out_jobs: u64,
+    /// Requests shed at the door by overload control (429/503 before a
+    /// job was ever submitted). Filled by the serving layer — the
+    /// scheduler never sees a shed request.
+    pub shed_requests: u64,
+    /// HTTP worker threads respawned after a panic. Filled by the
+    /// serving layer.
+    pub worker_restarts: u64,
+    /// In-flight retirements (cancel/deadline/watchdog) — rows vacated
+    /// mid-decode.
     pub preemptions: u64,
     /// Jobs currently waiting for a row.
     pub queue_depth: usize,
@@ -310,6 +329,12 @@ impl ServerStats {
             self.tokens_per_sec(),
             self.mean_ttft_ms(),
         );
+        if self.timed_out_jobs + self.shed_requests + self.worker_restarts > 0 {
+            line.push_str(&format!(
+                "; {} timed-out, {} shed, {} worker restarts",
+                self.timed_out_jobs, self.shed_requests, self.worker_restarts,
+            ));
+        }
         if self.kv_blocks > 0 {
             line.push_str(&format!(
                 "; KV {}/{} blocks of {} tokens, {} shared hits, \
@@ -336,6 +361,9 @@ struct JobMeta {
     max_new_tokens: usize,
     /// admission rounds spent waiting in the queue (drives aging)
     waited_rounds: usize,
+    /// last forward progress while resident: reset at admission, bumped
+    /// by every recorded token (drives the decode-step watchdog)
+    last_progress: Instant,
 }
 
 impl JobMeta {
@@ -404,11 +432,16 @@ pub struct Scheduler {
     /// jobs that reached a terminal outcome since the last
     /// [`Scheduler::drain_finished`]
     newly_finished: Vec<JobId>,
+    /// decode-step watchdog: a resident row making no forward progress
+    /// for this long is retired [`JobOutcome::TimedOut`] at the next
+    /// [`Scheduler::poll`] (`None` = no watchdog)
+    watchdog: Option<Duration>,
     // --- stats accumulators (terminal outcomes counted incrementally so
     // the per-step `stats()` snapshot never rescans `results`) ---
     n_done: u64,
     n_cancelled: u64,
     n_deadline: u64,
+    n_timed_out: u64,
     preemptions: u64,
     tokens_generated: u64,
     ttft_total: Duration,
@@ -443,6 +476,34 @@ impl Scheduler {
         Ok(Scheduler::with_memory(capacity, Memory::Blocks { mgr }))
     }
 
+    /// Arm (or disarm, with `None`) the decode-step watchdog: a
+    /// resident row that records no token for `window` is retired with
+    /// [`JobOutcome::TimedOut`] at the next [`Scheduler::poll`] instead
+    /// of stalling the batch. The clock is the caller's `now` — pure
+    /// bookkeeping, like deadlines.
+    pub fn set_watchdog(&mut self, window: Option<Duration>) {
+        self.watchdog = window;
+    }
+
+    /// Thread the fault-injection plane down to the KV block manager
+    /// (`block-alloc` failures at the append boundary, which surface as
+    /// ordinary [`AppendOutcome::NeedBlock`] pressure). No-op in
+    /// token-budget mode or with a disabled handle.
+    pub fn set_faults(&mut self, faults: Faults) {
+        if let Memory::Blocks { mgr } = &mut self.memory {
+            mgr.set_faults(faults);
+        }
+    }
+
+    /// Run the KV block manager's structural self-check (see
+    /// [`BlockManager::check_invariants`]); the chaos property suite
+    /// calls this after every step. No-op in token-budget mode.
+    pub fn check_block_invariants(&self) {
+        if let Memory::Blocks { mgr } = &self.memory {
+            mgr.check_invariants();
+        }
+    }
+
     fn with_memory(capacity: usize, memory: Memory) -> Scheduler {
         Scheduler {
             queue: VecDeque::new(),
@@ -452,9 +513,11 @@ impl Scheduler {
             memory,
             swapped: Vec::new(),
             newly_finished: Vec::new(),
+            watchdog: None,
             n_done: 0,
             n_cancelled: 0,
             n_deadline: 0,
+            n_timed_out: 0,
             preemptions: 0,
             tokens_generated: 0,
             ttft_total: Duration::ZERO,
@@ -487,6 +550,7 @@ impl Scheduler {
             submitted_at: now,
             max_new_tokens: req.max_new_tokens,
             waited_rounds: 0,
+            last_progress: now,
         });
         self.queue.push_back(Queued { id, prompt: req.prompt, out: Vec::new() });
         (id, cancel)
@@ -498,6 +562,7 @@ impl Scheduler {
             JobOutcome::Done => self.n_done += 1,
             JobOutcome::Cancelled => self.n_cancelled += 1,
             JobOutcome::DeadlineExceeded => self.n_deadline += 1,
+            JobOutcome::TimedOut => self.n_timed_out += 1,
             JobOutcome::Aborted => {}
         }
         // pallas-lint: allow(no-hot-path-panic) — ids are indices minted by submit; results grows in lockstep
@@ -571,8 +636,19 @@ impl Scheduler {
             // pallas-lint: allow(no-hot-path-panic) — row ranges over 0..rows.len()
             let Some(a) = self.rows[row].as_ref() else { continue };
             // same expiry rules as for queued jobs (the helper reads
-            // only the job's metadata, nothing queue-specific)
-            let Some(outcome) = self.queued_expiry(a.id, now) else {
+            // only the job's metadata, nothing queue-specific), plus
+            // the resident-only watchdog: no recorded token for the
+            // whole window retires the row rather than stalling the
+            // batch behind a hung step
+            let expiry = self.queued_expiry(a.id, now).or_else(|| {
+                let stalled = self.watchdog.is_some_and(|w| {
+                    // pallas-lint: allow(no-hot-path-panic) — ids are indices minted by submit; meta grows in lockstep
+                    let last = self.meta[a.id].last_progress;
+                    now.saturating_duration_since(last) >= w
+                });
+                stalled.then_some(JobOutcome::TimedOut)
+            });
+            let Some(outcome) = expiry else {
                 continue;
             };
             // pallas-lint: allow(no-hot-path-panic) — resident: checked two lines up
@@ -607,6 +683,12 @@ impl Scheduler {
         let mut memory = std::mem::replace(&mut self.memory, Memory::taken());
         let placed = self.admit_inner(&mut memory);
         self.memory = memory;
+        // admission is forward progress: a job that queued for longer
+        // than the watchdog window must not be retired on arrival
+        for a in &placed {
+            // pallas-lint: allow(no-hot-path-panic) — ids are indices minted by submit; meta grows in lockstep
+            self.meta[a.job].last_progress = now;
+        }
         // single aging pass: every job still queued after this round —
         // skipped for budget, skipped because rows ran out, or swapped
         // out during the round — waited one more round. (Both previous
@@ -886,6 +968,8 @@ impl Scheduler {
             self.ttft_count += 1;
         }
         a.out.push(token);
+        // pallas-lint: allow(no-hot-path-panic) — ids are indices minted by submit; meta grows in lockstep
+        self.meta[a.id].last_progress = now;
         self.tokens_generated += 1;
         Ok(true)
     }
@@ -956,6 +1040,11 @@ impl Scheduler {
             completed: self.n_done,
             cancelled: self.n_cancelled,
             deadline_exceeded: self.n_deadline,
+            timed_out_jobs: self.n_timed_out,
+            // shed requests and worker restarts happen above the
+            // scheduler; the serving layer merges them into snapshots
+            shed_requests: 0,
+            worker_restarts: 0,
             preemptions: self.preemptions,
             queue_depth: self.queue.len(),
             active_rows: self.rows.iter().flatten().count(),
@@ -1304,6 +1393,55 @@ mod tests {
         assert_eq!(results[0].outcome, JobOutcome::DeadlineExceeded);
         assert_eq!(results[0].tokens, vec![7], "partial output kept");
         assert_eq!(results[1].outcome, JobOutcome::DeadlineExceeded);
+    }
+
+    #[test]
+    fn watchdog_retires_a_stalled_row_with_timed_out() {
+        let now = t0();
+        let mut s = Scheduler::new(1);
+        s.set_watchdog(Some(Duration::from_millis(50)));
+        s.submit(req(&[1, 2], 8), now);
+        s.admit(now);
+        let mid = now + Duration::from_millis(30);
+        s.push(0, 7, mid).unwrap();
+        // 30 ms since the last token: inside the window
+        assert!(s.poll(mid + Duration::from_millis(30)).is_empty());
+        // 60 ms without progress: the watchdog evicts the row
+        let retired = s.poll(mid + Duration::from_millis(60));
+        assert_eq!(retired.len(), 1);
+        assert_eq!(retired[0].row, 0);
+        assert_eq!(retired[0].outcome, JobOutcome::TimedOut);
+        assert!(s.finished());
+        let st = s.stats();
+        assert_eq!(st.timed_out_jobs, 1);
+        assert_eq!(st.preemptions, 1);
+        assert!(st.summary().contains("1 timed-out"));
+        let results = s.take_results();
+        assert_eq!(results[0].outcome, JobOutcome::TimedOut);
+        assert_eq!(results[0].tokens, vec![7], "partial output kept");
+    }
+
+    #[test]
+    fn watchdog_spares_queued_jobs_and_restarts_at_admission() {
+        let now = t0();
+        let mut s = Scheduler::new(1);
+        s.set_watchdog(Some(Duration::from_millis(10)));
+        s.submit(req(&[1], 8), now);
+        s.submit(req(&[2], 8), now);
+        s.admit(now);
+        s.retire(0).unwrap();
+        // job 1 has queued far past the window; queue wait is governed
+        // by deadlines, never the watchdog
+        let late = now + Duration::from_millis(100);
+        assert!(s.poll(late).is_empty(), "queued jobs are exempt");
+        let placed = s.admit(late);
+        assert_eq!(placed.len(), 1, "stale queue wait does not block admission");
+        assert!(
+            s.poll(late + Duration::from_millis(9)).is_empty(),
+            "the window restarts at admission"
+        );
+        let retired = s.poll(late + Duration::from_millis(10));
+        assert_eq!(retired[0].outcome, JobOutcome::TimedOut);
     }
 
     #[test]

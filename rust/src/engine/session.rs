@@ -36,6 +36,7 @@ use crate::data::batching::{Batch, Batcher};
 use crate::data::tokenizer::{Tokenizer, BOS, EOS, SEP};
 use crate::paged::BlockConfig;
 use crate::runtime::executor::literal_scalar_f32;
+use crate::util::faults::{FaultSite, Faults};
 use crate::util::rng::Rng;
 
 use super::decode::{CachedDecode, DecodeGraph, DecodeMode, FullDecode};
@@ -57,6 +58,8 @@ pub struct SessionBuilder<'e> {
     kv_block_tokens: Option<usize>,
     kv_blocks: Option<usize>,
     prefix_sharing: bool,
+    watchdog: Option<Duration>,
+    faults: Faults,
 }
 
 impl<'e> SessionBuilder<'e> {
@@ -72,6 +75,8 @@ impl<'e> SessionBuilder<'e> {
             kv_block_tokens: None,
             kv_blocks: None,
             prefix_sharing: true,
+            watchdog: None,
+            faults: Faults::disabled(),
         }
     }
 
@@ -143,6 +148,25 @@ impl<'e> SessionBuilder<'e> {
         self
     }
 
+    /// Arm the decode-step watchdog: an in-flight request that records
+    /// no token for `window` is retired with
+    /// [`JobOutcome::TimedOut`](super::JobOutcome::TimedOut) instead of
+    /// occupying its row forever (default: no watchdog). The window
+    /// restarts at admission, so queue wait never counts against it.
+    pub fn watchdog(mut self, window: Duration) -> Self {
+        self.watchdog = Some(window);
+        self
+    }
+
+    /// Attach a fault-injection plane (see [`crate::util::faults`]).
+    /// The engine-side sites fire from this handle: `decode-delay`
+    /// before each decode step, `block-alloc` inside the KV block
+    /// manager. Disabled by default — and zero-cost then.
+    pub fn faults(mut self, faults: Faults) -> Self {
+        self.faults = faults;
+        self
+    }
+
     /// Validate the adapter and produce the session.
     pub fn build(self) -> Result<Session<'e>> {
         // resolve once so a typo fails at build time, not mid-decode
@@ -177,6 +201,8 @@ impl<'e> SessionBuilder<'e> {
             decode: self.decode,
             token_budget: self.token_budget,
             block_cfg,
+            watchdog: self.watchdog,
+            faults: self.faults,
             rng: Rng::new(self.seed),
             tok,
             tokens_generated: 0,
@@ -364,6 +390,11 @@ pub struct Session<'e> {
     /// Block-granular KV admission config (ignored when `token_budget`
     /// is set); see [`SessionBuilder::kv_blocks`].
     pub block_cfg: BlockConfig,
+    /// Decode-step watchdog window; see [`SessionBuilder::watchdog`].
+    pub watchdog: Option<Duration>,
+    /// Fault-injection handle for the engine-side sites; see
+    /// [`SessionBuilder::faults`].
+    pub faults: Faults,
     rng: Rng,
     tok: Tokenizer,
     /// cumulative count of sampled (emitted) tokens — serving metric
@@ -532,6 +563,8 @@ impl<'e> Session<'e> {
                 self.block_cfg.clone(),
             )?,
         };
+        sched.set_watchdog(self.watchdog);
+        sched.set_faults(self.faults.clone());
         // (sampler, greedy) per job: a per-request sampler is a complete
         // override, so the session's greedy flag only applies to
         // requests that inherit the session sampler
@@ -588,6 +621,11 @@ impl<'e> Session<'e> {
             let rows = sched.active_rows();
             if rows.is_empty() {
                 continue; // freed rows refill on the next iteration
+            }
+            // injected fault: a stalled accelerator step (what the
+            // decode-step watchdog exists to catch)
+            if self.faults.fire(FaultSite::DecodeDelay) {
+                std::thread::sleep(self.faults.delay());
             }
             let logits = graph.step(&rows)?;
             let now = Instant::now();
@@ -659,6 +697,8 @@ impl<'e> Session<'e> {
                 self.block_cfg.clone(),
             )?,
         };
+        sched.set_watchdog(self.watchdog);
+        sched.set_faults(self.faults.clone());
         // (sampler, greedy) and driver tag per job id; ids are minted
         // sequentially by submit, so plain Vecs stay in lockstep
         let mut samplers: Vec<(Sampler, bool)> = Vec::new();
@@ -742,6 +782,11 @@ impl<'e> Session<'e> {
                     stats: sched.stats(),
                 });
                 continue;
+            }
+            // injected fault: a stalled accelerator step (what the
+            // decode-step watchdog exists to catch)
+            if self.faults.fire(FaultSite::DecodeDelay) {
+                std::thread::sleep(self.faults.delay());
             }
             let logits = graph.step(&rows)?;
             let now = Instant::now();

@@ -45,6 +45,7 @@ use qlora::runtime::artifact::Manifest;
 use qlora::runtime::client::Runtime;
 use qlora::serve::{HttpServer, ServerConfig};
 use qlora::util::cli::Args;
+use qlora::util::faults::Faults;
 
 fn main() {
     if let Err(e) = run() {
@@ -71,7 +72,15 @@ fn usage() -> &'static str {
      [sampling flags as generate]\n\
        serve-http  --artifact <name> [--ckpt ...] [--adapter <name>] \
      [--addr 127.0.0.1:8080] [--workers 4] [--max-body-kb 1024] \
-     [session flags as serve]\n\
+     [--max-connections 128] [--max-queue 256 (shed 429 past this \
+     backlog)] [--request-timeout-ms MS (wall-clock cap -> scheduler \
+     deadline)] [--watchdog-ms MS (retire stalled jobs as timed_out)] \
+     [--header-deadline-ms 2000 (slowloris guard)] [--write-timeout-ms \
+     10000] [--channel-depth 64 (per-job token buffer; slow consumers \
+     are cancelled)] [--retry-after-secs 1] [--faults \
+     \"seed=S,delay-ms=MS,<site>=<p>[x<max>],...\" or $QLORA_FAULTS \
+     (sites: slow-write conn-reset worker-panic block-alloc \
+     decode-delay)] [session flags as serve]\n\
        arena       --artifact <name> --adapters \"tuned=ck.tensors[,...]\" \
      [--n-prompts N] [--judge gpt4|human] [--orderings N]\n\
        quantize    [--dtype nf4] [--block 64] [--dq]\n\
@@ -391,12 +400,68 @@ fn run() -> Result<()> {
                 builder = builder.kv_blocks(n.parse()?);
             }
             builder = builder.prefix_sharing(!args.flag("no-prefix-sharing"));
+            // deterministic fault injection: --faults wins over the
+            // QLORA_FAULTS env var; one shared plan drives both the
+            // engine-side sites (decode-delay, block-alloc) and the
+            // serving-side ones (slow-write, conn-reset, worker-panic)
+            let env_spec = std::env::var("QLORA_FAULTS").ok();
+            let fault_spec =
+                args.get("faults").or(env_spec.as_deref());
+            let faults = match fault_spec {
+                Some(spec) => Faults::from_spec(spec)
+                    .map_err(|e| anyhow::anyhow!("--faults: {e}"))?,
+                None => Faults::disabled(),
+            };
+            if faults.enabled() {
+                println!("fault injection armed: {faults:?}");
+            }
+            builder = builder.faults(faults.clone());
+            if let Some(ms) = args.get("watchdog-ms") {
+                builder = builder.watchdog(std::time::Duration::from_millis(
+                    ms.parse()?,
+                ));
+            }
             let mut session = builder.build()?;
+            let defaults = ServerConfig::default();
+            let request_timeout = args
+                .get("request-timeout-ms")
+                .map(|ms| ms.parse().map(std::time::Duration::from_millis))
+                .transpose()?;
             let cfg = ServerConfig {
                 addr: args.get_or("addr", "127.0.0.1:8080"),
                 workers: args.usize_or("workers", 4)?,
                 max_body_bytes: args.usize_or("max-body-kb", 1024)? << 10,
+                max_connections: args
+                    .usize_or("max-connections", defaults.max_connections)?,
+                max_queue: args.usize_or("max-queue", defaults.max_queue)?,
+                token_channel_depth: args.usize_or(
+                    "channel-depth",
+                    defaults.token_channel_depth,
+                )?,
+                request_timeout,
+                header_deadline: std::time::Duration::from_millis(
+                    args.u64_or("header-deadline-ms", 2000)?,
+                ),
+                write_timeout: std::time::Duration::from_millis(
+                    args.u64_or("write-timeout-ms", 10_000)?,
+                ),
+                retry_after_secs: args
+                    .u64_or("retry-after-secs", defaults.retry_after_secs)?,
+                faults,
             };
+            println!(
+                "limits: {} connections, queue watermark {}, channel \
+                 depth {}, header deadline {:?}, write timeout {:?}{}",
+                cfg.max_connections,
+                cfg.max_queue,
+                cfg.token_channel_depth,
+                cfg.header_deadline,
+                cfg.write_timeout,
+                match cfg.request_timeout {
+                    Some(t) => format!(", request timeout {t:?}"),
+                    None => String::new(),
+                }
+            );
             let server = HttpServer::bind(cfg)?;
             println!(
                 "serving adapter {adapter:?} on http://{}",

@@ -43,6 +43,7 @@ use anyhow::{bail, ensure, Result};
 
 use super::pager::MigrateModel;
 use super::pool::{BlockId, BlockPool};
+use crate::util::faults::{FaultSite, Faults};
 
 /// Caller-side row identifier (the decode row index in the engine).
 pub type RowId = usize;
@@ -174,6 +175,10 @@ pub struct BlockManager {
     /// prefix→block map (the flattened radix tree of attached prompts)
     share: HashMap<ShareKey, BlockId>,
     rows: HashMap<RowId, RowTable>,
+    /// fault-injection plane: `block-alloc` firings make [`BlockManager::
+    /// append`] report [`AppendOutcome::NeedBlock`] as if the pool were
+    /// exhausted (disabled by default; one branch per append)
+    faults: Faults,
     /// sharing/CoW/swap counters (allocation totals live in the pool)
     pub stats: BlockStats,
 }
@@ -188,9 +193,18 @@ impl BlockManager {
             blocks: vec![Block::default(); cfg.n_blocks],
             share: HashMap::new(),
             rows: HashMap::new(),
+            faults: Faults::disabled(),
             stats: BlockStats::default(),
             cfg,
         })
+    }
+
+    /// Install a fault-injection handle: `block-alloc` firings make
+    /// [`BlockManager::append`] report [`AppendOutcome::NeedBlock`] with
+    /// nothing mutated — exactly the exhausted-pool contract, so every
+    /// caller already handles it. Other sites are ignored here.
+    pub fn set_faults(&mut self, faults: Faults) {
+        self.faults = faults;
     }
 
     /// The sizing/policy knobs this manager was built with.
@@ -378,7 +392,11 @@ impl BlockManager {
         };
         let pos = table.len % self.cfg.block_tokens;
         if pos == 0 {
-            // boundary: open a fresh private tail block
+            // boundary: open a fresh private tail block (an injected
+            // block-alloc fault fails exactly like an exhausted pool)
+            if self.faults.fire(FaultSite::BlockAlloc) {
+                return Ok(AppendOutcome::NeedBlock);
+            }
             let Some(id) = self.pool.alloc() else {
                 return Ok(AppendOutcome::NeedBlock);
             };
@@ -399,7 +417,11 @@ impl BlockManager {
         let tail = *table.blocks.last().expect("len > 0 implies blocks");
         if self.pool.refcount(tail) > 1 {
             // copy-on-write: fork a private tail, leave the shared block
-            // untouched for its other owners
+            // untouched for its other owners (same injected-failure
+            // contract as the boundary allocation above)
+            if self.faults.fire(FaultSite::BlockAlloc) {
+                return Ok(AppendOutcome::NeedBlock);
+            }
             let Some(id) = self.pool.alloc() else {
                 return Ok(AppendOutcome::NeedBlock);
             };
@@ -647,6 +669,30 @@ mod tests {
         assert_eq!(m.stats.swap_outs, 1);
         assert_eq!(m.stats.swapped_bytes, 100, "shared blocks stay resident");
         assert!(m.stats.swap_stall_us > 0.0);
+        m.check_invariants();
+    }
+
+    #[test]
+    fn injected_alloc_faults_surface_as_need_block() {
+        use crate::util::faults::FaultPlan;
+        let mut m = mgr(2, 8);
+        m.attach(0, &[1, 2]).unwrap();
+        m.set_faults(Faults::new(
+            &FaultPlan::default().with(FaultSite::BlockAlloc, 1.0, Some(2)),
+        ));
+        // boundary append: the fault fires although the pool has room,
+        // and nothing is mutated — exactly the exhausted-pool contract
+        assert_eq!(m.append(0, 3).unwrap(), AppendOutcome::NeedBlock);
+        assert_eq!(m.row_tokens(0).unwrap(), vec![1, 2]);
+        assert!(m.free_blocks() > 0);
+        m.check_invariants();
+        // the cap exhausts after two firings; appends then succeed
+        assert_eq!(m.append(0, 3).unwrap(), AppendOutcome::NeedBlock);
+        assert_eq!(
+            m.append(0, 3).unwrap(),
+            AppendOutcome::Appended { new_block: true, cow_fork: false }
+        );
+        assert_eq!(m.row_tokens(0).unwrap(), vec![1, 2, 3]);
         m.check_invariants();
     }
 

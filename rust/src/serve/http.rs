@@ -9,7 +9,9 @@
 //! ([`write_response`]) or chunked transfer encoding ([`ChunkedWriter`])
 //! for token streaming. Error mapping lives here so every failure mode
 //! has exactly one status: malformed syntax → 400, oversized body →
-//! 413; the router in [`super::server`] adds 404/405.
+//! 413; the router in [`super::server`] adds 404/405, and overload
+//! shedding emits 429/503 with a `Retry-After` header via
+//! [`write_error_after`].
 //!
 //! The parser state machine (buffer until `\r\n\r\n`, split head,
 //! drain `Content-Length` bytes) is mirrored line-for-line by
@@ -105,6 +107,15 @@ impl<R: Read> RequestReader<R> {
     /// A reader enforcing `max_body` bytes per request body.
     pub fn new(inner: R, max_body: usize) -> RequestReader<R> {
         RequestReader { inner, buf: Vec::new(), max_body }
+    }
+
+    /// Whether a partial request is sitting in the carry-over buffer.
+    /// After a [`HttpError::TimedOut`] this distinguishes an *idle*
+    /// keep-alive connection (safe to keep polling) from a slowloris
+    /// peer dribbling half a head (the server drops those after its
+    /// header deadline instead of pinning a worker forever).
+    pub fn has_partial(&self) -> bool {
+        !self.buf.is_empty()
     }
 
     /// Pull more bytes from the transport into the carry-over buffer.
@@ -268,7 +279,9 @@ pub fn status_text(status: u16) -> &'static str {
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        408 => "Request Timeout",
         413 => "Payload Too Large",
+        429 => "Too Many Requests",
         500 => "Internal Server Error",
         503 => "Service Unavailable",
         _ => "Unknown",
@@ -326,6 +339,33 @@ pub fn write_error<W: Write>(
         &error_body(kind, message),
         keep_alive,
     )
+}
+
+/// Write one error response under the JSON error contract plus a
+/// `Retry-After` header — the overload-shedding shape (429 on queue
+/// pressure, 503 while draining): the client learns both *that* it was
+/// turned away and *when* to come back.
+pub fn write_error_after<W: Write>(
+    w: &mut W,
+    status: u16,
+    kind: &str,
+    message: &str,
+    retry_after_secs: u64,
+    keep_alive: bool,
+) -> io::Result<()> {
+    let body = error_body(kind, message);
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nRetry-After: {}\r\nConnection: {}\r\n\r\n",
+        status,
+        status_text(status),
+        body.len(),
+        retry_after_secs,
+        if keep_alive { "keep-alive" } else { "close" },
+    );
+    w.write_all(head.as_bytes())?;
+    w.write_all(&body)?;
+    w.flush()
 }
 
 /// Chunked-transfer response writer for token streaming. `begin` sends
@@ -486,6 +526,38 @@ mod tests {
         let text = String::from_utf8(out).unwrap();
         assert!(text.starts_with("HTTP/1.1 404 Not Found\r\n"));
         assert!(text.contains(r#""kind":"not_found""#));
+    }
+
+    #[test]
+    fn retry_after_wire_format() {
+        assert_eq!(status_text(429), "Too Many Requests");
+        let mut out = Vec::new();
+        write_error_after(&mut out, 429, "overloaded", "queue full", 2, true)
+            .unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"));
+        assert!(text.contains("Retry-After: 2\r\n"));
+        assert!(text.contains("Connection: keep-alive\r\n"));
+        assert!(text.contains(r#""kind":"overloaded""#));
+        let mut out = Vec::new();
+        write_error_after(&mut out, 503, "draining", "shutting down", 1, false)
+            .unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 503 Service Unavailable\r\n"));
+        assert!(text.contains("Retry-After: 1\r\n"));
+        assert!(text.contains(r#""kind":"draining""#));
+    }
+
+    #[test]
+    fn partial_buffer_is_visible_for_the_slowloris_guard() {
+        // a reader over a half-sent head: the source runs dry, and the
+        // carry-over buffer reports a partial request
+        let mut rd = RequestReader::new(b"GET / HT".as_slice(), MAX_BODY_BYTES);
+        assert!(!rd.has_partial(), "fresh reader has no carry-over");
+        assert!(rd.next_request().is_err());
+        // an in-memory slice signals EOF (BadRequest) rather than
+        // TimedOut, but the buffered half-head is still observable
+        assert!(rd.has_partial(), "half a head is buffered");
     }
 
     #[test]

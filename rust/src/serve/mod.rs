@@ -17,7 +17,11 @@
 //!   `GET /healthz`, `POST /v1/shutdown`) over a scoped worker pool,
 //!   bridged to the single-threaded decode loop through
 //!   [`crate::engine::ServeDriver`]; client disconnects cancel their
-//!   in-flight jobs.
+//!   in-flight jobs. Overload control lives here too: load shedding
+//!   (`429`/`503` + `Retry-After`), bounded per-job channels, a
+//!   connection cap, the slowloris guard, and worker-panic containment
+//!   — plus the serving-side fault-injection sites (see
+//!   [`crate::util::faults`]).
 //!
 //! Everything here is plain `std` — no hyper, no serde — per the
 //! repo's offline-registry stance.
@@ -26,9 +30,12 @@ pub mod http;
 pub mod json;
 pub mod server;
 
-pub use http::{ChunkedWriter, HttpError, HttpRequest, RequestReader};
+pub use http::{
+    write_error_after, ChunkedWriter, HttpError, HttpRequest, RequestReader,
+};
 pub use json::{JsonError, JsonValue};
 pub use server::{
-    decode_generate, done_line, generate_body, outcome_str, stats_body,
-    token_line, GenerateRequest, HttpServer, ServerConfig, StatsCell,
+    decode_generate, done_line, generate_body, outcome_str, should_shed,
+    stats_body, token_line, GenerateRequest, HttpServer, ServerConfig,
+    StatsCell,
 };

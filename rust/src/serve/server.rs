@@ -12,6 +12,31 @@
 //! flips the job's [`CancelHandle`]; the scheduler frees the row within
 //! one step.
 //!
+//! Overload control and fault containment (`ARCHITECTURE.md` §"Failure
+//! domains & overload policy" has the decision table):
+//!
+//! * **Load shedding** — [`should_shed`] turns `POST /v1/generate` away
+//!   with `429` + `Retry-After` once queue depth or resident-token
+//!   pressure crosses the [`ServerConfig`] watermarks; requests during
+//!   the shutdown drain get a structured `503 {"error":{"kind":
+//!   "draining"}}` instead of a reset connection.
+//! * **Bounded channels** — per-job token channels are
+//!   [`mpsc::sync_channel`]s; a consumer too slow to drain its own
+//!   tokens backpressures into [`CancelHandle`] cancellation instead of
+//!   unbounded buffering, and the decode thread never blocks on a send.
+//! * **Connection cap + slowloris guard** — excess connections are
+//!   turned away with `503`, and a peer dribbling half a request head
+//!   past [`ServerConfig::header_deadline`] is dropped (408) instead of
+//!   pinning a worker forever.
+//! * **Worker-panic containment** — a panicking connection handler is
+//!   caught at the worker boundary ([`std::panic::catch_unwind`]); the
+//!   worker re-enters its accept loop (counted in
+//!   `ServerStats::worker_restarts`) and the shared inbox lock
+//!   recovers from poisoning, so one panic never wedges the server.
+//! * **Fault injection** — [`crate::util::faults::Faults`] sites
+//!   (`slow-write`, `conn-reset`, `worker-panic`) fire here under a
+//!   seeded plan; zero-cost when disabled.
+//!
 //! Endpoints (`ARCHITECTURE.md` has the full table and flow diagram):
 //!
 //! | route              | method | body                                    |
@@ -27,10 +52,10 @@
 
 use std::collections::{HashMap, VecDeque};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Condvar, Mutex, MutexGuard};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -38,6 +63,7 @@ use crate::engine::{
     CancelHandle, GenRequest, JobOutcome, Priority, Sampler, ServeDriver,
     ServeEvent, ServeReport, ServerStats, Session, SourcePoll,
 };
+use crate::util::faults::{FaultSite, Faults};
 
 use super::http::{
     self, ChunkedWriter, HttpError, HttpRequest, RequestReader,
@@ -54,6 +80,32 @@ pub struct ServerConfig {
     pub workers: usize,
     /// Per-request body size limit in bytes.
     pub max_body_bytes: usize,
+    /// Concurrent-connection cap; excess accepts are answered with a
+    /// `503` + `Retry-After` and closed before a worker is tied up.
+    pub max_connections: usize,
+    /// Queue-depth watermark: a `/v1/generate` arriving while
+    /// `pending + scheduler queue depth` is at or above this is shed
+    /// with `429` + `Retry-After` (see [`should_shed`]).
+    pub max_queue: usize,
+    /// Bound of each job's token event channel. A streaming consumer
+    /// that falls this many tokens behind is cancelled instead of
+    /// buffering without bound.
+    pub token_channel_depth: usize,
+    /// Per-request wall-clock cap, mapped onto the scheduler deadline
+    /// (the effective deadline is the smaller of this and the client's
+    /// `deadline_ms`). `None` leaves client deadlines as the only cap.
+    pub request_timeout: Option<Duration>,
+    /// How long a connection may dribble a partial request head before
+    /// it is dropped with `408` (the slowloris guard).
+    pub header_deadline: Duration,
+    /// Socket write timeout: a wedged client cannot pin a worker on a
+    /// blocking write forever.
+    pub write_timeout: Duration,
+    /// `Retry-After` seconds advertised on `429`/`503` shed responses.
+    pub retry_after_secs: u64,
+    /// Serving-side fault-injection handle (`slow-write`, `conn-reset`,
+    /// `worker-panic` sites). Disabled by default.
+    pub faults: Faults,
 }
 
 impl Default for ServerConfig {
@@ -62,8 +114,31 @@ impl Default for ServerConfig {
             addr: "127.0.0.1:8080".to_string(),
             workers: 4,
             max_body_bytes: http::MAX_BODY_BYTES,
+            max_connections: 128,
+            max_queue: 256,
+            token_channel_depth: 64,
+            request_timeout: None,
+            header_deadline: Duration::from_secs(2),
+            write_timeout: Duration::from_secs(10),
+            retry_after_secs: 1,
+            faults: Faults::disabled(),
         }
     }
+}
+
+/// The load-shedding decision for one incoming `/v1/generate`: shed
+/// when the combined backlog (jobs parked in the inbox plus rows queued
+/// in the scheduler) reaches the queue watermark, or when the KV pool
+/// is saturated *and* a backlog exists (admitting more work then only
+/// deepens the queue the scheduler is already unable to drain). Pure;
+/// mirrored by `python/tests/test_chaos_mirror.py`.
+pub fn should_shed(pending: usize, st: &ServerStats, cfg: &ServerConfig) -> bool {
+    let backlog = pending + st.queue_depth;
+    if backlog >= cfg.max_queue.max(1) {
+        return true;
+    }
+    let bounded = st.token_budget != usize::MAX && st.token_budget > 0;
+    bounded && st.resident_tokens >= st.token_budget && backlog > 0
 }
 
 /// A decoded `POST /v1/generate` body (the wire-format half of the
@@ -125,6 +200,7 @@ pub fn outcome_str(outcome: JobOutcome) -> &'static str {
         JobOutcome::Done => "done",
         JobOutcome::Cancelled => "cancelled",
         JobOutcome::DeadlineExceeded => "deadline_exceeded",
+        JobOutcome::TimedOut => "timed_out",
         JobOutcome::Aborted => "aborted",
     }
 }
@@ -173,6 +249,9 @@ pub fn stats_body(st: &ServerStats) -> JsonValue {
         ("completed", JsonValue::n(st.completed as f64)),
         ("cancelled", JsonValue::n(st.cancelled as f64)),
         ("deadline_exceeded", JsonValue::n(st.deadline_exceeded as f64)),
+        ("timed_out_jobs", JsonValue::n(st.timed_out_jobs as f64)),
+        ("shed_requests", JsonValue::n(st.shed_requests as f64)),
+        ("worker_restarts", JsonValue::n(st.worker_restarts as f64)),
         ("preemptions", JsonValue::n(st.preemptions as f64)),
         ("queue_depth", JsonValue::n(st.queue_depth as f64)),
         ("active_rows", JsonValue::n(st.active_rows as f64)),
@@ -238,12 +317,18 @@ fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
 }
 
-/// One queued generation job: the request plus the channel its events
-/// flow back through.
+/// One queued generation job: the request plus the bounded channel its
+/// events flow back through and the handle that cancels it if the
+/// consumer stops draining that channel.
 struct Job {
     tag: u64,
     req: GenRequest,
-    sink: mpsc::Sender<JobEvent>,
+    sink: mpsc::SyncSender<JobEvent>,
+    cancel: CancelHandle,
+    /// Streaming jobs receive per-token events; non-streaming jobs only
+    /// need the terminal event, so the driver skips their tokens and
+    /// the channel can never fill from a slow collector.
+    stream: bool,
 }
 
 /// Events a connection worker receives for its job.
@@ -265,6 +350,14 @@ struct Shared {
     stats: StatsCell,
     shutdown: AtomicBool,
     next_tag: AtomicU64,
+    /// Requests turned away by overload control (429 watermark, drain
+    /// 503, connection cap); merged into published [`ServerStats`].
+    shed: AtomicU64,
+    /// Connection handlers that panicked and were caught at the worker
+    /// boundary; the worker re-entered its accept loop.
+    worker_restarts: AtomicU64,
+    /// Live connections, against [`ServerConfig::max_connections`].
+    connections: AtomicUsize,
     /// session defaults, captured at startup so workers can build
     /// per-request samplers without touching the (!Send) session
     default_sampler: Sampler,
@@ -272,10 +365,31 @@ struct Shared {
     adapter: String,
 }
 
+impl Shared {
+    /// The latest published stats with the serving-layer counters
+    /// (which live in atomics here, not in the scheduler) merged in.
+    fn stats_snapshot(&self) -> ServerStats {
+        let mut st = self.stats.snapshot();
+        st.shed_requests = self.shed.load(Ordering::SeqCst);
+        st.worker_restarts = self.worker_restarts.load(Ordering::SeqCst);
+        st
+    }
+}
+
+/// Per-job sink state held by the decode-thread driver.
+struct SinkEntry {
+    sink: mpsc::SyncSender<JobEvent>,
+    cancel: CancelHandle,
+    stream: bool,
+    /// Set once a token send found the channel full: the job was
+    /// cancelled for backpressure and later tokens are dropped.
+    overflowed: bool,
+}
+
 /// The inbox-draining [`ServeDriver`] run on the decode thread.
 struct EngineDriver<'s> {
     shared: &'s Shared,
-    sinks: HashMap<u64, mpsc::Sender<JobEvent>>,
+    sinks: HashMap<u64, SinkEntry>,
 }
 
 impl ServeDriver for EngineDriver<'_> {
@@ -298,7 +412,15 @@ impl ServeDriver for EngineDriver<'_> {
         }
         let mut requests = Vec::new();
         while let Some(job) = inbox.jobs.pop_front() {
-            self.sinks.insert(job.tag, job.sink);
+            self.sinks.insert(
+                job.tag,
+                SinkEntry {
+                    sink: job.sink,
+                    cancel: job.cancel,
+                    stream: job.stream,
+                    overflowed: false,
+                },
+            );
             requests.push((job.tag, job.req));
         }
         SourcePoll { requests, open: !inbox.closed }
@@ -307,21 +429,43 @@ impl ServeDriver for EngineDriver<'_> {
     fn on_event(&mut self, ev: ServeEvent) {
         match ev {
             ServeEvent::Rejected { tag, error } => {
-                if let Some(sink) = self.sinks.remove(&tag) {
-                    let _ = sink.send(JobEvent::Rejected(error));
+                if let Some(entry) = self.sinks.remove(&tag) {
+                    let _ = entry.sink.try_send(JobEvent::Rejected(error));
                 }
             }
             ServeEvent::Token { tag, text } => {
-                if let Some(sink) = self.sinks.get(&tag) {
-                    let _ = sink.send(JobEvent::Token(text));
+                // every send here is try_send: the decode thread must
+                // never block on a worker's channel
+                if let Some(entry) = self.sinks.get_mut(&tag) {
+                    if !entry.stream || entry.overflowed {
+                        return; // collectors only need the terminal event
+                    }
+                    if let Err(mpsc::TrySendError::Full(_)) =
+                        entry.sink.try_send(JobEvent::Token(text))
+                    {
+                        // the consumer stopped draining its own tokens:
+                        // backpressure becomes cancellation, not an
+                        // unbounded buffer
+                        entry.overflowed = true;
+                        entry.cancel.cancel();
+                    }
                 }
             }
             ServeEvent::Finished { tag, outcome, text } => {
-                if let Some(sink) = self.sinks.remove(&tag) {
-                    let _ = sink.send(JobEvent::Finished { outcome, text });
+                if let Some(entry) = self.sinks.remove(&tag) {
+                    // full only for an overflowed (already cancelled)
+                    // stream; dropping the sink unblocks its worker
+                    // with a disconnect after it drains the buffer
+                    let _ = entry
+                        .sink
+                        .try_send(JobEvent::Finished { outcome, text });
                 }
             }
-            ServeEvent::Step { stats, .. } => {
+            ServeEvent::Step { mut stats, .. } => {
+                stats.shed_requests =
+                    self.shared.shed.load(Ordering::SeqCst);
+                stats.worker_restarts =
+                    self.shared.worker_restarts.load(Ordering::SeqCst);
                 self.shared.stats.publish(stats);
             }
         }
@@ -364,6 +508,9 @@ impl HttpServer {
             stats: StatsCell::new(),
             shutdown: AtomicBool::new(false),
             next_tag: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            worker_restarts: AtomicU64::new(0),
+            connections: AtomicUsize::new(0),
             default_sampler: session.sampler.clone(),
             greedy: session.greedy,
             adapter: session.adapter().to_string(),
@@ -377,21 +524,57 @@ impl HttpServer {
             }
             let mut driver =
                 EngineDriver { shared: &shared, sinks: HashMap::new() };
-            let report = session.serve_loop(&mut driver);
+            let mut report = session.serve_loop(&mut driver);
             // wake and release every worker, whatever ended the loop
             shared.shutdown.store(true, Ordering::SeqCst);
             lock(&shared.inbox).closed = true;
             shared.inbox_cv.notify_all();
+            // fold the serving-layer counters into the terminal report
+            if let Ok(rep) = report.as_mut() {
+                rep.stats.shed_requests = shared.shed.load(Ordering::SeqCst);
+                rep.stats.worker_restarts =
+                    shared.worker_restarts.load(Ordering::SeqCst);
+            }
             report
         })
     }
 }
 
 /// Accept loop: poll the shared non-blocking listener until shutdown.
+/// This is the fault-containment boundary: a panic anywhere in a
+/// connection handler is caught here, counted as a worker restart, and
+/// the worker re-enters the loop — one poisoned request can never take
+/// the server down or wedge the inbox (whose lock recovers from
+/// poisoning via [`lock`]).
 fn worker_loop(listener: &TcpListener, shared: &Shared, cfg: &ServerConfig) {
     while !shared.shutdown.load(Ordering::SeqCst) {
         match listener.accept() {
-            Ok((stream, _)) => handle_connection(stream, shared, cfg),
+            Ok(stream_pair) => {
+                let (mut stream, _) = stream_pair;
+                let live =
+                    shared.connections.fetch_add(1, Ordering::SeqCst) + 1;
+                if live > cfg.max_connections.max(1) {
+                    shared.connections.fetch_sub(1, Ordering::SeqCst);
+                    shared.shed.fetch_add(1, Ordering::SeqCst);
+                    let _ = http::write_error_after(
+                        &mut stream,
+                        503,
+                        "overloaded",
+                        "connection limit reached",
+                        cfg.retry_after_secs,
+                        false,
+                    );
+                    continue;
+                }
+                let caught =
+                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                        || handle_connection(stream, shared, cfg),
+                    ));
+                shared.connections.fetch_sub(1, Ordering::SeqCst);
+                if caught.is_err() {
+                    shared.worker_restarts.fetch_add(1, Ordering::SeqCst);
+                }
+            }
             // no pending connection (or a transient accept error):
             // sleep briefly and re-check the shutdown flag
             Err(_) => std::thread::sleep(Duration::from_millis(10)),
@@ -401,20 +584,48 @@ fn worker_loop(listener: &TcpListener, shared: &Shared, cfg: &ServerConfig) {
 
 /// Serve one connection through its keep-alive lifetime.
 fn handle_connection(stream: TcpStream, shared: &Shared, cfg: &ServerConfig) {
+    // injected fault: a panic at the top of the handler, caught (and
+    // counted) at the worker boundary — the containment the loopback
+    // suite exercises
+    if cfg.faults.fire(FaultSite::WorkerPanic) {
+        panic!("injected worker panic (fault site worker-panic)");
+    }
     // short read timeout: a worker parked on an idle keep-alive
     // connection re-checks the shutdown flag every 100 ms
     if stream.set_read_timeout(Some(Duration::from_millis(100))).is_err() {
         return;
     }
+    // bounded writes: a wedged client cannot pin this worker forever
+    let _ = stream.set_write_timeout(Some(cfg.write_timeout));
     let _ = stream.set_nodelay(true);
     let Ok(read_half) = stream.try_clone() else { return };
     let mut reader = RequestReader::new(read_half, cfg.max_body_bytes);
     let mut stream = stream;
+    // slowloris guard: when a read times out *with a partial request
+    // buffered*, the peer is dribbling bytes — start (or keep) the
+    // header-deadline clock; an idle keep-alive connection (no partial
+    // data) may park indefinitely
+    let mut partial_since: Option<Instant> = None;
     loop {
         match reader.next_request() {
             Err(HttpError::TimedOut) => {
                 if shared.shutdown.load(Ordering::SeqCst) {
                     return;
+                }
+                if reader.has_partial() {
+                    let since = *partial_since.get_or_insert_with(Instant::now);
+                    if since.elapsed() >= cfg.header_deadline {
+                        let _ = http::write_error(
+                            &mut stream,
+                            408,
+                            "timeout",
+                            "request header not completed in time",
+                            false,
+                        );
+                        return;
+                    }
+                } else {
+                    partial_since = None;
                 }
             }
             Err(HttpError::Closed) | Err(HttpError::Io(_)) => return,
@@ -435,9 +646,10 @@ fn handle_connection(stream: TcpStream, shared: &Shared, cfg: &ServerConfig) {
                 return;
             }
             Ok(req) => {
+                partial_since = None;
                 let keep = req.keep_alive
                     && !shared.shutdown.load(Ordering::SeqCst);
-                if !route(&mut stream, &req, keep, shared) || !keep {
+                if !route(&mut stream, &req, keep, shared, cfg) || !keep {
                     return;
                 }
             }
@@ -451,6 +663,7 @@ fn route(
     req: &HttpRequest,
     keep: bool,
     shared: &Shared,
+    cfg: &ServerConfig,
 ) -> bool {
     // strip any query string before routing
     let path = req.path.split('?').next().unwrap_or_default();
@@ -464,7 +677,7 @@ fn route(
             respond_json(stream, 200, &body, keep)
         }
         ("GET", "/v1/stats") => {
-            let body = stats_body(&shared.stats.snapshot());
+            let body = stats_body(&shared.stats_snapshot());
             respond_json(stream, 200, &body, keep)
         }
         ("POST", "/v1/shutdown") => {
@@ -476,7 +689,9 @@ fn route(
             respond_json(stream, 200, &body, false);
             false
         }
-        ("POST", "/v1/generate") => handle_generate(stream, req, keep, shared),
+        ("POST", "/v1/generate") => {
+            handle_generate(stream, req, keep, shared, cfg)
+        }
         _ if known => {
             let _ = http::write_error(
                 stream,
@@ -518,11 +733,16 @@ fn respond_json(
 
 /// `POST /v1/generate`: decode, submit to the decode thread, then relay
 /// events — one JSON body, or chunked JSON lines when streaming.
+/// Overload control happens here: the request is shed with `429` +
+/// `Retry-After` when [`should_shed`] says the backlog watermark is
+/// crossed, and with a structured `503 {"error":{"kind":"draining"}}`
+/// when it arrives during the shutdown drain.
 fn handle_generate(
     stream: &mut TcpStream,
     req: &HttpRequest,
     keep: bool,
     shared: &Shared,
+    cfg: &ServerConfig,
 ) -> bool {
     let spec = match decode_generate(&req.body) {
         Ok(spec) => spec,
@@ -559,8 +779,16 @@ fn handle_generate(
     // max_new_tokens override (temperature 0.0 is argmax decoding)
     let mut gen = GenRequest::new(spec.prompt.clone())
         .priority(spec.priority);
-    if let Some(ms) = spec.deadline_ms {
-        gen = gen.deadline(Duration::from_millis(ms));
+    // the per-request wall-clock cap maps onto the scheduler deadline:
+    // the effective deadline is the tighter of the client's and the
+    // server's
+    let deadline = match (spec.deadline_ms, cfg.request_timeout) {
+        (Some(ms), Some(cap)) => Some(Duration::from_millis(ms).min(cap)),
+        (Some(ms), None) => Some(Duration::from_millis(ms)),
+        (None, cap) => cap,
+    };
+    if let Some(d) = deadline {
+        gen = gen.deadline(d);
     }
     if let Some(max_new) = spec.max_new_tokens {
         let mut sampler = shared.default_sampler.clone();
@@ -571,26 +799,51 @@ fn handle_generate(
         gen = gen.sampler(sampler);
     }
     let (gen, cancel) = gen.cancellable();
-    let (tx, rx) = mpsc::channel();
+    // bounded per-job event channel: the decode thread try_sends into
+    // it and cancels the job if a slow consumer lets it fill
+    let (tx, rx) = mpsc::sync_channel(cfg.token_channel_depth.max(1));
     let tag = shared.next_tag.fetch_add(1, Ordering::SeqCst);
     {
         let mut inbox = lock(&shared.inbox);
         if inbox.closed {
             drop(inbox);
-            let _ = http::write_error(
+            shared.shed.fetch_add(1, Ordering::SeqCst);
+            let _ = http::write_error_after(
                 stream,
                 503,
-                "shutting_down",
+                "draining",
                 "the server is draining and accepts no new work",
+                cfg.retry_after_secs,
                 false,
             );
             return false;
         }
-        inbox.jobs.push_back(Job { tag, req: gen, sink: tx });
+        // the shed decision runs under the inbox lock so racing
+        // workers cannot collectively overshoot the watermark
+        if should_shed(inbox.jobs.len(), &shared.stats.snapshot(), cfg) {
+            drop(inbox);
+            shared.shed.fetch_add(1, Ordering::SeqCst);
+            let _ = http::write_error_after(
+                stream,
+                429,
+                "overloaded",
+                "the queue watermark is crossed; retry shortly",
+                cfg.retry_after_secs,
+                keep,
+            );
+            return true;
+        }
+        inbox.jobs.push_back(Job {
+            tag,
+            req: gen,
+            sink: tx,
+            cancel: cancel.clone(),
+            stream: spec.stream,
+        });
     }
     shared.inbox_cv.notify_all();
     if spec.stream {
-        stream_events(stream, &rx, &cancel)
+        stream_events(stream, &rx, &cancel, &cfg.faults)
     } else {
         collect_events(stream, &rx, keep)
     }
@@ -645,6 +898,7 @@ fn stream_events(
     stream: &mut TcpStream,
     rx: &mpsc::Receiver<JobEvent>,
     cancel: &CancelHandle,
+    faults: &Faults,
 ) -> bool {
     let mut writer = match ChunkedWriter::begin(
         stream,
@@ -661,6 +915,18 @@ fn stream_events(
     loop {
         match rx.recv() {
             Ok(JobEvent::Token(text)) => {
+                // injected fault: drop the connection mid-stream, as a
+                // flaky network would — must flow through the same
+                // disconnect→cancel path as a real write failure
+                if faults.fire(FaultSite::ConnReset) {
+                    cancel.cancel();
+                    while rx.recv().is_ok() {}
+                    return false;
+                }
+                // injected fault: a client draining its stream slowly
+                if faults.fire(FaultSite::SlowWrite) {
+                    std::thread::sleep(faults.delay());
+                }
                 if writer.chunk(token_line(&text).as_bytes()).is_err() {
                     // client went away mid-stream: cancel the job and
                     // drain remaining events so nothing leaks
@@ -764,6 +1030,29 @@ mod tests {
             done_line(JobOutcome::Cancelled, "part"),
             "{\"done\":true,\"outcome\":\"cancelled\",\"text\":\"part\"}\n"
         );
+        assert_eq!(outcome_str(JobOutcome::TimedOut), "timed_out");
+    }
+
+    #[test]
+    fn should_shed_watermarks() {
+        let cfg = ServerConfig { max_queue: 4, ..Default::default() };
+        let mut st = ServerStats::default();
+        st.token_budget = usize::MAX; // legacy unbounded budget
+        // below the queue watermark: admit
+        assert!(!should_shed(0, &st, &cfg));
+        assert!(!should_shed(3, &st, &cfg));
+        // at the watermark (pending + queued): shed
+        assert!(should_shed(4, &st, &cfg));
+        st.queue_depth = 2;
+        assert!(should_shed(2, &st, &cfg));
+        // resident-token pressure only sheds when a backlog exists
+        st.queue_depth = 0;
+        st.token_budget = 100;
+        st.resident_tokens = 100;
+        assert!(!should_shed(0, &st, &cfg), "saturated but idle: admit");
+        assert!(should_shed(1, &st, &cfg), "saturated with backlog: shed");
+        st.resident_tokens = 99;
+        assert!(!should_shed(1, &st, &cfg));
     }
 
     #[test]
@@ -771,9 +1060,24 @@ mod tests {
         let mut st = ServerStats { submitted: 3, ..Default::default() };
         st.kv_blocks = 8;
         st.token_budget = usize::MAX;
+        st.shed_requests = 2;
+        st.worker_restarts = 1;
+        st.timed_out_jobs = 4;
         let v = stats_body(&st);
         assert_eq!(v.get("submitted").and_then(JsonValue::as_num), Some(3.0));
         assert_eq!(v.get("token_budget"), Some(&JsonValue::Null));
+        assert_eq!(
+            v.get("shed_requests").and_then(JsonValue::as_num),
+            Some(2.0)
+        );
+        assert_eq!(
+            v.get("worker_restarts").and_then(JsonValue::as_num),
+            Some(1.0)
+        );
+        assert_eq!(
+            v.get("timed_out_jobs").and_then(JsonValue::as_num),
+            Some(4.0)
+        );
         let blocks = v.get("blocks").unwrap();
         assert_eq!(
             blocks.get("kv_blocks").and_then(JsonValue::as_num),

@@ -1,0 +1,410 @@
+//! Deterministic, seeded fault-injection plane for the serving stack.
+//!
+//! A [`FaultPlan`] names a seed plus a per-site schedule (probability
+//! and an optional cap on total firings); [`Faults`] is the cheap
+//! cloneable runtime handle threaded through the server, the decode
+//! loop, and the KV block manager. Sites:
+//!
+//! * `slow-write` — stall a client-facing socket write for
+//!   [`FaultPlan::delay`] before it happens;
+//! * `conn-reset` — drop a connection mid-stream instead of finishing
+//!   the response;
+//! * `worker-panic` — panic inside an HTTP worker thread (exercises
+//!   the catch/respawn boundary);
+//! * `block-alloc` — fail a KV block allocation at the append
+//!   boundary, as if the pool were exhausted (exercises the
+//!   `NeedBlock` → preemption path);
+//! * `decode-delay` — sleep [`FaultPlan::delay`] before a decode step
+//!   (exercises the watchdog).
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Zero cost when disabled.** A disabled handle is a `None`; every
+//!    check is one branch on an `Option`, no locks, no RNG.
+//! 2. **Deterministic.** Each site owns an independent xoshiro stream
+//!    derived from the plan seed, so the k-th check at a site fires or
+//!    not regardless of how checks at *other* sites interleave. (When
+//!    several threads race on the *same* site, which thread absorbs
+//!    the k-th decision can vary — the decision sequence itself never
+//!    does.)
+//! 3. **Off the hot path.** Sites live at connection/step/allocation
+//!    boundaries, never inside per-token inner loops.
+
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+use crate::util::rng::Rng;
+
+/// Number of distinct injection sites.
+pub const N_SITES: usize = 5;
+
+/// A place in the serving stack where a fault can be injected.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum FaultSite {
+    /// Stall a client-facing write for the plan's delay first.
+    SlowWrite,
+    /// Drop the connection mid-stream instead of finishing.
+    ConnReset,
+    /// Panic inside an HTTP worker thread.
+    WorkerPanic,
+    /// Fail a KV block allocation as if the pool were exhausted.
+    BlockAlloc,
+    /// Sleep for the plan's delay before a decode step.
+    DecodeDelay,
+}
+
+/// All sites, in index order.
+pub const SITES: [FaultSite; N_SITES] = [
+    FaultSite::SlowWrite,
+    FaultSite::ConnReset,
+    FaultSite::WorkerPanic,
+    FaultSite::BlockAlloc,
+    FaultSite::DecodeDelay,
+];
+
+impl FaultSite {
+    /// The spec-string name of this site (`--faults slow-write=0.1`).
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultSite::SlowWrite => "slow-write",
+            FaultSite::ConnReset => "conn-reset",
+            FaultSite::WorkerPanic => "worker-panic",
+            FaultSite::BlockAlloc => "block-alloc",
+            FaultSite::DecodeDelay => "decode-delay",
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            FaultSite::SlowWrite => 0,
+            FaultSite::ConnReset => 1,
+            FaultSite::WorkerPanic => 2,
+            FaultSite::BlockAlloc => 3,
+            FaultSite::DecodeDelay => 4,
+        }
+    }
+
+    fn from_name(name: &str) -> Option<FaultSite> {
+        let canon = name.replace('_', "-");
+        SITES.iter().copied().find(|s| s.name() == canon)
+    }
+}
+
+/// Per-site schedule: fire with probability `p` on each check, at most
+/// `max` times in total (`None` = unlimited).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SiteSpec {
+    /// Firing probability per check, in `[0, 1]`.
+    pub p: f64,
+    /// Cap on total firings at this site (`None` = unlimited).
+    pub max: Option<u64>,
+}
+
+/// A seed plus a per-site schedule; the parsed form of `--faults` /
+/// `QLORA_FAULTS`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// Seed for the per-site decision streams.
+    pub seed: u64,
+    /// Stall applied by `slow-write` / `decode-delay` when they fire.
+    pub delay: Duration,
+    sites: [Option<SiteSpec>; N_SITES],
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan { seed: 0, delay: Duration::from_millis(25), sites: [None; N_SITES] }
+    }
+}
+
+impl FaultPlan {
+    /// Parse a spec string: comma-separated `key=value` entries where
+    /// the key is `seed`, `delay-ms`, or a site name, and a site value
+    /// is `<prob>` or `<prob>x<max>`. Example:
+    /// `seed=42,delay-ms=5,block-alloc=0.3,worker-panic=0.5x2`.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::default();
+        for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+            let (key, value) = entry
+                .split_once('=')
+                .ok_or_else(|| format!("fault entry `{entry}` is not key=value"))?;
+            let key = key.trim();
+            let value = value.trim();
+            match key {
+                "seed" => {
+                    plan.seed = value
+                        .parse()
+                        .map_err(|_| format!("bad fault seed `{value}`"))?;
+                }
+                "delay-ms" | "delay_ms" => {
+                    let ms: u64 = value
+                        .parse()
+                        .map_err(|_| format!("bad fault delay `{value}`"))?;
+                    plan.delay = Duration::from_millis(ms);
+                }
+                _ => {
+                    let site = FaultSite::from_name(key).ok_or_else(|| {
+                        format!(
+                            "unknown fault site `{key}` (sites: {})",
+                            SITES.map(FaultSite::name).join(", ")
+                        )
+                    })?;
+                    plan.sites[site.index()] = Some(parse_site_spec(value)?);
+                }
+            }
+        }
+        Ok(plan)
+    }
+
+    /// The schedule for `site`, if one is configured.
+    pub fn site(&self, site: FaultSite) -> Option<SiteSpec> {
+        self.sites[site.index()]
+    }
+
+    /// Set the schedule for `site` (builder-style, for tests).
+    pub fn with(mut self, site: FaultSite, p: f64, max: Option<u64>) -> FaultPlan {
+        self.sites[site.index()] = Some(SiteSpec { p, max });
+        self
+    }
+
+    /// True when no site has a schedule — the plan injects nothing.
+    pub fn is_empty(&self) -> bool {
+        self.sites.iter().all(Option::is_none)
+    }
+}
+
+fn parse_site_spec(value: &str) -> Result<SiteSpec, String> {
+    let (p_text, max) = match value.split_once('x') {
+        Some((p, m)) => {
+            let max: u64 = m
+                .trim()
+                .parse()
+                .map_err(|_| format!("bad fault cap in `{value}`"))?;
+            (p.trim(), Some(max))
+        }
+        None => (value, None),
+    };
+    let p: f64 = p_text
+        .parse()
+        .map_err(|_| format!("bad fault probability `{p_text}`"))?;
+    if !(0.0..=1.0).contains(&p) {
+        return Err(format!("fault probability {p} is outside [0, 1]"));
+    }
+    Ok(SiteSpec { p, max })
+}
+
+struct Lane {
+    spec: SiteSpec,
+    rng: Rng,
+    fired: u64,
+}
+
+struct Inner {
+    delay: Duration,
+    // One decision stream per site; lanes without a schedule stay None
+    // so an unconfigured site is a lock-free miss.
+    lanes: [Option<Mutex<Lane>>; N_SITES],
+}
+
+/// Cheap cloneable runtime handle over a [`FaultPlan`]; `disabled()`
+/// (the default) makes every check a single `Option` branch.
+#[derive(Clone, Default)]
+pub struct Faults {
+    inner: Option<Arc<Inner>>,
+}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    // A panicked holder leaves plain counters behind; recover the data.
+    m.lock().unwrap_or_else(|poison| poison.into_inner())
+}
+
+impl Faults {
+    /// A handle that never fires; every check is one `Option` branch.
+    pub fn disabled() -> Faults {
+        Faults::default()
+    }
+
+    /// Build the runtime handle for `plan`; an empty plan collapses to
+    /// [`Faults::disabled`].
+    pub fn new(plan: &FaultPlan) -> Faults {
+        if plan.is_empty() {
+            return Faults::disabled();
+        }
+        let lanes = SITES.map(|site| {
+            plan.site(site).map(|spec| {
+                // Independent stream per site: golden-ratio spacing on
+                // the seed, matching Rng::fork's stream separation.
+                let lane_seed = plan
+                    .seed
+                    .wrapping_add((site.index() as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15));
+                Mutex::new(Lane { spec, rng: Rng::new(lane_seed), fired: 0 })
+            })
+        });
+        Faults { inner: Some(Arc::new(Inner { delay: plan.delay, lanes })) }
+    }
+
+    /// Parse a spec string and build the handle in one step.
+    pub fn from_spec(spec: &str) -> Result<Faults, String> {
+        Ok(Faults::new(&FaultPlan::parse(spec)?))
+    }
+
+    /// True when any site can fire.
+    pub fn enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Draw the next decision for `site`: true means inject the fault
+    /// now. Deterministic per site given the plan seed.
+    #[inline]
+    pub fn fire(&self, site: FaultSite) -> bool {
+        let Some(inner) = &self.inner else { return false };
+        let Some(lane) = &inner.lanes[site.index()] else { return false };
+        let mut lane = lock(lane);
+        if lane.spec.max.is_some_and(|max| lane.fired >= max) {
+            return false;
+        }
+        let hit = lane.rng.bool(lane.spec.p);
+        if hit {
+            lane.fired += 1;
+        }
+        hit
+    }
+
+    /// The stall used by the delaying sites when they fire.
+    pub fn delay(&self) -> Duration {
+        self.inner.as_ref().map_or(Duration::ZERO, |i| i.delay)
+    }
+
+    /// How many times `site` has fired so far (stats / tests).
+    pub fn fired(&self, site: FaultSite) -> u64 {
+        match &self.inner {
+            Some(inner) => inner.lanes[site.index()]
+                .as_ref()
+                .map_or(0, |lane| lock(lane).fired),
+            None => 0,
+        }
+    }
+}
+
+impl std::fmt::Debug for Faults {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match &self.inner {
+            None => write!(f, "Faults(disabled)"),
+            Some(inner) => {
+                write!(f, "Faults(")?;
+                let mut first = true;
+                for site in SITES {
+                    if let Some(lane) = &inner.lanes[site.index()] {
+                        let lane = lock(lane);
+                        if !first {
+                            write!(f, ", ")?;
+                        }
+                        first = false;
+                        write!(f, "{}={} fired={}", site.name(), lane.spec.p, lane.fired)?;
+                    }
+                }
+                write!(f, ")")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_never_fires_and_is_lock_free() {
+        let f = Faults::disabled();
+        assert!(!f.enabled());
+        for site in SITES {
+            for _ in 0..100 {
+                assert!(!f.fire(site));
+            }
+            assert_eq!(f.fired(site), 0);
+        }
+        assert_eq!(f.delay(), Duration::ZERO);
+    }
+
+    #[test]
+    fn empty_plan_collapses_to_disabled() {
+        assert!(!Faults::new(&FaultPlan::default()).enabled());
+        assert!(!Faults::from_spec("seed=9,delay-ms=3").unwrap().enabled());
+    }
+
+    #[test]
+    fn parse_full_spec() {
+        let plan =
+            FaultPlan::parse("seed=42, delay-ms=5, block-alloc=0.3, worker-panic=0.5x2")
+                .unwrap();
+        assert_eq!(plan.seed, 42);
+        assert_eq!(plan.delay, Duration::from_millis(5));
+        assert_eq!(
+            plan.site(FaultSite::BlockAlloc),
+            Some(SiteSpec { p: 0.3, max: None })
+        );
+        assert_eq!(
+            plan.site(FaultSite::WorkerPanic),
+            Some(SiteSpec { p: 0.5, max: Some(2) })
+        );
+        assert_eq!(plan.site(FaultSite::ConnReset), None);
+        // underscores are accepted as an alias for dashes
+        let alias = FaultPlan::parse("conn_reset=1,delay_ms=7").unwrap();
+        assert_eq!(alias.site(FaultSite::ConnReset), Some(SiteSpec { p: 1.0, max: None }));
+        assert_eq!(alias.delay, Duration::from_millis(7));
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "block-alloc",        // no value
+            "warp-core=0.1",      // unknown site
+            "seed=xyz",           // non-numeric seed
+            "block-alloc=1.5",    // probability out of range
+            "block-alloc=-0.1",   // negative probability
+            "block-alloc=0.5xq",  // non-numeric cap
+            "delay-ms=ten",       // non-numeric delay
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "accepted `{bad}`");
+        }
+    }
+
+    #[test]
+    fn decision_streams_are_deterministic_and_independent() {
+        let plan = FaultPlan { seed: 7, ..FaultPlan::default() }
+            .with(FaultSite::BlockAlloc, 0.5, None)
+            .with(FaultSite::ConnReset, 0.5, None);
+        let a = Faults::new(&plan);
+        let b = Faults::new(&plan);
+        // same seed -> identical per-site sequences
+        let seq = |f: &Faults, site| (0..64).map(|_| f.fire(site)).collect::<Vec<_>>();
+        assert_eq!(seq(&a, FaultSite::BlockAlloc), seq(&b, FaultSite::BlockAlloc));
+        // interleaving checks at another site does not perturb a lane:
+        // draw conn-reset decisions between block-alloc draws and the
+        // block-alloc sequence must match the uninterleaved run above
+        let c = Faults::new(&plan);
+        let interleaved: Vec<bool> = (0..64)
+            .map(|_| {
+                c.fire(FaultSite::ConnReset);
+                c.fire(FaultSite::BlockAlloc)
+            })
+            .collect();
+        assert_eq!(interleaved, seq(&b, FaultSite::BlockAlloc));
+    }
+
+    #[test]
+    fn cap_bounds_total_firings() {
+        let plan = FaultPlan::default().with(FaultSite::WorkerPanic, 1.0, Some(3));
+        let f = Faults::new(&plan);
+        let hits = (0..50).filter(|_| f.fire(FaultSite::WorkerPanic)).count();
+        assert_eq!(hits, 3);
+        assert_eq!(f.fired(FaultSite::WorkerPanic), 3);
+    }
+
+    #[test]
+    fn probability_one_always_fires() {
+        let plan = FaultPlan::default().with(FaultSite::DecodeDelay, 1.0, None);
+        let f = Faults::new(&plan);
+        assert!((0..32).all(|_| f.fire(FaultSite::DecodeDelay)));
+    }
+}

@@ -22,6 +22,8 @@ use std::time::{Duration, Instant};
 use qlora::engine::scheduler::{
     JobOutcome, Priority, Request, Scheduler,
 };
+use qlora::paged::BlockConfig;
+use qlora::util::faults::{FaultPlan, FaultSite, Faults};
 use qlora::util::rng::Rng;
 
 /// Everything the test remembers about one submitted job.
@@ -194,6 +196,118 @@ fn randomized_lifecycles_preserve_scheduler_invariants() {
         saw_abort |= run_case(0xC0FFEE ^ case);
     }
     assert!(saw_abort, "abort path never exercised — widen the sampling");
+}
+
+/// One randomized blocks-mode run with a seeded `block-alloc` fault
+/// schedule interleaved with deadlines and the decode-step watchdog.
+/// Injected allocation failures surface as ordinary pool pressure
+/// (swap-out, lost-token resume), so every lifecycle invariant must
+/// hold unchanged: exactly one typed outcome per job, no foreign
+/// tokens, block-pool consistency after every step, and no livelock
+/// (fault caps guarantee the schedule eventually dries up).
+fn run_fault_case(seed: u64) {
+    let mut rng = Rng::new(seed);
+    let capacity = 1 + rng.below(3);
+    let seq_len = 12 + rng.below(12); // 12..24
+    let block_tokens = 2 + rng.below(4); // 2..6
+    let per_row = seq_len.div_ceil(block_tokens);
+    // roomy enough that nothing is Aborted for sheer size; pressure
+    // comes from the injected faults and from co-residents
+    let n_blocks = per_row * (capacity + 1);
+    let n_jobs = 2 + rng.below(8);
+    let plan = FaultPlan { seed: seed ^ 0xFA17, ..FaultPlan::default() }
+        .with(
+            FaultSite::BlockAlloc,
+            0.05 + 0.4 * rng.f64(),
+            Some(1 + rng.below(20) as u64), // capped: schedules dry up
+        );
+    let mut sched = Scheduler::with_blocks(
+        capacity,
+        BlockConfig::new(block_tokens, n_blocks),
+    )
+    .unwrap();
+    sched.set_faults(Faults::new(&plan));
+    sched.set_watchdog(Some(Duration::from_millis(40)));
+
+    let mut now = Instant::now();
+    let mut had_deadline = Vec::new();
+    for _ in 0..n_jobs {
+        let prompt_len = 1 + rng.below(seq_len / 2);
+        let max_new = rng.below(seq_len - prompt_len + 1);
+        let mut req = Request::new(vec![0; prompt_len], max_new)
+            .priority(random_priority(&mut rng));
+        let deadline = rng.below(3) == 0;
+        if deadline {
+            req = req
+                .deadline(Duration::from_millis(20 + rng.below(80) as u64));
+        }
+        had_deadline.push(deadline);
+        sched.submit(req, now);
+    }
+    let mut steps = 0usize;
+    while !sched.finished() {
+        assert!(
+            steps < 10_000,
+            "livelock: fault case {seed} never finished"
+        );
+        now += Duration::from_millis(1 + rng.below(4) as u64);
+        sched.poll(now);
+        sched.admit(now);
+        sched.take_swap_outs();
+        for row in sched.active_rows() {
+            if sched.budget_exhausted(row, seq_len) {
+                sched.retire(row).unwrap();
+            }
+        }
+        for row in sched.active_rows() {
+            // an earlier push this step may have swapped this row out
+            let Some(id) = sched.job_in(row) else { continue };
+            if rng.below(8) == 0 {
+                sched.retire(row).unwrap(); // "EOS"
+            } else {
+                sched.push(row, 1000 + id as i32, now).unwrap();
+            }
+        }
+        sched.take_swap_outs();
+        sched.check_block_invariants();
+        steps += 1;
+    }
+    let results = sched.take_results();
+    assert_eq!(
+        results.len(),
+        n_jobs,
+        "fault case {seed}: every job must get exactly one outcome"
+    );
+    for (id, r) in results.iter().enumerate() {
+        assert!(
+            r.tokens.iter().all(|&t| t == 1000 + id as i32),
+            "fault case {seed}: job {id} result holds foreign tokens {:?}",
+            r.tokens
+        );
+        assert_ne!(
+            r.outcome,
+            JobOutcome::Aborted,
+            "fault case {seed}: injected alloc faults must degrade to \
+             pressure, never abort"
+        );
+        if !had_deadline[id] {
+            assert!(
+                matches!(
+                    r.outcome,
+                    JobOutcome::Done | JobOutcome::TimedOut
+                ),
+                "fault case {seed}: job {id} without a deadline ended {:?}",
+                r.outcome
+            );
+        }
+    }
+}
+
+#[test]
+fn injected_block_alloc_faults_with_deadlines_preserve_invariants() {
+    for case in 0..60u64 {
+        run_fault_case(0x00FA_0175 ^ case);
+    }
 }
 
 #[test]

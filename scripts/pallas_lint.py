@@ -397,6 +397,9 @@ CANCELISH_PAT = re.compile(r"(?i)cancel|abort")
 # (BlockId is this repo's u32 alias, so it counts as narrowing too)
 LOSSY_AS_PAT = re.compile(r"\bas\s+(?:u8|u16|u32|i8|i16|i32|f32|BlockId)\b")
 THREAD_SPAWN_PAT = re.compile(r"\bthread\s*::\s*spawn\b")
+# `mpsc::channel` (unbounded) only; `sync_channel` has a word character
+# before "channel" and never matches
+UNBOUNDED_CHANNEL_PAT = re.compile(r"\bmpsc\s*::\s*channel\b")
 
 HOT_PATH_FILES = {
     "rust/src/engine/scheduler.rs",
@@ -622,6 +625,30 @@ def rule_result_not_panic_api(ctx):
     return out
 
 
+def rule_no_unbounded_send(ctx):
+    """(8) no-unbounded-send: an unbounded `mpsc::channel` in the
+    serving stack lets one slow consumer buffer tokens without limit —
+    the overload-control plane depends on bounded `sync_channel`s whose
+    full-send failure feeds back into cancellation. Bound the channel
+    or waive with the invariant that bounds it externally."""
+    if not ctx.path.startswith(API_SURFACE_PREFIXES):
+        return []
+    out = []
+    for n, text in ctx.code_lines():
+        if UNBOUNDED_CHANNEL_PAT.search(text):
+            out.append(
+                Finding(
+                    ctx.path,
+                    n,
+                    "no-unbounded-send",
+                    "unbounded mpsc::channel in the serving stack; use "
+                    "mpsc::sync_channel with an explicit depth so a slow "
+                    "consumer hits backpressure instead of unbounded memory",
+                )
+            )
+    return out
+
+
 RULES = {
     "no-hot-path-panic": rule_no_hot_path_panic,
     "no-float-partial-cmp": rule_no_float_partial_cmp,
@@ -630,6 +657,7 @@ RULES = {
     "no-lossy-as": rule_no_lossy_as,
     "scoped-threads-only": rule_scoped_threads_only,
     "result-not-panic-api": rule_result_not_panic_api,
+    "no-unbounded-send": rule_no_unbounded_send,
 }
 
 META_RULES = ("unused-waiver", "waiver-syntax")

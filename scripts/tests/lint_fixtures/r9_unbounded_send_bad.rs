@@ -1,0 +1,9 @@
+// pallas-lint-fixture: path = rust/src/serve/server.rs
+// pallas-lint-expect: no-unbounded-send @ 7
+
+use std::sync::mpsc;
+
+pub fn drive() {
+    let (tx, rx) = mpsc::channel::<i32>();
+    drop((tx, rx));
+}

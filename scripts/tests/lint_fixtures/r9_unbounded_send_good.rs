@@ -1,0 +1,25 @@
+// pallas-lint-fixture: path = rust/src/serve/server.rs
+// pallas-lint-expect: clean
+
+use std::sync::mpsc;
+
+pub fn drive() {
+    let (tx, rx) = mpsc::sync_channel::<i32>(64);
+    drop((tx, rx));
+}
+
+pub fn control_plane() {
+    // pallas-lint: allow(no-unbounded-send) — shutdown signal: at most one message is ever sent
+    let (tx, rx) = mpsc::channel::<()>();
+    drop((tx, rx));
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unbounded_in_tests_is_fine() {
+        let (tx, rx) = std::sync::mpsc::channel::<i32>();
+        tx.send(1).unwrap();
+        assert_eq!(rx.recv().unwrap(), 1);
+    }
+}
