@@ -4,7 +4,7 @@
 ARTIFACTS ?= artifacts
 
 .PHONY: artifacts artifacts-large test test-python test-rust lint \
-        bench-quant bench-generate bench-compare
+        lint-fast bench-quant bench-generate bench-compare
 
 # Lower every model config to HLO text + init tensors + manifest.
 artifacts:
@@ -23,12 +23,23 @@ test-rust:
 	cd rust && cargo test -q
 
 # Project-invariant static analysis over rust/ (stdlib Python only, no
-# toolchain needed): hot-path panic freedom, float ordering, oracle
-# purity, cancellation memory ordering, lossy casts, scoped threads,
-# Result-returning public APIs. Rules and waiver syntax: ARCHITECTURE.md.
+# toolchain needed): eight per-file rules (hot-path panic freedom, float
+# ordering, oracle purity, cancellation memory ordering, lossy casts,
+# scoped threads, Result-returning public APIs, bounded channels) plus
+# three interprocedural passes over the crate call graph (transitive
+# panic reachability, lock-order analysis, untrusted-input taint
+# tracking). Rules and waiver syntax: ARCHITECTURE.md.
 lint:
 	python3 scripts/pallas_lint.py --self-test
 	python3 scripts/pallas_lint.py
+
+# Edit-loop variant: fixture self-test + findings only for files that
+# differ from HEAD. The full crate still feeds the call graph, so
+# interprocedural results on the changed files stay whole-crate
+# accurate; CI keeps running the full `lint` wall.
+lint-fast:
+	python3 scripts/pallas_lint.py --self-test
+	python3 scripts/pallas_lint.py --changed HEAD
 
 # Quant-kernel perf trajectory: fused-vs-scalar throughput + speedups,
 # persisted machine-readably at the repo root (tracked from PR 3 onward).

@@ -46,6 +46,12 @@ def test_repo_lints_clean():
     data = json.loads(p.stdout)
     assert data["findings"] == []
     assert data["checked_files"] > 50
+    # the call graph resolved a meaningful share of the crate's calls
+    cg = data["callgraph"]
+    assert set(cg) == {"functions", "calls", "edges", "external", "ambiguous"}
+    assert cg["functions"] > 100
+    assert cg["edges"] > 100
+    assert cg["edges"] + cg["external"] + cg["ambiguous"] == cg["calls"]
 
 
 def test_bad_file_fails_with_finding(tmp_path):
@@ -62,7 +68,7 @@ def test_bad_file_fails_with_finding(tmp_path):
     assert data["findings"][0]["line"] == 2
 
 
-def test_list_rules_names_all_eight():
+def test_list_rules_names_all_rules():
     p = run_lint("--list-rules")
     assert p.returncode == 0
     for rule in [
@@ -74,6 +80,9 @@ def test_list_rules_names_all_eight():
         "scoped-threads-only",
         "result-not-panic-api",
         "no-unbounded-send",
+        "no-transitive-panic",
+        "lock-order",
+        "untrusted-taint",
         "unused-waiver",
         "waiver-syntax",
     ]:
@@ -140,3 +149,214 @@ def test_waiver_requires_reason_and_is_tracked(mod):
     unused = "fn f() -> u32 { 1 } // pallas-lint: allow(no-hot-path-panic) — nope\n"
     rules = [f.rule for f in mod.lint_text("rust/src/engine/scheduler.rs", unused)]
     assert rules == ["unused-waiver"]
+
+
+def test_lexer_hardened_literals(mod):
+    lexed = mod.lex(
+        'let a = r##"panic!(" inside "# stays text"##;\n'
+        'let b = b".unwrap() in a byte string";\n'
+        "let c = br#\"thread::spawn in raw bytes\"#;\n"
+        "let d = 1.0.max(2.0);\n"
+        "/* outer /* inner .expect( */ still comment */ let e = 2;\n"
+    )
+    joined = "\n".join(lexed.lines)
+    assert "panic!" not in joined
+    assert ".unwrap()" not in joined
+    assert "thread::spawn" not in joined
+    assert ".expect(" not in joined
+    assert ".max(" in joined  # method call after a float literal is code
+    assert "let e = 2;" in joined
+
+
+# ---- call graph ----------------------------------------------------------
+
+
+def _graph(mod, files):
+    return mod.CallGraph([mod.Unit(p, t) for p, t in files.items()])
+
+
+def test_callgraph_same_file_beats_crate_wide(mod):
+    g = _graph(mod, {
+        "rust/src/a.rs": "fn helper() {}\nfn caller() { helper(); }\n",
+        "rust/src/b.rs": "fn helper() {}\n",
+    })
+    caller = g.index_of("rust/src/a.rs", "caller")
+    edges = g.edges[caller]
+    assert len(edges) == 1
+    assert g.fns[edges[0].callee].path == "rust/src/a.rs"
+
+
+def test_callgraph_unique_crate_wide_resolves(mod):
+    g = _graph(mod, {
+        "rust/src/a.rs": "fn caller() { helper(); }\n",
+        "rust/src/b.rs": "fn helper() {}\n",
+    })
+    caller = g.index_of("rust/src/a.rs", "caller")
+    [e] = g.edges[caller]
+    assert g.fns[e.callee].path == "rust/src/b.rs"
+    assert g.unresolved == []
+
+
+def test_callgraph_ambiguous_is_unresolved_not_guessed(mod):
+    g = _graph(mod, {
+        "rust/src/a.rs": "fn caller() { helper(); }\n",
+        "rust/src/b.rs": "fn helper() {}\n",
+        "rust/src/c.rs": "fn helper() {}\n",
+    })
+    caller = g.index_of("rust/src/a.rs", "caller")
+    assert g.edges[caller] == []
+    [u] = g.unresolved
+    assert (u["name"], u["reason"]) == ("helper", "ambiguous")
+    stats = g.stats()
+    assert stats["ambiguous"] == 1
+    assert stats["edges"] + stats["external"] + stats["ambiguous"] == \
+        stats["calls"]
+
+
+def test_callgraph_cycle_terminates_and_propagates(mod):
+    # ping <-> pong recursion with a panic inside: the fixpoint must
+    # terminate and still surface the panic at the pub API frontier
+    src = (
+        "fn ping(n: u32) -> u32 {\n"
+        "    if n == 0 { panic!(\"boom\") } else { pong(n - 1) }\n"
+        "}\n"
+        "fn pong(n: u32) -> u32 {\n"
+        "    ping(n)\n"
+        "}\n"
+        "pub fn api(n: u32) -> u32 {\n"
+        "    pong(n)\n"
+        "}\n"
+    )
+    findings = mod.lint_text("rust/src/engine/adapters.rs", src)
+    assert [(f.rule, f.line) for f in findings] == [("no-transitive-panic", 8)]
+
+
+# ---- interprocedural passes ----------------------------------------------
+
+
+def test_transitive_panic_seen_through_helper(mod):
+    src = (
+        "fn helper(x: &str) -> u32 {\n"
+        "    x.parse().unwrap()\n"
+        "}\n"
+        "pub fn api(x: &str) -> u32 {\n"
+        "    helper(x)\n"
+        "}\n"
+    )
+    findings = mod.lint_text("rust/src/engine/adapters.rs", src)
+    assert [(f.rule, f.line) for f in findings] == [("no-transitive-panic", 5)]
+    # the same chain outside the engine/serve API surface is not flagged
+    assert mod.lint_text("rust/src/quant/kernels.rs", src) == []
+
+
+def test_transitive_panic_waiver_at_root_shields_all_callers(mod):
+    src = (
+        "fn helper(x: &str) -> u32 {\n"
+        "    // pallas-lint: allow(no-transitive-panic) — input validated upstream\n"
+        "    x.parse().unwrap()\n"
+        "}\n"
+        "pub fn api(x: &str) -> u32 { helper(x) }\n"
+        "pub fn api2(x: &str) -> u32 { helper(x) }\n"
+    )
+    assert mod.lint_text("rust/src/engine/adapters.rs", src) == []
+
+
+def test_lock_order_double_acquire_flagged(mod):
+    src = (
+        "use std::sync::Mutex;\n"
+        "fn f(m: &Mutex<u32>) {\n"
+        "    let a = m.lock().unwrap_or_else(|p| p.into_inner());\n"
+        "    let b = m.lock().unwrap_or_else(|p| p.into_inner());\n"
+        "    drop(b);\n"
+        "    drop(a);\n"
+        "}\n"
+    )
+    findings = mod.lint_text("rust/src/serve/server.rs", src)
+    assert [(f.rule, f.line) for f in findings] == [("lock-order", 4)]
+    # scheduler.rs is in scope too; quant/ is not
+    assert [f.rule for f in
+            mod.lint_text("rust/src/engine/scheduler.rs", src)] == \
+        ["lock-order"]
+    assert mod.lint_text("rust/src/quant/kernels.rs", src) == []
+
+
+def test_lock_order_condvar_wait_is_sanctioned(mod):
+    src = (
+        "use std::sync::{Condvar, Mutex};\n"
+        "fn f(m: &Mutex<u32>, cv: &Condvar) {\n"
+        "    let mut g = m.lock().unwrap_or_else(|p| p.into_inner());\n"
+        "    while *g == 0 {\n"
+        "        g = cv.wait_timeout(g, DUR).unwrap_or_else(|p| p.into_inner()).0;\n"
+        "    }\n"
+        "}\n"
+    )
+    assert mod.lint_text("rust/src/serve/server.rs", src) == []
+
+
+def test_taint_source_to_sink_and_sanitizer(mod):
+    bad = (
+        "fn f(doc: &Doc) -> Vec<u8> {\n"
+        "    let n = doc.req_u64(\"len\") as usize;\n"
+        "    Vec::with_capacity(n)\n"
+        "}\n"
+    )
+    findings = mod.lint_text("rust/src/serve/server.rs", bad)
+    assert [(f.rule, f.line) for f in findings] == [("untrusted-taint", 3)]
+    # a bounds check on the way sanitizes the value
+    good = (
+        "fn f(doc: &Doc) -> Vec<u8> {\n"
+        "    let n = doc.req_u64(\"len\") as usize;\n"
+        "    if n > MAX { return Vec::new(); }\n"
+        "    Vec::with_capacity(n)\n"
+        "}\n"
+    )
+    assert mod.lint_text("rust/src/serve/server.rs", good) == []
+    # and the same code outside serve/ is out of scope
+    assert mod.lint_text("rust/src/engine/session.rs", bad) == []
+
+
+def test_taint_clamped_at_source_is_clean(mod):
+    src = (
+        "fn f(doc: &Doc, xs: &[u8]) -> u8 {\n"
+        "    let i = (doc.req_u64(\"i\") as usize).min(xs.len() - 1);\n"
+        "    xs[i]\n"
+        "}\n"
+    )
+    assert mod.lint_text("rust/src/serve/server.rs", src) == []
+
+
+# ---- CLI surfaces --------------------------------------------------------
+
+
+def test_sarif_output_is_valid(tmp_path):
+    bad = tmp_path / "bad.rs"
+    bad.write_text(
+        "fn f(xs: &mut [f64]) {\n"
+        "    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());\n"
+        "}\n"
+    )
+    out = tmp_path / "out.sarif"
+    p = run_lint("--sarif", str(out), str(bad))
+    assert p.returncode == 1
+    doc = json.loads(out.read_text())
+    assert doc["version"] == "2.1.0"
+    assert "sarif-2.1.0" in doc["$schema"]
+    run = doc["runs"][0]
+    assert run["tool"]["driver"]["name"] == "pallas-lint"
+    rule_ids = [r["id"] for r in run["tool"]["driver"]["rules"]]
+    assert "no-float-partial-cmp" in rule_ids
+    [res] = [r for r in run["results"]
+             if r["ruleId"] == "no-float-partial-cmp"]
+    assert res["level"] == "error"
+    loc = res["locations"][0]["physicalLocation"]
+    assert loc["region"]["startLine"] == 2
+    assert res["ruleIndex"] == rule_ids.index("no-float-partial-cmp")
+
+
+def test_changed_mode_reports_only_changed_files():
+    # vs HEAD the repo is clean either way: with no pending .rs edits it
+    # short-circuits, with pending edits those files lint clean
+    p = run_lint("--changed", "HEAD")
+    assert p.returncode == 0, p.stdout + p.stderr
+    p2 = run_lint("--changed", "HEAD", "rust/src")
+    assert p2.returncode == 2  # exclusive with explicit paths

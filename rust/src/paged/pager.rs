@@ -159,11 +159,16 @@ impl Pager {
         evicted
     }
 
-    /// Touch (access) a page: fault + migrate if non-resident.
+    /// Touch (access) a page: fault + migrate if non-resident. Touching
+    /// an unregistered page is a caller bug; it trips a debug assertion
+    /// under test and is a no-op in release builds.
     pub fn touch(&mut self, id: PageId, reserved: usize) {
         self.clock += 1;
         let clock = self.clock;
-        let entry = self.pages.get_mut(&id).expect("unregistered page");
+        let Some(entry) = self.pages.get_mut(&id) else {
+            debug_assert!(false, "touch on unregistered page {id}");
+            return;
+        };
         entry.last_touch = clock;
         if entry.residency == Residency::Device {
             return;
@@ -177,7 +182,11 @@ impl Pager {
                 break; // thrashing floor: single page still migrates
             }
         }
-        let entry = self.pages.get_mut(&id).unwrap();
+        let Some(entry) = self.pages.get_mut(&id) else {
+            // the entry existed above; evict_lru never removes entries
+            debug_assert!(false, "page {id} vanished during eviction");
+            return;
+        };
         entry.residency = Residency::Device;
         self.resident_bytes += page;
         self.peak_resident = self.peak_resident.max(self.resident_bytes);
@@ -192,19 +201,20 @@ impl Pager {
             .filter(|(_, e)| e.residency == Residency::Device)
             .min_by_key(|(_, e)| e.last_touch)
             .map(|(id, _)| *id);
-        match victim {
-            Some(id) => {
-                let e = self.pages.get_mut(&id).unwrap();
-                e.residency = Residency::Host;
-                self.resident_bytes -= self.cfg.page_bytes;
-                self.stats.evictions += 1;
-                self.stats.migrated_bytes += self.cfg.page_bytes as u64;
-                self.stats.stall_us +=
-                    self.cfg.migrate().transfer_us(self.cfg.page_bytes);
-                true
-            }
-            None => false,
-        }
+        // the victim id was just drawn from the page table, so the
+        // lookup can only miss if the table mutated in between (it
+        // did not); treating a miss as "nothing evictable" keeps the
+        // accounting consistent either way
+        let Some(e) = victim.and_then(|id| self.pages.get_mut(&id)) else {
+            return false;
+        };
+        e.residency = Residency::Host;
+        self.resident_bytes -= self.cfg.page_bytes;
+        self.stats.evictions += 1;
+        self.stats.migrated_bytes += self.cfg.page_bytes as u64;
+        self.stats.stall_us +=
+            self.cfg.migrate().transfer_us(self.cfg.page_bytes);
+        true
     }
 
     /// Invariant check: resident bytes equals page-table residency.

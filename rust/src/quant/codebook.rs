@@ -200,6 +200,7 @@ fn fp_values(ebits: u32, mbits: u32) -> Vec<f32> {
     }
     mags.sort_by(|a, b| a.total_cmp(b));
     mags.dedup();
+    // pallas-lint: allow(no-transitive-panic) — mags holds 2^(ebits+mbits) >= 1 magnitudes by construction, so last() is always Some
     let mx = *mags.last().unwrap();
     let vals: Vec<f64> = mags.iter().map(|m| m / mx).collect();
     let mut all: Vec<f64> =

@@ -29,6 +29,16 @@ impl Runtime {
         Ok(Runtime { client, cache: Mutex::new(HashMap::new()) })
     }
 
+    /// Acquire the compile cache, recovering from poisoning: the cache
+    /// maps path -> compiled executable and every insert is idempotent,
+    /// so state left by a panicked holder is safe to reuse.
+    fn cache_guard(
+        &self,
+    ) -> std::sync::MutexGuard<'_, HashMap<PathBuf, std::sync::Arc<Executable>>>
+    {
+        self.cache.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
     /// PJRT platform name (e.g. `"cpu"`).
     pub fn platform(&self) -> String {
         self.client.platform_name()
@@ -37,7 +47,7 @@ impl Runtime {
     /// Load + compile an HLO text file (cached).
     pub fn load_hlo(&self, path: &Path) -> Result<std::sync::Arc<Executable>> {
         {
-            let cache = self.cache.lock().unwrap();
+            let cache = self.cache_guard();
             if let Some(e) = cache.get(path) {
                 return Ok(e.clone());
             }
@@ -53,15 +63,12 @@ impl Runtime {
             .compile(&comp)
             .with_context(|| format!("compiling {path:?}"))?;
         let arc = std::sync::Arc::new(Executable::new(exe));
-        self.cache
-            .lock()
-            .unwrap()
-            .insert(path.to_path_buf(), arc.clone());
+        self.cache_guard().insert(path.to_path_buf(), arc.clone());
         Ok(arc)
     }
 
     /// Number of compiled executables held in the cache.
     pub fn cache_len(&self) -> usize {
-        self.cache.lock().unwrap().len()
+        self.cache_guard().len()
     }
 }

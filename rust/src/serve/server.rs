@@ -317,6 +317,16 @@ fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
 }
 
+/// Lock-order contract for the serving stack, checked by pallas-lint's
+/// `lock-order` pass: `Shared::inbox` and `StatsCell::inner` are both
+/// *leaf* locks — a thread holds at most one of them at a time, which
+/// rules out lock-cycle deadlocks by construction. Concretely: never
+/// call `StatsCell::publish`/`snapshot` (or any other acquiring helper)
+/// while an inbox guard is live, and never touch the inbox from inside
+/// stats code. If nesting ever becomes necessary, acquire in the order
+/// listed here and update this constant plus the lint fixtures.
+pub const LOCK_ORDER: &[&str] = &["StatsCell::inner", "Shared::inbox"];
+
 /// One queued generation job: the request plus the bounded channel its
 /// events flow back through and the handle that cancels it if the
 /// consumer stops draining that channel.
@@ -803,6 +813,12 @@ fn handle_generate(
     // it and cancels the job if a slow consumer lets it fill
     let (tx, rx) = mpsc::sync_channel(cfg.token_channel_depth.max(1));
     let tag = shared.next_tag.fetch_add(1, Ordering::SeqCst);
+    // snapshot the decode-side stats *before* taking the inbox lock:
+    // the inbox is a leaf lock (see LOCK_ORDER) and must never nest
+    // another acquisition. The snapshot is one publish interval stale
+    // at worst; the racy part of the shed decision is the queue depth,
+    // which is still read under the inbox lock below.
+    let stats_now = shared.stats.snapshot();
     {
         let mut inbox = lock(&shared.inbox);
         if inbox.closed {
@@ -820,7 +836,7 @@ fn handle_generate(
         }
         // the shed decision runs under the inbox lock so racing
         // workers cannot collectively overshoot the watermark
-        if should_shed(inbox.jobs.len(), &shared.stats.snapshot(), cfg) {
+        if should_shed(inbox.jobs.len(), &stats_now, cfg) {
             drop(inbox);
             shared.shed.fetch_add(1, Ordering::SeqCst);
             let _ = http::write_error_after(

@@ -1,859 +1,34 @@
 #!/usr/bin/env python3
-"""pallas-lint: project-invariant static analysis for the Rust sources.
+"""pallas-lint CLI shim.
 
-This container runs tier-1 without a Rust toolchain, so clippy cannot be
-the lint wall here. pallas-lint is a zero-dependency (stdlib-only)
-analyzer that lexes the Rust sources for real — line and nested block
-comments, regular/raw/byte strings, char literals vs lifetimes — and
-runs a small rule engine over the scrubbed code. Rules are distilled
-from this repo's actual bug history and module contracts (see
-ARCHITECTURE.md, "Invariants & static analysis").
+The analyzer lives in the `scripts/pallas_lint/` package (lexer, item
+parser, call graph, per-file rules, interprocedural passes, SARIF).
+This file keeps the historical entry point and import surface working:
 
-Waivers
--------
-A finding is suppressed by a waiver comment carrying a reason::
+- `python3 scripts/pallas_lint.py ...` runs the CLI exactly as before;
+- tests that load this file as a module (via importlib) still find
+  `lex`, `lint_text`, `RULES`, and the rest of the public API, because
+  everything the package exports is re-exported here.
 
-    thing.expect("x");  // pallas-lint: allow(no-hot-path-panic) — why it holds
-
-A waiver on its own line applies to the next code line. A waiver that
-suppresses nothing is itself an error (`unused-waiver`), as is a waiver
-without a reason or naming an unknown rule (`waiver-syntax`).
-
-Usage
------
-    python3 scripts/pallas_lint.py [paths...]   # default: <repo>/rust
-    python3 scripts/pallas_lint.py --json
-    python3 scripts/pallas_lint.py --self-test  # run the fixture suite
-    python3 scripts/pallas_lint.py --list-rules
-
-Exit codes: 0 clean, 1 findings, 2 usage/internal error.
+See `python3 scripts/pallas_lint.py --list-rules` for the rule table
+and ARCHITECTURE.md ("Invariants & static analysis") for the contracts
+behind it. Exit codes: 0 clean, 1 findings, 2 usage/internal error.
 """
 
 from __future__ import annotations
 
-import argparse
-import json
-import re
 import sys
 from pathlib import Path
 
-REPO_ROOT = Path(__file__).resolve().parent.parent
-FIXTURE_DIR = Path(__file__).resolve().parent / "tests" / "lint_fixtures"
-
-# ---------------------------------------------------------------------------
-# Lexer: scrub comments / strings / char literals out of Rust source.
-# ---------------------------------------------------------------------------
-
-
-class Lexed:
-    """Result of scrubbing one Rust file.
-
-    ``lines`` holds the source with every comment, string literal, and
-    char literal replaced by spaces (newlines preserved), so downstream
-    regexes only ever match real code. ``comments`` holds the comment
-    text that was removed, as ``(line_number, text)`` pairs (line
-    comments only — waivers must be `//` comments).
-    """
-
-    def __init__(self, lines, comments):
-        self.lines = lines  # list[str], 1-based via index+1
-        self.comments = comments  # list[(line, text)]
-
-    def line(self, n):
-        """Scrubbed text of 1-based line ``n`` (empty if out of range)."""
-        if 1 <= n <= len(self.lines):
-            return self.lines[n - 1]
-        return ""
-
-
-def _is_ident(ch):
-    return ch.isalnum() or ch == "_"
-
-
-def lex(text):
-    """Scrub Rust source: return a `Lexed` with code-only lines."""
-    out = list(text)
-    comments = []
-    n = len(text)
-    i = 0
-    line = 1
-
-    def blank(a, b):
-        """Replace text[a:b] with spaces, preserving newlines."""
-        for k in range(a, b):
-            if out[k] != "\n":
-                out[k] = " "
-
-    while i < n:
-        ch = text[i]
-        if ch == "\n":
-            line += 1
-            i += 1
-            continue
-        prev = text[i - 1] if i > 0 else ""
-
-        # -- line comment ---------------------------------------------------
-        if ch == "/" and text[i : i + 2] == "//":
-            end = text.find("\n", i)
-            if end == -1:
-                end = n
-            comments.append((line, text[i + 2 : end]))
-            blank(i, end)
-            i = end
-            continue
-
-        # -- block comment (nests) -----------------------------------------
-        if ch == "/" and text[i : i + 2] == "/*":
-            depth = 1
-            j = i + 2
-            while j < n and depth > 0:
-                if text[j : j + 2] == "/*":
-                    depth += 1
-                    j += 2
-                elif text[j : j + 2] == "*/":
-                    depth -= 1
-                    j += 2
-                else:
-                    j += 1
-            blank(i, j)
-            line += text.count("\n", i, j)
-            i = j
-            continue
-
-        # -- raw / byte-raw strings: r"…", r#"…"#, br#"…"# ------------------
-        if ch in "rb" and not _is_ident(prev):
-            j = i
-            if text[j : j + 2] == "br":
-                j += 2
-            else:
-                j += 1
-            hashes = 0
-            k = j
-            while k < n and text[k] == "#":
-                hashes += 1
-                k += 1
-            is_raw = "r" in text[i : i + 2].lower()[:2] and k < n and text[k] == '"'
-            if is_raw and (ch == "r" or text[i : i + 2] == "br"):
-                # raw string: ends at '"' + hashes '#'s, no escapes
-                close = '"' + "#" * hashes
-                end = text.find(close, k + 1)
-                end = n if end == -1 else end + len(close)
-                blank(i, end)
-                line += text.count("\n", i, end)
-                i = end
-                continue
-            if ch == "b" and text[i : i + 2] == 'b"':
-                i += 1  # byte string: treat as a regular string from the quote
-                ch = '"'
-            elif ch == "b" and text[i : i + 2] == "b'":
-                i += 1  # byte char literal
-                ch = "'"
-            else:
-                if ch in "rb" and not is_raw and text[i : i + 1] in "rb":
-                    # plain identifier starting with r/b — ordinary code
-                    i += 1
-                    continue
-
-        # -- regular string --------------------------------------------------
-        if ch == '"':
-            j = i + 1
-            while j < n:
-                if text[j] == "\\":
-                    j += 2
-                elif text[j] == '"':
-                    j += 1
-                    break
-                else:
-                    j += 1
-            blank(i, j)
-            line += text.count("\n", i, j)
-            i = j
-            continue
-
-        # -- char literal vs lifetime ---------------------------------------
-        if ch == "'":
-            if text[i + 1 : i + 2] == "\\":
-                # escaped char literal: walk to the closing quote (the
-                # escape-skip handles '\'' and '\\')
-                j = i + 1
-                while j < n and text[j] != "'":
-                    j += 2 if text[j] == "\\" else 1
-                blank(i, min(j + 1, n))
-                i = j + 1
-                continue
-            if text[i + 2 : i + 3] == "'" and text[i + 1 : i + 2] != "'":
-                blank(i, i + 3)  # 'x'
-                i += 3
-                continue
-            i += 1  # lifetime / loop label: keep as code
-            continue
-
-        i += 1
-
-    return Lexed("".join(out).split("\n"), comments)
-
-
-# ---------------------------------------------------------------------------
-# Structure: test spans and fn spans over the scrubbed source.
-# ---------------------------------------------------------------------------
-
-_CFG_TEST = re.compile(r"#\s*\[\s*(?:cfg\s*\(\s*test\s*\)|test\b)")
-_FN = re.compile(r"\bfn\s+([A-Za-z_]\w*)")
-
-
-class FnSpan:
-    """One function item: name, visibility, and its body's line range."""
-
-    def __init__(self, name, is_pub, start, end):
-        self.name = name
-        self.is_pub = is_pub
-        self.start = start  # line of the `fn` keyword (1-based)
-        self.end = end  # line of the closing brace (inclusive)
-
-
-def _item_span(lines, start_idx, col):
-    """Lines covered by the item starting at (start_idx, col) in scrubbed
-    ``lines`` (0-based index). Scans for the first `{` or `;`; a `{`
-    is brace-matched (strings/comments are already blanked, so every
-    brace is structural). Returns the inclusive 0-based end index."""
-    depth = 0
-    seen_open = False
-    i, c = start_idx, col
-    while i < len(lines):
-        text = lines[i][c:] if i == start_idx else lines[i]
-        off = c if i == start_idx else 0
-        for k, ch in enumerate(text):
-            if not seen_open and ch == ";":
-                return i
-            if ch == "{":
-                seen_open = True
-                depth += 1
-            elif ch == "}":
-                depth -= 1
-                if seen_open and depth == 0:
-                    return i
-        i += 1
-        c = 0
-    return len(lines) - 1
-
-
-def test_lines(lexed):
-    """The set of 1-based line numbers inside `#[cfg(test)]` / `#[test]`
-    items (attribute line through closing brace, inclusive)."""
-    out = set()
-    for idx, text in enumerate(lexed.lines):
-        m = _CFG_TEST.search(text)
-        if not m:
-            continue
-        end = _item_span(lexed.lines, idx, m.end())
-        out.update(range(idx + 1, end + 2))
-    return out
-
-
-def fn_spans(lexed):
-    """All function items as `FnSpan`s (1-based inclusive line ranges)."""
-    spans = []
-    for idx, text in enumerate(lexed.lines):
-        for m in _FN.finditer(text):
-            before = text[: m.start()]
-            is_pub = bool(re.search(r"\bpub\b", before))
-            end = _item_span(lexed.lines, idx, m.end())
-            spans.append(FnSpan(m.group(1), is_pub, idx + 1, end + 1))
-    return spans
-
-
-def enclosing_fn(spans, line):
-    """The innermost `FnSpan` containing 1-based ``line``, or None."""
-    best = None
-    for s in spans:
-        if s.start <= line <= s.end:
-            if best is None or s.start >= best.start:
-                best = s
-    return best
-
-
-# ---------------------------------------------------------------------------
-# Findings and waivers.
-# ---------------------------------------------------------------------------
-
-
-class Finding:
-    """One rule violation at (path, line)."""
-
-    def __init__(self, path, line, rule, message):
-        self.path = path
-        self.line = line
-        self.rule = rule
-        self.message = message
-
-    def key(self):
-        return (self.line, self.rule)
-
-    def as_dict(self):
-        return {
-            "path": self.path,
-            "line": self.line,
-            "rule": self.rule,
-            "message": self.message,
-        }
-
-
-# `pallas-lint:` only — the fixture headers (`pallas-lint-fixture:`,
-# `pallas-lint-expect:`) are not waivers
-_WAIVER_HINT = re.compile(r"pallas-lint\s*:")
-_WAIVER = re.compile(
-    r"^\s*pallas-lint\s*:\s*allow\s*\(\s*([A-Za-z0-9_,\s-]+?)\s*\)"
-    r"\s*(?:—|--|-|:)\s*(\S.*)$"
-)
-
-
-class Waiver:
-    """A parsed `// pallas-lint: allow(...)` comment."""
-
-    def __init__(self, comment_line, target_line, rules, reason):
-        self.comment_line = comment_line
-        self.target_line = target_line
-        self.rules = rules
-        self.reason = reason
-        self.used = False
-
-
-def parse_waivers(path, lexed, known_rules):
-    """Extract waivers from a file's line comments.
-
-    Returns ``(waivers, syntax_findings)``: malformed waiver comments
-    (no reason, bad shape, unknown rule) become `waiver-syntax` findings
-    rather than silently suppressing nothing."""
-    waivers, findings = [], []
-    for line_no, text in lexed.comments:
-        if not _WAIVER_HINT.search(text):
-            continue
-        m = _WAIVER.match(text)
-        if not m:
-            findings.append(
-                Finding(
-                    path,
-                    line_no,
-                    "waiver-syntax",
-                    "malformed waiver: expected "
-                    "`// pallas-lint: allow(<rule>[, <rule>]) — <reason>`",
-                )
-            )
-            continue
-        rules = [r.strip() for r in m.group(1).split(",") if r.strip()]
-        bad = [r for r in rules if r not in known_rules]
-        if bad or not rules:
-            findings.append(
-                Finding(
-                    path,
-                    line_no,
-                    "waiver-syntax",
-                    "waiver names unknown rule(s): "
-                    + (", ".join(bad) if bad else "<none>"),
-                )
-            )
-            continue
-        # a waiver on a code line targets that line; a standalone waiver
-        # targets the next non-blank code line
-        target = line_no
-        if not lexed.line(line_no).strip():
-            target = None
-            for j in range(line_no + 1, len(lexed.lines) + 1):
-                if lexed.line(j).strip():
-                    target = j
-                    break
-            if target is None:
-                findings.append(
-                    Finding(
-                        path,
-                        line_no,
-                        "waiver-syntax",
-                        "standalone waiver has no following code line",
-                    )
-                )
-                continue
-        waivers.append(Waiver(line_no, target, rules, m.group(2).strip()))
-    return waivers, findings
-
-
-# ---------------------------------------------------------------------------
-# Rules.
-# ---------------------------------------------------------------------------
-
-PANIC_PAT = re.compile(
-    r"\.unwrap\s*\(|\.expect\s*\(|\b(?:panic|unreachable|todo|unimplemented)\s*!"
-)
-# `[` directly adjacent to an expression tail is indexing; array types,
-# attributes (`#[...]`), and `vec![...]` never match.
-INDEX_PAT = re.compile(r"[A-Za-z0-9_)\]?]\[")
-PARTIAL_CMP_PAT = re.compile(r"\bpartial_cmp\b")
-FUSED_SYMBOLS = re.compile(
-    r"\b(?:quantize_fused|dequantize_fused_into|quantize_blockwise_fused"
-    r"|dequantize_blockwise_fused)\b|\bEncoder\s*::"
-)
-RELAXED_PAT = re.compile(r"\bOrdering\s*::\s*Relaxed\b")
-CANCELISH_PAT = re.compile(r"(?i)cancel|abort")
-# narrowing targets only: widening to usize/u64/i64/f64 keeps every value
-# (BlockId is this repo's u32 alias, so it counts as narrowing too)
-LOSSY_AS_PAT = re.compile(r"\bas\s+(?:u8|u16|u32|i8|i16|i32|f32|BlockId)\b")
-THREAD_SPAWN_PAT = re.compile(r"\bthread\s*::\s*spawn\b")
-# `mpsc::channel` (unbounded) only; `sync_channel` has a word character
-# before "channel" and never matches
-UNBOUNDED_CHANNEL_PAT = re.compile(r"\bmpsc\s*::\s*channel\b")
-
-HOT_PATH_FILES = {
-    "rust/src/engine/scheduler.rs",
-    "rust/src/engine/session.rs",
-    "rust/src/engine/sampler.rs",
-    "rust/src/engine/decode.rs",
-    "rust/src/paged/blocks.rs",
-    "rust/src/paged/pool.rs",
-    # the network boundary parses untrusted bytes: a panic here is a
-    # remote denial-of-service, so it gets the line-by-line treatment
-    "rust/src/serve/json.rs",
-    "rust/src/serve/http.rs",
-}
-
-# pub fns under these prefixes form the serving API surface checked by
-# result-not-panic-api (minus the HOT_PATH_FILES, which no-hot-path-panic
-# already covers line by line)
-API_SURFACE_PREFIXES = ("rust/src/engine/", "rust/src/serve/")
-
-ACCOUNTING_PREFIXES = ("rust/src/tensorio/", "rust/src/paged/")
-ACCOUNTING_FILES = {"rust/src/engine/scheduler.rs"}
-
-
-class Ctx:
-    """Everything a rule needs about one file."""
-
-    def __init__(self, path, lexed):
-        self.path = path  # repo-relative, forward slashes
-        self.lexed = lexed
-        self.tests = test_lines(lexed)
-        self.fns = fn_spans(lexed)
-
-    def code_lines(self, include_tests=False):
-        """Yield (1-based line number, scrubbed text) pairs."""
-        for idx, text in enumerate(self.lexed.lines):
-            n = idx + 1
-            if not include_tests and n in self.tests:
-                continue
-            yield n, text
-
-
-def rule_no_hot_path_panic(ctx):
-    """(1) no-hot-path-panic: panicking calls and `[...]` indexing in the
-    serve-loop hot-path modules need a waiver naming the protecting
-    invariant."""
-    if ctx.path not in HOT_PATH_FILES:
-        return []
-    out = []
-    for n, text in ctx.code_lines():
-        if PANIC_PAT.search(text):
-            out.append(
-                Finding(
-                    ctx.path,
-                    n,
-                    "no-hot-path-panic",
-                    "panicking call on the serve hot path; return an error "
-                    "or waive with the protecting invariant",
-                )
-            )
-        if INDEX_PAT.search(text):
-            out.append(
-                Finding(
-                    ctx.path,
-                    n,
-                    "no-hot-path-panic",
-                    "`[...]` indexing on the serve hot path; use .get()/"
-                    "slicing with checks or waive with the bounds invariant",
-                )
-            )
-    return out
-
-
-def rule_no_float_partial_cmp(ctx):
-    """(2) no-float-partial-cmp: `partial_cmp` is how the PR 6 sampler
-    NaN panic happened; float ordering must go through `total_cmp`.
-    Applies everywhere, including tests."""
-    out = []
-    for n, text in ctx.code_lines(include_tests=True):
-        if PARTIAL_CMP_PAT.search(text):
-            out.append(
-                Finding(
-                    ctx.path,
-                    n,
-                    "no-float-partial-cmp",
-                    "partial_cmp orders NaN as None (panic/flip hazard); "
-                    "use f32::total_cmp / f64::total_cmp",
-                )
-            )
-    return out
-
-
-def rule_oracle_purity(ctx):
-    """(3) oracle-purity: `*_scalar` fns in quant/ are the bit-exactness
-    oracle the fused kernels are tested against; they must never route
-    through the fused symbols themselves."""
-    if "quant/" not in ctx.path:
-        return []
-    out = []
-    for span in ctx.fns:
-        if not span.name.endswith("_scalar") or span.start in ctx.tests:
-            continue
-        for n in range(span.start, span.end + 1):
-            if n in ctx.tests:
-                continue
-            if FUSED_SYMBOLS.search(ctx.lexed.line(n)):
-                out.append(
-                    Finding(
-                        ctx.path,
-                        n,
-                        "oracle-purity",
-                        f"oracle fn `{span.name}` calls a fused-kernel "
-                        "symbol; the scalar path must stay independent",
-                    )
-                )
-    return out
-
-
-def rule_no_relaxed_cancel(ctx):
-    """(4) no-relaxed-cancel: `Ordering::Relaxed` on cancellation /
-    abort atomics can defer the flag past the next poll; engine code and
-    any cancel/abort context must use SeqCst (or Acquire/Release)."""
-    out = []
-    for n, text in ctx.code_lines():
-        if not RELAXED_PAT.search(text):
-            continue
-        span = enclosing_fn(ctx.fns, n)
-        fn_body = (
-            "\n".join(
-                ctx.lexed.line(k) for k in range(span.start, span.end + 1)
-            )
-            if span
-            else ""
-        )
-        if (
-            ctx.path.startswith("rust/src/engine/")
-            or CANCELISH_PAT.search(text)
-            or CANCELISH_PAT.search(fn_body)
-        ):
-            out.append(
-                Finding(
-                    ctx.path,
-                    n,
-                    "no-relaxed-cancel",
-                    "Ordering::Relaxed on a cancellation/abort atomic; "
-                    "use SeqCst so cancel() is seen by the next poll",
-                )
-            )
-    return out
-
-
-def rule_no_lossy_as(ctx):
-    """(5) no-lossy-as-in-accounting: narrowing `as` casts silently
-    truncate; byte/token-accounting modules must use `try_from` (the
-    PR 5 f16 byte-accounting bug class). Widening casts are exempt."""
-    if (
-        not ctx.path.startswith(ACCOUNTING_PREFIXES)
-        and ctx.path not in ACCOUNTING_FILES
-    ):
-        return []
-    out = []
-    for n, text in ctx.code_lines():
-        if LOSSY_AS_PAT.search(text):
-            out.append(
-                Finding(
-                    ctx.path,
-                    n,
-                    "no-lossy-as",
-                    "narrowing `as` cast in accounting code truncates "
-                    "silently; use try_from or waive with the range invariant",
-                )
-            )
-    return out
-
-
-def rule_scoped_threads_only(ctx):
-    """(6) scoped-threads-only: all library parallelism goes through
-    `std::thread::scope` (joins on panic, borrows locals) — bare
-    `thread::spawn` leaks detached threads on early return."""
-    if not ctx.path.startswith("rust/src/"):
-        return []
-    out = []
-    for n, text in ctx.code_lines():
-        if THREAD_SPAWN_PAT.search(text):
-            out.append(
-                Finding(
-                    ctx.path,
-                    n,
-                    "scoped-threads-only",
-                    "bare thread::spawn in library code; use "
-                    "std::thread::scope (see quant/kernels.rs)",
-                )
-            )
-    return out
-
-
-def rule_result_not_panic_api(ctx):
-    """(7) result-not-panic-api: `pub fn`s in engine/ and serve/ are the
-    serving API surface; they must surface errors as `Result`, not
-    panics. The hot-path files are already covered line-by-line by
-    no-hot-path-panic and are exempt here to avoid double findings."""
-    if (
-        not ctx.path.startswith(API_SURFACE_PREFIXES)
-        or ctx.path in HOT_PATH_FILES
-    ):
-        return []
-    out = []
-    for span in ctx.fns:
-        if not span.is_pub or span.start in ctx.tests:
-            continue
-        for n in range(span.start, span.end + 1):
-            if n in ctx.tests:
-                continue
-            if PANIC_PAT.search(ctx.lexed.line(n)):
-                out.append(
-                    Finding(
-                        ctx.path,
-                        n,
-                        "result-not-panic-api",
-                        f"pub fn `{span.name}` contains a panicking call; "
-                        "engine APIs return Result",
-                    )
-                )
-    return out
-
-
-def rule_no_unbounded_send(ctx):
-    """(8) no-unbounded-send: an unbounded `mpsc::channel` in the
-    serving stack lets one slow consumer buffer tokens without limit —
-    the overload-control plane depends on bounded `sync_channel`s whose
-    full-send failure feeds back into cancellation. Bound the channel
-    or waive with the invariant that bounds it externally."""
-    if not ctx.path.startswith(API_SURFACE_PREFIXES):
-        return []
-    out = []
-    for n, text in ctx.code_lines():
-        if UNBOUNDED_CHANNEL_PAT.search(text):
-            out.append(
-                Finding(
-                    ctx.path,
-                    n,
-                    "no-unbounded-send",
-                    "unbounded mpsc::channel in the serving stack; use "
-                    "mpsc::sync_channel with an explicit depth so a slow "
-                    "consumer hits backpressure instead of unbounded memory",
-                )
-            )
-    return out
-
-
-RULES = {
-    "no-hot-path-panic": rule_no_hot_path_panic,
-    "no-float-partial-cmp": rule_no_float_partial_cmp,
-    "oracle-purity": rule_oracle_purity,
-    "no-relaxed-cancel": rule_no_relaxed_cancel,
-    "no-lossy-as": rule_no_lossy_as,
-    "scoped-threads-only": rule_scoped_threads_only,
-    "result-not-panic-api": rule_result_not_panic_api,
-    "no-unbounded-send": rule_no_unbounded_send,
-}
-
-META_RULES = ("unused-waiver", "waiver-syntax")
-
-
-def lint_text(path, text):
-    """Lint one file's content under repo-relative ``path``.
-
-    Runs every rule, applies waivers, and reports unused waivers.
-    Returns a list of `Finding`s, deduplicated per (line, rule) and
-    sorted by line."""
-    lexed = lex(text)
-    ctx = Ctx(path, lexed)
-    raw = []
-    for rule_fn in RULES.values():
-        raw.extend(rule_fn(ctx))
-    seen = set()
-    findings = []
-    for f in sorted(raw, key=lambda f: f.key()):
-        if f.key() not in seen:
-            seen.add(f.key())
-            findings.append(f)
-
-    waivers, meta = parse_waivers(path, lexed, RULES)
-    kept = []
-    for f in findings:
-        waived = False
-        for w in waivers:
-            if w.target_line == f.line and f.rule in w.rules:
-                w.used = True
-                waived = True
-        if not waived:
-            kept.append(f)
-    for w in waivers:
-        if not w.used:
-            meta.append(
-                Finding(
-                    path,
-                    w.comment_line,
-                    "unused-waiver",
-                    "waiver suppresses nothing "
-                    f"(allow({', '.join(w.rules)})); remove it",
-                )
-            )
-    return sorted(kept + meta, key=lambda f: (f.line, f.rule))
-
-
-def lint_paths(paths):
-    """Lint every .rs file under ``paths``. Returns (findings, n_files)."""
-    files = []
-    for p in paths:
-        p = Path(p)
-        if p.is_dir():
-            files.extend(sorted(p.rglob("*.rs")))
-        elif p.suffix == ".rs":
-            files.append(p)
-        else:
-            raise SystemExit(f"pallas-lint: not a .rs file or directory: {p}")
-    findings = []
-    for f in files:
-        try:
-            rel = f.resolve().relative_to(REPO_ROOT).as_posix()
-        except ValueError:
-            rel = f.as_posix()
-        findings.extend(lint_text(rel, f.read_text(encoding="utf-8")))
-    return findings, len(files)
-
-
-# ---------------------------------------------------------------------------
-# Self-test over committed fixtures.
-# ---------------------------------------------------------------------------
-
-_FIX_PATH = re.compile(r"pallas-lint-fixture:\s*path\s*=\s*(\S+)")
-_FIX_EXPECT = re.compile(r"pallas-lint-expect:\s*(.+)$", re.MULTILINE)
-
-
-def run_self_test():
-    """Lint each fixture under scripts/tests/lint_fixtures/ and compare
-    against its declared expectations.
-
-    Fixture header grammar (plain Rust comments, so fixtures stay valid
-    Rust)::
-
-        // pallas-lint-fixture: path = rust/src/engine/scheduler.rs
-        // pallas-lint-expect: no-hot-path-panic @ 5; no-hot-path-panic @ 9
-        // pallas-lint-expect: clean
-
-    Expectations accumulate across multiple expect lines. Returns the
-    number of failing fixtures."""
-    fixtures = sorted(FIXTURE_DIR.glob("*.rs"))
-    if not fixtures:
-        print(f"pallas-lint: no fixtures in {FIXTURE_DIR}", file=sys.stderr)
-        return 1
-    failures = 0
-    for fx in fixtures:
-        text = fx.read_text(encoding="utf-8")
-        mpath = _FIX_PATH.search(text)
-        if not mpath:
-            print(f"FAIL {fx.name}: missing pallas-lint-fixture header")
-            failures += 1
-            continue
-        expected = set()
-        for m in _FIX_EXPECT.finditer(text):
-            spec = m.group(1).strip()
-            if spec == "clean":
-                continue
-            for part in spec.split(";"):
-                part = part.strip()
-                if not part:
-                    continue
-                rule, _, line = part.partition("@")
-                expected.add((rule.strip(), int(line.strip())))
-        got = {
-            (f.rule, f.line)
-            for f in lint_text(mpath.group(1), text)
-        }
-        if got == expected:
-            print(f"ok   {fx.name} ({len(expected)} expected findings)")
-        else:
-            failures += 1
-            print(f"FAIL {fx.name}")
-            for rule, line in sorted(expected - got):
-                print(f"     missing: {rule} @ {line}")
-            for rule, line in sorted(got - expected):
-                print(f"     unexpected: {rule} @ {line}")
-    total = len(fixtures)
-    print(f"self-test: {total - failures}/{total} fixtures pass")
-    return failures
-
-
-# ---------------------------------------------------------------------------
-# CLI.
-# ---------------------------------------------------------------------------
-
-
-def main(argv=None):
-    ap = argparse.ArgumentParser(
-        prog="pallas_lint.py",
-        description="Project-invariant static analysis for the Rust sources.",
-    )
-    ap.add_argument(
-        "paths",
-        nargs="*",
-        help="files or directories to lint (default: <repo>/rust)",
-    )
-    ap.add_argument("--json", action="store_true", help="machine output")
-    ap.add_argument(
-        "--self-test",
-        action="store_true",
-        help="run the committed fixture suite instead of linting",
-    )
-    ap.add_argument(
-        "--list-rules", action="store_true", help="print the rule table"
-    )
-    args = ap.parse_args(argv)
-
-    if args.list_rules:
-        for name, fn in RULES.items():
-            doc = (fn.__doc__ or "").split("\n")[0].strip()
-            print(f"{name:24s} {doc}")
-        for name in META_RULES:
-            print(f"{name:24s} (meta) waiver hygiene, always on")
-        return 0
-
-    if args.self_test:
-        return 1 if run_self_test() else 0
-
-    paths = args.paths or [REPO_ROOT / "rust"]
-    findings, n_files = lint_paths(paths)
-
-    if args.json:
-        print(
-            json.dumps(
-                {
-                    "findings": [f.as_dict() for f in findings],
-                    "checked_files": n_files,
-                },
-                indent=2,
-            )
-        )
-    else:
-        for f in sorted(findings, key=lambda f: (f.path, f.line, f.rule)):
-            print(f"{f.path}:{f.line}: [{f.rule}] {f.message}")
-        noun = "finding" if len(findings) == 1 else "findings"
-        print(
-            f"pallas-lint: {len(findings)} {noun} in {n_files} files "
-            f"({len(RULES)} rules + waiver hygiene)"
-        )
-    return 1 if findings else 0
-
+# the package directory sits next to this shim; when this file is run
+# as a script (or loaded by importlib under an arbitrary name) the
+# scripts/ dir is not necessarily on sys.path
+_SCRIPTS_DIR = str(Path(__file__).resolve().parent)
+if _SCRIPTS_DIR not in sys.path:
+    sys.path.insert(0, _SCRIPTS_DIR)
+
+from pallas_lint import *  # noqa: F401,F403  (re-export the public API)
+from pallas_lint import run
 
 if __name__ == "__main__":
-    try:
-        sys.exit(main())
-    except SystemExit:
-        raise
-    except Exception as e:  # internal error: distinct exit code
-        print(f"pallas-lint: internal error: {e}", file=sys.stderr)
-        sys.exit(2)
+    run()

@@ -1,0 +1,127 @@
+"""pallas-lint: project-invariant static analysis for the Rust sources.
+
+This container runs tier-1 without a Rust toolchain, so clippy cannot
+be the lint wall here. pallas-lint is a zero-dependency (stdlib-only)
+analyzer that lexes the Rust sources for real — line and nested block
+comments, regular/raw/byte strings, char literals vs lifetimes — and
+runs a rule engine over the scrubbed code: eight per-file lexical
+rules plus three interprocedural passes (panic reachability over the
+crate call graph, lock-order analysis, untrusted-input taint
+tracking). Rules are distilled from this repo's actual bug history and
+module contracts (see ARCHITECTURE.md, "Invariants & static
+analysis").
+
+Package map
+-----------
+- `lexer`      scrub comments/strings/chars; everything downstream
+               regexes over code-only lines
+- `items`      fn/impl/mod item parser + call-site extraction
+- `callgraph`  crate-wide call graph, honest unresolved accounting
+- `rules`      the per-file rules and their scope sets
+- `interproc`  no-transitive-panic / lock-order / untrusted-taint
+- `waivers`    `// pallas-lint: allow(rule) — reason` parsing
+- `engine`     orchestration: units -> crate -> findings
+- `sarif`      SARIF 2.1.0 writer for CI annotations
+- `selftest`   fixture suite under scripts/tests/lint_fixtures/
+- `cli`        argument parsing and output
+
+The `scripts/pallas_lint.py` shim re-exports this public surface so
+both `python3 scripts/pallas_lint.py` and direct imports keep working.
+"""
+
+from __future__ import annotations
+
+from .callgraph import CallGraph, Edge
+from .cli import main, run
+from .engine import (
+    KNOWN_RULES,
+    REPO_ROOT,
+    Crate,
+    Unit,
+    analyze,
+    changed_paths,
+    lint_paths,
+    lint_paths_ex,
+    lint_text,
+    rule_docs,
+)
+from .interproc import (
+    INTERPROC_RULES,
+    pass_lock_order,
+    pass_no_transitive_panic,
+    pass_untrusted_taint,
+)
+from .items import (
+    Call,
+    FnItem,
+    FnSpan,
+    enclosing_fn,
+    extract_calls,
+    fn_spans,
+    parse_items,
+    test_lines,
+)
+from .lexer import Lexed, lex
+from .rules import (
+    ACCOUNTING_FILES,
+    ACCOUNTING_PREFIXES,
+    API_SURFACE_PREFIXES,
+    HOT_PATH_FILES,
+    INDEX_PAT,
+    META_RULES,
+    PANIC_PAT,
+    RULES,
+    Ctx,
+    Finding,
+)
+from .sarif import SARIF_SCHEMA, SARIF_VERSION, sarif_report
+from .selftest import FIXTURE_DIR, run_self_test
+from .waivers import Waiver, parse_waivers
+
+__all__ = [
+    "ACCOUNTING_FILES",
+    "ACCOUNTING_PREFIXES",
+    "API_SURFACE_PREFIXES",
+    "CallGraph",
+    "Call",
+    "Crate",
+    "Ctx",
+    "Edge",
+    "FIXTURE_DIR",
+    "Finding",
+    "FnItem",
+    "FnSpan",
+    "HOT_PATH_FILES",
+    "INDEX_PAT",
+    "INTERPROC_RULES",
+    "KNOWN_RULES",
+    "Lexed",
+    "META_RULES",
+    "PANIC_PAT",
+    "REPO_ROOT",
+    "RULES",
+    "SARIF_SCHEMA",
+    "SARIF_VERSION",
+    "Unit",
+    "Waiver",
+    "analyze",
+    "changed_paths",
+    "enclosing_fn",
+    "extract_calls",
+    "fn_spans",
+    "lex",
+    "lint_paths",
+    "lint_paths_ex",
+    "lint_text",
+    "main",
+    "parse_items",
+    "parse_waivers",
+    "pass_lock_order",
+    "pass_no_transitive_panic",
+    "pass_untrusted_taint",
+    "rule_docs",
+    "run",
+    "run_self_test",
+    "sarif_report",
+    "test_lines",
+]

@@ -1,0 +1,171 @@
+"""Crate-wide call graph with honest resolution accounting.
+
+Resolution policy (first match wins):
+
+1. **path calls** (`a::b::f(...)`): `Self::f` resolves through the
+   caller's impl type; a qualifier naming a crate impl type resolves
+   through that type's methods; a qualifier naming a module (by file
+   stem or inline `mod` name) resolves within that module's file(s);
+   otherwise fall through to unique-name.
+2. **bare calls** (`f(...)`): same-file definition first, then a
+   crate-wide *unique* name.
+3. **method calls** (`x.f(...)`): same-file unique method first, then
+   a crate-wide unique method name.
+
+Anything else is recorded in ``unresolved`` with a reason —
+``external`` (no crate definition, e.g. `std`) or ``ambiguous``
+(several candidate definitions; guessing would fabricate edges, and a
+fabricated edge is how an interprocedural linter starts lying). The
+counts are surfaced in ``--json`` so the resolution rate is visible.
+
+Test functions are excluded from both the node set and the name index:
+edges into test helpers would let `#[cfg(test)]` code poison
+panic-reachability for production APIs.
+"""
+
+from __future__ import annotations
+
+from collections import defaultdict
+from pathlib import PurePosixPath
+
+from .items import extract_calls, parse_items
+
+
+class Edge:
+    __slots__ = ("caller", "callee", "line", "name", "guarded")
+
+    def __init__(self, caller, callee, line, name, guarded):
+        self.caller = caller  # fn index
+        self.callee = callee  # fn index
+        self.line = line  # call-site line in the caller's file
+        self.name = name
+        self.guarded = guarded  # inside catch_unwind(...)
+
+
+class CallGraph:
+    """Nodes are non-test crate fns; edges are resolved call sites."""
+
+    def __init__(self, units):
+        """``units``: iterable of objects with .path, .lexed, .ctx
+        (ctx provides the test-line set)."""
+        self.fns = []  # list[FnItem]
+        self.items_by_path = {}
+        self.edges = defaultdict(list)  # caller idx -> [Edge]
+        self.rev = defaultdict(list)  # callee idx -> [Edge]
+        self.unresolved = []  # [{file, line, name, kind, reason}]
+        self.calls_total = 0
+
+        units = list(units)
+        for u in units:
+            items = parse_items(u.path, u.lexed, u.ctx.tests)
+            self.items_by_path[u.path] = items
+            for it in items:
+                if not it.is_test:
+                    self.fns.append(it)
+
+        # ---- name indexes (bodied fns only: trait declarations must
+        # not shadow their single implementation) --------------------
+        self._by_name = defaultdict(list)
+        self._by_file_name = defaultdict(list)
+        self._by_type_method = defaultdict(list)
+        self._files_by_stem = defaultdict(set)
+        for i, f in enumerate(self.fns):
+            self._files_by_stem[PurePosixPath(f.path).stem].add(f.path)
+            if not f.has_body:
+                continue
+            self._by_name[f.name].append(i)
+            self._by_file_name[(f.path, f.name)].append(i)
+            if f.impl_type:
+                self._by_type_method[(f.impl_type, f.name)].append(i)
+        for u in units:
+            self._files_by_stem[PurePosixPath(u.path).stem].add(u.path)
+
+        # ---- resolve every call site --------------------------------
+        lexed_by_path = {u.path: u.lexed for u in units}
+        for i, f in enumerate(self.fns):
+            if not f.has_body:
+                continue
+            for call in extract_calls(lexed_by_path[f.path], f):
+                self.calls_total += 1
+                j, reason = self._resolve(call, f)
+                if j is None:
+                    self.unresolved.append(
+                        {
+                            "file": f.path,
+                            "line": call.line,
+                            "name": call.name,
+                            "kind": call.kind,
+                            "reason": reason,
+                        }
+                    )
+                    continue
+                e = Edge(i, j, call.line, call.name, call.guarded)
+                self.edges[i].append(e)
+                self.rev[j].append(e)
+
+    # ------------------------------------------------------------------
+    def _unique(self, candidates):
+        """(index, reason) for a candidate list under the honesty rule."""
+        if len(candidates) == 1:
+            return candidates[0], None
+        if not candidates:
+            return None, "external"
+        return None, "ambiguous"
+
+    def _resolve(self, call, caller):
+        if call.kind == "path":
+            qual = call.qual
+            if qual == "Self" and caller.impl_type:
+                qual = caller.impl_type
+            cands = self._by_type_method.get((qual, call.name))
+            if cands:
+                return self._unique(cands)
+            # module qualifier: any crate file whose stem matches
+            files = self._files_by_stem.get(qual)
+            if files:
+                cands = []
+                for fp in files:
+                    cands.extend(self._by_file_name.get((fp, call.name), []))
+                if cands:
+                    return self._unique(cands)
+                return None, "external"
+            return self._unique(self._by_name.get(call.name, []))
+        if call.kind == "bare":
+            cands = self._by_file_name.get((caller.path, call.name), [])
+            if cands:
+                return self._unique(cands)
+            return self._unique(self._by_name.get(call.name, []))
+        # method call: same-file methods first, then crate-wide
+        cands = [
+            i
+            for i in self._by_file_name.get((caller.path, call.name), [])
+            if self.fns[i].impl_type
+        ]
+        if cands:
+            return self._unique(cands)
+        cands = [
+            i
+            for i in self._by_name.get(call.name, [])
+            if self.fns[i].impl_type
+        ]
+        return self._unique(cands)
+
+    # ------------------------------------------------------------------
+    def index_of(self, path, name):
+        """Index of the unique bodied fn (path, name), or None (tests'
+        convenience accessor)."""
+        c = self._by_file_name.get((path, name), [])
+        return c[0] if len(c) == 1 else None
+
+    def stats(self):
+        edges = sum(len(v) for v in self.edges.values())
+        ambiguous = sum(
+            1 for u in self.unresolved if u["reason"] == "ambiguous"
+        )
+        return {
+            "functions": len(self.fns),
+            "calls": self.calls_total,
+            "edges": edges,
+            "external": len(self.unresolved) - ambiguous,
+            "ambiguous": ambiguous,
+        }

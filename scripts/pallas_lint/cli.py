@@ -1,0 +1,128 @@
+"""Command-line front end.
+
+Usage::
+
+    python3 scripts/pallas_lint.py [paths...]   # default: <repo>/rust
+    python3 scripts/pallas_lint.py --json
+    python3 scripts/pallas_lint.py --self-test  # run the fixture suite
+    python3 scripts/pallas_lint.py --list-rules
+    python3 scripts/pallas_lint.py --changed HEAD   # only files vs a ref
+    python3 scripts/pallas_lint.py --sarif out.sarif
+
+Exit codes: 0 clean, 1 findings, 2 usage/internal error.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from .engine import (
+    REPO_ROOT,
+    changed_paths,
+    lint_paths_ex,
+    rule_docs,
+)
+from .interproc import INTERPROC_RULES
+from .rules import META_RULES, RULES
+from .sarif import sarif_report
+from .selftest import run_self_test
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        prog="pallas_lint.py",
+        description="Project-invariant static analysis for the Rust sources.",
+    )
+    ap.add_argument(
+        "paths",
+        nargs="*",
+        help="files or directories to lint (default: <repo>/rust)",
+    )
+    ap.add_argument("--json", action="store_true", help="machine output")
+    ap.add_argument(
+        "--self-test",
+        action="store_true",
+        help="run the committed fixture suite instead of linting",
+    )
+    ap.add_argument(
+        "--list-rules", action="store_true", help="print the rule table"
+    )
+    ap.add_argument(
+        "--changed",
+        metavar="GIT_REF",
+        help="report only on .rs files differing from GIT_REF (the full "
+        "crate still feeds the call graph, so cross-file results stay "
+        "accurate)",
+    )
+    ap.add_argument(
+        "--sarif",
+        metavar="FILE",
+        help="additionally write findings as SARIF 2.1.0 to FILE",
+    )
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for name, fn in {**RULES, **INTERPROC_RULES}.items():
+            doc = (fn.__doc__ or "").split("\n")[0].strip()
+            print(f"{name:24s} {doc}")
+        for name in META_RULES:
+            print(f"{name:24s} (meta) waiver hygiene, always on")
+        return 0
+
+    if args.self_test:
+        return 1 if run_self_test() else 0
+
+    report_rel = None
+    if args.changed:
+        if args.paths:
+            ap.error("--changed and explicit paths are exclusive")
+        report_rel = changed_paths(args.changed)
+        if not report_rel:
+            print(f"pallas-lint: no Rust files changed vs {args.changed}")
+            return 0
+        paths = [REPO_ROOT / "rust"]
+    else:
+        paths = args.paths or [REPO_ROOT / "rust"]
+
+    findings, n_files, crate = lint_paths_ex(paths, report_rel=report_rel)
+
+    if args.sarif:
+        doc = sarif_report(findings, rule_docs())
+        Path(args.sarif).write_text(
+            json.dumps(doc, indent=2) + "\n", encoding="utf-8"
+        )
+
+    if args.json:
+        print(
+            json.dumps(
+                {
+                    "findings": [f.as_dict() for f in findings],
+                    "checked_files": n_files,
+                    "callgraph": crate.graph.stats(),
+                },
+                indent=2,
+            )
+        )
+    else:
+        for f in sorted(findings, key=lambda f: (f.path, f.line, f.rule)):
+            print(f"{f.path}:{f.line}: [{f.rule}] {f.message}")
+        noun = "finding" if len(findings) == 1 else "findings"
+        n_rules = len(RULES) + len(INTERPROC_RULES)
+        print(
+            f"pallas-lint: {len(findings)} {noun} in {n_files} files "
+            f"({n_rules} rules + waiver hygiene)"
+        )
+    return 1 if findings else 0
+
+
+def run():  # pragma: no cover - exercised via the CLI shim
+    try:
+        sys.exit(main())
+    except SystemExit:
+        raise
+    except Exception as e:  # internal error: distinct exit code
+        print(f"pallas-lint: internal error: {e}", file=sys.stderr)
+        sys.exit(2)

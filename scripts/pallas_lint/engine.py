@@ -1,0 +1,185 @@
+"""Analysis orchestration: units -> crate -> findings.
+
+The per-file rules run on each unit independently; the interprocedural
+passes run once over the whole crate. Waivers are applied *after* both
+so a single waiver can suppress a lexical finding, stop transitive
+propagation, or shield a seed — and `unused-waiver` accounting sees
+every use. `lint_text` wraps a single file as a one-unit crate, which
+keeps the fixture self-test and unit tests working unchanged.
+"""
+
+from __future__ import annotations
+
+import subprocess
+from pathlib import Path
+
+from .callgraph import CallGraph
+from .interproc import INTERPROC_RULES
+from .lexer import lex
+from .rules import META_RULES, RULES, Ctx, Finding
+from .waivers import parse_waivers
+
+REPO_ROOT = Path(__file__).resolve().parents[2]
+
+# every name a waiver may legally cite
+KNOWN_RULES = dict(RULES)
+KNOWN_RULES.update(INTERPROC_RULES)
+
+
+class Unit:
+    """One Rust file: path, scrubbed source, per-file context, waivers."""
+
+    def __init__(self, path, text):
+        self.path = path  # repo-relative, forward slashes
+        self.lexed = lex(text)
+        self.ctx = Ctx(path, self.lexed)
+        self.waivers, self.waiver_syntax = parse_waivers(
+            path, self.lexed, KNOWN_RULES
+        )
+
+
+class Crate:
+    """All units plus the crate-wide call graph."""
+
+    def __init__(self, units):
+        self.units = {u.path: u for u in units}
+        self.graph = CallGraph(units)
+
+
+def _dedupe(findings):
+    seen = set()
+    out = []
+    for f in sorted(findings, key=lambda f: f.key()):
+        if f.key() not in seen:
+            seen.add(f.key())
+            out.append(f)
+    return out
+
+
+def _apply_waivers(unit, findings):
+    kept = []
+    for f in findings:
+        waived = False
+        for w in unit.waivers:
+            if w.target_line == f.line and f.rule in w.rules:
+                w.used = True
+                waived = True
+        if not waived:
+            kept.append(f)
+    meta = list(unit.waiver_syntax)
+    for w in unit.waivers:
+        if not w.used:
+            meta.append(
+                Finding(
+                    unit.path,
+                    w.comment_line,
+                    "unused-waiver",
+                    "waiver suppresses nothing "
+                    f"(allow({', '.join(w.rules)})); remove it",
+                )
+            )
+    return sorted(kept + meta, key=lambda f: (f.line, f.rule))
+
+
+def analyze(units):
+    """Run everything over ``units``. Returns (findings, crate)."""
+    crate = Crate(units)
+    by_path = {u.path: [] for u in units}
+    for u in units:
+        for rule_fn in RULES.values():
+            by_path[u.path].extend(rule_fn(u.ctx))
+    for pass_fn in INTERPROC_RULES.values():
+        for f in pass_fn(crate):
+            by_path.setdefault(f.path, []).append(f)
+    findings = []
+    for u in crate.units.values():
+        findings.extend(_apply_waivers(u, _dedupe(by_path[u.path])))
+    return findings, crate
+
+
+def lint_text(path, text):
+    """Lint one file's content under repo-relative ``path``.
+
+    Runs every rule (the interprocedural passes see a one-file crate),
+    applies waivers, and reports unused waivers. Returns a list of
+    `Finding`s, deduplicated per (line, rule) and sorted by line."""
+    findings, _ = analyze([Unit(path, text)])
+    return findings
+
+
+def _collect_files(paths):
+    files = []
+    for p in paths:
+        p = Path(p)
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.rs")))
+        elif p.suffix == ".rs":
+            files.append(p)
+        else:
+            raise SystemExit(f"pallas-lint: not a .rs file or directory: {p}")
+    return files
+
+
+def _rel(path):
+    try:
+        return Path(path).resolve().relative_to(REPO_ROOT).as_posix()
+    except ValueError:
+        return Path(path).as_posix()
+
+
+def lint_paths_ex(paths, report_rel=None):
+    """Lint every .rs file under ``paths``.
+
+    ``report_rel``: optional set of repo-relative paths to *report* on;
+    the full file set still feeds the call graph so interprocedural
+    results stay whole-crate accurate (this is how `--changed` keeps
+    cross-file edges). Returns (findings, checked_files, crate)."""
+    files = _collect_files(paths)
+    units = [
+        Unit(_rel(f), f.read_text(encoding="utf-8")) for f in files
+    ]
+    findings, crate = analyze(units)
+    checked = len(files)
+    if report_rel is not None:
+        report_rel = set(report_rel)
+        findings = [f for f in findings if f.path in report_rel]
+        checked = len(report_rel)
+    return findings, checked, crate
+
+
+def lint_paths(paths):
+    """Back-compat wrapper: (findings, checked_files)."""
+    findings, checked, _ = lint_paths_ex(paths)
+    return findings, checked
+
+
+def changed_paths(ref):
+    """Repo-relative .rs paths under rust/ differing from git ``ref``
+    (including uncommitted edits); deleted files are skipped."""
+    proc = subprocess.run(
+        ["git", "-C", str(REPO_ROOT), "diff", "--name-only", ref, "--", "rust"],
+        capture_output=True,
+        text=True,
+    )
+    if proc.returncode != 0:
+        raise SystemExit(
+            f"pallas-lint: git diff against {ref!r} failed: "
+            + proc.stderr.strip()
+        )
+    out = []
+    for line in proc.stdout.splitlines():
+        line = line.strip()
+        if line.endswith(".rs") and (REPO_ROOT / line).is_file():
+            out.append(line)
+    return out
+
+
+def rule_docs():
+    """(rule id, first docstring line) for every rule, lint + meta."""
+    out = []
+    for name, fn in {**RULES, **INTERPROC_RULES}.items():
+        doc = (fn.__doc__ or "").split("\n")[0].strip()
+        out.append((name, doc))
+    for name in META_RULES:
+        out.append((name, "(meta) waiver hygiene, always on"))
+    return out

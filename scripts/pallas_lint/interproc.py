@@ -1,0 +1,548 @@
+"""Interprocedural passes: panic reachability, lock order, taint.
+
+All three consume the crate-wide call graph. They are deliberately
+*lexical* analyses lifted to whole-crate scope — no types, no borrow
+information — and each documents its approximations inline. The
+guiding rule is the same as for the per-file rules: prefer a missed
+finding (documented) over a fabricated one, because a lint wall the
+team stops trusting is worse than no lint wall.
+
+Waiver interaction
+------------------
+- r10 seeds skip panic sites whose line carries a waiver naming any of
+  `no-hot-path-panic`, `result-not-panic-api`, or `no-transitive-panic`
+  (the waiver's stated invariant covers transitive callers too).
+- A waiver naming `no-transitive-panic` on a *call site* stops
+  propagation through that edge — this is how a contained boundary
+  (e.g. a `catch_unwind` worker loop) is audited once instead of at
+  every public caller. Calls lexically inside `catch_unwind(...)` are
+  skipped automatically.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict, deque
+
+from .rules import API_SURFACE_PREFIXES, PANIC_PAT, Finding
+
+# ---------------------------------------------------------------------------
+# r10: no-transitive-panic
+# ---------------------------------------------------------------------------
+
+PANIC_WAIVER_RULES = (
+    "no-hot-path-panic",
+    "result-not-panic-api",
+    "no-transitive-panic",
+)
+
+
+def _chain(graph, evidence, start, limit=8):
+    """Render the call chain from ``start`` down to the local panic."""
+    parts = []
+    seen = set()
+    cur = start
+    while cur is not None and cur not in seen and len(parts) < limit:
+        seen.add(cur)
+        f = graph.fns[cur]
+        ev = evidence.get(cur)
+        if ev is None:
+            break
+        if ev[0] == "local":
+            parts.append(f"{f.display} panics at {f.path}:{ev[1]}")
+            break
+        parts.append(f.display)
+        cur = ev[2]
+    return " -> ".join(parts)
+
+
+def pass_no_transitive_panic(crate):
+    """(10) no-transitive-panic: a pub engine/serve API must not reach a
+    panicking operation through any chain of crate-internal calls; the
+    per-file rules only see panics written in the pub fn itself."""
+    g = crate.graph
+    evidence = {}  # fn idx -> ("local", line) | ("call", line, callee, name)
+
+    for i, f in enumerate(g.fns):
+        if not f.has_body:
+            continue
+        u = crate.units[f.path]
+        shielded = set()
+        for w in u.waivers:
+            if any(r in w.rules for r in PANIC_WAIVER_RULES):
+                shielded.add(w.target_line)
+        for n in range(f.start, f.end + 1):
+            if n in u.ctx.tests:
+                continue
+            if not PANIC_PAT.search(u.lexed.line(n)):
+                continue
+            if n in shielded:
+                # an explicit transitive waiver on the panic site is
+                # "used" by shielding every caller at once
+                for w in u.waivers:
+                    if (
+                        w.target_line == n
+                        and "no-transitive-panic" in w.rules
+                    ):
+                        w.used = True
+                continue
+            evidence[i] = ("local", n)
+            break
+
+    # fixpoint: propagate panickiness to callers (BFS over reverse
+    # edges; each fn is enqueued once, so cycles terminate)
+    queue = deque(evidence)
+    while queue:
+        j = queue.popleft()
+        for e in g.rev.get(j, []):
+            i = e.caller
+            if i in evidence or e.guarded:
+                continue
+            u = crate.units[g.fns[i].path]
+            if e.line in u.ctx.tests:
+                continue
+            stopped = False
+            for w in u.waivers:
+                if (
+                    w.target_line == e.line
+                    and "no-transitive-panic" in w.rules
+                ):
+                    w.used = True
+                    stopped = True
+            if stopped:
+                continue
+            evidence[i] = ("call", e.line, j, e.name)
+            queue.append(i)
+
+    # report at the API frontier: each call edge from a pub engine/serve
+    # fn into a panicky callee that does not get its own finding
+    findings = []
+    for i, f in enumerate(g.fns):
+        if not f.is_pub or not f.path.startswith(API_SURFACE_PREFIXES):
+            continue
+        u = crate.units[f.path]
+        if f.start in u.ctx.tests:
+            continue
+        for e in g.edges.get(i, []):
+            if e.guarded or e.callee not in evidence:
+                continue
+            if e.line in u.ctx.tests:
+                continue
+            callee = g.fns[e.callee]
+            if callee.is_pub and callee.path.startswith(
+                API_SURFACE_PREFIXES
+            ):
+                # the callee is itself API surface: it carries its own
+                # finding (r1/r7 locally, r10 transitively) — one
+                # audited location per root cause
+                continue
+            chain = _chain(g, evidence, e.callee)
+            findings.append(
+                Finding(
+                    f.path,
+                    e.line,
+                    "no-transitive-panic",
+                    f"pub fn `{f.display}` can panic via this call: "
+                    f"{chain}; return an error or waive at the root "
+                    "with the protecting invariant",
+                )
+            )
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# r11: lock-order
+# ---------------------------------------------------------------------------
+
+LOCK_SCOPE_FILES = {
+    "rust/src/serve/server.rs",
+    "rust/src/engine/scheduler.rs",
+}
+
+# `recv.lock(` — the receiver's last path component names the lock
+_LOCK_RECV = re.compile(r"([A-Za-z_][\w.]*)\s*\.\s*lock\s*\(")
+_DROP = re.compile(r"\bdrop\s*\(\s*([A-Za-z_]\w*)\s*\)")
+_LET = re.compile(r"^\s*let\s+(?:mut\s+)?([A-Za-z_]\w*)")
+# Condvar wait/wait_timeout/wait_while atomically release + reacquire
+# the guard they consume: neither a new acquisition nor "blocking while
+# holding" in the deadlock sense
+_WAITISH = re.compile(r"\.\s*wait(?:_timeout|_while)?\s*\(")
+# operations that can block indefinitely (or long enough to matter)
+# while a Mutex guard pins every other thread that needs the lock.
+# `.send(` does not match `.try_send(` — the dot is part of the match.
+BLOCKING_PAT = re.compile(
+    r"\.send\s*\(|\.recv\s*\(|\.recv_timeout\s*\(|\.write_all\s*\(|"
+    r"\.write_fmt\s*\(|\.flush\s*\(|\.read_exact\s*\(|\.join\s*\(|"
+    r"\bthread\s*::\s*sleep\b|\.accept\s*\("
+)
+
+
+def _helper_arg(text, name):
+    """First argument's last path component for a `name(&expr, ...)`
+    call on ``text`` (the lock a guard-returning helper acquires)."""
+    m = re.search(
+        r"\b" + re.escape(name) + r"\s*\(\s*&?\s*(?:mut\s+)?([A-Za-z_][\w.]*)",
+        text,
+    )
+    return m.group(1).split(".")[-1] if m else None
+
+
+def _param_acquirers(crate):
+    """fn index -> True for crate fns that lock a *parameter* and hand
+    the guard back (e.g. the poison-recovering `lock()` helper in
+    serve/server.rs). Call sites of these acquire their argument."""
+    g = crate.graph
+    out = set()
+    for i, f in enumerate(g.fns):
+        if not f.has_body or "Mutex" not in (f.sig or ""):
+            continue
+        pnames = {p[0] for p in f.params}
+        u = crate.units[f.path]
+        for n in range(f.start, f.end + 1):
+            for m in _LOCK_RECV.finditer(u.lexed.line(n)):
+                if m.group(1).split(".")[-1] in pnames:
+                    out.add(i)
+    return out
+
+
+def _acquire_summaries(crate, pacq):
+    """fn index -> set of lock ids the fn's body acquires (directly or
+    through any chain of crate calls). Param-locking helpers contribute
+    at their call sites, not here."""
+    g = crate.graph
+    direct = defaultdict(set)
+    for i, f in enumerate(g.fns):
+        if not f.has_body:
+            continue
+        u = crate.units[f.path]
+        pnames = {p[0] for p in f.params}
+        for n in range(f.start, f.end + 1):
+            text = u.lexed.line(n)
+            if _WAITISH.search(text):
+                continue
+            for m in _LOCK_RECV.finditer(text):
+                recv = m.group(1).split(".")[-1]
+                if recv not in pnames:
+                    direct[i].add(recv)
+        for e in g.edges.get(i, []):
+            if e.callee in pacq:
+                arg = _helper_arg(u.lexed.line(e.line), e.name)
+                if arg:
+                    direct[i].add(arg)
+    acq = {i: set(s) for i, s in direct.items()}
+    changed = True
+    while changed:
+        changed = False
+        for i in range(len(g.fns)):
+            mine = acq.get(i)
+            for e in g.edges.get(i, []):
+                theirs = acq.get(e.callee)
+                if not theirs:
+                    continue
+                if mine is None:
+                    mine = acq[i] = set()
+                add = theirs - mine
+                if add:
+                    mine.update(add)
+                    changed = True
+    return acq
+
+
+def _blocking_summaries(crate):
+    """fn indexes whose bodies (transitively) contain a blocking op."""
+    g = crate.graph
+    blocks = set()
+    for i, f in enumerate(g.fns):
+        if not f.has_body:
+            continue
+        u = crate.units[f.path]
+        for n in range(f.start, f.end + 1):
+            if n in u.ctx.tests:
+                continue
+            text = u.lexed.line(n)
+            if _WAITISH.search(text):
+                continue
+            if BLOCKING_PAT.search(text):
+                blocks.add(i)
+                break
+    queue = deque(blocks)
+    while queue:
+        j = queue.popleft()
+        for e in g.rev.get(j, []):
+            if e.caller not in blocks:
+                blocks.add(e.caller)
+                queue.append(e.caller)
+    return blocks
+
+
+def pass_lock_order(crate):
+    """(11) lock-order: in serve/server.rs + engine/scheduler.rs, model
+    Mutex guard lifetimes and flag double-acquisition, inconsistent
+    pairwise acquisition order across the crate, and guards held across
+    blocking calls (channel sends, socket writes, joins, sleeps).
+
+    Guard model (lexical, documented approximations): a guard is born
+    at a same-line `let g = ...lock()...` / `let g = lock(&x)` binding
+    and dies at the end of its binding block or at `drop(g)`; a
+    `drop(g)` *inside a nested block* only suspends the guard until
+    that block closes (the other branch still holds it). Condvar
+    `wait*` calls are sanctioned release points and never flagged."""
+    g = crate.graph
+    pacq = _param_acquirers(crate)
+    acq = _acquire_summaries(crate, pacq)
+    blocks = _blocking_summaries(crate)
+    findings = []
+    pair_sites = defaultdict(list)  # (held, taken) -> [(path, line)]
+
+    for i, f in enumerate(g.fns):
+        if f.path not in LOCK_SCOPE_FILES or not f.has_body:
+            continue
+        u = crate.units[f.path]
+        if f.start in u.ctx.tests:
+            continue
+        edges_by_line = defaultdict(list)
+        for e in g.edges.get(i, []):
+            edges_by_line[e.line].append(e)
+        guards = []  # {var, id, depth, susp}
+        depth = 0
+        for n in range(f.start, f.end + 1):
+            text = u.lexed.line(n)
+            line_depth = depth
+            waitish = bool(_WAITISH.search(text))
+
+            acq_here = []  # (lock id, starts a new guard here)
+            if not waitish:
+                for m in _LOCK_RECV.finditer(text):
+                    acq_here.append((m.group(1).split(".")[-1], True))
+                for e in edges_by_line.get(n, []):
+                    if e.callee in pacq:
+                        arg = _helper_arg(text, e.name)
+                        if arg:
+                            acq_here.append((arg, True))
+                    else:
+                        for lid in sorted(acq.get(e.callee, ())):
+                            acq_here.append((lid, False))
+
+            active = [gd for gd in guards if gd["susp"] is None]
+            for lid, _new in acq_here:
+                for gd in active:
+                    if gd["id"] == lid:
+                        findings.append(
+                            Finding(
+                                f.path,
+                                n,
+                                "lock-order",
+                                f"lock `{lid}` acquired in `{f.display}` "
+                                f"while guard `{gd['var']}` already holds "
+                                "it (self-deadlock on a non-reentrant "
+                                "Mutex)",
+                            )
+                        )
+                    else:
+                        pair_sites[(gd["id"], lid)].append((f.path, n))
+
+            blocking = not waitish and (
+                bool(BLOCKING_PAT.search(text))
+                or any(
+                    e.callee in blocks and e.callee not in pacq
+                    for e in edges_by_line.get(n, [])
+                )
+            )
+            if blocking and active:
+                held = ", ".join(sorted({gd["id"] for gd in active}))
+                findings.append(
+                    Finding(
+                        f.path,
+                        n,
+                        "lock-order",
+                        f"guard on `{held}` held across a blocking call "
+                        f"in `{f.display}`; drop the guard before "
+                        "sending/writing",
+                    )
+                )
+
+            letm = _LET.match(text)
+            new_ids = [lid for lid, new in acq_here if new]
+            if letm and new_ids:
+                guards.append(
+                    {
+                        "var": letm.group(1),
+                        "id": new_ids[0],
+                        "depth": line_depth,
+                        "susp": None,
+                    }
+                )
+
+            for dm in _DROP.finditer(text):
+                for gd in guards:
+                    if gd["var"] == dm.group(1) and gd["susp"] is None:
+                        if line_depth <= gd["depth"]:
+                            gd["dead"] = True
+                        else:
+                            gd["susp"] = line_depth
+            guards = [gd for gd in guards if not gd.get("dead")]
+
+            depth = depth + text.count("{") - text.count("}")
+            for gd in guards:
+                if gd["susp"] is not None and depth < gd["susp"]:
+                    gd["susp"] = None  # the branch holding the drop closed
+            guards = [gd for gd in guards if depth >= gd["depth"]]
+
+    for (a, b), sites in sorted(pair_sites.items()):
+        if (b, a) not in pair_sites:
+            continue
+        other = pair_sites[(b, a)][0]
+        for path, line in sites:
+            findings.append(
+                Finding(
+                    path,
+                    line,
+                    "lock-order",
+                    f"inconsistent lock order: `{b}` acquired while "
+                    f"holding `{a}` here, but `{a}` is acquired while "
+                    f"holding `{b}` at {other[0]}:{other[1]}; pick one "
+                    "global order (see LOCK_ORDER in serve/server.rs)",
+                )
+            )
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# r12: untrusted-taint
+# ---------------------------------------------------------------------------
+
+TAINT_SCOPE_PREFIX = "rust/src/serve/"
+
+# expressions whose value is attacker-controlled: header lookups and
+# parsed-JSON extractors (the Doc/Value API in serve/json.rs)
+_SOURCE_CALL = re.compile(
+    r"\.\s*(?:header|opt_u64|opt_str|opt_bool|opt_f64|req_str|req_u64|"
+    r"req_f64|as_str|as_u64|as_f64|as_num|as_i64)\s*\("
+)
+_REQ_FIELD = re.compile(r"\breq\w*\s*\.\s*(?:body|path|method|target)\b")
+# bounding combinators: the result is capped whatever the input was
+_CLAMP = re.compile(r"\.\s*(?:min|clamp)\s*\(|\bmin\s*\(")
+_IF_WHILE = re.compile(r"\b(?:if|while)\b")
+# simple assignment only (not ==, <=, >=, !=, +=, -=, …)
+_ASSIGN = re.compile(
+    r"^\s*(?:let\s+(?:mut\s+)?)?([A-Za-z_]\w*)\s*"
+    r"(?::\s*[^=<>!]+)?=(?![=])\s*(.+)$"
+)
+
+
+def _untrusted_params(fn):
+    """Parameter names whose type marks them as raw request data."""
+    out = set()
+    for name, ty in fn.params or ():
+        flat = ty.replace(" ", "")
+        if "[u8]" in flat or flat in ("&str", "&mutstr") or "HttpRequest" in ty:
+            out.add(name)
+    return out
+
+
+def _word(v):
+    return re.compile(r"\b" + re.escape(v) + r"\b")
+
+
+def _sink_on(text, v):
+    """The sink description if tainted ``v`` feeds a sink on ``text``."""
+    wb = r"\b" + re.escape(v) + r"\b"
+    checks = (
+        (rf"with_capacity\s*\([^)]*{wb}", "allocation size (with_capacity)"),
+        (rf"vec!\s*\[[^\]]*;[^\]]*{wb}", "allocation size (vec![_; n])"),
+        (rf"\.\s*reserve\s*\([^)]*{wb}", "allocation size (reserve)"),
+        (rf"\.\s*split_off\s*\([^)]*{wb}", "offset (split_off panics past len)"),
+        (rf"\.\s*drain\s*\([^)]*{wb}", "range (drain panics past len)"),
+        (rf"[A-Za-z0-9_)\]?]\[[^\]]*{wb}[^\]]*\]", "slice index"),
+        (rf"-(?!>)\s*{wb}|{wb}\s*-(?!>)", "length arithmetic (underflow)"),
+    )
+    for pat, desc in checks:
+        if re.search(pat, text):
+            return desc
+    return None
+
+
+def pass_untrusted_taint(crate):
+    """(12) untrusted-taint: in serve/, values derived from request
+    bytes or parsed JSON must be bounds-checked before they reach an
+    allocation size, slice index, or length arithmetic.
+
+    Tracking is per-function and lexical: seeds are untrusted params
+    (`&[u8]`/`&str`/`HttpRequest` in serve/) and extractor results
+    (`.header(...)`, `Doc::opt_u64(...)`, ...); `let`/assignment lines
+    propagate taint; an `if`/`while` comparison against the value, or a
+    `.min(...)`/`.clamp(...)` combinator, sanitizes it. Struct fields
+    are not tracked across functions (documented gap — the session
+    layer re-clamps `max_new_tokens` for exactly that reason)."""
+    g = crate.graph
+    findings = []
+    for i, f in enumerate(g.fns):
+        if not f.path.startswith(TAINT_SCOPE_PREFIX) or not f.has_body:
+            continue
+        u = crate.units[f.path]
+        if f.start in u.ctx.tests:
+            continue
+        tainted = {}  # var -> origin line
+        for p in _untrusted_params(f):
+            tainted[p] = f.start
+        sanitized = set()
+        for n in range(f.start, f.end + 1):
+            if n in u.ctx.tests:
+                continue
+            text = u.lexed.line(n)
+            live = [
+                v
+                for v in tainted
+                if v not in sanitized and _word(v).search(text)
+            ]
+            # sinks first: the guard on this line protects later lines
+            for v in live:
+                sink = _sink_on(text, v)
+                if sink:
+                    findings.append(
+                        Finding(
+                            f.path,
+                            n,
+                            "untrusted-taint",
+                            f"untrusted value `{v}` (from line "
+                            f"{tainted[v]}) reaches a {sink} in "
+                            f"`{f.display}`; compare it against an "
+                            "explicit cap first",
+                        )
+                    )
+            # sanitizing guard: an if/while comparison on the value
+            if _IF_WHILE.search(text):
+                for v in live:
+                    wb = re.escape(v)
+                    if re.search(
+                        rf"\b{wb}\b\s*(?:<=|>=|<|>|==)|"
+                        rf"(?:<=|>=|<|>|==)\s*\b{wb}\b",
+                        text,
+                    ):
+                        sanitized.add(v)
+            # assignments: propagate or clear taint
+            m = _ASSIGN.match(text)
+            if m:
+                lhs, rhs = m.group(1), m.group(2)
+                rhs_tainted = bool(
+                    _SOURCE_CALL.search(rhs) or _REQ_FIELD.search(rhs)
+                ) or any(
+                    v not in sanitized and _word(v).search(rhs)
+                    for v in tainted
+                )
+                if rhs_tainted and _CLAMP.search(rhs):
+                    rhs_tainted = False  # bounded at the source
+                if rhs_tainted:
+                    tainted.setdefault(lhs, n)
+                    sanitized.discard(lhs)
+                elif lhs in tainted:
+                    del tainted[lhs]
+                    sanitized.discard(lhs)
+    return findings
+
+
+INTERPROC_RULES = {
+    "no-transitive-panic": pass_no_transitive_panic,
+    "lock-order": pass_lock_order,
+    "untrusted-taint": pass_untrusted_taint,
+}

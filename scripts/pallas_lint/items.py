@@ -1,0 +1,384 @@
+"""Structure over scrubbed source: test spans, fn/impl/mod items, calls.
+
+This is deliberately a *lightweight* item parser, not a Rust parser:
+it brace-matches scrubbed lines (the lexer already blanked strings and
+comments, so every brace is structural) and extracts just enough shape
+for the interprocedural passes — function items with spans, the impl
+type and inline module that encloses them, whether they are `pub`,
+whether they return `Result`, and the call sites inside their bodies.
+
+Known, documented approximations:
+
+- trait *declarations* (`fn f(&self);` with no body) are parsed but
+  marked body-less; they are excluded from the call-graph name index so
+  a trait decl plus its single impl still resolves uniquely.
+- nested named fns are attributed to the outer fn's call list as well;
+  closures belong to the enclosing fn (which is what we want).
+- a call spelled through a chain (`a.b().c()`) contributes each method
+  name as its own call site.
+"""
+
+from __future__ import annotations
+
+import re
+
+from .lexer import Lexed  # noqa: F401  (re-exported for convenience)
+
+_CFG_TEST = re.compile(r"#\s*\[\s*(?:cfg\s*\(\s*test\s*\)|test\b)")
+_FN = re.compile(r"\bfn\s+([A-Za-z_]\w*)")
+_MOD = re.compile(r"\bmod\s+([A-Za-z_]\w*)")
+_IMPL = re.compile(r"\bimpl\b")
+_GENERICS = re.compile(r"<[^<>]*>")
+
+
+class FnSpan:
+    """One function item: name, visibility, and its body's line range."""
+
+    def __init__(self, name, is_pub, start, end):
+        self.name = name
+        self.is_pub = is_pub
+        self.start = start  # line of the `fn` keyword (1-based)
+        self.end = end  # line of the closing brace (inclusive)
+
+
+def item_span(lines, start_idx, col):
+    """Span of the item starting at (start_idx, col) in scrubbed
+    ``lines`` (0-based index). Scans for the first `{` or `;`; a `{`
+    is brace-matched (strings/comments are already blanked, so every
+    brace is structural). Returns ``(end_idx, has_body)`` where
+    ``end_idx`` is the inclusive 0-based end index and ``has_body``
+    says whether a braced body was found (False for `fn f();`)."""
+    depth = 0
+    seen_open = False
+    i, c = start_idx, col
+    while i < len(lines):
+        text = lines[i][c:] if i == start_idx else lines[i]
+        for ch in text:
+            if not seen_open and ch == ";":
+                return i, False
+            if ch == "{":
+                seen_open = True
+                depth += 1
+            elif ch == "}":
+                depth -= 1
+                if seen_open and depth == 0:
+                    return i, True
+        i += 1
+        c = 0
+    return len(lines) - 1, seen_open
+
+
+def _item_span(lines, start_idx, col):
+    """Back-compat wrapper: end index only."""
+    return item_span(lines, start_idx, col)[0]
+
+
+def test_lines(lexed):
+    """The set of 1-based line numbers inside `#[cfg(test)]` / `#[test]`
+    items (attribute line through closing brace, inclusive)."""
+    out = set()
+    for idx, text in enumerate(lexed.lines):
+        m = _CFG_TEST.search(text)
+        if not m:
+            continue
+        end, _ = item_span(lexed.lines, idx, m.end())
+        out.update(range(idx + 1, end + 2))
+    return out
+
+
+def fn_spans(lexed):
+    """All function items as `FnSpan`s (1-based inclusive line ranges)."""
+    spans = []
+    for idx, text in enumerate(lexed.lines):
+        for m in _FN.finditer(text):
+            before = text[: m.start()]
+            is_pub = bool(re.search(r"\bpub\b", before))
+            end, _ = item_span(lexed.lines, idx, m.end())
+            spans.append(FnSpan(m.group(1), is_pub, idx + 1, end + 1))
+    return spans
+
+
+def enclosing_fn(spans, line):
+    """The innermost `FnSpan` containing 1-based ``line``, or None."""
+    best = None
+    for s in spans:
+        if s.start <= line <= s.end:
+            if best is None or s.start >= best.start:
+                best = s
+    return best
+
+
+# ---------------------------------------------------------------------------
+# Rich function items for the interprocedural passes.
+# ---------------------------------------------------------------------------
+
+
+class FnItem:
+    """A function with everything the call-graph passes need."""
+
+    __slots__ = (
+        "name",
+        "path",
+        "start",
+        "end",
+        "is_pub",
+        "is_test",
+        "has_body",
+        "impl_type",
+        "mod_name",
+        "sig",
+        "returns_result",
+        "params",
+    )
+
+    def __init__(self, **kw):
+        for k in self.__slots__:
+            setattr(self, k, kw.get(k))
+
+    @property
+    def display(self):
+        if self.impl_type:
+            return f"{self.impl_type}::{self.name}"
+        return self.name
+
+    def __repr__(self):  # pragma: no cover - debug aid
+        return f"<FnItem {self.path}:{self.start} {self.display}>"
+
+
+def _strip_generics(text):
+    """Erase `<...>` segments (repeatedly, for nesting) from a header."""
+    prev = None
+    while prev != text:
+        prev = text
+        text = _GENERICS.sub(" ", text)
+    return text
+
+
+def _impl_type(lines, idx, col):
+    """The self type of the `impl` starting at (idx, col): the type
+    after `for` in a trait impl, the first type otherwise. Returns the
+    last path segment, or None if unparseable."""
+    header = []
+    for k in range(idx, min(idx + 6, len(lines))):
+        text = lines[k][col:] if k == idx else lines[k]
+        brace = text.find("{")
+        if brace != -1:
+            header.append(text[:brace])
+            break
+        header.append(text)
+    head = _strip_generics(" ".join(header))
+    m = re.search(r"\bfor\s+([A-Za-z_][\w:]*)", head)
+    if not m:
+        m = re.match(r"\s*([A-Za-z_][\w:]*)", head)
+    if not m:
+        return None
+    return m.group(1).split("::")[-1]
+
+
+_PARAM = re.compile(r"([A-Za-z_]\w*)\s*:\s*([^,]+)")
+
+
+def _parse_sig(lines, idx, col):
+    """Signature text: from just after the fn name to the body `{` or
+    the `;` of a body-less declaration (capped at 12 lines)."""
+    parts = []
+    depth = 0
+    for k in range(idx, min(idx + 12, len(lines))):
+        text = lines[k][col:] if k == idx else lines[k]
+        for p, ch in enumerate(text):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+            elif depth == 0 and ch in "{;":
+                parts.append(text[:p])
+                return " ".join(parts)
+        parts.append(text)
+    return " ".join(parts)
+
+
+def parse_items(path, lexed, tests):
+    """All function items in a file as `FnItem`s."""
+    lines = lexed.lines
+    # inline modules (mod name { ... }); declarations (mod name;) skipped
+    mods = []
+    for idx, text in enumerate(lines):
+        for m in _MOD.finditer(text):
+            end, has_body = item_span(lines, idx, m.end())
+            if has_body:
+                mods.append((m.group(1), idx + 1, end + 1))
+    # impl blocks with their self type
+    impls = []
+    for idx, text in enumerate(lines):
+        for m in _IMPL.finditer(text):
+            # `impl` inside a signature (`impl Trait` in argument
+            # position) is preceded by `(`/`,`/`:`/`&` context — accept
+            # only line-leading or visibility-leading impls
+            before = text[: m.start()].strip()
+            if before not in ("", "pub", "pub(crate)", "unsafe"):
+                continue
+            end, has_body = item_span(lines, idx, m.end())
+            if not has_body:
+                continue
+            impls.append((_impl_type(lines, idx, m.end()), idx + 1, end + 1))
+
+    items = []
+    for idx, text in enumerate(lines):
+        for m in _FN.finditer(text):
+            before = text[: m.start()]
+            is_pub = bool(re.search(r"\bpub\b", before))
+            end, has_body = item_span(lines, idx, m.end())
+            sig = _parse_sig(lines, idx, m.end())
+            ret = sig.split("->")[-1] if "->" in sig else ""
+            args = sig[sig.find("(") + 1 :] if "(" in sig else sig
+            params = []
+            for pm in _PARAM.finditer(_strip_generics(args)):
+                params.append((pm.group(1), pm.group(2).strip()))
+            impl_type = None
+            for t, s, e in impls:
+                if s <= idx + 1 <= e:
+                    impl_type = t  # innermost wins via ordering below
+            mod_name = None
+            for name, s, e in mods:
+                if s <= idx + 1 <= e:
+                    mod_name = name
+            items.append(
+                FnItem(
+                    name=m.group(1),
+                    path=path,
+                    start=idx + 1,
+                    end=end + 1,
+                    is_pub=is_pub,
+                    is_test=(idx + 1) in tests,
+                    has_body=has_body,
+                    impl_type=impl_type,
+                    mod_name=mod_name,
+                    sig=sig,
+                    returns_result=bool(re.search(r"\bResult\b", ret)),
+                    params=params,
+                )
+            )
+    return items
+
+
+# ---------------------------------------------------------------------------
+# Call extraction.
+# ---------------------------------------------------------------------------
+
+# keywords / built-in constructors that look like calls but are not
+# crate functions
+_NOT_CALLS = {
+    "if", "while", "for", "match", "return", "loop", "fn", "let", "in",
+    "as", "move", "ref", "mut", "else", "use", "pub", "impl", "struct",
+    "enum", "trait", "where", "unsafe", "dyn", "break", "continue",
+    "Some", "None", "Ok", "Err", "Box", "Vec", "String", "Default",
+    "Arc", "Rc", "Mutex", "Condvar", "Duration", "Instant", "HashMap",
+    "HashSet", "BTreeMap", "VecDeque", "PathBuf", "Option", "Result",
+}
+
+# `a::b::c(` — path call; qualifier is the segment before the fn name
+_PATH_CALL = re.compile(
+    r"(?<![\w.])([A-Za-z_]\w*(?:\s*::\s*[A-Za-z_]\w*)+)\s*\("
+)
+# `name(` not preceded by `.`/`::`/ident — free-function call
+_BARE_CALL = re.compile(r"(?<![\w.:])([A-Za-z_]\w*)\s*\(")
+# `.name(` — method call; the lookbehind keeps the second dot of a
+# range (`0..n`) from starting a match; float literals never match
+# because a method name cannot start with a digit
+_METHOD_CALL = re.compile(r"(?<!\.)\.\s*([A-Za-z_]\w*)\s*\(")
+
+
+class Call:
+    """One call site inside a function body."""
+
+    __slots__ = ("name", "qual", "kind", "line", "guarded")
+
+    def __init__(self, name, qual, kind, line, guarded=False):
+        self.name = name
+        self.qual = qual  # path qualifier segment, or None
+        self.kind = kind  # "bare" | "path" | "method"
+        self.line = line
+        # True when the call sits inside a `catch_unwind(...)` on the
+        # same line: panics do not propagate past that boundary, so the
+        # panic-reachability pass skips the edge
+        self.guarded = guarded
+
+    def __repr__(self):  # pragma: no cover - debug aid
+        return f"<Call {self.kind} {self.name} @ {self.line}>"
+
+
+def _guarded_spans(lexed, fn):
+    """Argument spans of `catch_unwind(...)` calls in the fn body, as
+    ``(start_line, start_col, end_line, end_col)`` with the paren
+    balanced across lines — panics do not propagate out of them."""
+    spans = []
+    for n in range(fn.start, fn.end + 1):
+        for m in re.finditer(r"\bcatch_unwind\b", lexed.line(n)):
+            ln, col = n, m.end()
+            depth = 0
+            started = False
+            done = False
+            while ln <= fn.end and not done:
+                t = lexed.line(ln)
+                for k in range(col, len(t)):
+                    c = t[k]
+                    if c == "(":
+                        depth += 1
+                        started = True
+                    elif c == ")":
+                        depth -= 1
+                        if started and depth == 0:
+                            spans.append((n, m.end(), ln, k))
+                            done = True
+                            break
+                ln += 1
+                col = 0
+    return spans
+
+
+def _in_spans(spans, line, col):
+    for sl, sc, el, ec in spans:
+        if (line, col) >= (sl, sc) and (line, col) <= (el, ec):
+            return True
+    return False
+
+
+def extract_calls(lexed, fn):
+    """Call sites in ``fn``'s body (scrubbed lines start..end)."""
+    calls = []
+    guarded_spans = _guarded_spans(lexed, fn)
+    for n in range(fn.start, fn.end + 1):
+        text = lexed.line(n)
+        covered = set()
+        for m in _PATH_CALL.finditer(text):
+            segs = [s.strip() for s in m.group(1).split("::")]
+            name, qual = segs[-1], segs[-2]
+            covered.update(range(m.start(), m.end()))
+            if name in _NOT_CALLS:
+                continue
+            calls.append(
+                Call(name, qual, "path", n,
+                     guarded=_in_spans(guarded_spans, n, m.start()))
+            )
+        for m in _BARE_CALL.finditer(text):
+            if any(k in covered for k in range(m.start(), m.end())):
+                continue
+            name = m.group(1)
+            # skip the fn's own definition line name (`fn name(`)
+            if re.search(r"\bfn\s*$", text[: m.start()]):
+                continue
+            if name in _NOT_CALLS or name == "catch_unwind":
+                continue
+            calls.append(
+                Call(name, None, "bare", n,
+                     guarded=_in_spans(guarded_spans, n, m.start()))
+            )
+        for m in _METHOD_CALL.finditer(text):
+            name = m.group(1)
+            if name in _NOT_CALLS:
+                continue
+            calls.append(
+                Call(name, None, "method", n,
+                     guarded=_in_spans(guarded_spans, n, m.start()))
+            )
+    return calls

@@ -1,0 +1,176 @@
+"""Rust lexer: scrub comments / strings / char literals out of source.
+
+The whole analyzer rests on this pass: every downstream regex (rules,
+item parser, call extraction) runs over *scrubbed* lines where
+comments, string literals, and char literals have been replaced by
+spaces. That means a `.unwrap(` inside a log message or a `{` inside a
+raw string can never confuse the brace matcher or a rule.
+
+Handled Rust surface syntax:
+
+- line comments (captured for waiver parsing) and block comments,
+  including *nested* block comments (`/* a /* b */ c */`)
+- regular strings with escapes, byte strings (`b"..."`), byte char
+  literals (`b'x'`)
+- raw and raw-byte strings with any number of hashes (`r"..."`,
+  `r#"..."#`, `r##"..."##`, `br#"..."#`)
+- raw identifiers (`r#fn`) pass through as ordinary code
+- char literals vs lifetimes/loop labels (`'x'` scrubbed, `'static`
+  kept)
+- float literals need no special casing here: the decimal point is
+  always followed by a digit, an exponent, or nothing — never by an
+  identifier character — so method-call extraction downstream cannot
+  mistake `1.0` for a call (`1.0.max(2.0)` still yields `.max`).
+"""
+
+from __future__ import annotations
+
+
+class Lexed:
+    """Result of scrubbing one Rust file.
+
+    ``lines`` holds the source with every comment, string literal, and
+    char literal replaced by spaces (newlines preserved), so downstream
+    regexes only ever match real code. ``comments`` holds the comment
+    text that was removed, as ``(line_number, text)`` pairs (line
+    comments only — waivers must be `//` comments).
+    """
+
+    def __init__(self, lines, comments):
+        self.lines = lines  # list[str], 1-based via index+1
+        self.comments = comments  # list[(line, text)]
+
+    def line(self, n):
+        """Scrubbed text of 1-based line ``n`` (empty if out of range)."""
+        if 1 <= n <= len(self.lines):
+            return self.lines[n - 1]
+        return ""
+
+
+def _is_ident(ch):
+    return ch.isalnum() or ch == "_"
+
+
+def lex(text):
+    """Scrub Rust source: return a `Lexed` with code-only lines."""
+    out = list(text)
+    comments = []
+    n = len(text)
+    i = 0
+    line = 1
+
+    def blank(a, b):
+        """Replace text[a:b] with spaces, preserving newlines."""
+        for k in range(a, b):
+            if out[k] != "\n":
+                out[k] = " "
+
+    while i < n:
+        ch = text[i]
+        if ch == "\n":
+            line += 1
+            i += 1
+            continue
+        prev = text[i - 1] if i > 0 else ""
+
+        # -- line comment ---------------------------------------------------
+        if ch == "/" and text[i : i + 2] == "//":
+            end = text.find("\n", i)
+            if end == -1:
+                end = n
+            comments.append((line, text[i + 2 : end]))
+            blank(i, end)
+            i = end
+            continue
+
+        # -- block comment (nests) -----------------------------------------
+        if ch == "/" and text[i : i + 2] == "/*":
+            depth = 1
+            j = i + 2
+            while j < n and depth > 0:
+                if text[j : j + 2] == "/*":
+                    depth += 1
+                    j += 2
+                elif text[j : j + 2] == "*/":
+                    depth -= 1
+                    j += 2
+                else:
+                    j += 1
+            blank(i, j)
+            line += text.count("\n", i, j)
+            i = j
+            continue
+
+        # -- raw / byte / byte-raw string prefixes --------------------------
+        # `r`, `b`, or `br` not glued to a preceding identifier char may
+        # start a literal: r"…", r#"…"#, r##"…"##, b"…", b'…', br#"…"#.
+        if ch in "rb" and not _is_ident(prev):
+            prefix = 2 if text[i : i + 2] in ("br", "rb") else 1
+            has_r = "r" in text[i : i + prefix]
+            j = i + prefix
+            hashes = 0
+            while j < n and text[j] == "#":
+                hashes += 1
+                j += 1
+            if has_r and j < n and text[j] == '"':
+                # raw string: ends at '"' + the same number of '#'s, no
+                # escape processing (that is the point of raw strings)
+                close = '"' + "#" * hashes
+                end = text.find(close, j + 1)
+                end = n if end == -1 else end + len(close)
+                blank(i, end)
+                line += text.count("\n", i, end)
+                i = end
+                continue
+            if has_r and hashes > 0:
+                # raw identifier (`r#fn`) — ordinary code, skip prefix
+                i += prefix + hashes
+                continue
+            if ch == "b" and text[i : i + 2] == 'b"':
+                i += 1  # byte string: treat as a regular string from the quote
+                ch = '"'
+            elif ch == "b" and text[i : i + 2] == "b'":
+                i += 1  # byte char literal
+                ch = "'"
+            else:
+                # plain identifier starting with r/b — ordinary code
+                i += 1
+                continue
+
+        # -- regular string --------------------------------------------------
+        if ch == '"':
+            j = i + 1
+            while j < n:
+                if text[j] == "\\":
+                    j += 2
+                elif text[j] == '"':
+                    j += 1
+                    break
+                else:
+                    j += 1
+            blank(i, j)
+            line += text.count("\n", i, j)
+            i = j
+            continue
+
+        # -- char literal vs lifetime ---------------------------------------
+        if ch == "'":
+            if text[i + 1 : i + 2] == "\\":
+                # escaped char literal: walk to the closing quote (the
+                # escape-skip handles '\'' and '\\')
+                j = i + 1
+                while j < n and text[j] != "'":
+                    j += 2 if text[j] == "\\" else 1
+                blank(i, min(j + 1, n))
+                i = j + 1
+                continue
+            if text[i + 2 : i + 3] == "'" and text[i + 1 : i + 2] != "'":
+                blank(i, i + 3)  # 'x'
+                i += 3
+                continue
+            i += 1  # lifetime / loop label: keep as code
+            continue
+
+        i += 1
+
+    return Lexed("".join(out).split("\n"), comments)

@@ -1,0 +1,328 @@
+"""The per-file (lexical) rules, their scope sets, and shared patterns.
+
+Rules are plain functions `(ctx) -> list[Finding]`; the first docstring
+line is the human description shown by `--list-rules` and embedded in
+SARIF rule metadata. The interprocedural passes live in
+`interproc.py`; this module is deliberately unchanged in spirit from
+the single-file analyzer so the rule history stays reviewable.
+"""
+
+from __future__ import annotations
+
+import re
+
+from .items import enclosing_fn, fn_spans, test_lines
+
+
+class Finding:
+    """One rule violation at (path, line)."""
+
+    def __init__(self, path, line, rule, message):
+        self.path = path
+        self.line = line
+        self.rule = rule
+        self.message = message
+
+    def key(self):
+        return (self.line, self.rule)
+
+    def as_dict(self):
+        return {
+            "path": self.path,
+            "line": self.line,
+            "rule": self.rule,
+            "message": self.message,
+        }
+
+    def __eq__(self, other):
+        return (
+            isinstance(other, Finding)
+            and (self.path, self.line, self.rule) ==
+                (other.path, other.line, other.rule)
+        )
+
+    def __repr__(self):  # pragma: no cover - debug aid
+        return f"<Finding {self.path}:{self.line} {self.rule}>"
+
+
+PANIC_PAT = re.compile(
+    r"\.unwrap\s*\(|\.expect\s*\(|\b(?:panic|unreachable|todo|unimplemented)\s*!"
+)
+# `[` directly adjacent to an expression tail is indexing; array types,
+# attributes (`#[...]`), and `vec![...]` never match.
+INDEX_PAT = re.compile(r"[A-Za-z0-9_)\]?]\[")
+PARTIAL_CMP_PAT = re.compile(r"\bpartial_cmp\b")
+FUSED_SYMBOLS = re.compile(
+    r"\b(?:quantize_fused|dequantize_fused_into|quantize_blockwise_fused"
+    r"|dequantize_blockwise_fused)\b|\bEncoder\s*::"
+)
+RELAXED_PAT = re.compile(r"\bOrdering\s*::\s*Relaxed\b")
+CANCELISH_PAT = re.compile(r"(?i)cancel|abort")
+# narrowing targets only: widening to usize/u64/i64/f64 keeps every value
+# (BlockId is this repo's u32 alias, so it counts as narrowing too)
+LOSSY_AS_PAT = re.compile(r"\bas\s+(?:u8|u16|u32|i8|i16|i32|f32|BlockId)\b")
+THREAD_SPAWN_PAT = re.compile(r"\bthread\s*::\s*spawn\b")
+# `mpsc::channel` (unbounded) only; `sync_channel` has a word character
+# before "channel" and never matches
+UNBOUNDED_CHANNEL_PAT = re.compile(r"\bmpsc\s*::\s*channel\b")
+
+HOT_PATH_FILES = {
+    "rust/src/engine/scheduler.rs",
+    "rust/src/engine/session.rs",
+    "rust/src/engine/sampler.rs",
+    "rust/src/engine/decode.rs",
+    "rust/src/paged/blocks.rs",
+    "rust/src/paged/pool.rs",
+    # the network boundary parses untrusted bytes: a panic here is a
+    # remote denial-of-service, so it gets the line-by-line treatment
+    "rust/src/serve/json.rs",
+    "rust/src/serve/http.rs",
+}
+
+# pub fns under these prefixes form the serving API surface checked by
+# result-not-panic-api (minus the HOT_PATH_FILES, which no-hot-path-panic
+# already covers line by line)
+API_SURFACE_PREFIXES = ("rust/src/engine/", "rust/src/serve/")
+
+ACCOUNTING_PREFIXES = ("rust/src/tensorio/", "rust/src/paged/")
+ACCOUNTING_FILES = {"rust/src/engine/scheduler.rs"}
+
+
+class Ctx:
+    """Everything a lexical rule needs about one file."""
+
+    def __init__(self, path, lexed):
+        self.path = path  # repo-relative, forward slashes
+        self.lexed = lexed
+        self.tests = test_lines(lexed)
+        self.fns = fn_spans(lexed)
+
+    def code_lines(self, include_tests=False):
+        """Yield (1-based line number, scrubbed text) pairs."""
+        for idx, text in enumerate(self.lexed.lines):
+            n = idx + 1
+            if not include_tests and n in self.tests:
+                continue
+            yield n, text
+
+
+def rule_no_hot_path_panic(ctx):
+    """(1) no-hot-path-panic: panicking calls and `[...]` indexing in the
+    serve-loop hot-path modules need a waiver naming the protecting
+    invariant."""
+    if ctx.path not in HOT_PATH_FILES:
+        return []
+    out = []
+    for n, text in ctx.code_lines():
+        if PANIC_PAT.search(text):
+            out.append(
+                Finding(
+                    ctx.path,
+                    n,
+                    "no-hot-path-panic",
+                    "panicking call on the serve hot path; return an error "
+                    "or waive with the protecting invariant",
+                )
+            )
+        if INDEX_PAT.search(text):
+            out.append(
+                Finding(
+                    ctx.path,
+                    n,
+                    "no-hot-path-panic",
+                    "`[...]` indexing on the serve hot path; use .get()/"
+                    "slicing with checks or waive with the bounds invariant",
+                )
+            )
+    return out
+
+
+def rule_no_float_partial_cmp(ctx):
+    """(2) no-float-partial-cmp: `partial_cmp` is how the PR 6 sampler
+    NaN panic happened; float ordering must go through `total_cmp`.
+    Applies everywhere, including tests."""
+    out = []
+    for n, text in ctx.code_lines(include_tests=True):
+        if PARTIAL_CMP_PAT.search(text):
+            out.append(
+                Finding(
+                    ctx.path,
+                    n,
+                    "no-float-partial-cmp",
+                    "partial_cmp orders NaN as None (panic/flip hazard); "
+                    "use f32::total_cmp / f64::total_cmp",
+                )
+            )
+    return out
+
+
+def rule_oracle_purity(ctx):
+    """(3) oracle-purity: `*_scalar` fns in quant/ are the bit-exactness
+    oracle the fused kernels are tested against; they must never route
+    through the fused symbols themselves."""
+    if "quant/" not in ctx.path:
+        return []
+    out = []
+    for span in ctx.fns:
+        if not span.name.endswith("_scalar") or span.start in ctx.tests:
+            continue
+        for n in range(span.start, span.end + 1):
+            if n in ctx.tests:
+                continue
+            if FUSED_SYMBOLS.search(ctx.lexed.line(n)):
+                out.append(
+                    Finding(
+                        ctx.path,
+                        n,
+                        "oracle-purity",
+                        f"oracle fn `{span.name}` calls a fused-kernel "
+                        "symbol; the scalar path must stay independent",
+                    )
+                )
+    return out
+
+
+def rule_no_relaxed_cancel(ctx):
+    """(4) no-relaxed-cancel: `Ordering::Relaxed` on cancellation /
+    abort atomics can defer the flag past the next poll; engine code and
+    any cancel/abort context must use SeqCst (or Acquire/Release)."""
+    out = []
+    for n, text in ctx.code_lines():
+        if not RELAXED_PAT.search(text):
+            continue
+        span = enclosing_fn(ctx.fns, n)
+        fn_body = (
+            "\n".join(
+                ctx.lexed.line(k) for k in range(span.start, span.end + 1)
+            )
+            if span
+            else ""
+        )
+        if (
+            ctx.path.startswith("rust/src/engine/")
+            or CANCELISH_PAT.search(text)
+            or CANCELISH_PAT.search(fn_body)
+        ):
+            out.append(
+                Finding(
+                    ctx.path,
+                    n,
+                    "no-relaxed-cancel",
+                    "Ordering::Relaxed on a cancellation/abort atomic; "
+                    "use SeqCst so cancel() is seen by the next poll",
+                )
+            )
+    return out
+
+
+def rule_no_lossy_as(ctx):
+    """(5) no-lossy-as-in-accounting: narrowing `as` casts silently
+    truncate; byte/token-accounting modules must use `try_from` (the
+    PR 5 f16 byte-accounting bug class). Widening casts are exempt."""
+    if (
+        not ctx.path.startswith(ACCOUNTING_PREFIXES)
+        and ctx.path not in ACCOUNTING_FILES
+    ):
+        return []
+    out = []
+    for n, text in ctx.code_lines():
+        if LOSSY_AS_PAT.search(text):
+            out.append(
+                Finding(
+                    ctx.path,
+                    n,
+                    "no-lossy-as",
+                    "narrowing `as` cast in accounting code truncates "
+                    "silently; use try_from or waive with the range invariant",
+                )
+            )
+    return out
+
+
+def rule_scoped_threads_only(ctx):
+    """(6) scoped-threads-only: all library parallelism goes through
+    `std::thread::scope` (joins on panic, borrows locals) — bare
+    `thread::spawn` leaks detached threads on early return."""
+    if not ctx.path.startswith("rust/src/"):
+        return []
+    out = []
+    for n, text in ctx.code_lines():
+        if THREAD_SPAWN_PAT.search(text):
+            out.append(
+                Finding(
+                    ctx.path,
+                    n,
+                    "scoped-threads-only",
+                    "bare thread::spawn in library code; use "
+                    "std::thread::scope (see quant/kernels.rs)",
+                )
+            )
+    return out
+
+
+def rule_result_not_panic_api(ctx):
+    """(7) result-not-panic-api: `pub fn`s in engine/ and serve/ are the
+    serving API surface; they must surface errors as `Result`, not
+    panics. The hot-path files are already covered line-by-line by
+    no-hot-path-panic and are exempt here to avoid double findings."""
+    if (
+        not ctx.path.startswith(API_SURFACE_PREFIXES)
+        or ctx.path in HOT_PATH_FILES
+    ):
+        return []
+    out = []
+    for span in ctx.fns:
+        if not span.is_pub or span.start in ctx.tests:
+            continue
+        for n in range(span.start, span.end + 1):
+            if n in ctx.tests:
+                continue
+            if PANIC_PAT.search(ctx.lexed.line(n)):
+                out.append(
+                    Finding(
+                        ctx.path,
+                        n,
+                        "result-not-panic-api",
+                        f"pub fn `{span.name}` contains a panicking call; "
+                        "engine APIs return Result",
+                    )
+                )
+    return out
+
+
+def rule_no_unbounded_send(ctx):
+    """(8) no-unbounded-send: an unbounded `mpsc::channel` in the
+    serving stack lets one slow consumer buffer tokens without limit —
+    the overload-control plane depends on bounded `sync_channel`s whose
+    full-send failure feeds back into cancellation. Bound the channel
+    or waive with the invariant that bounds it externally."""
+    if not ctx.path.startswith(API_SURFACE_PREFIXES):
+        return []
+    out = []
+    for n, text in ctx.code_lines():
+        if UNBOUNDED_CHANNEL_PAT.search(text):
+            out.append(
+                Finding(
+                    ctx.path,
+                    n,
+                    "no-unbounded-send",
+                    "unbounded mpsc::channel in the serving stack; use "
+                    "mpsc::sync_channel with an explicit depth so a slow "
+                    "consumer hits backpressure instead of unbounded memory",
+                )
+            )
+    return out
+
+
+RULES = {
+    "no-hot-path-panic": rule_no_hot_path_panic,
+    "no-float-partial-cmp": rule_no_float_partial_cmp,
+    "oracle-purity": rule_oracle_purity,
+    "no-relaxed-cancel": rule_no_relaxed_cancel,
+    "no-lossy-as": rule_no_lossy_as,
+    "scoped-threads-only": rule_scoped_threads_only,
+    "result-not-panic-api": rule_result_not_panic_api,
+    "no-unbounded-send": rule_no_unbounded_send,
+}
+
+META_RULES = ("unused-waiver", "waiver-syntax")

@@ -1,0 +1,59 @@
+"""SARIF 2.1.0 output for CI annotation upload.
+
+Minimal but valid: one run, the full rule table as driver rules (so
+viewers can show descriptions), one result per finding with a physical
+location. The plain-text output stays the CI failure gate — SARIF is
+presentation only.
+"""
+
+from __future__ import annotations
+
+SARIF_SCHEMA = "https://json.schemastore.org/sarif-2.1.0.json"
+SARIF_VERSION = "2.1.0"
+
+
+def sarif_report(findings, docs):
+    """Findings + (rule, description) pairs -> a SARIF 2.1.0 dict."""
+    rule_ids = [rid for rid, _ in docs]
+    rules = [
+        {
+            "id": rid,
+            "shortDescription": {"text": doc or rid},
+        }
+        for rid, doc in docs
+    ]
+    results = []
+    for f in findings:
+        results.append(
+            {
+                "ruleId": f.rule,
+                "ruleIndex": rule_ids.index(f.rule)
+                if f.rule in rule_ids
+                else -1,
+                "level": "error",
+                "message": {"text": f.message},
+                "locations": [
+                    {
+                        "physicalLocation": {
+                            "artifactLocation": {"uri": f.path},
+                            "region": {"startLine": max(1, f.line)},
+                        }
+                    }
+                ],
+            }
+        )
+    return {
+        "$schema": SARIF_SCHEMA,
+        "version": SARIF_VERSION,
+        "runs": [
+            {
+                "tool": {
+                    "driver": {
+                        "name": "pallas-lint",
+                        "rules": rules,
+                    }
+                },
+                "results": results,
+            }
+        ],
+    }

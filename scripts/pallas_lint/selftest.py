@@ -1,0 +1,71 @@
+"""Fixture self-test: the linter lints its own expectations.
+
+Fixture header grammar (plain Rust comments, so fixtures stay valid
+Rust)::
+
+    // pallas-lint-fixture: path = rust/src/engine/scheduler.rs
+    // pallas-lint-expect: no-hot-path-panic @ 5; no-hot-path-panic @ 9
+    // pallas-lint-expect: clean
+
+Expectations accumulate across multiple expect lines. Each fixture is
+linted as a one-file crate under its pretend path, so rule scoping and
+the interprocedural passes behave exactly as on the real tree.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+from .engine import lint_text
+
+FIXTURE_DIR = Path(__file__).resolve().parents[1] / "tests" / "lint_fixtures"
+
+_FIX_PATH = re.compile(r"pallas-lint-fixture:\s*path\s*=\s*(\S+)")
+_FIX_EXPECT = re.compile(r"pallas-lint-expect:\s*(.+)$", re.MULTILINE)
+
+
+def run_self_test():
+    """Lint each fixture under scripts/tests/lint_fixtures/ and compare
+    against its declared expectations. Returns the number of failing
+    fixtures."""
+    fixtures = sorted(FIXTURE_DIR.glob("*.rs"))
+    if not fixtures:
+        print(f"pallas-lint: no fixtures in {FIXTURE_DIR}", file=sys.stderr)
+        return 1
+    failures = 0
+    for fx in fixtures:
+        text = fx.read_text(encoding="utf-8")
+        mpath = _FIX_PATH.search(text)
+        if not mpath:
+            print(f"FAIL {fx.name}: missing pallas-lint-fixture header")
+            failures += 1
+            continue
+        expected = set()
+        for m in _FIX_EXPECT.finditer(text):
+            spec = m.group(1).strip()
+            if spec == "clean":
+                continue
+            for part in spec.split(";"):
+                part = part.strip()
+                if not part:
+                    continue
+                rule, _, line = part.partition("@")
+                expected.add((rule.strip(), int(line.strip())))
+        got = {
+            (f.rule, f.line)
+            for f in lint_text(mpath.group(1), text)
+        }
+        if got == expected:
+            print(f"ok   {fx.name} ({len(expected)} expected findings)")
+        else:
+            failures += 1
+            print(f"FAIL {fx.name}")
+            for rule, line in sorted(expected - got):
+                print(f"     missing: {rule} @ {line}")
+            for rule, line in sorted(got - expected):
+                print(f"     unexpected: {rule} @ {line}")
+    total = len(fixtures)
+    print(f"self-test: {total - failures}/{total} fixtures pass")
+    return failures

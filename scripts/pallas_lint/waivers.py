@@ -1,0 +1,98 @@
+"""Waiver parsing: `// pallas-lint: allow(rule[, rule]) — reason`.
+
+A waiver on a code line targets that line; a standalone waiver targets
+the next non-blank code line. The reason is mandatory — an audited
+waiver with no stated invariant is just a muted alarm. Malformed
+waivers and waivers naming unknown rules are themselves findings
+(`waiver-syntax`), and a waiver that suppresses nothing is an
+`unused-waiver` finding (computed in the engine after every pass —
+including the interprocedural ones — has had a chance to use it).
+"""
+
+from __future__ import annotations
+
+import re
+
+from .rules import Finding
+
+# `pallas-lint:` only — the fixture headers (`pallas-lint-fixture:`,
+# `pallas-lint-expect:`) are not waivers
+_WAIVER_HINT = re.compile(r"pallas-lint\s*:")
+_WAIVER = re.compile(
+    r"^\s*pallas-lint\s*:\s*allow\s*\(\s*([A-Za-z0-9_,\s-]+?)\s*\)"
+    r"\s*(?:—|--|-|:)\s*(\S.*)$"
+)
+
+
+class Waiver:
+    """A parsed `// pallas-lint: allow(...)` comment."""
+
+    def __init__(self, comment_line, target_line, rules, reason):
+        self.comment_line = comment_line
+        self.target_line = target_line
+        self.rules = rules
+        self.reason = reason
+        self.used = False
+
+
+def parse_waivers(path, lexed, known_rules):
+    """Extract waivers from a file's line comments.
+
+    Returns ``(waivers, syntax_findings)``: malformed waiver comments
+    (no reason, bad shape, unknown rule) become `waiver-syntax` findings
+    rather than silently suppressing nothing."""
+    waivers, findings = [], []
+    for line_no, text in lexed.comments:
+        if not _WAIVER_HINT.search(text):
+            continue
+        m = _WAIVER.match(text)
+        if not m:
+            findings.append(
+                Finding(
+                    path,
+                    line_no,
+                    "waiver-syntax",
+                    "malformed waiver: expected "
+                    "`// pallas-lint: allow(<rule>[, <rule>]) — <reason>`",
+                )
+            )
+            continue
+        rules = [r.strip() for r in m.group(1).split(",") if r.strip()]
+        bad = [r for r in rules if r not in known_rules]
+        if bad or not rules:
+            findings.append(
+                Finding(
+                    path,
+                    line_no,
+                    "waiver-syntax",
+                    "waiver names unknown rule(s): "
+                    + (", ".join(bad) if bad else "<none>"),
+                )
+            )
+            continue
+        # a waiver on a code line targets that line; a standalone waiver
+        # targets the next non-blank code line
+        target = line_no
+        if not lexed.line(line_no).strip():
+            target = None
+            for j in range(line_no + 1, len(lexed.lines) + 1):
+                if lexed.line(j).strip():
+                    target = j
+                    break
+            if target is None:
+                findings.append(
+                    Finding(
+                        path,
+                        line_no,
+                        "waiver-syntax",
+                        "standalone waiver has no following code line",
+                    )
+                )
+                continue
+        waivers.append(Waiver(line_no, target, rules, m.group(2).strip()))
+    return waivers, findings
+
+
+def waived_lines(waivers, rule):
+    """Target lines of waivers naming ``rule`` (does not mark used)."""
+    return {w.target_line for w in waivers if rule in w.rules}

@@ -13,3 +13,16 @@ fn describe(b: &[u8]) -> String {
     let lt: &'static str = "partial_cmp in a string after a lifetime";
     format!("{s}{r}{raw2}{quote}{newline}{lt}{}", String::from_utf8_lossy(bytes))
 }
+
+fn hardened(t: (f64, f64)) -> f64 {
+    let hashes = r##"raw with "# inside: .unwrap() stays text"##;
+    let braw = br#"byte raw with panic!("x") and rows[i]"#;
+    let bplain = b"plain byte string: .expect(\"y\")";
+    let x = 1.0.max(2.5_f64);
+    let y = t.0 + t.1;
+    let mut acc = 0.0;
+    for _step in 0..3 {
+        acc += x.min(y);
+    }
+    acc + hashes.len() as f64 + braw.len() as f64 + bplain.len() as f64
+}

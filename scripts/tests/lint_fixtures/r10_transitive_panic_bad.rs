@@ -1,0 +1,14 @@
+// pallas-lint-fixture: path = rust/src/engine/adapters.rs
+// pallas-lint-expect: no-transitive-panic @ 13
+
+fn slot_of(name: &str) -> usize {
+    name.parse().unwrap()
+}
+
+fn resolve(name: &str) -> usize {
+    slot_of(name)
+}
+
+pub fn activate(name: &str) -> usize {
+    resolve(name)
+}

@@ -1,0 +1,26 @@
+// pallas-lint-fixture: path = rust/src/engine/adapters.rs
+// pallas-lint-expect: clean
+
+fn slot_of(name: &str) -> usize {
+    name.parse().unwrap_or(0)
+}
+
+fn registered_slot(name: &str) -> usize {
+    // pallas-lint: allow(no-transitive-panic) — adapter names are validated at registration time
+    name.parse().unwrap()
+}
+
+fn risky_slot(name: &str) -> usize {
+    name.parse().expect("caller catches")
+}
+
+pub fn activate(name: &str) -> usize {
+    slot_of(name) + registered_slot(name)
+}
+
+pub fn shielded(name: &str) -> usize {
+    std::panic::catch_unwind(
+        || risky_slot(name)
+    )
+    .unwrap_or(0)
+}

@@ -1,0 +1,42 @@
+// pallas-lint-fixture: path = rust/src/serve/server.rs
+// pallas-lint-expect: lock-order @ 18; lock-order @ 25; lock-order @ 32
+// pallas-lint-expect: lock-order @ 40
+
+use std::sync::{Mutex, MutexGuard};
+
+struct Shared {
+    inbox: Mutex<u32>,
+    stats: Mutex<u32>,
+}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn double_acquire(s: &Shared) {
+    let a = lock(&s.inbox);
+    let b = lock(&s.inbox);
+    drop(b);
+    drop(a);
+}
+
+fn order_ab(s: &Shared) {
+    let a = lock(&s.inbox);
+    let b = lock(&s.stats);
+    drop(b);
+    drop(a);
+}
+
+fn order_ba(s: &Shared) {
+    let b = lock(&s.stats);
+    let a = lock(&s.inbox);
+    drop(a);
+    drop(b);
+}
+
+fn blocking_while_held(s: &Shared, out: &mut std::net::TcpStream) {
+    use std::io::Write;
+    let g = lock(&s.inbox);
+    out.flush().ok();
+    drop(g);
+}

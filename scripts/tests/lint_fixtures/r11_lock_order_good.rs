@@ -1,0 +1,29 @@
+// pallas-lint-fixture: path = rust/src/serve/server.rs
+// pallas-lint-expect: clean
+
+use std::sync::{Condvar, Mutex, MutexGuard};
+
+struct Shared {
+    inbox: Mutex<u32>,
+    cv: Condvar,
+}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn wait_for_work(s: &Shared) -> u32 {
+    let mut g = lock(&s.inbox);
+    while *g == 0 {
+        g = s.cv.wait(g).unwrap_or_else(|p| p.into_inner());
+    }
+    *g
+}
+
+fn drop_before_write(s: &Shared, out: &mut std::net::TcpStream) {
+    use std::io::Write;
+    let g = lock(&s.inbox);
+    let n = *g;
+    drop(g);
+    out.write_all(&n.to_le_bytes()).ok();
+}

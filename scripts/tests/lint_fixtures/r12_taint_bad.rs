@@ -1,0 +1,20 @@
+// pallas-lint-fixture: path = rust/src/serve/server.rs
+// pallas-lint-expect: untrusted-taint @ 15; untrusted-taint @ 16
+// pallas-lint-expect: untrusted-taint @ 17
+
+struct Doc;
+
+impl Doc {
+    fn opt_u64(&self, _key: &str) -> u64 {
+        7
+    }
+}
+
+fn shape_reply(doc: &Doc, table: &[u8]) -> Vec<u8> {
+    let n = doc.opt_u64("count") as usize;
+    let mut out = Vec::with_capacity(n);
+    out.push(table[n]);
+    let tail = n - 1;
+    out.truncate(tail);
+    out
+}

@@ -1,0 +1,22 @@
+// pallas-lint-fixture: path = rust/src/serve/server.rs
+// pallas-lint-expect: clean
+
+struct Doc;
+
+impl Doc {
+    fn opt_u64(&self, _key: &str) -> u64 {
+        7
+    }
+}
+
+const MAX_REPLY: usize = 4096;
+
+fn shape_reply(doc: &Doc, table: &[u8]) -> Vec<u8> {
+    let n = (doc.opt_u64("count") as usize).min(MAX_REPLY);
+    let mut out = Vec::with_capacity(n);
+    let idx = doc.opt_u64("idx") as usize;
+    if idx < table.len() {
+        out.push(table[idx]);
+    }
+    out
+}
